@@ -1,0 +1,63 @@
+//! Energy & cost report (paper §VI-B6, Table VIII): Joules per batch,
+//! 100-epoch electricity cost, and the household-days comparison from
+//! the paper's discussion.
+//!
+//! ```bash
+//! cargo run --release --example energy_report
+//! ```
+
+use ddlp::config::{table_models, ExperimentConfig};
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::metrics::{fmt_s, Table};
+
+const PRICE_PER_KWH: f64 = 0.095; // Vancouver basic rate (paper)
+const HOUSEHOLD_DAY_USD: f64 = 0.21; // daily basic household electricity
+
+fn main() -> anyhow::Result<()> {
+    println!("DDLP energy report — ImageNet1, 100 epochs, ${PRICE_PER_KWH}/kWh\n");
+    let mut table = Table::new(vec![
+        "model",
+        "strategy",
+        "workers",
+        "J/batch",
+        "cost/100ep ($)",
+        "saved vs cpu ($)",
+    ]);
+    for model in ["wrn", "vit"] {
+        let batches = {
+            let m = table_models().into_iter().find(|m| m.name == model).unwrap();
+            (m.dataset.n_samples() / m.batch_size as u64) as u32
+        };
+        for workers in [0u32, 16] {
+            let mut cpu_cost = None;
+            for strategy in [Strategy::CpuOnly, Strategy::Mte, Strategy::Wrr] {
+                let cfg = ExperimentConfig::builder()
+                    .model(model)
+                    .pipeline("imagenet1")
+                    .strategy(strategy)
+                    .num_workers(workers)
+                    .n_batches(300)
+                    .epochs(3)
+                    .build()?;
+                let report = run_experiment(&cfg)?.report;
+                let cost = report.energy.cost_usd(100, PRICE_PER_KWH, batches);
+                let base = *cpu_cost.get_or_insert(cost);
+                table.row(vec![
+                    model.to_string(),
+                    strategy.name().to_string(),
+                    workers.to_string(),
+                    fmt_s(report.energy.joules_per_batch),
+                    format!("{cost:.3}"),
+                    format!("{:.3}", base - cost),
+                ]);
+            }
+        }
+    }
+    print!("{}", table.to_text());
+    println!(
+        "\n(paper: a single ImageNet training saves up to $0.73 — enough for\n \
+         ~{} household-days at ${HOUSEHOLD_DAY_USD}/day)",
+        (0.73 / HOUSEHOLD_DAY_USD) as u32
+    );
+    Ok(())
+}

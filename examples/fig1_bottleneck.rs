@@ -1,0 +1,20 @@
+//! Fig. 1 reproduction: the preprocessing bottleneck study over 19
+//! torchvision model profiles — preprocessing/training time ratio vs
+//! DataLoader worker count.
+//!
+//! ```bash
+//! cargo run --release --example fig1_bottleneck
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let table = ddlp::bench::fig1()?;
+    let (max, mean) = ddlp::bench::fig1_summary()?;
+    println!("Fig. 1 — preprocess/train time ratio vs workers (ImageNet1)\n");
+    print!("{}", table.to_text());
+    println!("\nsingle-process (w=0): max {max:.2}x, mean {mean:.2}x");
+    println!("paper reports:        max 60.67x, mean 20.18x");
+    println!("\nMost entries stay > 1 even at w=32 (paper §VI-B1: \"exceeds 1 in");
+    println!("most cases\"): preprocessing remains the bottleneck — the paper's");
+    println!("motivation for moving work to the CSD.");
+    Ok(())
+}

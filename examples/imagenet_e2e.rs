@@ -1,0 +1,87 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): the FULL
+//! three-layer system on a real workload.
+//!
+//! Every consumed batch is **really preprocessed** by the AOT-compiled
+//! Pallas/JAX pipeline artifact and **really trained** by the fused
+//! fwd+bwd+SGD artifact, executed through the PJRT C API from the rust
+//! coordinator — python never runs. The dual-pronged schedule (CPU head
+//! / CSD tail) decides which engine preprocesses each batch; the loss
+//! curve proves all layers compose.
+//!
+//! ```bash
+//! make artifacts   # once
+//! cargo run --release --example imagenet_e2e
+//! ```
+
+use ddlp::config::{DeviceProfile, ExecMode, ExperimentConfig};
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::metrics::{fmt_s, pct_faster, Table};
+
+fn main() -> anyhow::Result<()> {
+    // Put the real run in the paper's regime: the virtual accelerator is
+    // an A100-class device (measured CPU-client step / 30), and the CSD
+    // is distinctly weaker than a host core (15× the measured kernel
+    // time) — see DESIGN.md substitution map.
+    let mut profile = DeviceProfile::default();
+    profile.csd_slowdown = 15.0;
+    profile.accel_speedup = 30.0;
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        anyhow::bail!("artifacts not found at {artifacts:?}: run `make artifacts` first");
+    }
+    let n_batches = 120;
+    println!(
+        "REAL end-to-end: wrn (miniature Wide-ResNet, 64x64/100-class synthetic \
+         ImageNet) / imagenet1 pipeline / {n_batches} batches per strategy\n"
+    );
+
+    let mut table = Table::new(vec![
+        "strategy",
+        "virtual s/batch",
+        "vs PyTorch",
+        "CSD share",
+        "first loss",
+        "last loss",
+    ]);
+    let mut base = None;
+    for strategy in [Strategy::CpuOnly, Strategy::Mte, Strategy::Wrr] {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .pipeline("imagenet1")
+            .strategy(strategy)
+            .num_workers(0)
+            .n_batches(n_batches)
+            .seed(7)
+            .profile(profile.clone())
+            .exec(ExecMode::Real {
+                artifacts_dir: artifacts.clone(),
+            })
+            .build()?;
+        let result = run_experiment(&cfg)?;
+        let r = &result.report;
+        let losses = &result.losses;
+        assert_eq!(losses.len() as u32, r.n_batches);
+        let b = *base.get_or_insert(r.learn_time_per_batch);
+        table.row(vec![
+            strategy.name().to_string(),
+            fmt_s(r.learn_time_per_batch),
+            format!("{:+.1}%", pct_faster(b, r.learn_time_per_batch)),
+            format!("{:.1}%", r.csd_share() * 100.0),
+            format!("{:.4}", losses[0]),
+            format!("{:.4}", losses[losses.len() - 1]),
+        ]);
+        // sanity: the model actually learns
+        let first = losses[..10].iter().sum::<f32>() / 10.0;
+        let last = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+        assert!(
+            last < first,
+            "{strategy}: loss did not decrease ({first:.4} -> {last:.4})"
+        );
+    }
+    print!("{}", table.to_text());
+    println!("\nEvery batch above flowed through the compiled Pallas preprocessing");
+    println!("HLO and the fused train-step HLO on the PJRT CPU client; the CSD");
+    println!("engine ran the *same* artifact at its calibrated slowdown, so CPU-");
+    println!("and CSD-preprocessed batches are bit-identical (paper §VI-A).");
+    Ok(())
+}

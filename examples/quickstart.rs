@@ -1,0 +1,50 @@
+//! Quickstart: run DDLP's four strategies on one workload and compare.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the calibrated analytic device models (no artifacts needed);
+//! see `imagenet_e2e` for the real-execution path.
+
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::metrics::{fmt_s, pct_faster, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("DDLP quickstart — WRN / ImageNet1 / 16 workers / 300 batches x 3 epochs\n");
+
+    let mut table = Table::new(vec![
+        "strategy",
+        "learn s/batch",
+        "vs PyTorch",
+        "energy J/batch",
+        "CSD share",
+        "host busy s/batch",
+    ]);
+    let mut baseline = None;
+    for strategy in Strategy::ALL {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .pipeline("imagenet1")
+            .strategy(strategy)
+            .num_workers(16)
+            .n_batches(300)
+            .epochs(3)
+            .build()?;
+        let report = run_experiment(&cfg)?.report;
+        let base = *baseline.get_or_insert(report.learn_time_per_batch);
+        table.row(vec![
+            strategy.name().to_string(),
+            fmt_s(report.learn_time_per_batch),
+            format!("{:+.1}%", pct_faster(base, report.learn_time_per_batch)),
+            fmt_s(report.energy.joules_per_batch),
+            format!("{:.1}%", report.csd_share() * 100.0),
+            fmt_s(report.cpu_dram_time_per_batch),
+        ]);
+    }
+    print!("{}", table.to_text());
+    println!("\n(cpu = classical PyTorch path, csd = near-storage only,");
+    println!(" mte/wrr = the paper's dual-pronged strategies)");
+    Ok(())
+}

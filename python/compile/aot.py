@@ -1,0 +1,178 @@
+"""AOT compile path: lower every pipeline and train step to HLO *text*.
+
+Python runs exactly once (``make artifacts``); the rust coordinator
+loads ``artifacts/*.hlo.txt`` through the PJRT C API and never calls
+back into python.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under ``--out-dir``):
+
+* ``preprocess_<pipeline>.hlo.txt``  — Table IV pipelines (L1+L2 fused)
+* ``train_<model>.hlo.txt``          — fused fwd+bwd+SGD per model
+* ``params_<model>.dtns``            — deterministic initial parameters
+* ``golden_preprocess_<pipeline>.dtns`` / ``golden_train_<model>.dtns``
+  — input/output pairs the rust runtime tests replay
+* ``manifest.json``                  — shapes/dtypes/roles of everything
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import pipelines as P
+from compile.tensorfile import write_tensors
+
+GOLDEN_STEPS = 5  # train steps recorded in the golden files
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {np.dtype(np.float32): "f32", np.dtype(np.uint8): "u8",
+            np.dtype(np.int32): "i32", np.dtype(np.int64): "i64"}[np.dtype(dt)]
+
+
+def _io_entry(name, sds):
+    return {"name": name, "shape": list(sds.shape), "dtype": _dtype_name(sds.dtype)}
+
+
+def lower_pipeline(name: str, out_dir: str, manifest: dict) -> None:
+    spec = P.PIPELINES[name]
+    raw_s, rand_s = P.example_inputs(name)
+    fn = functools.partial(spec.fn, impl=P.PALLAS_IMPL)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(raw_s, rand_s)
+    text = to_hlo_text(lowered)
+    fname = f"preprocess_{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    # Golden pair: deterministic inputs → expected output.
+    rng = np.random.default_rng(42)
+    raw = rng.integers(0, 256, raw_s.shape, dtype=np.uint8)
+    rand = rng.random(rand_s.shape, dtype=np.float32)
+    out = np.asarray(jax.jit(fn)(raw, rand))
+    write_tensors(
+        os.path.join(out_dir, f"golden_preprocess_{name}.dtns"),
+        [("raw", raw), ("rand", rand), ("out", out)],
+    )
+
+    manifest["artifacts"][f"preprocess_{name}"] = {
+        "kind": "preprocess",
+        "file": fname,
+        "golden": f"golden_preprocess_{name}.dtns",
+        "inputs": [_io_entry("raw", raw_s), _io_entry("rand", rand_s)],
+        "outputs": [
+            {"shape": [spec.batch, 3, spec.out_hw, spec.out_hw], "dtype": "f32"}
+        ],
+        "batch": spec.batch,
+        "raw_hw": spec.raw_hw,
+        "out_hw": spec.out_hw,
+    }
+    print(f"  preprocess_{name}: {len(text)} chars ({time.time()-t0:.1f}s)")
+
+
+def lower_model(name: str, out_dir: str, manifest: dict) -> None:
+    spec = M.MODELS[name]
+    step = M.make_train_step(name)
+    example = M.train_example_inputs(name)
+    t0 = time.time()
+    lowered = jax.jit(step).lower(*example)
+    text = to_hlo_text(lowered)
+    fname = f"train_{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    params = spec.init(0)
+    write_tensors(
+        os.path.join(out_dir, f"params_{name}.dtns"),
+        [(f"p{i}", p) for i, p in enumerate(params)],
+    )
+
+    # Golden: GOLDEN_STEPS steps on a fixed batch; record the loss curve.
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 1, (spec.batch, 3, spec.hw, spec.hw)).astype(np.float32)
+    y = rng.integers(0, spec.ncls, (spec.batch,), dtype=np.int32)
+    jstep = jax.jit(step)
+    cur = [jnp.asarray(p) for p in params]
+    losses = []
+    for _ in range(GOLDEN_STEPS):
+        out = jstep(*cur, x, y)
+        cur = list(out[:-1])
+        losses.append(float(out[-1]))
+    write_tensors(
+        os.path.join(out_dir, f"golden_train_{name}.dtns"),
+        [("x", x), ("y", y), ("losses", np.asarray(losses, np.float32))],
+    )
+
+    manifest["artifacts"][f"train_{name}"] = {
+        "kind": "train",
+        "file": fname,
+        "golden": f"golden_train_{name}.dtns",
+        "params_file": f"params_{name}.dtns",
+        "n_params": len(params),
+        "inputs": [_io_entry(f"p{i}", s) for i, s in enumerate(example[:-2])]
+        + [_io_entry("x", example[-2]), _io_entry("y", example[-1])],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+            for s in example[:-2]
+        ]
+        + [{"shape": [], "dtype": "f32"}],
+        "batch": spec.batch,
+        "hw": spec.hw,
+        "ncls": spec.ncls,
+        "lr": spec.lr,
+    }
+    print(f"  train_{name}: {len(text)} chars, {len(params)} params ({time.time()-t0:.1f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma list of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": {}}
+    only = set(args.only.split(",")) if args.only else None
+
+    print("lowering preprocessing pipelines (L1 pallas + L2 fusion):")
+    for name in P.PIPELINES:
+        if only is None or name in only:
+            lower_pipeline(name, args.out_dir, manifest)
+
+    print("lowering train steps (fused fwd+bwd+SGD):")
+    for name in M.MODELS:
+        if only is None or name in only:
+            lower_model(name, args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print(f"manifest: {len(manifest['artifacts'])} artifacts → {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""L1 — Pallas kernels for the DDLP preprocessing hot path.
+
+The paper's preprocessing pipelines (Table IV) are torchvision CPU
+transforms; here they are re-thought for a TPU-style memory hierarchy
+(DESIGN.md §Hardware-Adaptation):
+
+* every kernel is a **single pass** over the image: HBM→VMEM once per
+  sample, all arithmetic on the VPU, out once;
+* the grid iterates over the batch dimension, so the VMEM working set is
+  one sample (≈96·96·3·4 B ≈ 110 KiB for the ImageNet-like shapes, far
+  under the ~16 MiB VMEM budget; see DESIGN.md §Perf);
+* bilinear resize is expressed as two gathers + two lerps whose index
+  and weight vectors are *precomputed at trace time* (static resizes) or
+  in the surrounding L2 graph (random crops).  Resize→CentralCrop fuses
+  into one gather by offsetting the index vectors — the crop never
+  materializes the intermediate resized image;
+* horizontal flips are folded into the gather by pre-flipping the column
+  index vectors where possible, avoiding a second pass.
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; the interpreter path lowers to plain HLO
+that the rust runtime executes (see /opt/xla-example/README.md).
+
+Every kernel has a pure-jnp oracle in :mod:`compile.kernels.ref`; pytest
+(+hypothesis) asserts allclose across shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls.
+
+
+# ---------------------------------------------------------------------------
+# normalize: fused ToTensor + Normalize + HWC→CHW
+# ---------------------------------------------------------------------------
+
+
+def _normalize_kernel(x_ref, mean_ref, std_ref, o_ref):
+    """One sample: (x/255 - mean)/std and layout HWC→CHW, single VMEM pass."""
+    x = x_ref[0]  # [H, W, C]
+    mean = mean_ref[...]  # [C]
+    std = std_ref[...]  # [C]
+    y = (x * (1.0 / 255.0) - mean[None, None, :]) / std[None, None, :]
+    o_ref[0] = jnp.transpose(y, (2, 0, 1))  # [C, H, W]
+
+
+def normalize(x: jax.Array, mean: jax.Array, std: jax.Array) -> jax.Array:
+    """Fused ToTensor+Normalize.
+
+    Args:
+      x: ``f32[B, H, W, C]`` pixel values in ``[0, 255]``.
+      mean/std: ``f32[C]`` in ``[0, 1]`` units (torchvision convention).
+
+    Returns:
+      ``f32[B, C, H, W]``.
+    """
+    b, h, w, c = x.shape
+    return pl.pallas_call(
+        _normalize_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, w), jnp.float32),
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), mean.astype(jnp.float32), std.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# bilinear gather: shared core of Resize / CentralCrop / RandomResizedCrop
+# ---------------------------------------------------------------------------
+
+
+def _bilinear_kernel(img_ref, rlo_ref, rhi_ref, rw_ref, clo_ref, chi_ref, cw_ref, o_ref):
+    """One sample: out[i,j] = lerp over rows then columns.
+
+    Two row-gathers + two column-gathers; everything stays in VMEM.  The
+    index vectors encode resize, crop offset, and flip simultaneously.
+    """
+    img = img_ref[0]  # [Hs, Ws, C]
+    rlo = rlo_ref[0]  # [Ho] i32
+    rhi = rhi_ref[0]
+    rw = rw_ref[0]  # [Ho] f32
+    clo = clo_ref[0]
+    chi = chi_ref[0]
+    cw = cw_ref[0]
+    top = jnp.take(img, rlo, axis=0)  # [Ho, Ws, C]
+    bot = jnp.take(img, rhi, axis=0)
+    rows = top + (bot - top) * rw[:, None, None]
+    left = jnp.take(rows, clo, axis=1)  # [Ho, Wo, C]
+    right = jnp.take(rows, chi, axis=1)
+    o_ref[0] = left + (right - left) * cw[None, :, None]
+
+
+def bilinear_gather(
+    img: jax.Array,
+    rlo: jax.Array,
+    rhi: jax.Array,
+    rw: jax.Array,
+    clo: jax.Array,
+    chi: jax.Array,
+    cw: jax.Array,
+) -> jax.Array:
+    """Per-sample bilinear sampling.
+
+    Args:
+      img: ``f32[B, Hs, Ws, C]``.
+      rlo/rhi: ``i32[B, Ho]`` low/high source-row indices (pre-clamped).
+      rw: ``f32[B, Ho]`` row lerp weights in ``[0, 1]``.
+      clo/chi/cw: same for columns, length ``Wo``.
+
+    Returns:
+      ``f32[B, Ho, Wo, C]``.
+    """
+    b, hs, ws, c = img.shape
+    ho = rlo.shape[1]
+    wo = clo.shape[1]
+    row_spec = lambda: pl.BlockSpec((1, ho), lambda i: (i, 0))
+    col_spec = lambda: pl.BlockSpec((1, wo), lambda i: (i, 0))
+    return pl.pallas_call(
+        _bilinear_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, hs, ws, c), lambda i: (i, 0, 0, 0)),
+            row_spec(),
+            row_spec(),
+            row_spec(),
+            col_spec(),
+            col_spec(),
+            col_spec(),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, c), jnp.float32),
+        interpret=INTERPRET,
+    )(
+        img.astype(jnp.float32),
+        rlo.astype(jnp.int32),
+        rhi.astype(jnp.int32),
+        rw.astype(jnp.float32),
+        clo.astype(jnp.int32),
+        chi.astype(jnp.int32),
+        cw.astype(jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# pad-crop: torchvision RandomCrop(size, padding) after jnp.pad in L2
+# ---------------------------------------------------------------------------
+
+
+def _pad_crop_kernel(img_ref, oy_ref, ox_ref, o_ref, *, out_h: int, out_w: int):
+    img = img_ref[0]  # [Hp, Wp, C] (already padded)
+    oy = oy_ref[0]
+    ox = ox_ref[0]
+    c = img.shape[-1]
+    o_ref[0] = jax.lax.dynamic_slice(img, (oy, ox, 0), (out_h, out_w, c))
+
+
+def pad_crop(img_padded: jax.Array, oy: jax.Array, ox: jax.Array, out_h: int, out_w: int) -> jax.Array:
+    """Per-sample dynamic crop of a (pre-padded) image.
+
+    Args:
+      img_padded: ``f32[B, Hp, Wp, C]``.
+      oy/ox: ``i32[B]`` crop origins, ``0 <= oy <= Hp - out_h``.
+
+    Returns:
+      ``f32[B, out_h, out_w, C]``.
+    """
+    b, hp, wp, c = img_padded.shape
+    kern = functools.partial(_pad_crop_kernel, out_h=out_h, out_w=out_w)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, out_h, out_w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, out_h, out_w, c), jnp.float32),
+        interpret=INTERPRET,
+    )(img_padded.astype(jnp.float32), oy.astype(jnp.int32), ox.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# hflip: conditional horizontal flip (used when it cannot fold into a gather)
+# ---------------------------------------------------------------------------
+
+
+def _hflip_kernel(x_ref, flip_ref, o_ref):
+    x = x_ref[0]  # [H, W, C]
+    flip = flip_ref[0]
+    o_ref[0] = jnp.where(flip > 0.5, x[:, ::-1, :], x)
+
+
+def hflip(x: jax.Array, flip: jax.Array) -> jax.Array:
+    """Per-sample conditional horizontal flip.
+
+    Args:
+      x: ``f32[B, H, W, C]``.
+      flip: ``f32[B]``; flips where ``> 0.5``.
+    """
+    b, h, w, c = x.shape
+    return pl.pallas_call(
+        _hflip_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c), jnp.float32),
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), flip.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# cutout: zero a square window (SAM's Cifar-10 recipe), applied post-normalize
+# ---------------------------------------------------------------------------
+
+
+def _cutout_kernel(x_ref, cy_ref, cx_ref, o_ref, *, half: int):
+    x = x_ref[0]  # [C, H, W]
+    cy = cy_ref[0]
+    cx = cx_ref[0]
+    _, h, w = x.shape
+    iy = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    inside = (iy >= cy - half) & (iy < cy + half) & (ix >= cx - half) & (ix < cx + half)
+    o_ref[0] = jnp.where(inside[None, :, :], 0.0, x)
+
+
+def cutout(x: jax.Array, cy: jax.Array, cx: jax.Array, size: int) -> jax.Array:
+    """Per-sample cutout of a ``size``×``size`` window centered at (cy, cx).
+
+    Mirrors the Cutout augmentation used by the paper's Cifar-10 (GPU)
+    pipeline: the window is clipped at the borders (mask comparison does
+    the clipping for free).
+
+    Args:
+      x: ``f32[B, C, H, W]`` (normalized — cutout zeroes *normalized* pixels).
+      cy/cx: ``i32[B]`` window centers.
+    """
+    b, c, h, w = x.shape
+    kern = functools.partial(_cutout_kernel, half=size // 2)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, w), jnp.float32),
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), cy.astype(jnp.int32), cx.astype(jnp.int32))

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Each function mirrors a kernel in :mod:`compile.kernels.preprocess` using
+only vectorized jnp ops (no pallas), written independently of the kernel
+bodies so that pytest comparisons are a meaningful correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normalize(x: jax.Array, mean: jax.Array, std: jax.Array) -> jax.Array:
+    """(x/255 - mean)/std, NHWC→NCHW."""
+    x = x.astype(jnp.float32)
+    y = (x / 255.0 - mean.reshape(1, 1, 1, -1)) / std.reshape(1, 1, 1, -1)
+    return jnp.transpose(y, (0, 3, 1, 2))
+
+
+def bilinear_gather(img, rlo, rhi, rw, clo, chi, cw):
+    """Vectorized bilinear sampling; same contract as the kernel."""
+    img = img.astype(jnp.float32)
+
+    def one(im, rl, rh, rwt, cl, ch, cwt):
+        top = im[rl]  # [Ho, Ws, C]
+        bot = im[rh]
+        rows = top * (1.0 - rwt[:, None, None]) + bot * rwt[:, None, None]
+        left = rows[:, cl]  # [Ho, Wo, C]
+        right = rows[:, ch]
+        return left * (1.0 - cwt[None, :, None]) + right * cwt[None, :, None]
+
+    return jax.vmap(one)(
+        img,
+        rlo.astype(jnp.int32),
+        rhi.astype(jnp.int32),
+        rw.astype(jnp.float32),
+        clo.astype(jnp.int32),
+        chi.astype(jnp.int32),
+        cw.astype(jnp.float32),
+    )
+
+
+def pad_crop(img_padded, oy, ox, out_h: int, out_w: int):
+    def one(im, y, x):
+        return jax.lax.dynamic_slice(im, (y, x, 0), (out_h, out_w, im.shape[-1]))
+
+    return jax.vmap(one)(
+        img_padded.astype(jnp.float32), oy.astype(jnp.int32), ox.astype(jnp.int32)
+    )
+
+
+def hflip(x, flip):
+    x = x.astype(jnp.float32)
+    return jnp.where(flip[:, None, None, None] > 0.5, x[:, :, ::-1, :], x)
+
+
+def cutout(x, cy, cx, size: int):
+    x = x.astype(jnp.float32)
+    b, c, h, w = x.shape
+    half = size // 2
+    iy = jnp.arange(h)[None, :, None]
+    ix = jnp.arange(w)[None, None, :]
+    cy = cy.astype(jnp.int32)[:, None, None]
+    cx = cx.astype(jnp.int32)[:, None, None]
+    inside = (iy >= cy - half) & (iy < cy + half) & (ix >= cx - half) & (ix < cx + half)
+    return jnp.where(inside[:, None, :, :], 0.0, x)

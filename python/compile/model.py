@@ -1,0 +1,299 @@
+"""L2 — tiny trainable JAX models mirroring the paper's model zoo.
+
+The paper trains WRN, ResNet152, ViT, VGG and AlexNet; Table VI's
+behaviour only depends on the *relative* accelerator cost per batch, so
+we build faithful miniature versions of each architecture family (a few
+hundred thousand parameters each) that actually train end-to-end through
+the AOT'd HLO.  Each model exposes
+
+    init(seed)              -> list[np.ndarray]  (flat parameter list)
+    apply(params, x)        -> logits            (pure jnp)
+    train_step(params, x, y)-> (*new_params, loss)  (fwd+bwd+SGD fused)
+
+``train_step`` is lowered to a single HLO program per model — one
+program, no host round-trips between forward, backward and the update
+(DESIGN.md §Perf L2).  Parameters are a flat list so the rust runtime
+can thread output buffers back as next-step inputs positionally.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LR = 0.05
+
+
+# ---------------------------------------------------------------------------
+# layer helpers
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, stride: int = 1, padding: str = "SAME"):
+    """NCHW conv with OIHW weights."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+def layernorm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def cross_entropy(logits, y, ncls: int):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, ncls, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+class _Init:
+    """Deterministic He/glorot initializer over a numpy PRNG."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self.params: List[np.ndarray] = []
+
+    def conv(self, cout, cin, kh, kw):
+        fan_in = cin * kh * kw
+        w = self.rng.normal(0.0, math.sqrt(2.0 / fan_in), (cout, cin, kh, kw))
+        self.params.append(w.astype(np.float32))
+        return len(self.params) - 1
+
+    def dense(self, nin, nout):
+        lim = math.sqrt(6.0 / (nin + nout))
+        w = self.rng.uniform(-lim, lim, (nin, nout)).astype(np.float32)
+        b = np.zeros((nout,), np.float32)
+        self.params += [w, b]
+        return len(self.params) - 2
+
+    def vec(self, n, value=0.0):
+        self.params.append(np.full((n,), value, np.float32))
+        return len(self.params) - 1
+
+
+# ---------------------------------------------------------------------------
+# conv family: alexnet / vgg / resnet / wrn
+# ---------------------------------------------------------------------------
+
+
+def _make_alexnet(hw: int, ncls: int):
+    """AlexNet-family miniature: big-kernel stem, two convs, two FCs."""
+
+    def init(seed: int) -> List[np.ndarray]:
+        ini = _Init(seed)
+        ini.conv(24, 3, 5, 5)
+        ini.conv(48, 24, 3, 3)
+        feat = 48 * (hw // 8) * (hw // 8)
+        ini.dense(feat, 128)
+        ini.dense(128, ncls)
+        return ini.params
+
+    def apply(p, x):
+        x = jax.nn.relu(conv2d(x, p[0], stride=2))
+        x = maxpool2(x)
+        x = jax.nn.relu(conv2d(x, p[1]))
+        x = maxpool2(x)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p[2] + p[3])
+        return x @ p[4] + p[5]
+
+    return init, apply
+
+
+def _make_vgg(hw: int, ncls: int):
+    """VGG-family miniature: stacked 3×3 conv pairs + pools."""
+
+    def init(seed):
+        ini = _Init(seed)
+        ini.conv(16, 3, 3, 3)
+        ini.conv(16, 16, 3, 3)
+        ini.conv(32, 16, 3, 3)
+        ini.conv(32, 32, 3, 3)
+        feat = 32 * (hw // 4) * (hw // 4)
+        ini.dense(feat, 128)
+        ini.dense(128, ncls)
+        return ini.params
+
+    def apply(p, x):
+        x = jax.nn.relu(conv2d(x, p[0]))
+        x = jax.nn.relu(conv2d(x, p[1]))
+        x = maxpool2(x)
+        x = jax.nn.relu(conv2d(x, p[2]))
+        x = jax.nn.relu(conv2d(x, p[3]))
+        x = maxpool2(x)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p[4] + p[5])
+        return x @ p[6] + p[7]
+
+    return init, apply
+
+
+def _make_resnet(hw: int, ncls: int, width: int = 16):
+    """ResNet-family miniature: stem + two residual stages + global pool.
+
+    ``width`` doubles for the WRN variants (the wide-residual idea)."""
+
+    def init(seed):
+        ini = _Init(seed)
+        ini.conv(width, 3, 3, 3)  # stem
+        for cin, cout in ((width, width), (width, 2 * width)):
+            ini.conv(cout, cin, 3, 3)
+            ini.conv(cout, cout, 3, 3)
+            if cin != cout:
+                ini.conv(cout, cin, 1, 1)  # projection shortcut
+        ini.dense(2 * width, ncls)
+        return ini.params
+
+    def apply(p, x):
+        i = 0
+        x = jax.nn.relu(conv2d(x, p[i])); i += 1
+        # stage 1 (identity shortcut)
+        h = jax.nn.relu(conv2d(x, p[i])); i += 1
+        h = conv2d(h, p[i]); i += 1
+        x = jax.nn.relu(x + h)
+        # stage 2 (projection shortcut, stride 2)
+        h = jax.nn.relu(conv2d(x, p[i], stride=2)); i += 1
+        h = conv2d(h, p[i]); i += 1
+        s = conv2d(x, p[i], stride=2); i += 1
+        x = jax.nn.relu(s + h)
+        x = avgpool_global(x)
+        return x @ p[i] + p[i + 1]
+
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# transformer family: vit
+# ---------------------------------------------------------------------------
+
+
+def _make_vit(hw: int, ncls: int, patch: int = 8, dim: int = 64,
+              depth: int = 2, heads: int = 4):
+    """ViT miniature: patch embed + `depth` pre-LN transformer blocks."""
+    seq = (hw // patch) ** 2
+    pdim = 3 * patch * patch
+
+    def init(seed):
+        ini = _Init(seed)
+        ini.dense(pdim, dim)  # patch embedding
+        ini.params.append(
+            (np.random.default_rng(seed + 1).normal(0, 0.02, (seq, dim))).astype(np.float32)
+        )  # positional embedding
+        for _ in range(depth):
+            ini.vec(dim, 1.0); ini.vec(dim, 0.0)  # ln1 g,b
+            ini.dense(dim, 3 * dim)  # qkv
+            ini.dense(dim, dim)  # proj
+            ini.vec(dim, 1.0); ini.vec(dim, 0.0)  # ln2 g,b
+            ini.dense(dim, 2 * dim)  # mlp up
+            ini.dense(2 * dim, dim)  # mlp down
+        ini.vec(dim, 1.0); ini.vec(dim, 0.0)  # final ln
+        ini.dense(dim, ncls)
+        return ini.params
+
+    def apply(p, x):
+        b = x.shape[0]
+        g = hw // patch
+        # [B,3,H,W] -> [B, seq, 3*patch*patch]
+        x = x.reshape(b, 3, g, patch, g, patch)
+        x = jnp.transpose(x, (0, 2, 4, 1, 3, 5)).reshape(b, seq, pdim)
+        i = 0
+        x = x @ p[i] + p[i + 1]; i += 2
+        x = x + p[i][None]; i += 1
+        hd = dim // heads
+        for _ in range(depth):
+            ln1 = layernorm(x, p[i], p[i + 1]); i += 2
+            qkv = ln1 @ p[i] + p[i + 1]; i += 2
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            split = lambda t: t.reshape(b, seq, heads, hd).transpose(0, 2, 1, 3)
+            q, k, v = split(q), split(k), split(v)
+            att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / math.sqrt(hd), axis=-1)
+            o = (att @ v).transpose(0, 2, 1, 3).reshape(b, seq, dim)
+            x = x + (o @ p[i] + p[i + 1]); i += 2
+            ln2 = layernorm(x, p[i], p[i + 1]); i += 2
+            h = jax.nn.gelu(ln2 @ p[i] + p[i + 1]); i += 2
+            x = x + (h @ p[i] + p[i + 1]); i += 2
+        x = layernorm(x, p[i], p[i + 1]); i += 2
+        x = jnp.mean(x, axis=1)
+        return x @ p[i] + p[i + 1]
+
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# registry + train step
+# ---------------------------------------------------------------------------
+
+
+class ModelSpec(NamedTuple):
+    init: Callable[[int], List[np.ndarray]]
+    apply: Callable
+    hw: int  # input height/width
+    ncls: int
+    batch: int  # batch baked into the AOT train_step artifact
+    lr: float
+
+
+def _specs() -> Dict[str, ModelSpec]:
+    mk = {}
+    # "ImageNet" zoo: 64×64 inputs, 100 classes, batch 8.
+    for name, factory, kw, lr in (
+        ("alexnet", _make_alexnet, {}, 0.005),
+        ("vgg", _make_vgg, {}, 0.02),
+        ("resnet152", _make_resnet, {"width": 16}, LR),
+        ("wrn", _make_resnet, {"width": 32}, LR),
+        ("vit", _make_vit, {}, LR),
+    ):
+        init, apply = factory(64, 100, **kw)
+        mk[name] = ModelSpec(init, apply, 64, 100, 8, lr)
+    # Cifar zoo.
+    init, apply = _make_resnet(32, 10, width=32)
+    mk["wrn18"] = ModelSpec(init, apply, 32, 10, 32, LR)
+    init, apply = _make_vit(64, 10)
+    mk["vit_dsa"] = ModelSpec(init, apply, 64, 10, 8, LR)
+    return mk
+
+
+MODELS: Dict[str, ModelSpec] = _specs()
+
+
+def make_train_step(name: str):
+    """Fused fwd+bwd+SGD step: (*params, x, y) -> (*params', loss)."""
+    spec = MODELS[name]
+
+    def loss_fn(params, x, y):
+        logits = spec.apply(params, x)
+        return cross_entropy(logits, y, spec.ncls)
+
+    def train_step(*args):
+        params = list(args[:-2])
+        x, y = args[-2], args[-1]
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params = [p - spec.lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss,)
+
+    return train_step
+
+
+def train_example_inputs(name: str):
+    spec = MODELS[name]
+    params = spec.init(0)
+    shapes = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    x = jax.ShapeDtypeStruct((spec.batch, 3, spec.hw, spec.hw), jnp.float32)
+    y = jax.ShapeDtypeStruct((spec.batch,), jnp.int32)
+    return shapes + [x, y]

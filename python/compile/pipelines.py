@@ -1,0 +1,241 @@
+"""L2 — the five preprocessing pipelines of Table IV, composed from the
+L1 Pallas kernels.
+
+Dataset geometry is miniaturized (DESIGN.md substitution map): the
+ImageNet-like pipelines operate on 96×96 decoded sources and produce
+64×64 model inputs (the paper's 224 target scaled by ~3.5×); Cifar-10
+keeps its native 32×32.  The *structure* of each pipeline — which ops,
+in which order, with which random parameters — follows Table IV:
+
+    imagenet1:  RandomResizedCrop(64) → RandomHorizontalFlip
+                → ToTensor → Normalize
+    imagenet2:  Resize(73) → CentralCrop(64) → ToTensor → Normalize
+    imagenet3:  Resize(66) → CentralCrop(64) → ToTensor → Normalize
+    cifar_gpu:  RandomCrop(32, pad=4) → RandomHorizontalFlip
+                → ToTensor → Normalize → Cutout(16)
+    cifar_dsa:  RandomResizedCrop(64, scale=(0.05, 1.0))
+                → ToTensor → Normalize
+
+Randomness is supplied by the caller as a ``f32[B, 8]`` uniform(0,1)
+tensor (the rust coordinator draws it), keeping the lowered HLO
+deterministic and replayable — preprocessing on the host engine and on
+the CSD engine runs the *same* artifact, which is how the paper's
+"identical results on CPU and CSD" property is guaranteed here.
+
+Flips are folded into the bilinear gather where the pipeline allows it
+(imagenet1): flipping the column sampling positions before the gather is
+equivalent to flipping the output afterwards, saving a full VMEM pass.
+Resize→CentralCrop (imagenet2/3) fuses into a single gather by
+offsetting the sampling grid — the intermediate resized image never
+materializes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import preprocess as K
+from compile.kernels import ref as R
+
+# Decoded-source / output geometry (paper sizes ÷ 3.5, see module doc).
+RAW_IMAGENET = 96
+OUT_IMAGENET = 64
+RESIZE_IMAGENET2 = 73  # paper: 256
+RESIZE_IMAGENET3 = 66  # paper: 232
+RAW_CIFAR = 32
+OUT_CIFAR = 32
+OUT_CIFAR_DSA = 64
+CIFAR_PAD = 4
+CUTOUT_SIZE = 16
+
+MEAN_IMAGENET = jnp.array([0.485, 0.456, 0.406], jnp.float32)
+STD_IMAGENET = jnp.array([0.229, 0.224, 0.225], jnp.float32)
+MEAN_CIFAR = jnp.array([0.4914, 0.4822, 0.4465], jnp.float32)
+STD_CIFAR = jnp.array([0.2470, 0.2435, 0.2616], jnp.float32)
+
+
+class Impl(NamedTuple):
+    """Kernel implementation bundle: the Pallas kernels or the jnp oracle.
+
+    Pipelines are written once against this interface; tests instantiate
+    both and assert allclose (the pipeline-level correctness signal).
+    """
+
+    normalize: Callable
+    bilinear_gather: Callable
+    pad_crop: Callable
+    hflip: Callable
+    cutout: Callable
+
+
+PALLAS_IMPL = Impl(K.normalize, K.bilinear_gather, K.pad_crop, K.hflip, K.cutout)
+REF_IMPL = Impl(R.normalize, R.bilinear_gather, R.pad_crop, R.hflip, R.cutout)
+
+
+# ---------------------------------------------------------------------------
+# sampling-grid math (shared by both impls; tested directly in pytest)
+# ---------------------------------------------------------------------------
+
+
+def _grid_axis(start, span, n_out: int, n_src: int):
+    """Bilinear sampling positions for one axis.
+
+    Output pixel ``i`` samples source position
+    ``start + (i + 0.5) * (span / n_out) - 0.5`` (the standard
+    half-pixel-center convention), clamped to the valid range.
+
+    Args:
+      start/span: scalars or ``[B]`` arrays, in source pixels.
+      n_out: output length.  n_src: source length.
+
+    Returns:
+      ``(lo, hi, w)`` with shapes broadcast to ``[..., n_out]``.
+    """
+    start = jnp.asarray(start, jnp.float32)
+    span = jnp.asarray(span, jnp.float32)
+    i = jnp.arange(n_out, dtype=jnp.float32)
+    pos = start[..., None] + (i + 0.5) * (span[..., None] / n_out) - 0.5
+    pos = jnp.clip(pos, 0.0, n_src - 1.0)
+    lo = jnp.floor(pos)
+    w = pos - lo
+    lo = lo.astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, n_src - 1)
+    return lo, hi, w
+
+
+def _static_resize_crop_grid(n_src: int, resize_to: int, crop: int):
+    """Fused Resize(resize_to)→CentralCrop(crop) grid (static: trace-time).
+
+    The crop window starts at ``(resize_to - crop)/2`` in resized
+    coordinates; mapping back to source coordinates gives a single
+    gather that implements both ops.
+    """
+    scale = n_src / resize_to
+    # torchvision CenterCrop uses the floored integer offset.
+    off = float((resize_to - crop) // 2)
+    # _grid_axis computes start + (i+0.5)*span/n_out - 0.5; we need
+    # pos(i) = (off + i + 0.5)*scale - 0.5, i.e. start=off*scale, span=crop*scale.
+    return _grid_axis(off * scale, crop * scale, crop, n_src)
+
+
+def _rrc_boxes(rand: jax.Array, n_src: int, scale_lo: float, scale_hi: float,
+               ratio_lo: float = 3.0 / 4.0, ratio_hi: float = 4.0 / 3.0):
+    """RandomResizedCrop box per sample (single-draw variant).
+
+    torchvision rejection-samples up to 10 boxes; the single analytic
+    draw below covers the same distribution support and is branch-free
+    (HLO-friendly).  rand columns: 0=area, 1=log-ratio, 2=top, 3=left.
+
+    Returns ``(top, left, h, w)`` as f32[B] in source pixels.
+    """
+    u_area, u_ratio, u_top, u_left = rand[:, 0], rand[:, 1], rand[:, 2], rand[:, 3]
+    area = (scale_lo + u_area * (scale_hi - scale_lo)) * (n_src * n_src)
+    log_r = jnp.log(ratio_lo) + u_ratio * (jnp.log(ratio_hi) - jnp.log(ratio_lo))
+    ratio = jnp.exp(log_r)
+    w = jnp.clip(jnp.sqrt(area * ratio), 1.0, float(n_src))
+    h = jnp.clip(jnp.sqrt(area / ratio), 1.0, float(n_src))
+    top = u_top * (n_src - h)
+    left = u_left * (n_src - w)
+    return top, left, h, w
+
+
+def _flip_cols(clo, chi, cw, flip):
+    """Fold a per-sample horizontal flip into column sampling vectors."""
+    f = (flip > 0.5)[:, None]
+    return (
+        jnp.where(f, clo[:, ::-1], clo),
+        jnp.where(f, chi[:, ::-1], chi),
+        jnp.where(f, cw[:, ::-1], cw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the five pipelines
+# ---------------------------------------------------------------------------
+
+
+def imagenet1(raw: jax.Array, rand: jax.Array, impl: Impl = PALLAS_IMPL) -> jax.Array:
+    """RandomResizedCrop(64) → flip → ToTensor → Normalize."""
+    b = raw.shape[0]
+    n_src = raw.shape[1]
+    img = raw.astype(jnp.float32)
+    top, left, h, w = _rrc_boxes(rand, n_src, 0.08, 1.0)
+    rlo, rhi, rw = _grid_axis(top, h, OUT_IMAGENET, n_src)
+    clo, chi, cw = _grid_axis(left, w, OUT_IMAGENET, n_src)
+    clo, chi, cw = _flip_cols(clo, chi, cw, rand[:, 4])
+    crop = impl.bilinear_gather(img, rlo, rhi, rw, clo, chi, cw)
+    return impl.normalize(crop, MEAN_IMAGENET, STD_IMAGENET)
+
+
+def _imagenet_static(raw, impl: Impl, resize_to: int):
+    b, n_src = raw.shape[0], raw.shape[1]
+    img = raw.astype(jnp.float32)
+    lo, hi, w = _static_resize_crop_grid(n_src, resize_to, OUT_IMAGENET)
+    tile = lambda v: jnp.broadcast_to(v[None, :], (b, OUT_IMAGENET))
+    crop = impl.bilinear_gather(img, tile(lo), tile(hi), tile(w), tile(lo), tile(hi), tile(w))
+    return impl.normalize(crop, MEAN_IMAGENET, STD_IMAGENET)
+
+
+def imagenet2(raw, rand, impl: Impl = PALLAS_IMPL):
+    """Resize(73) → CentralCrop(64) → ToTensor → Normalize (rand unused)."""
+    del rand
+    return _imagenet_static(raw, impl, RESIZE_IMAGENET2)
+
+
+def imagenet3(raw, rand, impl: Impl = PALLAS_IMPL):
+    """Resize(66) → CentralCrop(64) → ToTensor → Normalize (rand unused)."""
+    del rand
+    return _imagenet_static(raw, impl, RESIZE_IMAGENET3)
+
+
+def cifar_gpu(raw: jax.Array, rand: jax.Array, impl: Impl = PALLAS_IMPL) -> jax.Array:
+    """RandomCrop(32, pad 4) → flip → ToTensor → Normalize → Cutout(16)."""
+    b, h, w = raw.shape[0], raw.shape[1], raw.shape[2]
+    img = raw.astype(jnp.float32)
+    padded = jnp.pad(img, ((0, 0), (CIFAR_PAD, CIFAR_PAD), (CIFAR_PAD, CIFAR_PAD), (0, 0)))
+    oy = jnp.floor(rand[:, 0] * (2 * CIFAR_PAD + 1)).astype(jnp.int32)
+    ox = jnp.floor(rand[:, 1] * (2 * CIFAR_PAD + 1)).astype(jnp.int32)
+    crop = impl.pad_crop(padded, oy, ox, OUT_CIFAR, OUT_CIFAR)
+    flipped = impl.hflip(crop, rand[:, 2])
+    norm = impl.normalize(flipped, MEAN_CIFAR, STD_CIFAR)
+    cy = jnp.floor(rand[:, 3] * OUT_CIFAR).astype(jnp.int32)
+    cx = jnp.floor(rand[:, 4] * OUT_CIFAR).astype(jnp.int32)
+    return impl.cutout(norm, cy, cx, CUTOUT_SIZE)
+
+
+def cifar_dsa(raw: jax.Array, rand: jax.Array, impl: Impl = PALLAS_IMPL) -> jax.Array:
+    """RandomResizedCrop(64, scale=(0.05, 1.0)) → ToTensor → Normalize."""
+    n_src = raw.shape[1]
+    img = raw.astype(jnp.float32)
+    top, left, h, w = _rrc_boxes(rand, n_src, 0.05, 1.0)
+    rlo, rhi, rw = _grid_axis(top, h, OUT_CIFAR_DSA, n_src)
+    clo, chi, cw = _grid_axis(left, w, OUT_CIFAR_DSA, n_src)
+    crop = impl.bilinear_gather(img, rlo, rhi, rw, clo, chi, cw)
+    return impl.normalize(crop, MEAN_IMAGENET, STD_IMAGENET)
+
+
+class PipelineSpec(NamedTuple):
+    fn: Callable  # (raw, rand, impl) -> f32[B, C, H, W]
+    raw_hw: int  # decoded source height/width
+    out_hw: int  # model input height/width
+    batch: int  # batch size baked into the AOT artifact
+    n_rand: int  # random columns consumed
+
+
+PIPELINES: Dict[str, PipelineSpec] = {
+    "imagenet1": PipelineSpec(imagenet1, RAW_IMAGENET, OUT_IMAGENET, 8, 8),
+    "imagenet2": PipelineSpec(imagenet2, RAW_IMAGENET, OUT_IMAGENET, 8, 8),
+    "imagenet3": PipelineSpec(imagenet3, RAW_IMAGENET, OUT_IMAGENET, 8, 8),
+    "cifar_gpu": PipelineSpec(cifar_gpu, RAW_CIFAR, OUT_CIFAR, 32, 8),
+    "cifar_dsa": PipelineSpec(cifar_dsa, RAW_CIFAR, OUT_CIFAR_DSA, 8, 8),
+}
+
+
+def example_inputs(name: str) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+    spec = PIPELINES[name]
+    raw = jax.ShapeDtypeStruct((spec.batch, spec.raw_hw, spec.raw_hw, 3), jnp.uint8)
+    rand = jax.ShapeDtypeStruct((spec.batch, spec.n_rand), jnp.float32)
+    return raw, rand

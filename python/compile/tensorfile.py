@@ -1,0 +1,79 @@
+"""Tiny self-describing tensor container shared between the python compile
+path and the rust runtime (`rust/src/runtime/tensorfile.rs`).
+
+Layout (little-endian):
+
+    magic   : 4 bytes  b"DTNS"
+    version : u32      (1)
+    ntens   : u32
+    per tensor:
+        name_len : u32
+        name     : utf-8 bytes
+        dtype    : u32   (0 = f32, 1 = u8, 2 = i32, 3 = i64)
+        ndim     : u32
+        dims     : ndim * u64
+        nbytes   : u64
+        data     : raw bytes (C-contiguous)
+
+Used for: initial model parameters, golden input/output pairs for the
+runtime numerics tests, and synthetic calibration batches.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"DTNS"
+VERSION = 1
+
+_DTYPE_CODES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.uint8): 1,
+    np.dtype(np.int32): 2,
+    np.dtype(np.int64): 3,
+}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+def write_tensors(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    """Write an ordered list of named tensors to `path`."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_CODES:
+                raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", _DTYPE_CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_tensors(path: str) -> Dict[str, np.ndarray]:
+    """Read back a tensor file written by `write_tensors` (or by rust)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, ntens = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(ntens):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<II", f.read(8))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            arr = np.frombuffer(raw, dtype=_CODE_DTYPES[code]).reshape(dims)
+            out[name] = arr.copy()
+    return out

@@ -1,0 +1,87 @@
+"""Artifact contract tests: manifest completeness, HLO sanity, goldens.
+
+These run against ``artifacts/`` when present (``make artifacts``); they
+are skipped on a clean tree so unit tests stay hermetic.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import pipelines as P
+from compile.tensorfile import read_tensors
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_pipelines_and_models(manifest):
+    names = set(manifest["artifacts"])
+    for p in P.PIPELINES:
+        assert f"preprocess_{p}" in names
+    for m in M.MODELS:
+        assert f"train_{m}" in names
+
+
+def test_hlo_files_exist_and_parse_shape(manifest):
+    for name, ent in manifest["artifacts"].items():
+        path = os.path.join(ART, ent["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+
+
+def test_golden_preprocess_replays(manifest):
+    """Re-executing each pipeline on its golden inputs reproduces the
+    recorded output — guards against kernel drift after AOT."""
+    for p, spec in P.PIPELINES.items():
+        g = read_tensors(os.path.join(ART, f"golden_preprocess_{p}.dtns"))
+        out = np.asarray(spec.fn(g["raw"], g["rand"], P.PALLAS_IMPL))
+        # jit (golden) vs eager (here) reassociate float ops; tolerance is
+        # in normalized-pixel units.
+        np.testing.assert_allclose(out, g["out"], rtol=1e-4, atol=1e-4)
+
+
+def test_golden_train_losses_finite_and_decreasing(manifest):
+    for m in M.MODELS:
+        g = read_tensors(os.path.join(ART, f"golden_train_{m}.dtns"))
+        losses = g["losses"]
+        assert np.isfinite(losses).all(), m
+        assert losses[-1] < losses[0], f"{m}: {losses}"
+
+
+def test_params_files_match_manifest(manifest):
+    for m in M.MODELS:
+        ent = manifest["artifacts"][f"train_{m}"]
+        params = read_tensors(os.path.join(ART, ent["params_file"]))
+        assert len(params) == ent["n_params"]
+        for i, (name, arr) in enumerate(params.items()):
+            assert name == f"p{i}"
+            assert list(arr.shape) == ent["inputs"][i]["shape"]
+
+
+def test_manifest_io_shapes_consistent(manifest):
+    for name, ent in manifest["artifacts"].items():
+        if ent["kind"] == "preprocess":
+            raw = ent["inputs"][0]
+            out = ent["outputs"][0]
+            assert raw["shape"][0] == out["shape"][0] == ent["batch"]
+            assert raw["dtype"] == "u8" and out["dtype"] == "f32"
+        else:
+            # train: outputs = params' + loss
+            assert len(ent["outputs"]) == ent["n_params"] + 1
+            assert ent["outputs"][-1]["shape"] == []

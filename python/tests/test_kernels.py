@@ -1,0 +1,222 @@
+"""L1 kernel correctness: each Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and input distributions; example counts are kept
+modest because interpret-mode pallas is slow on CPU.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import preprocess as K
+from compile.kernels import ref as R
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# normalize
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 24),
+    w=st.integers(1, 24),
+    c=st.sampled_from([1, 3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normalize_matches_ref(b, h, w, c, seed):
+    rng = _rng(seed)
+    x = rng.integers(0, 256, (b, h, w, c)).astype(np.float32)
+    mean = rng.random(c).astype(np.float32)
+    std = (rng.random(c) * 0.5 + 0.1).astype(np.float32)
+    got = np.asarray(K.normalize(x, jnp.asarray(mean), jnp.asarray(std)))
+    want = np.asarray(R.normalize(jnp.asarray(x), jnp.asarray(mean), jnp.asarray(std)))
+    assert got.shape == (b, c, h, w)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_normalize_accepts_u8_input():
+    x = _rng(0).integers(0, 256, (2, 8, 8, 3), dtype=np.uint8)
+    mean = np.array([0.5, 0.5, 0.5], np.float32)
+    std = np.array([0.25, 0.25, 0.25], np.float32)
+    got = np.asarray(K.normalize(jnp.asarray(x), jnp.asarray(mean), jnp.asarray(std)))
+    want = np.asarray(R.normalize(jnp.asarray(x), jnp.asarray(mean), jnp.asarray(std)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_normalize_known_values():
+    # 255 with mean 1, std 1 -> 0 ; 0 with mean 0, std 1 -> 0.
+    x = np.full((1, 2, 2, 1), 255.0, np.float32)
+    out = np.asarray(K.normalize(x, jnp.ones(1), jnp.ones(1)))
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# bilinear gather
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    hs=st.integers(2, 20),
+    ws=st.integers(2, 20),
+    ho=st.integers(1, 16),
+    wo=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bilinear_matches_ref(b, hs, ws, ho, wo, seed):
+    rng = _rng(seed)
+    img = rng.random((b, hs, ws, 3)).astype(np.float32) * 255
+    rlo = rng.integers(0, hs, (b, ho)).astype(np.int32)
+    rhi = np.minimum(rlo + 1, hs - 1).astype(np.int32)
+    rw = rng.random((b, ho)).astype(np.float32)
+    clo = rng.integers(0, ws, (b, wo)).astype(np.int32)
+    chi = np.minimum(clo + 1, ws - 1).astype(np.int32)
+    cw = rng.random((b, wo)).astype(np.float32)
+    args = tuple(jnp.asarray(a) for a in (img, rlo, rhi, rw, clo, chi, cw))
+    got = np.asarray(K.bilinear_gather(*args))
+    want = np.asarray(R.bilinear_gather(*args))
+    assert got.shape == (b, ho, wo, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_bilinear_identity_sampling():
+    """Integer positions with zero weights reproduce the source exactly."""
+    rng = _rng(3)
+    img = rng.random((2, 6, 5, 3)).astype(np.float32)
+    rlo = np.tile(np.arange(6, dtype=np.int32), (2, 1))
+    clo = np.tile(np.arange(5, dtype=np.int32), (2, 1))
+    zw_r = np.zeros((2, 6), np.float32)
+    zw_c = np.zeros((2, 5), np.float32)
+    got = np.asarray(
+        K.bilinear_gather(img, rlo, np.minimum(rlo + 1, 5), zw_r, clo, np.minimum(clo + 1, 4), zw_c)
+    )
+    np.testing.assert_allclose(got, img, atol=1e-6)
+
+
+def test_bilinear_midpoint_interpolation():
+    """Weight 0.5 between two rows averages them."""
+    img = np.zeros((1, 2, 1, 1), np.float32)
+    img[0, 0, 0, 0] = 10.0
+    img[0, 1, 0, 0] = 20.0
+    rlo = np.array([[0]], np.int32)
+    rhi = np.array([[1]], np.int32)
+    rw = np.array([[0.5]], np.float32)
+    clo = np.array([[0]], np.int32)
+    chi = np.array([[0]], np.int32)
+    cw = np.array([[0.0]], np.float32)
+    got = np.asarray(K.bilinear_gather(img, rlo, rhi, rw, clo, chi, cw))
+    np.testing.assert_allclose(got[0, 0, 0, 0], 15.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pad_crop
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(4, 16),
+    pad=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pad_crop_matches_ref(b, h, pad, seed):
+    rng = _rng(seed)
+    hp = h + 2 * pad
+    img = rng.random((b, hp, hp, 3)).astype(np.float32)
+    oy = rng.integers(0, 2 * pad + 1, b).astype(np.int32)
+    ox = rng.integers(0, 2 * pad + 1, b).astype(np.int32)
+    got = np.asarray(K.pad_crop(img, oy, ox, h, h))
+    want = np.asarray(R.pad_crop(img, oy, ox, h, h))
+    assert got.shape == (b, h, h, 3)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_pad_crop_zero_offset_is_topleft():
+    img = _rng(1).random((1, 8, 8, 3)).astype(np.float32)
+    got = np.asarray(K.pad_crop(img, np.zeros(1, np.int32), np.zeros(1, np.int32), 4, 4))
+    np.testing.assert_allclose(got[0], img[0, :4, :4], atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# hflip
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 16),
+    w=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hflip_matches_ref(b, h, w, seed):
+    rng = _rng(seed)
+    x = rng.random((b, h, w, 3)).astype(np.float32)
+    flip = rng.random(b).astype(np.float32)
+    got = np.asarray(K.hflip(x, flip))
+    want = np.asarray(R.hflip(jnp.asarray(x), jnp.asarray(flip)))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_hflip_involution():
+    """Flipping twice is the identity."""
+    x = _rng(5).random((2, 6, 7, 3)).astype(np.float32)
+    ones = np.ones(2, np.float32)
+    twice = np.asarray(K.hflip(np.asarray(K.hflip(x, ones)), ones))
+    np.testing.assert_allclose(twice, x, atol=1e-6)
+
+
+def test_hflip_noop_below_threshold():
+    x = _rng(6).random((1, 4, 4, 3)).astype(np.float32)
+    out = np.asarray(K.hflip(x, np.array([0.49], np.float32)))
+    np.testing.assert_allclose(out, x, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# cutout
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    hw=st.integers(4, 24),
+    size=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cutout_matches_ref(b, hw, size, seed):
+    rng = _rng(seed)
+    x = rng.random((b, 3, hw, hw)).astype(np.float32) + 1.0  # strictly nonzero
+    cy = rng.integers(0, hw, b).astype(np.int32)
+    cx = rng.integers(0, hw, b).astype(np.int32)
+    got = np.asarray(K.cutout(x, cy, cx, size))
+    want = np.asarray(R.cutout(jnp.asarray(x), jnp.asarray(cy), jnp.asarray(cx), size))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_cutout_zeroes_expected_area():
+    """Interior window of size s zeroes exactly s*s pixels per channel."""
+    hw, s = 16, 4
+    x = np.ones((1, 3, hw, hw), np.float32)
+    got = np.asarray(K.cutout(x, np.array([8], np.int32), np.array([8], np.int32), s))
+    zeros_per_channel = (got[0] == 0).sum(axis=(1, 2))
+    np.testing.assert_array_equal(zeros_per_channel, [s * s] * 3)
+
+
+def test_cutout_clips_at_border():
+    """A window centered at the corner zeroes only the in-bounds quadrant."""
+    hw, s = 8, 4
+    x = np.ones((1, 3, hw, hw), np.float32)
+    got = np.asarray(K.cutout(x, np.array([0], np.int32), np.array([0], np.int32), s))
+    assert (got[0, 0] == 0).sum() == (s // 2) * (s // 2)

@@ -1,0 +1,154 @@
+"""L2 pipeline correctness: pallas pipelines vs the jnp-oracle pipelines,
+plus properties of the shared sampling-grid math."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pipelines as P
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def _inputs(name, b, seed):
+    spec = P.PIPELINES[name]
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 256, (b, spec.raw_hw, spec.raw_hw, 3), dtype=np.uint8)
+    rand = rng.random((b, spec.n_rand), dtype=np.float32)
+    return raw, rand
+
+
+@pytest.mark.parametrize("name", list(P.PIPELINES))
+def test_pipeline_pallas_matches_ref(name):
+    raw, rand = _inputs(name, 4, 0)
+    got = np.asarray(P.PIPELINES[name].fn(raw, rand, P.PALLAS_IMPL))
+    want = np.asarray(P.PIPELINES[name].fn(raw, rand, P.REF_IMPL))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", list(P.PIPELINES))
+def test_pipeline_output_geometry(name):
+    spec = P.PIPELINES[name]
+    raw, rand = _inputs(name, 2, 1)
+    out = np.asarray(spec.fn(raw, rand, P.REF_IMPL))
+    assert out.shape == (2, 3, spec.out_hw, spec.out_hw)
+    assert out.dtype == np.float32
+    assert np.isfinite(out).all()
+
+
+@pytest.mark.parametrize("name", list(P.PIPELINES))
+def test_pipeline_deterministic_given_rand(name):
+    """Same raw+rand → identical output: the CPU engine and the CSD engine
+    running the same artifact must produce identical batches (the paper's
+    cross-device consistency property)."""
+    raw, rand = _inputs(name, 2, 2)
+    a = np.asarray(P.PIPELINES[name].fn(raw, rand, P.PALLAS_IMPL))
+    b = np.asarray(P.PIPELINES[name].fn(raw, rand, P.PALLAS_IMPL))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_static_pipelines_ignore_rand():
+    """imagenet2/3 are deterministic transforms: rand must not leak in."""
+    for name in ("imagenet2", "imagenet3"):
+        raw, rand = _inputs(name, 2, 3)
+        other = np.random.default_rng(99).random(rand.shape, dtype=np.float32)
+        a = np.asarray(P.PIPELINES[name].fn(raw, rand, P.REF_IMPL))
+        b = np.asarray(P.PIPELINES[name].fn(raw, other, P.REF_IMPL))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_imagenet1_flip_bit_changes_output():
+    raw, rand = _inputs("imagenet1", 1, 4)
+    rand_f = rand.copy()
+    rand[0, 4] = 0.0
+    rand_f[0, 4] = 1.0
+    a = np.asarray(P.imagenet1(raw, rand, P.REF_IMPL))
+    b = np.asarray(P.imagenet1(raw, rand_f, P.REF_IMPL))
+    # Flipping the crop should mirror it: flipped(a) == b up to resampling.
+    np.testing.assert_allclose(a[:, :, :, ::-1], b, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# grid math properties
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n_src=st.integers(2, 512),
+    n_out=st.integers(1, 128),
+    start=st.floats(0, 64),
+    span=st.floats(1, 256),
+)
+def test_grid_axis_bounds(n_src, n_out, start, span):
+    lo, hi, w = P._grid_axis(start, span, n_out, n_src)
+    lo, hi, w = np.asarray(lo), np.asarray(hi), np.asarray(w)
+    assert ((0 <= lo) & (lo < n_src)).all()
+    assert ((lo <= hi) & (hi < n_src)).all()
+    assert (hi - lo <= 1).all()
+    assert ((0.0 <= w) & (w < 1.0 + 1e-6)).all()
+
+
+def test_grid_axis_identity():
+    """span == n_out == n_src samples exactly the source pixels."""
+    lo, hi, w = P._grid_axis(0.0, 8.0, 8, 8)
+    np.testing.assert_array_equal(np.asarray(lo), np.arange(8))
+    np.testing.assert_allclose(np.asarray(w), 0.0, atol=1e-6)
+
+
+def test_grid_axis_monotone():
+    lo, hi, w = P._grid_axis(3.0, 40.0, 16, 96)
+    pos = np.asarray(lo) + np.asarray(w)
+    assert (np.diff(pos) > 0).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), scale_lo=st.floats(0.05, 0.5))
+def test_rrc_boxes_in_bounds(seed, scale_lo):
+    rng = np.random.default_rng(seed)
+    rand = jnp.asarray(rng.random((16, 8), dtype=np.float32))
+    n_src = 96
+    top, left, h, w = P._rrc_boxes(rand, n_src, scale_lo, 1.0)
+    top, left, h, w = (np.asarray(v) for v in (top, left, h, w))
+    assert ((1.0 <= h) & (h <= n_src)).all()
+    assert ((1.0 <= w) & (w <= n_src)).all()
+    assert ((0.0 <= top) & (top + h <= n_src + 1e-3)).all()
+    assert ((0.0 <= left) & (left + w <= n_src + 1e-3)).all()
+
+
+def test_static_fused_resize_crop_equals_two_step():
+    """The fused Resize→CentralCrop gather equals resizing the whole image
+    then slicing the central window (the unfused reference computation)."""
+    rng = np.random.default_rng(0)
+    n_src, resize_to, crop = 96, 73, 64
+    img = rng.random((1, n_src, n_src, 3)).astype(np.float32)
+
+    # two-step: full resize with _grid_axis, then central slice
+    lo, hi, w = P._grid_axis(0.0, float(n_src), resize_to, n_src)
+    tile = lambda v: jnp.broadcast_to(v[None, :], (1, resize_to))
+    from compile.kernels import ref as R
+
+    resized = np.asarray(
+        R.bilinear_gather(img, tile(lo), tile(hi), tile(w), tile(lo), tile(hi), tile(w))
+    )
+    off = (resize_to - crop) // 2
+    two_step = resized[:, off : off + crop, off : off + crop, :]
+
+    lo2, hi2, w2 = P._static_resize_crop_grid(n_src, resize_to, crop)
+    tile2 = lambda v: jnp.broadcast_to(v[None, :], (1, crop))
+    fused = np.asarray(
+        R.bilinear_gather(img, tile2(lo2), tile2(hi2), tile2(w2), tile2(lo2), tile2(hi2), tile2(w2))
+    )
+    np.testing.assert_allclose(fused, two_step, rtol=1e-5, atol=1e-5)
+
+
+def test_flip_cols_reverses():
+    clo = jnp.asarray(np.tile(np.arange(8, dtype=np.int32), (2, 1)))
+    chi = clo + 1
+    cw = jnp.asarray(np.random.default_rng(0).random((2, 8), dtype=np.float32))
+    flip = jnp.asarray(np.array([1.0, 0.0], np.float32))
+    flo, fhi, fw = P._flip_cols(clo, chi, cw, flip)
+    np.testing.assert_array_equal(np.asarray(flo)[0], np.arange(8)[::-1])
+    np.testing.assert_array_equal(np.asarray(flo)[1], np.arange(8))
+    np.testing.assert_allclose(np.asarray(fw)[0], np.asarray(cw)[0][::-1])

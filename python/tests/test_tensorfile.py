@@ -1,0 +1,53 @@
+"""Round-trip tests for the DTNS tensor container (shared with rust)."""
+
+import numpy as np
+import pytest
+
+from compile.tensorfile import read_tensors, write_tensors
+
+
+@pytest.mark.parametrize(
+    "dtype", [np.float32, np.uint8, np.int32, np.int64]
+)
+def test_roundtrip_dtypes(tmp_path, dtype):
+    path = str(tmp_path / "t.dtns")
+    rng = np.random.default_rng(0)
+    arr = (rng.random((3, 4, 5)) * 100).astype(dtype)
+    write_tensors(path, [("a", arr)])
+    back = read_tensors(path)
+    assert back["a"].dtype == np.dtype(dtype)
+    np.testing.assert_array_equal(back["a"], arr)
+
+
+def test_roundtrip_many_and_scalar(tmp_path):
+    path = str(tmp_path / "t.dtns")
+    tensors = [
+        ("scalar", np.float32(3.5).reshape(())),
+        ("vec", np.arange(7, dtype=np.int32)),
+        ("img", np.zeros((2, 3, 8, 8), np.float32)),
+        ("bytes", np.arange(16, dtype=np.uint8).reshape(4, 4)),
+    ]
+    write_tensors(path, tensors)
+    back = read_tensors(path)
+    assert list(back.keys()) == [n for n, _ in tensors]
+    for name, arr in tensors:
+        np.testing.assert_array_equal(back[name], arr)
+
+
+def test_empty_file(tmp_path):
+    path = str(tmp_path / "t.dtns")
+    write_tensors(path, [])
+    assert read_tensors(path) == {}
+
+
+def test_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.dtns")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        read_tensors(path)
+
+
+def test_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        write_tensors(str(tmp_path / "x.dtns"), [("f64", np.zeros(3, np.float64))])

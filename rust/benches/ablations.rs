@@ -1,0 +1,108 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **CSD speed** (`csd_slowdown` sweep) — §VI-C factor 1: the faster
+//!    the CSD relative to the CPU side, the larger DDLP's gain; also
+//!    where the CSD-only crossover would appear.
+//! 2. **WRR poll cost** — the paper argues `len(os.listdir)` is
+//!    negligible; sweep it until it is not.
+//! 3. **GDS bandwidth** (§VI-C factor 2) — faster direct-storage reads
+//!    shorten the CSD-side extra learning time.
+//! 4. **Calibration sample size** (MTE's 10-batch choice) — too few
+//!    batches mis-split; more buys little.
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::metrics::{fmt_s, pct_faster, Table};
+
+fn run(strategy: Strategy, profile: DeviceProfile, workers: u32) -> f64 {
+    let cfg = ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline("imagenet1")
+        .strategy(strategy)
+        .num_workers(workers)
+        .n_batches(300)
+        .epochs(3)
+        .profile(profile)
+        .build()
+        .unwrap();
+    run_experiment(&cfg).unwrap().report.learn_time_per_batch
+}
+
+fn main() {
+    // 1. CSD speed sweep
+    let mut t = Table::new(vec!["csd_slowdown", "CPU_0", "MTE_0", "WRR_0", "WRR gain"]);
+    for slowdown in [1.5, 2.5, 3.5, 5.0, 8.0, 16.0] {
+        let mut p = DeviceProfile::default();
+        p.csd_slowdown = slowdown;
+        let cpu = run(Strategy::CpuOnly, p.clone(), 0);
+        let mte = run(Strategy::Mte, p.clone(), 0);
+        let wrr = run(Strategy::Wrr, p, 0);
+        t.row(vec![
+            format!("{slowdown}x"),
+            fmt_s(cpu),
+            fmt_s(mte),
+            fmt_s(wrr),
+            format!("{:+.1}%", pct_faster(cpu, wrr)),
+        ]);
+    }
+    println!("=== Ablation 1: CSD relative speed (§VI-C factor 1) ===");
+    println!("{}", t.to_text());
+
+    // 2. WRR poll cost sweep
+    let mut t = Table::new(vec!["poll cost", "WRR_0 s/batch", "vs negligible"]);
+    let mut base = None;
+    for poll in [0.0, 20e-6, 1e-3, 10e-3, 100e-3] {
+        let mut p = DeviceProfile::default();
+        p.poll_cost_s = poll;
+        let wrr = run(Strategy::Wrr, p, 0);
+        let b = *base.get_or_insert(wrr);
+        t.row(vec![
+            format!("{:.0} us", poll * 1e6),
+            fmt_s(wrr),
+            format!("{:+.2}%", pct_faster(b, wrr)),
+        ]);
+    }
+    println!("=== Ablation 2: WRR readiness-probe cost (paper: negligible) ===");
+    println!("{}", t.to_text());
+
+    // 3. GDS bandwidth sweep
+    let mut t = Table::new(vec!["gds_bw GB/s", "MTE_0", "WRR_0"]);
+    for bw in [1.5e9, 3.0e9, 6.0e9, 12.0e9, 24.0e9] {
+        let mut p = DeviceProfile::default();
+        p.gds_bw = bw;
+        t.row(vec![
+            format!("{:.1}", bw / 1e9),
+            fmt_s(run(Strategy::Mte, p.clone(), 0)),
+            fmt_s(run(Strategy::Wrr, p, 0)),
+        ]);
+    }
+    println!("=== Ablation 3: direct-storage bandwidth (§VI-C factor 2) ===");
+    println!("{}", t.to_text());
+
+    // 4. Single- vs multi-epoch steady state (the MTE tail-overlap effect)
+    let mut t = Table::new(vec!["epochs", "CPU_16", "MTE_16", "MTE gain"]);
+    for epochs in [1u32, 2, 4, 8] {
+        let mk = |s: Strategy| {
+            let cfg = ExperimentConfig::builder()
+                .model("wrn")
+                .pipeline("imagenet1")
+                .strategy(s)
+                .num_workers(16)
+                .n_batches(300)
+                .epochs(epochs)
+                .build()
+                .unwrap();
+            run_experiment(&cfg).unwrap().report.learn_time_per_batch
+        };
+        let cpu = mk(Strategy::CpuOnly);
+        let mte = mk(Strategy::Mte);
+        t.row(vec![
+            epochs.to_string(),
+            fmt_s(cpu),
+            fmt_s(mte),
+            format!("{:+.1}%", pct_faster(cpu, mte)),
+        ]);
+    }
+    println!("=== Ablation 4: MTE tail overlap across epochs ===");
+    println!("{}", t.to_text());
+}

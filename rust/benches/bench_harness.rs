@@ -1,0 +1,31 @@
+//! Shared mini-harness for the `cargo bench` targets (offline build —
+//! no criterion). Each bench target regenerates one paper artifact,
+//! reports wall-clock generation time, and repeats a few times so
+//! timing noise is visible.
+
+use std::time::Instant;
+
+/// Run `f` `iters` times, printing the artifact once and per-iteration
+/// wall times (min/mean/max) afterwards.
+pub fn bench_artifact<T: std::fmt::Display>(
+    name: &str,
+    iters: u32,
+    f: impl Fn() -> anyhow::Result<T>,
+) {
+    println!("=== {name} ===");
+    let first = f().expect("bench body failed");
+    println!("{first}");
+    let mut times = Vec::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let _ = f().expect("bench body failed");
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!(
+        "[{name}] regenerated {iters}x: min {:.3}s  mean {:.3}s  max {:.3}s\n",
+        min, mean, max
+    );
+}

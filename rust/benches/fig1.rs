@@ -1,0 +1,15 @@
+//! Regenerates paper Fig. 1: preprocessing/training time ratio vs
+//! DataLoader worker count for 19 torchvision models.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+fn main() {
+    bench_harness::bench_artifact("Fig. 1 — preprocessing bottleneck ratios", 5, || {
+        let t = ddlp::bench::fig1()?;
+        let (max, mean) = ddlp::bench::fig1_summary()?;
+        Ok(format!(
+            "{}\nsingle-process ratio: max {max:.2}x mean {mean:.2}x (paper: 60.67x / 20.18x)",
+            t.to_text()
+        ))
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Fig. 6: the MTE/WRR toy schedule (1000 samples,
+//! rates 4:1:8) — exact analytic values 225 s and 222.25 s.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+fn main() {
+    bench_harness::bench_artifact("Fig. 6 — toy example schedule", 10, || {
+        ddlp::bench::fig6().map(|t| t.to_text())
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Fig. 8: Cifar-10 learning time per batch on the
+//! GPU (WRN18) and DSA (ViT) targets.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+fn main() {
+    bench_harness::bench_artifact("Fig. 8 — Cifar-10 GPU and DSA", 3, || {
+        ddlp::bench::fig8().map(|t| t.to_text())
+    });
+}

@@ -1,0 +1,49 @@
+//! L3 hot-path microbenchmark: scheduling throughput of the WRR event
+//! loop (virtual batches scheduled per wall second, no tensor work).
+//! DESIGN.md SPerf target: >= 1e5 batches/s so the coordinator is never
+//! the bottleneck.
+use std::time::Instant;
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::Strategy;
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+
+fn main() {
+    let n: u32 = 200_000;
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    for (label, strategy, trace) in [
+        ("wrr+trace", Strategy::Wrr, true),
+        ("wrr", Strategy::Wrr, false),
+        ("mte", Strategy::Mte, false),
+        ("cpu_only", Strategy::CpuOnly, false),
+    ] {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(strategy)
+            .num_workers(4)
+            .n_batches(n)
+            .record_trace(trace)
+            .profile(profile.clone())
+            .build()
+            .unwrap();
+        let spec = DatasetSpec {
+            n_batches: n,
+            batch_size: 1,
+            pipeline: PipelineKind::ImageNet1,
+            seed: 0,
+        };
+        let mut costs = FixedCosts::toy_fig6();
+        let t0 = Instant::now();
+        let (report, _) = run_schedule(&cfg, &spec, &mut costs).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "[sched_hotpath] {label:<10} {n} batches in {dt:.3}s = {:.0} batches/s (makespan {:.0}s virtual)",
+            n as f64 / dt,
+            report.makespan
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table VI: average learning time (s) per batch for
+//! every model x pipeline x strategy variant (plus the 2-GPU rows).
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+fn main() {
+    bench_harness::bench_artifact("Table VI — learning time per batch", 3, || {
+        ddlp::bench::table6().map(|t| t.to_text())
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table VII: DALI co-optimization (TV, DALI_C,
+//! DALI_G, MTE_D, WRR_D) with the 16-process ImageNet1 pipeline.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+fn main() {
+    bench_harness::bench_artifact("Table VII — DALI co-optimization", 5, || {
+        ddlp::bench::table7().map(|t| t.to_text())
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table VIII: average learning energy (J) per batch
+//! and 100-epoch electricity cost ($, Vancouver $0.095/kWh).
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+fn main() {
+    bench_harness::bench_artifact("Table VIII — energy per batch / cost per 100 epochs", 3, || {
+        ddlp::bench::table8().map(|t| t.to_text())
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table IX: average host CPU+DRAM preprocessing busy
+//! time (s) per batch.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+fn main() {
+    bench_harness::bench_artifact("Table IX — CPU+DRAM preprocessing time per batch", 3, || {
+        ddlp::bench::table9().map(|t| t.to_text())
+    });
+}

@@ -1,0 +1,151 @@
+//! Accelerator engine: consumes preprocessed batches and trains.
+//!
+//! One [`AccelEngine`] per GPU/DSA. CPU-sourced batches arrive via the
+//! host H2D path (already timed by the host engine); CSD-sourced
+//! batches are read from flash through direct storage (GDS) on the
+//! accelerator's own timeline, then trained. The GDS read and the
+//! training kernel serialize on the device stream, matching the paper's
+//! toy model (its 8 samples/s "read+process" stage) and the DALI-GPU
+//! discussion (§VII-C: device-side work serializes with training).
+
+use crate::coordinator::cost::TrainCost;
+use crate::dataset::BatchId;
+use crate::sim::{Lane, Secs};
+use crate::trace::{Device, Phase, Trace};
+
+/// Where a consumed batch came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchSource {
+    Cpu,
+    Csd,
+}
+
+/// One accelerator.
+#[derive(Debug)]
+pub struct AccelEngine {
+    idx: u16,
+    lane: Lane,
+    trained: u32,
+    t_train_busy: Secs,
+    t_gds_busy: Secs,
+}
+
+impl AccelEngine {
+    pub fn new(idx: u16) -> Self {
+        AccelEngine {
+            idx,
+            lane: Lane::new(),
+            trained: 0,
+            t_train_busy: 0.0,
+            t_gds_busy: 0.0,
+        }
+    }
+
+    pub fn idx(&self) -> u16 {
+        self.idx
+    }
+
+    /// Earliest time this accelerator can start new work.
+    pub fn free_at(&self) -> Secs {
+        self.lane.next_free()
+    }
+
+    /// Consume a batch available at `data_ready` from `source`; returns
+    /// the completion time of the training step.
+    pub fn consume(
+        &mut self,
+        b: BatchId,
+        source: BatchSource,
+        data_ready: Secs,
+        cost: &TrainCost,
+        trace: &mut Trace,
+    ) -> Secs {
+        let dev = Device::Accel(self.idx);
+        let start_at = data_ready;
+        let end = match source {
+            BatchSource::Cpu => {
+                let (s, e) = self.lane.reserve(start_at, cost.train_s);
+                trace.record(dev, Phase::Train, Some(b), s, e);
+                e
+            }
+            BatchSource::Csd => {
+                let (s, e) = self.lane.reserve(start_at, cost.gds_s + cost.train_s);
+                trace.record(dev, Phase::GdsRead, Some(b), s, s + cost.gds_s);
+                trace.record(dev, Phase::Train, Some(b), s + cost.gds_s, e);
+                self.t_gds_busy += cost.gds_s;
+                e
+            }
+        };
+        self.trained += 1;
+        self.t_train_busy += cost.train_s;
+        end
+    }
+
+    /// Charge a small scheduling overhead to the device stream (e.g.
+    /// WRR's per-iteration readiness probe).
+    pub fn overhead(&mut self, dur: Secs) {
+        self.lane.reserve(0.0, dur);
+    }
+
+    pub fn trained(&self) -> u32 {
+        self.trained
+    }
+
+    pub fn train_busy(&self) -> Secs {
+        self.t_train_busy
+    }
+
+    pub fn gds_busy(&self) -> Secs {
+        self.t_gds_busy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> TrainCost {
+        TrainCost {
+            gds_s: 0.2,
+            train_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn cpu_batch_skips_gds() {
+        let mut a = AccelEngine::new(0);
+        let mut t = Trace::new();
+        let e = a.consume(0, BatchSource::Cpu, 0.5, &cost(), &mut t);
+        assert!((e - 1.5).abs() < 1e-9);
+        assert_eq!(a.gds_busy(), 0.0);
+    }
+
+    #[test]
+    fn csd_batch_pays_gds() {
+        let mut a = AccelEngine::new(0);
+        let mut t = Trace::new();
+        let e = a.consume(0, BatchSource::Csd, 0.0, &cost(), &mut t);
+        assert!((e - 1.2).abs() < 1e-9);
+        assert!((a.gds_busy() - 0.2).abs() < 1e-9);
+        assert!(t.spans.iter().any(|s| s.phase == Phase::GdsRead));
+    }
+
+    #[test]
+    fn serializes_batches() {
+        let mut a = AccelEngine::new(0);
+        let mut t = Trace::new();
+        a.consume(0, BatchSource::Cpu, 0.0, &cost(), &mut t);
+        let e = a.consume(1, BatchSource::Cpu, 0.0, &cost(), &mut t);
+        assert!((e - 2.0).abs() < 1e-9);
+        assert_eq!(a.trained(), 2);
+        assert!((a.train_busy() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waits_for_data() {
+        let mut a = AccelEngine::new(0);
+        let mut t = Trace::new();
+        let e = a.consume(0, BatchSource::Cpu, 5.0, &cost(), &mut t);
+        assert!((e - 6.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,327 @@
+//! Paper-artifact generators: one function per table/figure of the
+//! evaluation section. The `cargo bench` targets and several examples
+//! print these; EXPERIMENTS.md records them against the paper's values.
+//!
+//! All are analytic-mode, steady-state (multi-epoch) measurements at
+//! the paper's batch sizes; see DESIGN.md §Calibration for why only the
+//! *shape* (orderings, ratios, crossovers) is comparable.
+
+use anyhow::Result;
+
+use crate::config::{fig1_models, table_models, ExperimentConfig, Loader};
+use crate::coordinator::cost::FixedCosts;
+use crate::coordinator::schedule::run_schedule;
+use crate::coordinator::{run_experiment, Strategy};
+use crate::dataset::DatasetSpec;
+use crate::metrics::{fmt_s, RunReport, Table};
+use crate::pipeline::PipelineKind;
+
+/// Batches per epoch for the table benches (enough for calibration and
+/// steady state while keeping `cargo bench` fast).
+const N_BATCHES: u32 = 300;
+const EPOCHS: u32 = 3;
+
+fn run_one(
+    model: &str,
+    pipeline: PipelineKind,
+    strategy: Strategy,
+    workers: u32,
+    n_accel: u32,
+    loader: Loader,
+) -> Result<RunReport> {
+    let cfg = ExperimentConfig::builder()
+        .model(model)
+        .pipeline_kind(pipeline)
+        .strategy(strategy)
+        .num_workers(workers)
+        .n_accel(n_accel)
+        .n_batches(N_BATCHES)
+        .epochs(EPOCHS)
+        .loader(loader)
+        .build()?;
+    Ok(run_experiment(&cfg)?.report)
+}
+
+/// The seven Table VI column variants for one row.
+fn table6_row(model: &str, pipeline: PipelineKind, n_accel: u32) -> Result<[f64; 7]> {
+    let tv = Loader::Torchvision;
+    Ok([
+        run_one(model, pipeline, Strategy::CpuOnly, 0, n_accel, tv)?.learn_time_per_batch,
+        run_one(model, pipeline, Strategy::CpuOnly, 16, n_accel, tv)?.learn_time_per_batch,
+        run_one(model, pipeline, Strategy::CsdOnly, 0, n_accel, tv)?.learn_time_per_batch,
+        run_one(model, pipeline, Strategy::Mte, 0, n_accel, tv)?.learn_time_per_batch,
+        run_one(model, pipeline, Strategy::Wrr, 0, n_accel, tv)?.learn_time_per_batch,
+        run_one(model, pipeline, Strategy::Mte, 16, n_accel, tv)?.learn_time_per_batch,
+        run_one(model, pipeline, Strategy::Wrr, 16, n_accel, tv)?.learn_time_per_batch,
+    ])
+}
+
+/// Table VI: average learning time (s) per batch, models × pipelines ×
+/// {CPU₀, CPU₁₆, CSD, MTE₀, WRR₀, MTE₁₆, WRR₁₆}, plus the 2-GPU rows.
+pub fn table6() -> Result<Table> {
+    let mut t = Table::new(vec![
+        "model", "CPU_0", "CPU_16", "CSD", "MTE_0", "WRR_0", "MTE_16", "WRR_16", "pipeline",
+    ]);
+    let imagenet = [
+        PipelineKind::ImageNet1,
+        PipelineKind::ImageNet2,
+        PipelineKind::ImageNet3,
+    ];
+    for pipeline in imagenet {
+        for model in ["wrn", "resnet152", "vit", "vgg", "alexnet"] {
+            let r = table6_row(model, pipeline, 1)?;
+            t.row(row_cells(model, &r, pipeline.name()));
+        }
+        if pipeline == PipelineKind::ImageNet1 {
+            for model in ["vit", "resnet152"] {
+                let r = table6_row(model, pipeline, 2)?;
+                t.row(row_cells(&format!("{model} (2GPUs)"), &r, pipeline.name()));
+            }
+        }
+    }
+    Ok(t)
+}
+
+fn row_cells(model: &str, r: &[f64; 7], pipeline: &str) -> Vec<String> {
+    let mut cells = vec![model.to_string()];
+    cells.extend(r.iter().map(|x| fmt_s(*x)));
+    cells.push(pipeline.to_string());
+    cells
+}
+
+/// Table VII: DALI co-optimization (16-worker ImageNet₁).
+pub fn table7() -> Result<Table> {
+    let mut t = Table::new(vec!["model", "TV", "DALI_C", "DALI_G", "MTE_D", "WRR_D"]);
+    let p = PipelineKind::ImageNet1;
+    for model in ["wrn", "vit"] {
+        let cells = vec![
+            model.to_string(),
+            fmt_s(run_one(model, p, Strategy::CpuOnly, 16, 1, Loader::Torchvision)?.learn_time_per_batch),
+            fmt_s(run_one(model, p, Strategy::CpuOnly, 16, 1, Loader::DaliCpu)?.learn_time_per_batch),
+            fmt_s(run_one(model, p, Strategy::CpuOnly, 16, 1, Loader::DaliGpu)?.learn_time_per_batch),
+            fmt_s(run_one(model, p, Strategy::Mte, 16, 1, Loader::DaliGpu)?.learn_time_per_batch),
+            fmt_s(run_one(model, p, Strategy::Wrr, 16, 1, Loader::DaliGpu)?.learn_time_per_batch),
+        ];
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Table VIII: energy per batch (J) and 100-epoch electricity cost ($).
+pub fn table8() -> Result<Table> {
+    let mut t = Table::new(vec![
+        "model", "CPU_0", "CPU_16", "CSD", "MTE_0", "WRR_0", "MTE_16", "WRR_16",
+    ]);
+    let p = PipelineKind::ImageNet1;
+    let variants: [(Strategy, u32); 7] = [
+        (Strategy::CpuOnly, 0),
+        (Strategy::CpuOnly, 16),
+        (Strategy::CsdOnly, 0),
+        (Strategy::Mte, 0),
+        (Strategy::Wrr, 0),
+        (Strategy::Mte, 16),
+        (Strategy::Wrr, 16),
+    ];
+    for model in ["wrn", "resnet152", "vit", "vgg", "alexnet"] {
+        let mut cells = vec![model.to_string()];
+        let batches_per_epoch = batches_per_epoch(model);
+        for (s, w) in variants {
+            let rep = run_one(model, p, s, w, 1, Loader::Torchvision)?;
+            let cost = rep.energy.cost_usd(100, 0.095, batches_per_epoch);
+            cells.push(format!("{}/{}", fmt_s(rep.energy.joules_per_batch), fmt_s(cost)));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// ImageNet batches per epoch at the model's Table V batch size.
+fn batches_per_epoch(model: &str) -> u32 {
+    let m = table_models().into_iter().find(|m| m.name == model).unwrap();
+    (m.dataset.n_samples() / m.batch_size as u64) as u32
+}
+
+/// Table IX: average host CPU+DRAM preprocessing busy time (s) per batch.
+pub fn table9() -> Result<Table> {
+    let mut t = Table::new(vec![
+        "model", "CPU_0", "CPU_16", "MTE_0", "WRR_0", "MTE_16", "WRR_16",
+    ]);
+    let p = PipelineKind::ImageNet1;
+    let variants: [(Strategy, u32); 6] = [
+        (Strategy::CpuOnly, 0),
+        (Strategy::CpuOnly, 16),
+        (Strategy::Mte, 0),
+        (Strategy::Wrr, 0),
+        (Strategy::Mte, 16),
+        (Strategy::Wrr, 16),
+    ];
+    for model in ["wrn", "resnet152", "vit", "vgg", "alexnet"] {
+        let mut cells = vec![model.to_string()];
+        for (s, w) in variants {
+            let rep = run_one(model, p, s, w, 1, Loader::Torchvision)?;
+            cells.push(fmt_s(rep.cpu_dram_time_per_batch));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Fig. 1: preprocessing-time : training-time ratio vs worker count for
+/// the 19 torchvision models (ImageNet₁).
+pub fn fig1() -> Result<Table> {
+    let workers = [0u32, 2, 4, 8, 16, 32];
+    let mut headers = vec!["model".to_string(), "batch".to_string()];
+    headers.extend(workers.iter().map(|w| format!("w={w}")));
+    let mut t = Table::new(headers);
+    let costs = crate::pipeline::OpCosts::default();
+    let per_img = PipelineKind::ImageNet1.cpu_seconds_per_image(&costs);
+    let profile = crate::config::DeviceProfile::default();
+    for m in fig1_models() {
+        let mut cells = vec![m.name.to_string(), m.batch_size.to_string()];
+        for &w in &workers {
+            // feeding interval of the host path at w workers
+            let pp_batch = per_img * m.batch_size as f64;
+            let feeding = if w == 0 {
+                pp_batch
+            } else {
+                (pp_batch / (w as f64).powf(profile.worker_scaling_exp))
+                    .max(profile.collate_overhead_s)
+            };
+            let t_train = m.t_gpu_s * (1.0 + profile.train_interference_per_worker * w as f64);
+            cells.push(format!("{:.2}", feeding / t_train));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Fig. 1 aggregates (the numbers quoted in the caption).
+pub fn fig1_summary() -> Result<(f64, f64)> {
+    let costs = crate::pipeline::OpCosts::default();
+    let per_img = PipelineKind::ImageNet1.cpu_seconds_per_image(&costs);
+    let ratios: Vec<f64> = fig1_models()
+        .iter()
+        .map(|m| per_img * m.batch_size as f64 / m.t_gpu_s)
+        .collect();
+    let max = ratios.iter().cloned().fold(0.0, f64::max);
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    Ok((max, mean))
+}
+
+/// Fig. 8: Cifar-10 learning time per batch — (a) GPU/WRN18 with worker
+/// sweep, (b) DSA/ViT at workers = 0.
+pub fn fig8() -> Result<Table> {
+    let mut t = Table::new(vec![
+        "target", "model", "CPU_0", "CSD", "MTE_0", "WRR_0", "CPU_16", "MTE_16", "WRR_16",
+    ]);
+    let tv = Loader::Torchvision;
+    // (a) GPU
+    let p = PipelineKind::CifarGpu;
+    t.row(vec![
+        "GPU".to_string(),
+        "wrn18".to_string(),
+        fmt_s(run_one("wrn18", p, Strategy::CpuOnly, 0, 1, tv)?.learn_time_per_batch),
+        fmt_s(run_one("wrn18", p, Strategy::CsdOnly, 0, 1, tv)?.learn_time_per_batch),
+        fmt_s(run_one("wrn18", p, Strategy::Mte, 0, 1, tv)?.learn_time_per_batch),
+        fmt_s(run_one("wrn18", p, Strategy::Wrr, 0, 1, tv)?.learn_time_per_batch),
+        fmt_s(run_one("wrn18", p, Strategy::CpuOnly, 16, 1, tv)?.learn_time_per_batch),
+        fmt_s(run_one("wrn18", p, Strategy::Mte, 16, 1, tv)?.learn_time_per_batch),
+        fmt_s(run_one("wrn18", p, Strategy::Wrr, 16, 1, tv)?.learn_time_per_batch),
+    ]);
+    // (b) DSA: no num_workers tuning supported (paper), workers = 0 only.
+    // The DSA pipeline upsamples 32→224; the Zynq's ARM core is far
+    // slower on interpolation-heavy work than the generic 3.5× factor —
+    // calibrated at 20× for this experiment (EXPERIMENTS.md Fig. 8).
+    let p = PipelineKind::CifarDsa;
+    let run_dsa = |strategy: Strategy| -> Result<f64> {
+        let mut profile = crate::config::DeviceProfile::default();
+        profile.csd_slowdown = 20.0;
+        let cfg = ExperimentConfig::builder()
+            .model("vit_dsa")
+            .pipeline_kind(p)
+            .strategy(strategy)
+            .num_workers(0)
+            .n_batches(N_BATCHES)
+            .epochs(EPOCHS)
+            .profile(profile)
+            .build()?;
+        Ok(run_experiment(&cfg)?.report.learn_time_per_batch)
+    };
+    t.row(vec![
+        "DSA".to_string(),
+        "vit_dsa".to_string(),
+        fmt_s(run_dsa(Strategy::CpuOnly)?),
+        fmt_s(run_dsa(Strategy::CsdOnly)?),
+        fmt_s(run_dsa(Strategy::Mte)?),
+        fmt_s(run_dsa(Strategy::Wrr)?),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    Ok(t)
+}
+
+/// Fig. 6: the toy-example schedule (exact analytic reproduction).
+pub fn fig6() -> Result<Table> {
+    let mut profile = crate::config::DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    let spec = DatasetSpec {
+        n_batches: 1000,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    };
+    let mut t = Table::new(vec!["strategy", "makespan (s)", "paper (s)"]);
+    for (strategy, paper) in [
+        (Strategy::CpuOnly, "250"),
+        (Strategy::Mte, "225"),
+        (Strategy::Wrr, "222.25"),
+    ] {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(strategy)
+            .n_batches(1000)
+            .profile(profile.clone())
+            .build()?;
+        let mut costs = FixedCosts::toy_fig6();
+        let (report, _) = run_schedule(&cfg, &spec, &mut costs)?;
+        t.row(vec![
+            strategy.name().to_string(),
+            fmt_s(report.makespan),
+            paper.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_has_17_rows() {
+        let t = table6().unwrap();
+        assert_eq!(t.n_rows(), 17); // 3 pipelines × 5 models + 2 two-GPU
+    }
+
+    #[test]
+    fn fig1_covers_19_models() {
+        assert_eq!(fig1().unwrap().n_rows(), 19);
+    }
+
+    #[test]
+    fn fig1_summary_matches_paper_shape() {
+        let (max, mean) = fig1_summary().unwrap();
+        assert!(max > 40.0, "paper: 60.67x max, got {max:.1}");
+        assert!((8.0..35.0).contains(&mean), "paper: 20.18x mean, got {mean:.1}");
+    }
+
+    #[test]
+    fn fig6_exact() {
+        let t = fig6().unwrap();
+        let text = t.to_text();
+        assert!(text.contains("225"), "{text}");
+        assert!(text.contains("222"), "{text}");
+    }
+}

@@ -1,0 +1,190 @@
+//! `key = value` config-file parsing (TOML subset) with CLI-style
+//! overrides — the launcher's config system.
+//!
+//! Example file:
+//!
+//! ```text
+//! # experiment
+//! model = wrn
+//! pipeline = imagenet1
+//! strategy = wrr        # cpu | csd | mte | wrr
+//! num_workers = 16
+//! n_batches = 500
+//! epochs = 1
+//! n_accel = 1
+//! loader = torchvision  # torchvision | dali_cpu | dali_gpu
+//! seed = 0
+//!
+//! # device profile overrides
+//! csd_slowdown = 5.0
+//! host_ssd_bw = 3.2e9
+//! ```
+//!
+//! Unknown keys are rejected (typo safety). `--set key=value` CLI
+//! overrides reuse the same key space.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ExperimentBuilder, ExperimentConfig, Loader};
+use crate::coordinator::Strategy;
+use crate::pipeline::PipelineKind;
+
+/// Parse file contents into a key→value map (comments `#`, blank lines).
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim().to_string();
+        let val = v.trim().trim_matches('"').to_string();
+        if map.insert(key.clone(), val).is_some() {
+            bail!("line {}: duplicate key {key:?}", lineno + 1);
+        }
+    }
+    Ok(map)
+}
+
+/// Apply a key→value map onto a builder; returns the finished config.
+pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
+    let mut b = ExperimentBuilder::default();
+    let mut profile = super::DeviceProfile::default();
+
+    for (k, v) in map {
+        b = match k.as_str() {
+            "model" => b.model(v),
+            "pipeline" => {
+                let p = PipelineKind::parse(v)
+                    .with_context(|| format!("bad pipeline {v:?}"))?;
+                b.pipeline_kind(p)
+            }
+            "strategy" => {
+                let s = Strategy::parse(v).with_context(|| format!("bad strategy {v:?}"))?;
+                b.strategy(s)
+            }
+            "loader" => {
+                let l = Loader::parse(v).with_context(|| format!("bad loader {v:?}"))?;
+                b.loader(l)
+            }
+            "num_workers" => b.num_workers(v.parse().context("num_workers")?),
+            "n_accel" => b.n_accel(v.parse().context("n_accel")?),
+            "n_batches" => b.n_batches(v.parse().context("n_batches")?),
+            "epochs" => b.epochs(v.parse().context("epochs")?),
+            "seed" => b.seed(v.parse().context("seed")?),
+            "record_trace" => b.record_trace(v.parse().context("record_trace")?),
+            "artifacts_dir" => b.exec(super::ExecMode::Real {
+                artifacts_dir: v.clone(),
+            }),
+            // device profile overrides
+            "csd_slowdown" => {
+                profile.csd_slowdown = v.parse().context("csd_slowdown")?;
+                b
+            }
+            "csd_fail_at_s" => {
+                profile.csd_fail_at_s = v.parse().context("csd_fail_at_s")?;
+                b
+            }
+            "accel_speedup" => {
+                profile.accel_speedup = v.parse().context("accel_speedup")?;
+                b
+            }
+            "collate_overhead_s" => {
+                profile.collate_overhead_s = v.parse().context("collate_overhead_s")?;
+                b
+            }
+            "host_ssd_bw" => {
+                profile.host_ssd_bw = v.parse().context("host_ssd_bw")?;
+                b
+            }
+            "csd_internal_bw" => {
+                profile.csd_internal_bw = v.parse().context("csd_internal_bw")?;
+                b
+            }
+            "gds_bw" => {
+                profile.gds_bw = v.parse().context("gds_bw")?;
+                b
+            }
+            "h2d_bw" => {
+                profile.h2d_bw = v.parse().context("h2d_bw")?;
+                b
+            }
+            "worker_scaling_exp" => {
+                profile.worker_scaling_exp = v.parse().context("worker_scaling_exp")?;
+                b
+            }
+            "cpu_process_w" => {
+                profile.power.cpu_process_w = v.parse().context("cpu_process_w")?;
+                b
+            }
+            "csd_w" => {
+                profile.power.csd_w = v.parse().context("csd_w")?;
+                b
+            }
+            _ => bail!("unknown config key {k:?}"),
+        };
+    }
+    b.profile(profile).build()
+}
+
+/// Parse a config file plus `--set k=v` overrides.
+pub fn load(text: &str, overrides: &[(String, String)]) -> Result<ExperimentConfig> {
+    let mut map = parse_kv(text)?;
+    for (k, v) in overrides {
+        map.insert(k.clone(), v.clone());
+    }
+    apply(&map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_example() {
+        let text = "\n# comment\nmodel = vit\nstrategy = mte  # inline\nnum_workers = 16\n";
+        let cfg = load(text, &[]).unwrap();
+        assert_eq!(cfg.model, "vit");
+        assert_eq!(cfg.strategy, Strategy::Mte);
+        assert_eq!(cfg.num_workers, 16);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let cfg = load("model = vit\n", &[("model".into(), "wrn".into())]).unwrap();
+        assert_eq!(cfg.model, "wrn");
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(load("no_such_key = 1\n", &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_key() {
+        assert!(parse_kv("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(load("strategy = warp\n", &[]).is_err());
+        assert!(load("num_workers = many\n", &[]).is_err());
+        assert!(load("pipeline = imagenet9\n", &[]).is_err());
+    }
+
+    #[test]
+    fn profile_overrides_apply() {
+        let cfg = load("csd_slowdown = 7.5\ncpu_process_w = 6.0\n", &[]).unwrap();
+        assert_eq!(cfg.profile.csd_slowdown, 7.5);
+        assert_eq!(cfg.profile.power.cpu_process_w, 6.0);
+    }
+}

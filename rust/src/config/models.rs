@@ -1,0 +1,194 @@
+//! Model profiles: per-batch accelerator cost and batch size.
+//!
+//! Table-model `t_gpu` values are calibrated from Table VI's most
+//! train-bound columns (WRR with DALI ≈ pure training time); Fig. 1's
+//! 19 torchvision models get profiles whose preprocess/train ratios
+//! span the paper's reported range (max 60.67×, mean 20.18× at
+//! `num_workers = 0`). Absolute seconds are "paper-testbed seconds" —
+//! the analytic engines run in virtual time, so only ratios matter.
+
+/// Accelerator-side profile of one model.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    /// Registry name (also the AOT artifact suffix for table models).
+    pub name: &'static str,
+    /// Human-readable torchvision-style name.
+    pub display: &'static str,
+    /// Training batch size (paper Table V).
+    pub batch_size: u32,
+    /// Accelerator seconds per training batch (fwd+bwd+update).
+    pub t_gpu_s: f64,
+    /// Which dataset family the model trains on.
+    pub dataset: Dataset,
+    /// Has a real AOT train artifact (`train_<name>.hlo.txt`).
+    pub has_artifact: bool,
+}
+
+/// Dataset family (drives the pipeline geometry / sample counts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    ImageNet,
+    Cifar10,
+}
+
+impl Dataset {
+    /// Samples in the (paper-scale) dataset.
+    pub fn n_samples(self) -> u64 {
+        match self {
+            Dataset::ImageNet => 1_281_167,
+            Dataset::Cifar10 => 50_000,
+        }
+    }
+}
+
+/// The models of Tables V/VI + the Cifar experiments (Fig. 8).
+pub fn table_models() -> Vec<ModelProfile> {
+    vec![
+        ModelProfile {
+            name: "wrn",
+            display: "Wide ResNet101",
+            batch_size: 256,
+            t_gpu_s: 1.42,
+            dataset: Dataset::ImageNet,
+            has_artifact: true,
+        },
+        ModelProfile {
+            name: "resnet152",
+            display: "ResNet152",
+            batch_size: 256,
+            t_gpu_s: 1.16,
+            dataset: Dataset::ImageNet,
+            has_artifact: true,
+        },
+        ModelProfile {
+            name: "vit",
+            display: "Vision Transformer",
+            batch_size: 512,
+            t_gpu_s: 5.95,
+            dataset: Dataset::ImageNet,
+            has_artifact: true,
+        },
+        ModelProfile {
+            name: "vgg",
+            display: "VGG",
+            batch_size: 512,
+            t_gpu_s: 2.10,
+            dataset: Dataset::ImageNet,
+            has_artifact: true,
+        },
+        ModelProfile {
+            name: "alexnet",
+            display: "AlexNet",
+            batch_size: 4096,
+            t_gpu_s: 4.95,
+            dataset: Dataset::ImageNet,
+            has_artifact: true,
+        },
+        ModelProfile {
+            name: "wrn18",
+            display: "Wide ResNet18",
+            batch_size: 4096,
+            t_gpu_s: 1.05,
+            dataset: Dataset::Cifar10,
+            has_artifact: true,
+        },
+        ModelProfile {
+            name: "vit_dsa",
+            display: "ViT (DSA)",
+            batch_size: 256,
+            t_gpu_s: 3.30,
+            dataset: Dataset::Cifar10,
+            has_artifact: true,
+        },
+    ]
+}
+
+/// The 19 torchvision models of the Fig. 1 bottleneck study.
+///
+/// `t_gpu_s` spans fast mobile nets (large preprocess/train ratios, up
+/// to ~60× at workers=0) through heavy transformers (ratios near 1).
+pub fn fig1_models() -> Vec<ModelProfile> {
+    fn m(name: &'static str, batch: u32, t_gpu: f64) -> ModelProfile {
+        ModelProfile {
+            name,
+            display: name,
+            batch_size: batch,
+            t_gpu_s: t_gpu,
+            dataset: Dataset::ImageNet,
+            has_artifact: false,
+        }
+    }
+    vec![
+        m("alexnet", 4096, 4.95),
+        m("squeezenet1_0", 1024, 0.19),
+        m("shufflenet_v2_x1_0", 1024, 0.24),
+        m("mobilenet_v2", 512, 0.17),
+        m("mobilenet_v3_large", 512, 0.16),
+        m("mnasnet1_0", 512, 0.18),
+        m("efficientnet_b0", 512, 0.55),
+        m("googlenet", 512, 0.48),
+        m("inception_v3", 256, 0.62),
+        m("resnet18", 512, 0.45),
+        m("resnet50", 256, 0.72),
+        m("resnet152", 256, 1.16),
+        m("wide_resnet101_2", 256, 1.42),
+        m("densenet121", 256, 0.85),
+        m("vgg16", 512, 2.10),
+        m("regnet_y_8gf", 256, 0.95),
+        m("convnext_tiny", 256, 0.90),
+        m("vit_b_16", 512, 5.95),
+        m("swin_t", 256, 1.25),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{OpCosts, PipelineKind};
+
+    #[test]
+    fn table_models_unique_and_complete() {
+        let models = table_models();
+        assert_eq!(models.len(), 7);
+        let mut names: Vec<_> = models.iter().map(|m| m.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 7);
+        assert!(models.iter().all(|m| m.has_artifact));
+    }
+
+    #[test]
+    fn fig1_has_19_models() {
+        assert_eq!(fig1_models().len(), 19);
+    }
+
+    #[test]
+    fn fig1_ratio_span_matches_paper_shape() {
+        // preprocess/train ratio at workers=0: max near ~60, mean ~20
+        let costs = OpCosts::default();
+        let per_img = PipelineKind::ImageNet1.cpu_seconds_per_image(&costs);
+        let ratios: Vec<f64> = fig1_models()
+            .iter()
+            .map(|m| per_img * m.batch_size as f64 / m.t_gpu_s)
+            .collect();
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!(max > 40.0 && max < 80.0, "max ratio {max:.1}");
+        assert!(mean > 8.0 && mean < 35.0, "mean ratio {mean:.1}");
+        // and every model is preprocessing-bound single-process
+        assert!(ratios.iter().all(|&r| r > 1.0));
+    }
+
+    #[test]
+    fn batch_sizes_match_table_v() {
+        let models = table_models();
+        let get = |n: &str| models.iter().find(|m| m.name == n).unwrap().batch_size;
+        assert_eq!(get("wrn"), 256);
+        assert_eq!(get("resnet152"), 256);
+        assert_eq!(get("vit"), 512);
+        assert_eq!(get("vgg"), 512);
+        assert_eq!(get("alexnet"), 4096);
+        assert_eq!(get("wrn18"), 4096);
+        assert_eq!(get("vit_dsa"), 256);
+    }
+}

@@ -1,0 +1,144 @@
+//! L3 coordinator — the paper's contribution.
+//!
+//! Implements the four data-feeding strategies of the evaluation:
+//!
+//! * [`Strategy::CpuOnly`] — the classical PyTorch path (baseline);
+//! * [`Strategy::CsdOnly`] — near-storage preprocessing only (baseline);
+//! * [`Strategy::Mte`] — *Moving Towards Each Other* (Alg. 1):
+//!   throughput-calibrated pre-allocation, deterministic consumption
+//!   order (all CPU-side batches, then all CSD-side batches via GDS);
+//! * [`Strategy::Wrr`] — *Weighted Round Robin* (Alg. 2): real-time
+//!   readiness polling of the CSD output directory before every
+//!   iteration, consuming CSD batches as soon as they exist.
+//!
+//! All strategies run on the same virtual-time engine set
+//! ([`crate::host`], [`crate::csd`], [`crate::accel`]) with durations
+//! from a [`cost::CostProvider`] — calibrated models (benches) or real
+//! PJRT executions (the end-to-end examples).
+
+pub mod cost;
+pub mod schedule;
+
+use anyhow::Result;
+
+use crate::config::{ExecMode, ExperimentConfig};
+use crate::dataset::DatasetSpec;
+use crate::metrics::RunReport;
+use crate::trace::Trace;
+
+/// Data-feeding strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    CpuOnly,
+    CsdOnly,
+    Mte,
+    Wrr,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 4] = [
+        Strategy::CpuOnly,
+        Strategy::CsdOnly,
+        Strategy::Mte,
+        Strategy::Wrr,
+    ];
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "cpu" | "cpu_only" | "pytorch" => Strategy::CpuOnly,
+            "csd" | "csd_only" => Strategy::CsdOnly,
+            "mte" => Strategy::Mte,
+            "wrr" => Strategy::Wrr,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::CpuOnly => "cpu",
+            Strategy::CsdOnly => "csd",
+            Strategy::Mte => "mte",
+            Strategy::Wrr => "wrr",
+        }
+    }
+
+    /// Does the strategy power the CSD?
+    pub fn uses_csd(self) -> bool {
+        !matches!(self, Strategy::CpuOnly)
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Outcome of [`run_experiment`].
+#[derive(Debug)]
+pub struct RunResult {
+    pub report: RunReport,
+    pub trace: Trace,
+    /// Real-mode loss curve (empty in analytic mode).
+    pub losses: Vec<f32>,
+}
+
+/// Run one experiment end-to-end (all epochs).
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
+    let model = cfg.model_profile()?;
+    let spec = DatasetSpec {
+        n_batches: cfg.n_batches,
+        batch_size: model.batch_size,
+        pipeline: cfg.pipeline,
+        seed: cfg.seed,
+    };
+    match &cfg.exec {
+        ExecMode::Analytic => {
+            let mut costs = cost::AnalyticCosts::new(cfg, &spec)?;
+            let (report, trace) = schedule::run_schedule(cfg, &spec, &mut costs)?;
+            Ok(RunResult {
+                report,
+                trace,
+                losses: Vec::new(),
+            })
+        }
+        ExecMode::Real { artifacts_dir } => {
+            let mut session = crate::runtime::RealSession::new(
+                std::path::Path::new(artifacts_dir),
+                &cfg.pipeline.artifact(),
+                &format!("train_{}", cfg.model),
+                cfg.seed,
+                &cfg.profile,
+            )?;
+            let (report, trace) = schedule::run_schedule(cfg, &spec, &mut session)?;
+            let losses = session.losses().to_vec();
+            Ok(RunResult {
+                report,
+                trace,
+                losses,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::parse("PyTorch"), Some(Strategy::CpuOnly));
+        assert_eq!(Strategy::parse("x"), None);
+    }
+
+    #[test]
+    fn csd_usage() {
+        assert!(!Strategy::CpuOnly.uses_csd());
+        assert!(Strategy::Mte.uses_csd());
+        assert!(Strategy::Wrr.uses_csd());
+        assert!(Strategy::CsdOnly.uses_csd());
+    }
+}

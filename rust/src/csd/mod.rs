@@ -1,0 +1,282 @@
+//! CSD engine: the near-storage side of the dual-pronged pipeline.
+//!
+//! Models the paper's Zynq-7000/Newport-style device: a single
+//! energy-efficient core that, on receiving the one-shot start signal
+//! (TCP/IP, §V Hardware), loops `read tail batch → preprocess → write
+//! preprocessed batch back to flash` until its allocation (MTE) or the
+//! host's stop signal (WRR) ends it. Completed batches land in a
+//! per-accelerator **output directory**; the WRR host probes directory
+//! length (`len(os.listdir)`) to detect ready batches without touching
+//! file contents.
+
+use crate::coordinator::cost::CsdBatchCost;
+use crate::dataset::BatchId;
+use crate::sim::{Lane, Secs};
+use crate::trace::{Device, Phase, Trace};
+
+/// One finished CSD batch in an output directory.
+#[derive(Debug, Clone, Copy)]
+pub struct CsdProduct {
+    pub batch: BatchId,
+    /// When the write-back completed (visible to `listdir`).
+    pub ready: Secs,
+    /// Which accelerator's directory it was written to.
+    pub dir: u16,
+}
+
+/// The CSD device.
+#[derive(Debug)]
+pub struct CsdEngine {
+    lane: Lane,
+    /// Production log in completion order (monotone `ready`).
+    produced: Vec<CsdProduct>,
+    /// Per-directory index into `produced` (completion order preserved,
+    /// so `ready` is monotone within a directory — O(1) probes).
+    per_dir: Vec<Vec<u32>>,
+    /// Per-directory consumed counters (the WRR host's read cursor).
+    consumed: Vec<usize>,
+    /// Set when the host's stop signal lands (virtual time).
+    stopped_at: Option<Secs>,
+    /// Injected hardware failure: no production may start at/after this
+    /// time, and — unlike a stop signal — it survives epoch restarts.
+    fail_at: Option<Secs>,
+    started_at: Secs,
+}
+
+impl CsdEngine {
+    /// `n_dirs`: one output directory per accelerator (§IV-E).
+    /// `signal_latency`: host→CSD TCP/IP start-signal latency.
+    pub fn new(n_dirs: u16, signal_latency: Secs) -> Self {
+        let mut lane = Lane::new();
+        lane.advance_to(signal_latency);
+        CsdEngine {
+            lane,
+            produced: Vec::new(),
+            per_dir: vec![Vec::new(); n_dirs as usize],
+            consumed: vec![0; n_dirs as usize],
+            stopped_at: None,
+            fail_at: None,
+            started_at: signal_latency,
+        }
+    }
+
+    pub fn started_at(&self) -> Secs {
+        self.started_at
+    }
+
+    /// Produce batch `b` into directory `dir`; returns the completion
+    /// time, or `None` if the engine already received a stop signal.
+    pub fn produce(
+        &mut self,
+        b: BatchId,
+        dir: u16,
+        cost: &CsdBatchCost,
+        trace: &mut Trace,
+    ) -> Option<Secs> {
+        // A production whose start would be at/after the stop signal (or
+        // an injected device failure) is abandoned (Alg. 2 line 22: the
+        // CSD checks the signal between batches).
+        let cutoff = match (self.stopped_at, self.fail_at) {
+            (Some(s), Some(f)) => Some(s.min(f)),
+            (s, f) => s.or(f),
+        };
+        if let Some(cut) = cutoff {
+            if self.lane.next_free() >= cut {
+                return None;
+            }
+        }
+        let (s, e) = self.lane.reserve(0.0, cost.total());
+        trace.record(Device::Csd, Phase::CsdRead, Some(b), s, s + cost.read_s);
+        trace.record(
+            Device::Csd,
+            Phase::CsdPreprocess,
+            Some(b),
+            s + cost.read_s,
+            s + cost.read_s + cost.pp_s,
+        );
+        trace.record(Device::Csd, Phase::CsdWrite, Some(b), e - cost.write_s, e);
+        self.per_dir[dir as usize].push(self.produced.len() as u32);
+        self.produced.push(CsdProduct {
+            batch: b,
+            ready: e,
+            dir,
+        });
+        Some(e)
+    }
+
+    /// Host stop signal (Alg. 2 `sendsignaltoCSD`): no production may
+    /// *start* at or after `t`.
+    pub fn stop(&mut self, t: Secs) {
+        self.stopped_at = Some(self.stopped_at.map_or(t, |old: f64| old.min(t)));
+    }
+
+    /// Next epoch's start signal: clears a previous stop (the host sends
+    /// one control signal per epoch, §V Hardware). An injected failure
+    /// is *not* cleared — dead hardware stays dead.
+    pub fn restart(&mut self) {
+        self.stopped_at = None;
+    }
+
+    /// Inject a permanent device failure at virtual time `t` (failure-
+    /// injection testing: DDLP must degrade to the classical CPU path).
+    pub fn fail_at(&mut self, t: Secs) {
+        self.fail_at = Some(t);
+    }
+
+    fn nth_unconsumed(&self, dir: u16) -> Option<CsdProduct> {
+        let idx = *self.per_dir[dir as usize].get(self.consumed[dir as usize])?;
+        Some(self.produced[idx as usize])
+    }
+
+    /// The WRR readiness probe: how many unconsumed batches are visible
+    /// in directory `dir` at time `t`? (`len(os.listdir)` semantics —
+    /// counts completed write-backs only.) `ready` is monotone within a
+    /// directory, so this is a binary search past the consumed cursor.
+    pub fn ready_count(&self, dir: u16, t: Secs) -> usize {
+        let ids = &self.per_dir[dir as usize];
+        let from = self.consumed[dir as usize];
+        let ready = ids[from..].partition_point(|&i| self.produced[i as usize].ready <= t);
+        ready
+    }
+
+    /// Pop the oldest unconsumed ready batch from `dir` at time `t`.
+    pub fn take_ready(&mut self, dir: u16, t: Secs) -> Option<CsdProduct> {
+        let prod = self.nth_unconsumed(dir)?;
+        if prod.ready <= t {
+            self.consumed[dir as usize] += 1;
+            Some(prod)
+        } else {
+            None
+        }
+    }
+
+    /// Pop the oldest unconsumed batch from `dir` regardless of current
+    /// time; the caller waits until `ready`. Used by MTE's phase 2 and
+    /// the end-of-epoch drain.
+    pub fn take_next(&mut self, dir: u16) -> Option<CsdProduct> {
+        let prod = self.nth_unconsumed(dir)?;
+        self.consumed[dir as usize] += 1;
+        Some(prod)
+    }
+
+    /// Time the CSD becomes idle (for waste accounting / next epoch).
+    pub fn drain_time(&self) -> Secs {
+        self.lane.next_free()
+    }
+
+    /// Total CSD busy seconds.
+    pub fn busy(&self) -> Secs {
+        self.lane.busy_total()
+    }
+
+    /// Batches produced but never consumed (WRR overshoot waste).
+    pub fn wasted(&self) -> u32 {
+        let consumed: usize = self.consumed.iter().sum();
+        (self.produced.len() - consumed) as u32
+    }
+
+    /// All produced batch ids (tests/invariants).
+    pub fn produced_ids(&self) -> Vec<BatchId> {
+        self.produced.iter().map(|p| p.batch).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CsdBatchCost {
+        CsdBatchCost {
+            read_s: 0.1,
+            pp_s: 0.8,
+            write_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn sequential_production() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        let e1 = c.produce(9, 0, &cost(), &mut t).unwrap();
+        let e2 = c.produce(8, 0, &cost(), &mut t).unwrap();
+        assert!((e1 - 1.0).abs() < 1e-9);
+        assert!((e2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn signal_latency_delays_start() {
+        let mut c = CsdEngine::new(1, 0.5);
+        let mut t = Trace::new();
+        let e = c.produce(0, 0, &cost(), &mut t).unwrap();
+        assert!((e - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ready_count_respects_time() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        c.produce(9, 0, &cost(), &mut t);
+        c.produce(8, 0, &cost(), &mut t);
+        assert_eq!(c.ready_count(0, 0.5), 0);
+        assert_eq!(c.ready_count(0, 1.0), 1);
+        assert_eq!(c.ready_count(0, 5.0), 2);
+    }
+
+    #[test]
+    fn take_ready_fifo_and_consumes() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        c.produce(9, 0, &cost(), &mut t);
+        c.produce(8, 0, &cost(), &mut t);
+        let p = c.take_ready(0, 10.0).unwrap();
+        assert_eq!(p.batch, 9);
+        assert_eq!(c.ready_count(0, 10.0), 1);
+        let q = c.take_ready(0, 10.0).unwrap();
+        assert_eq!(q.batch, 8);
+        assert!(c.take_ready(0, 10.0).is_none());
+    }
+
+    #[test]
+    fn stop_prevents_future_production() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        c.produce(9, 0, &cost(), &mut t); // busy [0, 1)
+        c.stop(0.5); // lands mid-batch: that batch completes
+        assert!(c.produce(8, 0, &cost(), &mut t).is_none());
+        assert_eq!(c.produced_ids(), vec![9]);
+    }
+
+    #[test]
+    fn per_dir_isolation() {
+        let mut c = CsdEngine::new(2, 0.0);
+        let mut t = Trace::new();
+        c.produce(9, 0, &cost(), &mut t);
+        c.produce(8, 1, &cost(), &mut t);
+        assert_eq!(c.ready_count(0, 10.0), 1);
+        assert_eq!(c.ready_count(1, 10.0), 1);
+        assert_eq!(c.take_ready(0, 10.0).unwrap().batch, 9);
+        assert_eq!(c.take_ready(1, 10.0).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn waste_counts_unconsumed() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        c.produce(9, 0, &cost(), &mut t);
+        c.produce(8, 0, &cost(), &mut t);
+        c.take_next(0);
+        assert_eq!(c.wasted(), 1);
+    }
+
+    #[test]
+    fn trace_phases_recorded() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        c.produce(3, 0, &cost(), &mut t);
+        let phases: Vec<Phase> = t.spans.iter().map(|s| s.phase).collect();
+        assert_eq!(
+            phases,
+            vec![Phase::CsdRead, Phase::CsdPreprocess, Phase::CsdWrite]
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Dataset substrate: synthetic image datasets, batch geometry, the
+//! head/tail cursor the dual-pronged strategies walk, and
+//! DistributedSampler-style sharding for multi-accelerator runs.
+//!
+//! Real ImageNet/Cifar are substituted by deterministic synthetic
+//! samples (DESIGN.md): preprocessing cost depends on image geometry
+//! and pipeline, not pixel content, and the real-execution path only
+//! needs *bytes with the right shape*. Sample `i` of seed `s` is fully
+//! reproducible from `(s, i)`.
+
+use crate::pipeline::PipelineKind;
+use crate::util::Prng;
+
+/// Batch identity within an epoch (global index across the dataset).
+pub type BatchId = u32;
+
+/// Dataset geometry for one experiment.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Batches in the (possibly sharded) dataset seen by the run.
+    pub n_batches: u32,
+    /// Samples per batch.
+    pub batch_size: u32,
+    /// Which pipeline reads it (drives raw geometry / bytes).
+    pub pipeline: PipelineKind,
+    /// Generation seed.
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    pub fn n_samples(&self) -> u64 {
+        self.n_batches as u64 * self.batch_size as u64
+    }
+
+    /// Stored bytes of one raw batch on the SSD.
+    pub fn raw_batch_bytes(&self) -> f64 {
+        self.pipeline.src_bytes_per_image() * self.batch_size as f64
+    }
+
+    /// Bytes of one preprocessed batch (written back by the CSD, read
+    /// via GDS).
+    pub fn preprocessed_batch_bytes(&self) -> f64 {
+        self.pipeline.out_bytes_per_image() * self.batch_size as f64
+    }
+}
+
+/// Head/tail consumption cursor over one epoch: the CPU walks batches
+/// from the head (`0, 1, 2, …`), the CSD from the tail
+/// (`n-1, n-2, …`) — the "moving towards each other" geometry shared
+/// by MTE and WRR. Guarantees each batch is claimed at most once.
+#[derive(Debug, Clone)]
+pub struct HeadTailCursor {
+    n: u32,
+    head: u32,
+    tail_taken: u32,
+}
+
+impl HeadTailCursor {
+    pub fn new(n_batches: u32) -> Self {
+        HeadTailCursor {
+            n: n_batches,
+            head: 0,
+            tail_taken: 0,
+        }
+    }
+
+    /// Batches claimed so far (the paper's `total`).
+    pub fn total(&self) -> u32 {
+        self.head + self.tail_taken
+    }
+
+    /// All batches claimed?
+    pub fn exhausted(&self) -> bool {
+        self.total() >= self.n
+    }
+
+    /// Claim the next batch from the head (CPU side).
+    pub fn claim_head(&mut self) -> Option<BatchId> {
+        if self.exhausted() {
+            return None;
+        }
+        let id = self.head;
+        self.head += 1;
+        Some(id)
+    }
+
+    /// Claim the next batch from the tail (CSD side).
+    pub fn claim_tail(&mut self) -> Option<BatchId> {
+        if self.exhausted() {
+            return None;
+        }
+        self.tail_taken += 1;
+        Some(self.n - self.tail_taken)
+    }
+
+    /// Remaining unclaimed batches.
+    pub fn remaining(&self) -> u32 {
+        self.n - self.total()
+    }
+
+    /// Return the most recent tail claim to the pool (used when the CSD
+    /// refuses a production — stop signal or injected failure — so the
+    /// CPU side can pick the batch up from the head instead).
+    pub fn unclaim_tail(&mut self) {
+        assert!(self.tail_taken > 0, "no tail claim to return");
+        self.tail_taken -= 1;
+    }
+}
+
+/// DistributedSampler: shard `n_batches` across `n_ranks` so every rank
+/// sees a disjoint, near-equal slice (§IV-E: "each process reads a
+/// unique partition of the dataset"). Uses the interleaved assignment
+/// PyTorch's sampler uses (`rank, rank + world, rank + 2·world, …`).
+pub fn shard_batches(n_batches: u32, rank: u32, world: u32) -> Vec<BatchId> {
+    assert!(world >= 1 && rank < world);
+    (rank..n_batches).step_by(world as usize).collect()
+}
+
+/// Generate the raw bytes of sample `idx` (decoded u8 HWC image) with
+/// geometry `hw` — deterministic in `(seed, idx)`.
+pub fn synth_image(seed: u64, idx: u64, hw: usize) -> Vec<u8> {
+    let mut rng = Prng::new(seed).fork(idx);
+    let mut buf = vec![0u8; hw * hw * 3];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+/// Generate the uniform random vector feeding a preprocessing pipeline
+/// for one batch (`rand` input of the AOT artifact): shape `[batch, 8]`.
+pub fn synth_rand(seed: u64, batch_id: BatchId, batch_size: usize) -> Vec<f32> {
+    let mut rng = Prng::new(seed ^ 0x5A1D_0F_0A_4D).fork(batch_id as u64);
+    (0..batch_size * 8).map(|_| rng.f32()).collect()
+}
+
+/// Synthetic labels for one batch.
+pub fn synth_labels(seed: u64, batch_id: BatchId, batch_size: usize, ncls: u32) -> Vec<i32> {
+    let mut rng = Prng::new(seed ^ 0x1ABE15).fork(batch_id as u64);
+    (0..batch_size)
+        .map(|_| rng.below(ncls as u64) as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn cursor_partitions_dataset() {
+        let mut c = HeadTailCursor::new(10);
+        let mut claimed = Vec::new();
+        // alternate head/tail claims
+        for i in 0.. {
+            let id = if i % 3 == 0 { c.claim_tail() } else { c.claim_head() };
+            match id {
+                Some(b) => claimed.push(b),
+                None => break,
+            }
+        }
+        claimed.sort_unstable();
+        assert_eq!(claimed, (0..10).collect::<Vec<_>>());
+        assert!(c.exhausted());
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn cursor_head_ascending_tail_descending() {
+        let mut c = HeadTailCursor::new(5);
+        assert_eq!(c.claim_head(), Some(0));
+        assert_eq!(c.claim_tail(), Some(4));
+        assert_eq!(c.claim_head(), Some(1));
+        assert_eq!(c.claim_tail(), Some(3));
+        assert_eq!(c.claim_head(), Some(2));
+        assert_eq!(c.claim_head(), None);
+        assert_eq!(c.claim_tail(), None);
+    }
+
+    #[test]
+    fn prop_cursor_never_duplicates() {
+        run_prop("head/tail claims partition [0,n)", 100, |g| {
+            let n = g.size(1, 200) as u32;
+            let mut c = HeadTailCursor::new(n);
+            let mut seen = std::collections::HashSet::new();
+            loop {
+                let id = if g.bool() { c.claim_head() } else { c.claim_tail() };
+                match id {
+                    Some(b) => {
+                        assert!(b < n);
+                        assert!(seen.insert(b), "batch {b} claimed twice");
+                    }
+                    None => break,
+                }
+            }
+            assert_eq!(seen.len() as u32, n);
+        });
+    }
+
+    #[test]
+    fn shard_disjoint_and_complete() {
+        let world = 3;
+        let n = 100;
+        let mut all: Vec<BatchId> = (0..world).flat_map(|r| shard_batches(n, r, world)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_shard_balanced() {
+        run_prop("shards within 1 of each other", 50, |g| {
+            let world = g.size(1, 8) as u32;
+            let n = g.size(0, 500) as u32;
+            let sizes: Vec<usize> = (0..world).map(|r| shard_batches(n, r, world).len()).collect();
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1);
+            assert_eq!(sizes.iter().sum::<usize>() as u32, n);
+        });
+    }
+
+    #[test]
+    fn synth_data_deterministic() {
+        assert_eq!(synth_image(1, 5, 8), synth_image(1, 5, 8));
+        assert_ne!(synth_image(1, 5, 8), synth_image(1, 6, 8));
+        assert_ne!(synth_image(2, 5, 8), synth_image(1, 5, 8));
+        assert_eq!(synth_rand(3, 2, 4), synth_rand(3, 2, 4));
+        let labels = synth_labels(0, 0, 100, 10);
+        assert!(labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn dataset_spec_byte_math() {
+        let spec = DatasetSpec {
+            n_batches: 10,
+            batch_size: 256,
+            pipeline: PipelineKind::ImageNet1,
+            seed: 0,
+        };
+        assert_eq!(spec.n_samples(), 2560);
+        assert_eq!(
+            spec.preprocessed_batch_bytes(),
+            256.0 * 224.0 * 224.0 * 3.0 * 4.0
+        );
+    }
+}

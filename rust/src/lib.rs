@@ -1,0 +1,58 @@
+//! # DDLP — Dual-pronged Deep Learning Preprocessing
+//!
+//! Reproduction of *"Dual-pronged deep learning preprocessing on
+//! heterogeneous platforms with CPU, Accelerator and CSD"* (Wei et al.,
+//! 2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   [`coordinator`] module implements the MTE and WRR strategies that
+//!   let the host CPU and a Computational Storage Device preprocess a
+//!   dataset from both ends simultaneously while the accelerator
+//!   dynamically consumes whichever side is ready.
+//! * **L2/L1 (build-time python)** — the Table IV preprocessing
+//!   pipelines (Pallas kernels fused into JAX graphs) and tiny trainable
+//!   models, AOT-lowered to HLO text in `artifacts/` and executed here
+//!   through the PJRT C API ([`runtime`]). Python never runs on the
+//!   request path.
+//!
+//! Hardware the paper requires (A100/TPU accelerators, a Zynq CSD,
+//! GPUDirect Storage) is simulated by calibrated device models driven in
+//! virtual time ([`sim`]); see `DESIGN.md` for the substitution map.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ddlp::config::ExperimentConfig;
+//! use ddlp::coordinator::{run_experiment, Strategy};
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .model("wrn")
+//!     .pipeline("imagenet1")
+//!     .strategy(Strategy::Wrr)
+//!     .num_workers(16)
+//!     .build()
+//!     .unwrap();
+//! let result = run_experiment(&cfg).unwrap();
+//! println!("avg learning time/batch: {:.3}s", result.report.learn_time_per_batch);
+//! ```
+
+pub mod accel;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod csd;
+pub mod dataset;
+pub mod energy;
+pub mod host;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod trace;
+pub mod util;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,196 @@
+//! `ddlp` — launcher CLI for the DDLP reproduction.
+//!
+//! ```text
+//! ddlp run   [--config FILE] [--set k=v]...    run one experiment
+//! ddlp sweep [--set k=v]...                    all strategies side by side
+//! ddlp table6 | table7 | table8 | table9 | fig1 | fig8 | fig6
+//!                                              regenerate a paper artifact
+//! ddlp e2e   [--artifacts DIR]                 real-execution end-to-end run
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline vendor set has no clap.)
+
+use anyhow::{bail, Context, Result};
+
+use ddlp::config::{file as cfgfile, ExperimentConfig};
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::metrics::{fmt_s, Table};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_sets(args: &[String]) -> Result<(Vec<(String, String)>, Option<String>)> {
+    let mut sets = Vec::new();
+    let mut config_path = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--set" => {
+                let kv = args.get(i + 1).context("--set needs k=v")?;
+                let (k, v) = kv.split_once('=').context("--set expects k=v")?;
+                sets.push((k.trim().to_string(), v.trim().to_string()));
+                i += 2;
+            }
+            "--config" => {
+                config_path = Some(args.get(i + 1).context("--config needs a path")?.clone());
+                i += 2;
+            }
+            "--artifacts" => {
+                let dir = args.get(i + 1).context("--artifacts needs a dir")?;
+                sets.push(("artifacts_dir".to_string(), dir.clone()));
+                i += 2;
+            }
+            other => bail!("unknown flag {other:?} (see --help)"),
+        }
+    }
+    Ok((sets, config_path))
+}
+
+fn load_config(args: &[String]) -> Result<ExperimentConfig> {
+    let (sets, config_path) = parse_sets(args)?;
+    let text = match config_path {
+        Some(p) => std::fs::read_to_string(&p).with_context(|| format!("read {p}"))?,
+        None => String::new(),
+    };
+    cfgfile::load(&text, &sets)
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("--help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    match cmd {
+        "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
+        "e2e" => cmd_e2e(rest),
+        "version" => {
+            println!("ddlp {}", ddlp::version());
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!(
+                "ddlp {} — dual-pronged deep learning preprocessing (reproduction)\n\n\
+                 usage:\n  ddlp run   [--config FILE] [--set k=v]...\n  \
+                 ddlp sweep [--config FILE] [--set k=v]...\n  \
+                 ddlp e2e   [--artifacts DIR] [--set k=v]...\n  \
+                 ddlp version\n\nconfig keys: model, pipeline, strategy, num_workers, \
+                 n_accel, n_batches, epochs, loader, seed, csd_slowdown, ...\n\
+                 benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
+                ddlp::version()
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try --help)"),
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cfg = load_config(args)?;
+    let result = run_experiment(&cfg)?;
+    let r = &result.report;
+    println!(
+        "model={} pipeline={} strategy={} workers={} accel={} batches={}",
+        cfg.model, cfg.pipeline, cfg.strategy, cfg.num_workers, cfg.n_accel, r.n_batches
+    );
+    println!(
+        "learn time/batch: {} s   makespan: {} s",
+        fmt_s(r.learn_time_per_batch),
+        fmt_s(r.makespan)
+    );
+    println!(
+        "breakdown  T_io={}s  T_cpu={}s  T_csd={}s  T_gpu={}s  T_gds={}s",
+        fmt_s(r.t_io),
+        fmt_s(r.t_cpu),
+        fmt_s(r.t_csd),
+        fmt_s(r.t_gpu),
+        fmt_s(r.t_gds)
+    );
+    println!(
+        "csd share: {:.1}%   wasted batches: {}   cpu+dram/batch: {}s",
+        r.csd_share() * 100.0,
+        r.wasted_batches,
+        fmt_s(r.cpu_dram_time_per_batch)
+    );
+    println!(
+        "energy: {} J/batch (cpu {} J, csd {} J total)",
+        fmt_s(r.energy.joules_per_batch),
+        fmt_s(r.energy.cpu_joules),
+        fmt_s(r.energy.csd_joules)
+    );
+    if !result.losses.is_empty() {
+        let l = &result.losses;
+        println!(
+            "losses: first {:.4}  last {:.4}  ({} steps)",
+            l[0],
+            l[l.len() - 1],
+            l.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let base = load_config(args)?;
+    let mut table = Table::new(vec![
+        "strategy",
+        "learn s/batch",
+        "vs cpu",
+        "J/batch",
+        "cpu+dram s/batch",
+        "csd share",
+    ]);
+    let mut cpu_base = None;
+    for strat in Strategy::ALL {
+        let mut cfg = base.clone();
+        cfg.strategy = strat;
+        let r = run_experiment(&cfg)?.report;
+        let base_t = *cpu_base.get_or_insert(r.learn_time_per_batch);
+        table.row(vec![
+            strat.name().to_string(),
+            fmt_s(r.learn_time_per_batch),
+            format!("{:+.1}%", (base_t - r.learn_time_per_batch) / base_t * 100.0),
+            fmt_s(r.energy.joules_per_batch),
+            fmt_s(r.cpu_dram_time_per_batch),
+            format!("{:.1}%", r.csd_share() * 100.0),
+        ]);
+    }
+    println!(
+        "model={} pipeline={} workers={} n_batches={}",
+        base.model, base.pipeline, base.num_workers, base.n_batches
+    );
+    print!("{}", table.to_text());
+    Ok(())
+}
+
+fn cmd_e2e(args: &[String]) -> Result<()> {
+    let mut args = args.to_vec();
+    // default artifacts dir if not given
+    if !args.iter().any(|a| a == "--artifacts") {
+        args.push("--artifacts".into());
+        args.push("artifacts".into());
+    }
+    let mut cfg = load_config(&args)?;
+    if cfg.n_batches > 200 {
+        cfg.n_batches = 60; // real execution: keep the default run short
+    }
+    let result = run_experiment(&cfg)?;
+    let r = &result.report;
+    println!(
+        "REAL e2e: model={} pipeline={} strategy={} → {} batches trained",
+        cfg.model, cfg.pipeline, cfg.strategy, r.n_batches
+    );
+    println!(
+        "virtual learn time/batch: {} s   csd share {:.1}%",
+        fmt_s(r.learn_time_per_batch),
+        r.csd_share() * 100.0
+    );
+    let l = &result.losses;
+    if l.len() >= 2 {
+        println!("loss: {:.4} → {:.4} over {} steps", l[0], l[l.len() - 1], l.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Run reports and table rendering.
+//!
+//! [`RunReport`] carries every quantity the paper's tables/figures are
+//! built from; [`Table`] renders aligned text/markdown tables so each
+//! bench prints the same rows the paper reports.
+
+use crate::energy::EnergyReport;
+use crate::sim::Secs;
+
+/// §VII-C decomposition of one run plus the per-batch aggregates the
+/// tables report.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Wall-clock (virtual) seconds for the whole run.
+    pub makespan: Secs,
+    /// Batches consumed by accelerators.
+    pub n_batches: u32,
+    /// Average learning time per batch (Table VI: preprocess + train).
+    pub learn_time_per_batch: Secs,
+    /// T_io: host-path storage I/O busy seconds (total).
+    pub t_io: Secs,
+    /// T_cpu: CPU preprocessing busy seconds (total).
+    pub t_cpu: Secs,
+    /// T_csd: CSD busy seconds (read + preprocess + write-back).
+    pub t_csd: Secs,
+    /// T_gpu: accelerator training busy seconds.
+    pub t_gpu: Secs,
+    /// GDS read seconds (accelerator-side direct storage reads).
+    pub t_gds: Secs,
+    /// Host CPU+DRAM busy seconds per batch (Table IX).
+    pub cpu_dram_time_per_batch: Secs,
+    /// Batches whose data came from the CSD side.
+    pub batches_from_csd: u32,
+    /// Batches preprocessed but never consumed (WRR overshoot waste).
+    pub wasted_batches: u32,
+    /// Energy accounting (Table VIII).
+    pub energy: EnergyReport,
+}
+
+impl RunReport {
+    /// Fraction of CSD preprocessing hidden behind other work
+    /// (overlap ratio — the paper's stated mechanism for the speedup).
+    pub fn csd_share(&self) -> f64 {
+        self.batches_from_csd as f64 / self.n_batches.max(1) as f64
+    }
+}
+
+/// Minimal aligned-table builder (text or markdown).
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format seconds with 4 significant digits (the paper's table style).
+pub fn fmt_s(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let digits = (4 - 1 - x.abs().log10().floor() as i32).max(0) as usize;
+    format!("{:.*}", digits, x)
+}
+
+/// Percentage improvement of `new` over `base` (positive = faster).
+pub fn pct_faster(base: f64, new: f64) -> f64 {
+    (base - new) / base * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["model", "CPU_0", "WRR_0"]);
+        t.row(vec!["wrn", "3.527", "2.698"]);
+        t.row(vec!["alexnet", "48.48", "31.12"]);
+        let text = t.to_text();
+        assert!(text.contains("model"));
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| a | b |\n|---|---|\n"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only one"]);
+    }
+
+    #[test]
+    fn fmt_s_sigfigs() {
+        assert_eq!(fmt_s(3.527), "3.527");
+        assert_eq!(fmt_s(48.48), "48.48");
+        assert_eq!(fmt_s(0.03307), "0.03307");
+        assert_eq!(fmt_s(155.1), "155.1");
+        assert_eq!(fmt_s(0.0), "0");
+    }
+
+    #[test]
+    fn pct() {
+        assert!((pct_faster(4.0, 3.0) - 25.0).abs() < 1e-12);
+        assert!((pct_faster(3.527, 2.698) - 23.504).abs() < 0.01);
+    }
+}

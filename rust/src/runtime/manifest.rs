@@ -1,0 +1,224 @@
+//! `artifacts/manifest.json` parsing — the contract between the python
+//! compile path (`python/compile/aot.py`) and this runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::tensorfile::DType;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Whether an artifact preprocesses or trains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Preprocess,
+    Train,
+}
+
+/// One AOT-compiled HLO program.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+    /// Golden input/output DTNS file.
+    pub golden: Option<String>,
+    /// Initial parameters DTNS (train artifacts).
+    pub params_file: Option<String>,
+    /// Number of leading parameter inputs (train artifacts).
+    pub n_params: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Batch size baked into the program.
+    pub batch: usize,
+    /// Model-input side (train) or output side (preprocess).
+    pub hw: usize,
+    /// Raw source side (preprocess artifacts).
+    pub raw_hw: usize,
+    /// Class count (train artifacts).
+    pub ncls: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_specs(j: &Json, field: &str) -> Result<Vec<IoSpec>> {
+    let arr = j
+        .get(field)
+        .and_then(|v| v.as_arr())
+        .with_context(|| format!("manifest entry missing {field:?}"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let shape = e
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .context("io missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = DType::from_name(
+                e.get("dtype").and_then(|v| v.as_str()).context("io missing dtype")?,
+            )?;
+            let name = e
+                .get("name")
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{field}{i}"));
+            Ok(IoSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json")?;
+        let version = root.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("manifest version {version} unsupported");
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .context("manifest missing artifacts")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, ent) in arts {
+            let kind = match ent.get("kind").and_then(|v| v.as_str()) {
+                Some("preprocess") => ArtifactKind::Preprocess,
+                Some("train") => ArtifactKind::Train,
+                other => bail!("{name}: bad kind {other:?}"),
+            };
+            let get_usize = |k: &str| ent.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    kind,
+                    file: ent
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .with_context(|| format!("{name}: missing file"))?
+                        .to_string(),
+                    golden: ent.get("golden").and_then(|v| v.as_str()).map(str::to_string),
+                    params_file: ent
+                        .get("params_file")
+                        .and_then(|v| v.as_str())
+                        .map(str::to_string),
+                    n_params: get_usize("n_params"),
+                    inputs: io_specs(ent, "inputs")?,
+                    outputs: io_specs(ent, "outputs")?,
+                    batch: get_usize("batch"),
+                    hw: if kind == ArtifactKind::Train {
+                        get_usize("hw")
+                    } else {
+                        get_usize("out_hw")
+                    },
+                    raw_hw: get_usize("raw_hw"),
+                    ncls: get_usize("ncls"),
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "preprocess_imagenet1": {
+          "kind": "preprocess", "file": "preprocess_imagenet1.hlo.txt",
+          "golden": "golden_preprocess_imagenet1.dtns",
+          "inputs": [
+            {"name": "raw", "shape": [8, 96, 96, 3], "dtype": "u8"},
+            {"name": "rand", "shape": [8, 8], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [8, 3, 64, 64], "dtype": "f32"}],
+          "batch": 8, "raw_hw": 96, "out_hw": 64
+        },
+        "train_wrn": {
+          "kind": "train", "file": "train_wrn.hlo.txt",
+          "params_file": "params_wrn.dtns", "n_params": 2,
+          "inputs": [
+            {"name": "p0", "shape": [16], "dtype": "f32"},
+            {"name": "p1", "shape": [16], "dtype": "f32"},
+            {"name": "x", "shape": [8, 3, 64, 64], "dtype": "f32"},
+            {"name": "y", "shape": [8], "dtype": "i32"}
+          ],
+          "outputs": [
+            {"shape": [16], "dtype": "f32"},
+            {"shape": [16], "dtype": "f32"},
+            {"shape": [], "dtype": "f32"}
+          ],
+          "batch": 8, "hw": 64, "ncls": 100, "lr": 0.05
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let p = m.get("preprocess_imagenet1").unwrap();
+        assert_eq!(p.kind, ArtifactKind::Preprocess);
+        assert_eq!(p.inputs[0].shape, vec![8, 96, 96, 3]);
+        assert_eq!(p.hw, 64);
+        assert_eq!(p.raw_hw, 96);
+        let t = m.get("train_wrn").unwrap();
+        assert_eq!(t.kind, ArtifactKind::Train);
+        assert_eq!(t.n_params, 2);
+        assert_eq!(t.outputs.len(), 3);
+        assert_eq!(t.ncls, 100);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Manifest::parse(Path::new("/t"), r#"{"version": 2, "artifacts": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Real-execution session: actual PJRT executions drive the scheduler.
+//!
+//! In `ExecMode::Real`, every batch consumed by the coordinator is
+//! *really* preprocessed (the AOT Pallas/JAX pipeline artifact) and
+//! *really* trained (the fused train-step artifact); model parameters
+//! advance step by step and the loss curve is recorded. Measured wall
+//! times become the virtual durations — the CSD's are scaled by the
+//! profile's `csd_slowdown`, exactly like the paper's Pynq emulation
+//! scales a host-class computation down to CSD speed.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::DeviceProfile;
+use crate::coordinator::cost::{CostProvider, CsdBatchCost, HostBatchCost, TrainCost};
+use crate::dataset::{synth_image, synth_labels, synth_rand, BatchId};
+use crate::runtime::{i32_literal, literal_scalar_f32, tensor_to_literal, u8_literal, Runtime};
+use crate::sim::Secs;
+use crate::storage::{Channel, SsdModel};
+use crate::util::tensorfile::Tensor;
+
+/// Running-median smoother for measured kernel times: PJRT-CPU wall
+/// times jitter by tens of percent (allocator, cache state, OS noise);
+/// feeding raw per-call times into virtual durations lets that noise
+/// swamp scheduling effects. The *median of a sliding window* keeps the
+/// durations real (they track the actual executable) while de-noising.
+#[derive(Debug, Default)]
+struct Smoother {
+    window: Vec<f64>,
+}
+
+impl Smoother {
+    const WINDOW: usize = 15;
+    const MIN_SAMPLES: usize = 5;
+
+    fn observe(&mut self, dt: f64) -> f64 {
+        if self.window.len() == Self::WINDOW {
+            self.window.remove(0);
+        }
+        self.window.push(dt);
+        if self.window.len() < Self::MIN_SAMPLES {
+            return dt;
+        }
+        let mut sorted = self.window.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[sorted.len() / 2]
+    }
+}
+
+/// A live training session over real artifacts.
+pub struct RealSession {
+    rt: Runtime,
+    pre_name: String,
+    train_name: String,
+    params: Vec<xla::Literal>,
+    n_params: usize,
+    batch: usize,
+    raw_hw: usize,
+    ncls: usize,
+    seed: u64,
+    csd_slowdown: f64,
+    accel_speedup: f64,
+    ssd: SsdModel,
+    raw_batch_bytes: f64,
+    out_batch_bytes: f64,
+    /// Preprocessed batches awaiting training.
+    pending: HashMap<BatchId, xla::Literal>,
+    pp_smooth: Smoother,
+    train_smooth: Smoother,
+    /// Loss per training step, in consumption order.
+    losses: Vec<f32>,
+    steps: u64,
+}
+
+impl RealSession {
+    /// Open a session for `(pipeline_artifact, train_artifact)`, e.g.
+    /// `("preprocess_imagenet1", "train_wrn")`. Validates that the
+    /// pipeline's output geometry matches the model input.
+    pub fn new(
+        artifacts_dir: &Path,
+        pipeline_artifact: &str,
+        train_artifact: &str,
+        seed: u64,
+        profile: &DeviceProfile,
+    ) -> Result<RealSession> {
+        let mut rt = Runtime::open(artifacts_dir)?;
+        let pre = rt.manifest().get(pipeline_artifact)?.clone();
+        let tr = rt.manifest().get(train_artifact)?.clone();
+        if pre.batch != tr.batch {
+            bail!(
+                "batch mismatch: {} has {}, {} has {}",
+                pipeline_artifact,
+                pre.batch,
+                train_artifact,
+                tr.batch
+            );
+        }
+        if pre.hw != tr.hw {
+            bail!(
+                "geometry mismatch: {} outputs {}px, {} expects {}px",
+                pipeline_artifact,
+                pre.hw,
+                train_artifact,
+                tr.hw
+            );
+        }
+        let params_file = tr
+            .params_file
+            .clone()
+            .with_context(|| format!("{train_artifact}: no params_file"))?;
+        let params: Vec<xla::Literal> = rt
+            .load_tensors(&params_file)?
+            .into_iter()
+            .map(|(_, l)| l)
+            .collect();
+        // Warm the executable cache so measurements exclude compilation.
+        rt.load(pipeline_artifact)?;
+        rt.load(train_artifact)?;
+
+        let batch = pre.batch;
+        let out_bytes = (pre.hw * pre.hw * 3 * 4 * batch) as f64;
+        let raw_bytes = (pre.raw_hw * pre.raw_hw * 3 * batch) as f64;
+        Ok(RealSession {
+            pre_name: pipeline_artifact.to_string(),
+            train_name: train_artifact.to_string(),
+            n_params: tr.n_params,
+            batch,
+            raw_hw: pre.raw_hw,
+            ncls: tr.ncls.max(2),
+            seed,
+            csd_slowdown: profile.csd_slowdown,
+            accel_speedup: profile.accel_speedup,
+            ssd: SsdModel::from_profile(profile),
+            raw_batch_bytes: raw_bytes,
+            out_batch_bytes: out_bytes,
+            pending: HashMap::new(),
+            pp_smooth: Smoother::default(),
+            train_smooth: Smoother::default(),
+            losses: Vec::new(),
+            steps: 0,
+            params,
+            rt,
+        })
+    }
+
+    /// Execute the preprocessing artifact for batch `b`; returns the
+    /// measured wall seconds and stores the output for training.
+    fn preprocess_now(&mut self, b: BatchId) -> Result<Secs> {
+        let mut raw = Vec::with_capacity(self.batch * self.raw_hw * self.raw_hw * 3);
+        for i in 0..self.batch {
+            raw.extend_from_slice(&synth_image(
+                self.seed,
+                b as u64 * self.batch as u64 + i as u64,
+                self.raw_hw,
+            ));
+        }
+        let raw = u8_literal(&[self.batch, self.raw_hw, self.raw_hw, 3], raw)?;
+        let rand_vals = synth_rand(self.seed, b, self.batch);
+        let rand = tensor_to_literal(&Tensor::from_f32("rand", &[self.batch, 8], &rand_vals))?;
+        let t0 = Instant::now();
+        let mut out = self.rt.run(&self.pre_name, &[raw, rand])?;
+        let dt = self.pp_smooth.observe(t0.elapsed().as_secs_f64());
+        self.pending.insert(b, out.remove(0));
+        Ok(dt)
+    }
+
+    /// Execute one training step on the (already preprocessed) batch.
+    fn train_now(&mut self, b: BatchId) -> Result<(Secs, f32)> {
+        let x = self
+            .pending
+            .remove(&b)
+            .with_context(|| format!("batch {b} trained before preprocessing"))?;
+        let y_vals = synth_labels(self.seed, b, self.batch, self.ncls as u32);
+        let y = i32_literal(&[self.batch], &y_vals)?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.n_params + 2);
+        inputs.append(&mut self.params);
+        inputs.push(x);
+        inputs.push(y);
+        let t0 = Instant::now();
+        let mut out = self.rt.run(&self.train_name, &inputs)?;
+        let dt = self.train_smooth.observe(t0.elapsed().as_secs_f64());
+        let loss = literal_scalar_f32(&out[self.n_params])?;
+        out.truncate(self.n_params);
+        self.params = out;
+        self.losses.push(loss);
+        self.steps += 1;
+        Ok((dt, loss))
+    }
+
+    pub fn losses(&self) -> &[f32] {
+        &self.losses
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Batches preprocessed but not yet trained.
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+impl CostProvider for RealSession {
+    fn host_batch(&mut self, b: BatchId) -> HostBatchCost {
+        let pp = self.preprocess_now(b).expect("preprocess execution failed");
+        HostBatchCost {
+            read_s: self.ssd.transfer_time(Channel::HostPcie, self.raw_batch_bytes),
+            pp_s: pp,
+            xfer_s: self.ssd.transfer_time(Channel::H2d, self.out_batch_bytes),
+            accel_pp_s: 0.0,
+        }
+    }
+
+    fn csd_batch(&mut self, b: BatchId) -> CsdBatchCost {
+        // Same artifact, same numerics — the cross-device consistency
+        // property; virtual time scaled by the CSD slowdown.
+        let pp = self.preprocess_now(b).expect("preprocess execution failed");
+        CsdBatchCost {
+            read_s: self
+                .ssd
+                .transfer_time(Channel::CsdInternal, self.raw_batch_bytes),
+            pp_s: pp * self.csd_slowdown,
+            write_s: self
+                .ssd
+                .transfer_time(Channel::CsdWriteBack, self.out_batch_bytes),
+        }
+    }
+
+    fn train(&mut self, b: BatchId, from_csd: bool) -> TrainCost {
+        let (dt, _loss) = self.train_now(b).expect("train execution failed");
+        TrainCost {
+            gds_s: if from_csd {
+                self.ssd.transfer_time(Channel::Gds, self.out_batch_bytes)
+            } else {
+                0.0
+            },
+            // Virtual accelerator: measured CPU-client step time scaled
+            // to the simulated device class (DESIGN.md substitution).
+            train_s: dt / self.accel_speedup,
+        }
+    }
+}

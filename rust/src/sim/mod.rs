@@ -1,0 +1,219 @@
+//! Virtual-time primitives for the discrete-event device models.
+//!
+//! Every engine (host CPU workers, CSD, accelerators, transfer links)
+//! is modelled as one or more **lanes**: resources that execute work
+//! items sequentially. Scheduling a work item on a lane at the earliest
+//! feasible time is the single primitive the whole coordinator is built
+//! on; the resulting `(start, end)` intervals feed the [`crate::trace`]
+//! and the energy/utilization accounting.
+//!
+//! Times are `f64` seconds of *virtual* time. In `Analytic` execution
+//! mode durations come from the calibrated cost models; in `Real` mode
+//! they are wall-clock measurements of actual PJRT executions, scaled by
+//! the device profile (e.g. the CSD slowdown), so the same scheduler
+//! drives both modes.
+
+/// Virtual time in seconds.
+pub type Secs = f64;
+
+/// A sequential resource (one CPU worker, the CSD core, one accelerator
+/// stream, a DMA link, ...).
+#[derive(Debug, Clone)]
+pub struct Lane {
+    next_free: Secs,
+    busy_total: Secs,
+}
+
+impl Lane {
+    pub fn new() -> Self {
+        Lane {
+            next_free: 0.0,
+            busy_total: 0.0,
+        }
+    }
+
+    /// Earliest time a new item could start.
+    pub fn next_free(&self) -> Secs {
+        self.next_free
+    }
+
+    /// Total busy seconds accumulated (for utilization/energy).
+    pub fn busy_total(&self) -> Secs {
+        self.busy_total
+    }
+
+    /// Reserve `dur` seconds starting no earlier than `earliest`.
+    /// Returns the `(start, end)` interval.
+    pub fn reserve(&mut self, earliest: Secs, dur: Secs) -> (Secs, Secs) {
+        debug_assert!(dur >= 0.0, "negative duration {dur}");
+        let start = self.next_free.max(earliest);
+        let end = start + dur;
+        self.next_free = end;
+        self.busy_total += dur;
+        (start, end)
+    }
+
+    /// Push the lane's availability forward without accruing busy time
+    /// (e.g. a blocked wait).
+    pub fn advance_to(&mut self, t: Secs) {
+        if t > self.next_free {
+            self.next_free = t;
+        }
+    }
+}
+
+impl Default for Lane {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A pool of identical lanes with earliest-available dispatch — models a
+/// multi-worker DataLoader or a multi-queue link.
+#[derive(Debug, Clone)]
+pub struct LanePool {
+    lanes: Vec<Lane>,
+}
+
+impl LanePool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "LanePool needs at least one lane");
+        LanePool {
+            lanes: (0..n).map(|_| Lane::new()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// Reserve on the lane that can start earliest. Returns
+    /// `(lane_index, start, end)`.
+    pub fn reserve_earliest(&mut self, earliest: Secs, dur: Secs) -> (usize, Secs, Secs) {
+        let (idx, _) = self
+            .lanes
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.next_free.partial_cmp(&b.1.next_free).unwrap())
+            .expect("non-empty pool");
+        let (s, e) = self.lanes[idx].reserve(earliest, dur);
+        (idx, s, e)
+    }
+
+    /// Earliest time any lane becomes free.
+    pub fn earliest_free(&self) -> Secs {
+        self.lanes
+            .iter()
+            .map(|l| l.next_free)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Sum of busy time over all lanes.
+    pub fn busy_total(&self) -> Secs {
+        self.lanes.iter().map(|l| l.busy_total).sum()
+    }
+
+    /// Latest `next_free` over all lanes (when the pool fully drains).
+    pub fn drain_time(&self) -> Secs {
+        self.lanes.iter().map(|l| l.next_free).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn lane_serializes_work() {
+        let mut l = Lane::new();
+        let (s1, e1) = l.reserve(0.0, 2.0);
+        let (s2, e2) = l.reserve(0.0, 3.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        assert_eq!((s2, e2), (2.0, 5.0));
+        assert_eq!(l.busy_total(), 5.0);
+    }
+
+    #[test]
+    fn lane_respects_earliest() {
+        let mut l = Lane::new();
+        let (s, e) = l.reserve(10.0, 1.0);
+        assert_eq!((s, e), (10.0, 11.0));
+    }
+
+    #[test]
+    fn advance_to_adds_no_busy() {
+        let mut l = Lane::new();
+        l.advance_to(5.0);
+        assert_eq!(l.next_free(), 5.0);
+        assert_eq!(l.busy_total(), 0.0);
+        l.advance_to(1.0); // never goes backwards
+        assert_eq!(l.next_free(), 5.0);
+    }
+
+    #[test]
+    fn pool_round_robins_by_availability() {
+        let mut p = LanePool::new(2);
+        let (l1, s1, _) = p.reserve_earliest(0.0, 4.0);
+        let (l2, s2, _) = p.reserve_earliest(0.0, 1.0);
+        let (l3, s3, _) = p.reserve_earliest(0.0, 1.0);
+        assert_ne!(l1, l2);
+        assert_eq!(s1, 0.0);
+        assert_eq!(s2, 0.0);
+        assert_eq!(l3, l2); // lane 2 freed first
+        assert_eq!(s3, 1.0);
+    }
+
+    #[test]
+    fn pool_busy_total_accumulates() {
+        let mut p = LanePool::new(3);
+        for _ in 0..6 {
+            p.reserve_earliest(0.0, 1.5);
+        }
+        assert!((p.busy_total() - 9.0).abs() < 1e-9);
+        assert!((p.drain_time() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_pool_never_overlaps_per_lane() {
+        run_prop("lane intervals disjoint", 60, |g| {
+            let n_lanes = g.size(1, 4);
+            let n_jobs = g.size(1, 40);
+            let mut p = LanePool::new(n_lanes);
+            let mut per_lane: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_lanes];
+            for _ in 0..n_jobs {
+                let earliest = g.float(0.0, 10.0);
+                let dur = g.float(0.0, 5.0);
+                let (lane, s, e) = p.reserve_earliest(earliest, dur);
+                assert!(s >= earliest);
+                per_lane[lane].push((s, e));
+            }
+            for spans in &per_lane {
+                for w in spans.windows(2) {
+                    assert!(w[0].1 <= w[1].0 + 1e-12, "lane overlap {w:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_pool_parallelism_bounds_makespan() {
+        run_prop("pool makespan between serial/n and serial", 40, |g| {
+            let n_lanes = g.size(1, 8);
+            let n_jobs = g.size(1, 50);
+            let durs: Vec<f64> = (0..n_jobs).map(|_| g.float(0.01, 2.0)).collect();
+            let total: f64 = durs.iter().sum();
+            let mut p = LanePool::new(n_lanes);
+            for &d in &durs {
+                p.reserve_earliest(0.0, d);
+            }
+            let makespan = p.drain_time();
+            assert!(makespan <= total + 1e-9);
+            assert!(makespan >= total / n_lanes as f64 - 1e-9);
+        });
+    }
+}

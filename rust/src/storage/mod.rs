@@ -1,0 +1,149 @@
+//! Storage substrate: the NVMe SSD with its three access paths.
+//!
+//! The paper's testbed exposes the same flash through three channels
+//! (Fig. 2): the long host path (back-end → front-end → NVMe → PCIe),
+//! the CSD-internal switch (short path), and the direct-storage path to
+//! the accelerator (GDS). Each is modelled as bandwidth + fixed latency;
+//! relative bandwidths come from the device profile (DESIGN.md
+//! substitution map).
+
+use crate::config::DeviceProfile;
+use crate::sim::Secs;
+
+/// Which path a transfer takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Channel {
+    /// SSD → host DRAM over the system PCIe link.
+    HostPcie,
+    /// Flash → CSD engine over the internal switch.
+    CsdInternal,
+    /// SSD → accelerator memory via direct storage (GDS, paper [28]).
+    Gds,
+    /// CSD engine → flash write-back.
+    CsdWriteBack,
+    /// Host DRAM → accelerator (H2D copy after CPU preprocessing).
+    H2d,
+}
+
+/// Fixed per-request latency of a channel (s): command setup, DMA
+/// descriptor, interrupt. Orders of magnitude below batch transfer
+/// times; included so latency-bound tiny transfers behave sanely.
+const CHANNEL_LATENCY_S: f64 = 30e-6;
+
+/// The SSD + link model.
+#[derive(Debug, Clone)]
+pub struct SsdModel {
+    host_bw: f64,
+    csd_bw: f64,
+    gds_bw: f64,
+    write_bw: f64,
+    h2d_bw: f64,
+}
+
+impl SsdModel {
+    pub fn from_profile(p: &DeviceProfile) -> Self {
+        SsdModel {
+            host_bw: p.host_ssd_bw,
+            csd_bw: p.csd_internal_bw,
+            gds_bw: p.gds_bw,
+            write_bw: p.ssd_write_bw,
+            h2d_bw: p.h2d_bw,
+        }
+    }
+
+    /// Seconds to move `bytes` over `channel`.
+    pub fn transfer_time(&self, channel: Channel, bytes: f64) -> Secs {
+        let bw = match channel {
+            Channel::HostPcie => self.host_bw,
+            Channel::CsdInternal => self.csd_bw,
+            Channel::Gds => self.gds_bw,
+            Channel::CsdWriteBack => self.write_bw,
+            Channel::H2d => self.h2d_bw,
+        };
+        CHANNEL_LATENCY_S + bytes / bw
+    }
+}
+
+/// In-memory "flash" region used by the real-execution path: raw
+/// synthetic samples and the CSD's preprocessed-batch output area.
+///
+/// Functionally a byte store keyed by sample range; the *timing* of
+/// access always comes from [`SsdModel`], so correctness code paths and
+/// timing models stay separate.
+#[derive(Debug, Default)]
+pub struct FlashStore {
+    regions: std::collections::BTreeMap<String, Vec<u8>>,
+}
+
+impl FlashStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write (or overwrite) a named region.
+    pub fn write(&mut self, key: &str, data: Vec<u8>) {
+        self.regions.insert(key.to_string(), data);
+    }
+
+    pub fn read(&self, key: &str) -> Option<&[u8]> {
+        self.regions.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn remove(&mut self, key: &str) -> Option<Vec<u8>> {
+        self.regions.remove(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    /// Total stored bytes (capacity accounting).
+    pub fn bytes(&self) -> usize {
+        self.regions.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+
+    #[test]
+    fn channel_ordering_matches_paper() {
+        let m = SsdModel::from_profile(&DeviceProfile::default());
+        let mb = 1e6;
+        // internal switch faster than host path; GDS fastest read
+        assert!(m.transfer_time(Channel::CsdInternal, mb) < m.transfer_time(Channel::HostPcie, mb));
+        assert!(m.transfer_time(Channel::Gds, mb) <= m.transfer_time(Channel::CsdInternal, mb));
+    }
+
+    #[test]
+    fn transfer_scales_linearly() {
+        let m = SsdModel::from_profile(&DeviceProfile::default());
+        let t1 = m.transfer_time(Channel::HostPcie, 1e6);
+        let t2 = m.transfer_time(Channel::HostPcie, 2e6);
+        let latency = CHANNEL_LATENCY_S;
+        assert!(((t2 - latency) / (t1 - latency) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_costs_latency_only() {
+        let m = SsdModel::from_profile(&DeviceProfile::default());
+        assert_eq!(m.transfer_time(Channel::Gds, 0.0), CHANNEL_LATENCY_S);
+    }
+
+    #[test]
+    fn flash_store_roundtrip() {
+        let mut f = FlashStore::new();
+        assert!(f.is_empty());
+        f.write("csd/gpu0/batch_17", vec![1, 2, 3]);
+        assert_eq!(f.read("csd/gpu0/batch_17"), Some(&[1u8, 2, 3][..]));
+        assert_eq!(f.bytes(), 3);
+        assert_eq!(f.remove("csd/gpu0/batch_17"), Some(vec![1, 2, 3]));
+        assert!(f.read("csd/gpu0/batch_17").is_none());
+    }
+}

@@ -1,0 +1,320 @@
+//! Event traces: every scheduled interval, queryable for the paper's
+//! overlap analysis (Table II), per-device utilization, and the
+//! T_io/T_cpu/T_csd/T_gpu decomposition of §VII-C.
+
+use crate::sim::Secs;
+
+/// A physical resource in the modelled server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Device {
+    /// DataLoader main process (also does inline preprocessing at
+    /// `num_workers == 0`).
+    CpuMain,
+    /// DataLoader worker subprocess.
+    CpuWorker(u16),
+    /// The CSD's embedded core.
+    Csd,
+    /// Accelerator `i` (GPU/DSA).
+    Accel(u16),
+}
+
+impl Device {
+    /// True for host-CPU devices (main process or workers) — the
+    /// resources Table IX accounts as "CPU and DRAM usage".
+    pub fn is_host_cpu(self) -> bool {
+        matches!(self, Device::CpuMain | Device::CpuWorker(_))
+    }
+}
+
+/// What the device spent the interval doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// SSD → host DRAM read (charged to the reading CPU process).
+    SsdRead,
+    /// CPU-side preprocessing compute.
+    CpuPreprocess,
+    /// Host DRAM → accelerator transfer.
+    H2d,
+    /// CSD internal read from flash.
+    CsdRead,
+    /// CSD-side preprocessing compute.
+    CsdPreprocess,
+    /// CSD writes the preprocessed batch back to flash.
+    CsdWrite,
+    /// Accelerator reads a CSD batch via direct storage (GDS).
+    GdsRead,
+    /// Accelerator forward/backward/update.
+    Train,
+    /// Accelerator-side preprocessing (the DALI-GPU mode).
+    AccelPreprocess,
+}
+
+/// One scheduled interval.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub device: Device,
+    pub phase: Phase,
+    /// Global batch index, when the work is batch-associated.
+    pub batch: Option<u32>,
+    pub start: Secs,
+    pub end: Secs,
+}
+
+/// Recorded timeline of a run.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+    enabled: bool,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace {
+            spans: Vec::new(),
+            enabled: true,
+        }
+    }
+
+    /// Enabled trace with pre-reserved span capacity (hot path: avoids
+    /// reallocation-copies of the span log during long runs).
+    pub fn with_capacity(spans: usize) -> Self {
+        Trace {
+            spans: Vec::with_capacity(spans),
+            enabled: true,
+        }
+    }
+
+    /// A no-op trace: `record` discards spans (hot-path benchmarking;
+    /// trace-derived report fields come back zero).
+    pub fn disabled() -> Self {
+        Trace {
+            spans: Vec::new(),
+            enabled: false,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record an interval. Zero-length spans are kept (they mark events).
+    #[inline]
+    pub fn record(&mut self, device: Device, phase: Phase, batch: Option<u32>, start: Secs, end: Secs) {
+        if !self.enabled {
+            return;
+        }
+        debug_assert!(end >= start, "span ends before it starts");
+        self.spans.push(Span {
+            device,
+            phase,
+            batch,
+            start,
+            end,
+        });
+    }
+
+    /// Latest end time over all spans.
+    pub fn makespan(&self) -> Secs {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Total busy time of the spans selected by `pred` (sum of
+    /// durations; lanes are disjoint per device so this is exact
+    /// per-device, and "process-seconds" across devices).
+    pub fn busy_where(&self, pred: impl Fn(&Span) -> bool) -> Secs {
+        self.spans
+            .iter()
+            .filter(|s| pred(s))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Union length of the intervals selected by `pred` ("wall-clock
+    /// seconds during which *any* matching work ran").
+    pub fn union_where(&self, pred: impl Fn(&Span) -> bool) -> Secs {
+        let mut iv: Vec<(Secs, Secs)> = self
+            .spans
+            .iter()
+            .filter(|s| pred(s) && s.end > s.start)
+            .map(|s| (s.start, s.end))
+            .collect();
+        union_len(&mut iv)
+    }
+
+    /// Wall-clock seconds during which *both* selections were active —
+    /// the paper's computation/communication overlap measure (Table II).
+    pub fn overlap_where(
+        &self,
+        a: impl Fn(&Span) -> bool,
+        b: impl Fn(&Span) -> bool,
+    ) -> Secs {
+        let mut ia: Vec<(Secs, Secs)> = self
+            .spans
+            .iter()
+            .filter(|s| a(s) && s.end > s.start)
+            .map(|s| (s.start, s.end))
+            .collect();
+        let mut ib: Vec<(Secs, Secs)> = self
+            .spans
+            .iter()
+            .filter(|s| b(s) && s.end > s.start)
+            .map(|s| (s.start, s.end))
+            .collect();
+        merge(&mut ia);
+        merge(&mut ib);
+        intersect_len(&ia, &ib)
+    }
+
+    /// Batches consumed by accelerators, in consumption order, with the
+    /// phase that fed them (`Train` spans only).
+    pub fn consumption_order(&self) -> Vec<(u32, Device)> {
+        let mut trains: Vec<&Span> = self
+            .spans
+            .iter()
+            .filter(|s| s.phase == Phase::Train && s.batch.is_some())
+            .collect();
+        trains.sort_by(|x, y| x.start.partial_cmp(&y.start).unwrap());
+        trains
+            .iter()
+            .map(|s| (s.batch.unwrap(), s.device))
+            .collect()
+    }
+
+    /// Compact per-device utilization summary (debugging aid).
+    pub fn summary(&self) -> String {
+        use std::collections::BTreeMap;
+        let mk = self.makespan().max(1e-12);
+        let mut per: BTreeMap<String, Secs> = BTreeMap::new();
+        for s in &self.spans {
+            *per.entry(format!("{:?}", s.device)).or_default() += s.end - s.start;
+        }
+        let mut out = format!("makespan {:.3}s\n", self.makespan());
+        for (d, busy) in per {
+            out.push_str(&format!("  {d:<14} busy {busy:>9.3}s  util {:5.1}%\n", busy / mk * 100.0));
+        }
+        out
+    }
+}
+
+/// Merge intervals in place (sorted, coalesced).
+fn merge(iv: &mut Vec<(Secs, Secs)>) {
+    iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<(Secs, Secs)> = Vec::with_capacity(iv.len());
+    for &(s, e) in iv.iter() {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    *iv = out;
+}
+
+fn union_len(iv: &mut Vec<(Secs, Secs)>) -> Secs {
+    merge(iv);
+    iv.iter().map(|(s, e)| e - s).sum()
+}
+
+/// Total length of the intersection of two merged interval lists.
+fn intersect_len(a: &[(Secs, Secs)], b: &[(Secs, Secs)]) -> Secs {
+    let (mut i, mut j, mut total) = (0usize, 0usize, 0.0);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if a[i].1 < b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn makespan_and_busy() {
+        let mut t = Trace::new();
+        t.record(Device::Csd, Phase::CsdPreprocess, Some(0), 0.0, 2.0);
+        t.record(Device::Accel(0), Phase::Train, Some(0), 1.0, 4.0);
+        assert_eq!(t.makespan(), 4.0);
+        assert_eq!(t.busy_where(|s| s.device == Device::Csd), 2.0);
+        assert_eq!(t.busy_where(|s| matches!(s.device, Device::Accel(_))), 3.0);
+    }
+
+    #[test]
+    fn overlap_basic() {
+        let mut t = Trace::new();
+        t.record(Device::Csd, Phase::CsdPreprocess, None, 0.0, 3.0);
+        t.record(Device::Accel(0), Phase::Train, None, 2.0, 5.0);
+        let ov = t.overlap_where(
+            |s| s.device == Device::Csd,
+            |s| matches!(s.device, Device::Accel(_)),
+        );
+        assert!((ov - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_merges_fragments() {
+        let mut t = Trace::new();
+        // Two csd fragments [0,1] and [1,2] vs accel [0.5, 1.5]
+        t.record(Device::Csd, Phase::CsdPreprocess, None, 0.0, 1.0);
+        t.record(Device::Csd, Phase::CsdPreprocess, None, 1.0, 2.0);
+        t.record(Device::Accel(0), Phase::Train, None, 0.5, 1.5);
+        let ov = t.overlap_where(
+            |s| s.device == Device::Csd,
+            |s| matches!(s.device, Device::Accel(_)),
+        );
+        assert!((ov - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn union_dedupes() {
+        let mut t = Trace::new();
+        t.record(Device::CpuMain, Phase::CpuPreprocess, None, 0.0, 2.0);
+        t.record(Device::CpuWorker(0), Phase::CpuPreprocess, None, 1.0, 3.0);
+        assert!((t.union_where(|s| s.device.is_host_cpu()) - 3.0).abs() < 1e-12);
+        assert!((t.busy_where(|s| s.device.is_host_cpu()) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consumption_order_sorted_by_start() {
+        let mut t = Trace::new();
+        t.record(Device::Accel(0), Phase::Train, Some(5), 2.0, 3.0);
+        t.record(Device::Accel(0), Phase::Train, Some(1), 0.0, 1.0);
+        let order: Vec<u32> = t.consumption_order().iter().map(|(b, _)| *b).collect();
+        assert_eq!(order, vec![1, 5]);
+    }
+
+    #[test]
+    fn prop_overlap_symmetric_and_bounded() {
+        run_prop("overlap(a,b)==overlap(b,a) <= min(busy)", 50, |g| {
+            let mut t = Trace::new();
+            let n = g.size(1, 30);
+            for _ in 0..n {
+                let s = g.float(0.0, 20.0);
+                let d = g.float(0.0, 3.0);
+                let dev = if g.bool() { Device::Csd } else { Device::Accel(0) };
+                t.record(dev, Phase::Train, None, s, s + d);
+            }
+            let a = |s: &Span| s.device == Device::Csd;
+            let b = |s: &Span| s.device == Device::Accel(0);
+            let ab = t.overlap_where(a, b);
+            let ba = t.overlap_where(b, a);
+            assert!((ab - ba).abs() < 1e-9);
+            assert!(ab <= t.union_where(a) + 1e-9);
+            assert!(ab <= t.union_where(b) + 1e-9);
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities: PRNG, JSON parsing, DTNS tensor files
+//! and a miniature property-testing harness.
+//!
+//! These exist in-repo because the build is fully offline (no crates.io
+//! access beyond the vendored set); `DESIGN.md` records the substitutions
+//! (`prop` ≈ proptest, [`json`] ≈ serde_json for the manifest subset).
+
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod tensorfile;
+
+pub use prng::Prng;

@@ -1,0 +1,278 @@
+//! DTNS tensor container — rust reader/writer mirroring
+//! `python/compile/tensorfile.py` (see that file for the layout).
+//!
+//! Carries initial model parameters, golden input/output pairs and
+//! calibration batches between the python compile path and this runtime.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"DTNS";
+const VERSION: u32 = 1;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U8,
+    I32,
+    I64,
+}
+
+impl DType {
+    fn from_code(c: u32) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::U8,
+            2 => DType::I32,
+            3 => DType::I64,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    fn code(self) -> u32 {
+        match self {
+            DType::F32 => 0,
+            DType::U8 => 1,
+            DType::I32 => 2,
+            DType::I64 => 3,
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+
+    /// Manifest dtype string (matches `aot.py::_dtype_name`).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::U8 => "u8",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "u8" => DType::U8,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            _ => bail!("unknown dtype name {s:?}"),
+        })
+    }
+}
+
+/// A named tensor: raw little-endian bytes plus shape/dtype metadata.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Build an f32 tensor from a slice.
+    pub fn from_f32(name: &str, dims: &[usize], vals: &[f32]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            name: name.to_string(),
+            dtype: DType::F32,
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    /// Build a u8 tensor.
+    pub fn from_u8(name: &str, dims: &[usize], vals: Vec<u8>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        Tensor {
+            name: name.to_string(),
+            dtype: DType::U8,
+            dims: dims.to_vec(),
+            data: vals,
+        }
+    }
+
+    /// Build an i32 tensor.
+    pub fn from_i32(name: &str, dims: &[usize], vals: &[i32]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            name: name.to_string(),
+            dtype: DType::I32,
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    /// View as f32 values (must be an F32 tensor).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// View as i32 values.
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("{}: not i32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read all tensors from a DTNS file, preserving order.
+pub fn read_tensors(path: &Path) -> Result<Vec<Tensor>> {
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let ntens = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(ntens);
+    for _ in 0..ntens {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name_buf = vec![0u8; name_len];
+        r.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf).context("tensor name not utf-8")?;
+        let dtype = DType::from_code(read_u32(&mut r)?)?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut r)? as usize);
+        }
+        let nbytes = read_u64(&mut r)? as usize;
+        let expect = dims.iter().product::<usize>() * dtype.size();
+        if nbytes != expect {
+            bail!("{name}: payload {nbytes} != shape-implied {expect}");
+        }
+        let mut data = vec![0u8; nbytes];
+        r.read_exact(&mut data)?;
+        out.push(Tensor {
+            name,
+            dtype,
+            dims,
+            data,
+        });
+    }
+    Ok(out)
+}
+
+/// Write tensors to a DTNS file.
+pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let nb = t.name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&t.dtype.code().to_le_bytes())?;
+        w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+        for d in &t.dims {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        w.write_all(&(t.data.len() as u64).to_le_bytes())?;
+        w.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("ddlp_tf_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.dtns");
+        let tensors = vec![
+            Tensor::from_f32("a", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.5]),
+            Tensor::from_u8("b", &[4], vec![7, 8, 9, 255]),
+            Tensor::from_i32("c", &[], &[-42]),
+        ];
+        write_tensors(&path, &tensors).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].name, "a");
+        assert_eq!(back[0].dims, vec![2, 3]);
+        assert_eq!(back[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+        assert_eq!(back[1].data, vec![7, 8, 9, 255]);
+        assert_eq!(back[2].as_i32().unwrap(), vec![-42]);
+        assert_eq!(back[2].dims.len(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("ddlp_tf_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.dtns");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(read_tensors(&path).is_err());
+    }
+
+    #[test]
+    fn dtype_roundtrip_names() {
+        for d in [DType::F32, DType::U8, DType::I32, DType::I64] {
+            assert_eq!(DType::from_name(d.name()).unwrap(), d);
+            assert_eq!(DType::from_code(d.code()).unwrap(), d);
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Coordinator invariants (DESIGN.md §Key invariants), property-tested
+//! across strategies, worker counts, rates and dataset sizes.
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::{CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::Strategy;
+use ddlp::dataset::DatasetSpec;
+use ddlp::metrics::RunReport;
+use ddlp::pipeline::PipelineKind;
+use ddlp::trace::{Device, Phase, Trace};
+use ddlp::util::prop::{run_prop, Gen};
+
+fn cfg(strategy: Strategy, n: u32, workers: u32, n_accel: u32) -> ExperimentConfig {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .num_workers(workers)
+        .n_accel(n_accel)
+        .n_batches(n)
+        .profile(profile)
+        .build()
+        .unwrap()
+}
+
+fn spec(n: u32) -> DatasetSpec {
+    DatasetSpec {
+        n_batches: n,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    }
+}
+
+fn rand_costs(g: &mut Gen) -> FixedCosts {
+    let pp = g.float(0.05, 1.0);
+    let csd_pp = pp * g.float(1.5, 10.0);
+    let train = g.float(0.01, 0.5);
+    FixedCosts {
+        host: HostBatchCost {
+            read_s: g.float(0.0, 0.05),
+            pp_s: pp,
+            xfer_s: g.float(0.0, 0.02),
+            accel_pp_s: 0.0,
+        },
+        csd: CsdBatchCost {
+            read_s: g.float(0.0, 0.05),
+            pp_s: csd_pp,
+            write_s: g.float(0.0, 0.05),
+        },
+        train_cpu: TrainCost {
+            gds_s: 0.0,
+            train_s: train,
+        },
+        train_csd: TrainCost {
+            gds_s: g.float(0.0, 0.05),
+            train_s: train,
+        },
+    }
+}
+
+/// Every batch id 0..n is trained exactly once per epoch.
+fn assert_exact_coverage(trace: &Trace, n: u32, epochs: u32) {
+    let mut counts = vec![0u32; n as usize];
+    for s in &trace.spans {
+        if s.phase == Phase::Train {
+            counts[s.batch.unwrap() as usize] += 1;
+        }
+    }
+    for (b, &c) in counts.iter().enumerate() {
+        assert_eq!(c, epochs, "batch {b} trained {c} times, want {epochs}");
+    }
+}
+
+#[test]
+fn prop_every_strategy_exact_coverage() {
+    run_prop("coverage: each batch trained exactly once", 40, |g| {
+        let n = g.size(30, 300) as u32;
+        let workers = *g.choose(&[0u32, 2, 8, 16]);
+        let n_accel = *g.choose(&[1u32, 2]);
+        let strategy = *g.choose(&Strategy::ALL);
+        let mut costs = rand_costs(g);
+        let c = cfg(strategy, n, workers, n_accel);
+        let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        assert_eq!(report.n_batches, n);
+        assert_exact_coverage(&trace, n, 1);
+    });
+}
+
+#[test]
+fn prop_mte_deterministic_order() {
+    // Invariant 3: under MTE each accelerator consumes its CPU-side
+    // (head, ascending) batches before any CSD-side (tail) batch.
+    run_prop("mte order: cpu block then csd block", 30, |g| {
+        let n = g.size(60, 400) as u32;
+        let workers = *g.choose(&[0u32, 4]);
+        let mut costs = rand_costs(g);
+        let c = cfg(Strategy::Mte, n, workers, 1);
+        let (_, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let order = trace.consumption_order();
+        // find the first tail-sourced batch (GdsRead precedes its Train)
+        let csd_batches: std::collections::HashSet<u32> = trace
+            .spans
+            .iter()
+            .filter(|s| s.phase == Phase::GdsRead)
+            .map(|s| s.batch.unwrap())
+            .collect();
+        let first_csd = order.iter().position(|(b, _)| csd_batches.contains(b));
+        if let Some(i) = first_csd {
+            // every batch after the first CSD batch is also CSD-sourced
+            for (b, _) in &order[i..] {
+                assert!(
+                    csd_batches.contains(b),
+                    "cpu batch {b} consumed after a csd batch"
+                );
+            }
+            // the CPU prefix is ascending head order
+            let prefix: Vec<u32> = order[..i].iter().map(|(b, _)| *b).collect();
+            let mut sorted = prefix.clone();
+            sorted.sort_unstable();
+            assert_eq!(prefix, sorted, "cpu prefix not in head order");
+        }
+    });
+}
+
+#[test]
+fn prop_wrr_never_consumes_before_ready() {
+    // Invariant: a CSD batch's GDS read never starts before its
+    // write-back to flash completed.
+    run_prop("wrr respects readiness", 30, |g| {
+        let n = g.size(40, 300) as u32;
+        let mut costs = rand_costs(g);
+        let c = cfg(Strategy::Wrr, n, *g.choose(&[0u32, 4]), 1);
+        let (_, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        for gds in trace.spans.iter().filter(|s| s.phase == Phase::GdsRead) {
+            let b = gds.batch.unwrap();
+            let write_end = trace
+                .spans
+                .iter()
+                .find(|s| s.phase == Phase::CsdWrite && s.batch == Some(b))
+                .map(|s| s.end)
+                .expect("csd batch without write-back");
+            assert!(
+                gds.start >= write_end - 1e-9,
+                "batch {b}: gds {} before write-back {}",
+                gds.start,
+                write_end
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_strategy_dominance_preprocessing_bound() {
+    // Invariant 5, in the paper's premise regime (preprocessing is the
+    // bottleneck): WRR ≤ MTE < CPU-only; CSD-only is slowest when the
+    // CSD is the slower device.
+    run_prop("wrr <= mte < cpu_only (pp-bound)", 25, |g| {
+        let n = g.size(200, 600) as u32;
+        let pp = g.float(0.2, 1.0);
+        let train = pp * g.float(0.05, 0.4); // strictly pp-bound at w=0
+        let csd_factor = g.float(2.0, 8.0);
+        let mk = || FixedCosts {
+            host: HostBatchCost {
+                read_s: 0.01,
+                pp_s: pp,
+                xfer_s: 0.005,
+                accel_pp_s: 0.0,
+            },
+            csd: CsdBatchCost {
+                read_s: 0.01,
+                pp_s: pp * csd_factor,
+                write_s: 0.02,
+            },
+            train_cpu: TrainCost {
+                gds_s: 0.0,
+                train_s: train,
+            },
+            train_csd: TrainCost {
+                gds_s: 0.01,
+                train_s: train,
+            },
+        };
+        let run = |s: Strategy| -> RunReport {
+            run_schedule(&cfg(s, n, 0, 1), &spec(n), &mut mk()).unwrap().0
+        };
+        let cpu = run(Strategy::CpuOnly).makespan;
+        let mte = run(Strategy::Mte).makespan;
+        let wrr = run(Strategy::Wrr).makespan;
+        let csd = run(Strategy::CsdOnly).makespan;
+        // slack: one CSD batch of imbalance from split rounding
+        let slack = mk().csd.total() * 2.0;
+        assert!(wrr <= mte * 1.01 + slack, "wrr {wrr} > mte {mte}");
+        assert!(mte < cpu + slack, "mte {mte} !< cpu {cpu}");
+        assert!(wrr < cpu, "wrr {wrr} >= cpu {cpu}");
+        assert!(csd > cpu, "csd-only should be slowest here");
+    });
+}
+
+#[test]
+fn prop_ddlp_never_catastrophic_when_train_bound() {
+    // Outside the paper's premise (training-bound, many workers) DDLP
+    // cannot help much — but it must never be much *worse* than the
+    // baseline (calibration diverts only as much as the CSD absorbs).
+    run_prop("mte/wrr <= 1.15 x cpu_only (train-bound)", 15, |g| {
+        let n = g.size(300, 600) as u32;
+        let train = g.float(0.1, 0.4);
+        let pp = train * g.float(0.5, 2.0); // 4 workers => train-bound
+        let mk = || FixedCosts {
+            host: HostBatchCost {
+                read_s: 0.005,
+                pp_s: pp,
+                xfer_s: 0.002,
+                accel_pp_s: 0.0,
+            },
+            csd: CsdBatchCost {
+                read_s: 0.01,
+                pp_s: pp * 4.0,
+                write_s: 0.02,
+            },
+            train_cpu: TrainCost {
+                gds_s: 0.0,
+                train_s: train,
+            },
+            train_csd: TrainCost {
+                gds_s: 0.005,
+                train_s: train,
+            },
+        };
+        let run = |s: Strategy| -> RunReport {
+            run_schedule(&cfg(s, n, 4, 1), &spec(n), &mut mk()).unwrap().0
+        };
+        let cpu = run(Strategy::CpuOnly).makespan;
+        let mte = run(Strategy::Mte).makespan;
+        let wrr = run(Strategy::Wrr).makespan;
+        assert!(mte <= cpu * 1.15, "mte {mte} vs cpu {cpu}");
+        assert!(wrr <= cpu * 1.15, "wrr {wrr} vs cpu {cpu}");
+    });
+}
+
+#[test]
+fn prop_energy_accounting_consistent() {
+    run_prop("energy = power x makespan decomposition", 20, |g| {
+        let n = g.size(50, 200) as u32;
+        let workers = *g.choose(&[0u32, 16]);
+        let strategy = *g.choose(&Strategy::ALL);
+        let mut costs = rand_costs(g);
+        let c = cfg(strategy, n, workers, 1);
+        let (report, _) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let e = &report.energy;
+        assert!((e.cpu_joules + e.csd_joules - e.total_joules).abs() < 1e-6);
+        let procs = match strategy {
+            Strategy::CsdOnly => 0.0,
+            _ => (1 + workers) as f64,
+        };
+        let expect_cpu = 5.0 * procs * report.makespan;
+        assert!(
+            (e.cpu_joules - expect_cpu).abs() < 1e-6,
+            "cpu J {} vs {}",
+            e.cpu_joules,
+            expect_cpu
+        );
+        if strategy.uses_csd() {
+            assert!((e.csd_joules - 0.25 * report.makespan).abs() < 1e-6);
+        } else {
+            assert_eq!(e.csd_joules, 0.0);
+        }
+    });
+}
+
+#[test]
+fn epochs_repeat_consumption() {
+    let mut costs = FixedCosts::toy_fig6();
+    let mut c = cfg(Strategy::Wrr, 50, 0, 1);
+    c.epochs = 3;
+    let (report, trace) = run_schedule(&c, &spec(50), &mut costs).unwrap();
+    assert_eq!(report.n_batches, 150);
+    assert_exact_coverage(&trace, 50, 3);
+}
+
+#[test]
+fn csd_only_uses_no_host_cpu() {
+    let mut costs = FixedCosts::toy_fig6();
+    let c = cfg(Strategy::CsdOnly, 50, 0, 1);
+    let (report, trace) = run_schedule(&c, &spec(50), &mut costs).unwrap();
+    assert_eq!(trace.busy_where(|s| s.device.is_host_cpu()), 0.0);
+    assert_eq!(report.cpu_dram_time_per_batch, 0.0);
+    assert_eq!(trace.busy_where(|s| s.device == Device::Csd), 50.0);
+}
+
+#[test]
+fn prop_csd_failure_degrades_gracefully() {
+    // Failure injection: the CSD dies at a random time. Every strategy
+    // that uses it must still consume every batch exactly once (the CPU
+    // head absorbs the unproduced tail), and never beat the no-failure
+    // run.
+    run_prop("csd failure → graceful degradation", 30, |g| {
+        let n = g.size(50, 300) as u32;
+        let strategy = *g.choose(&[Strategy::Mte, Strategy::Wrr]);
+        let fail_at = g.float(0.0, n as f64 * 0.3);
+        let mut costs = rand_costs(g);
+        let mut c = cfg(strategy, n, *g.choose(&[0u32, 4]), 1);
+        c.profile.csd_fail_at_s = fail_at;
+        let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        assert_eq!(report.n_batches, n);
+        assert_exact_coverage(&trace, n, 1);
+        // no CSD *batch* may start at/after the failure time (in-flight
+        // sub-phases of an earlier batch may run past it)
+        for s in trace
+            .spans
+            .iter()
+            .filter(|s| s.device == Device::Csd && s.phase == Phase::CsdRead)
+        {
+            assert!(
+                s.start < fail_at + 1e-9,
+                "csd batch started at {} after failure {fail_at}",
+                s.start
+            );
+        }
+    });
+}
+
+#[test]
+fn csd_failure_at_time_zero_equals_cpu_only() {
+    // Dead-on-arrival CSD: MTE and WRR must match the classical path's
+    // makespan (modulo the poll probes, which are zeroed here).
+    let mut costs_a = FixedCosts::toy_fig6();
+    let mut costs_b = FixedCosts::toy_fig6();
+    let cpu = run_schedule(&cfg(Strategy::CpuOnly, 200, 0, 1), &spec(200), &mut costs_a)
+        .unwrap()
+        .0;
+    let mut c = cfg(Strategy::Wrr, 200, 0, 1);
+    c.profile.csd_fail_at_s = 0.0;
+    let wrr = run_schedule(&c, &spec(200), &mut costs_b).unwrap().0;
+    assert_eq!(wrr.batches_from_csd, 0);
+    assert!(
+        (wrr.makespan - cpu.makespan).abs() < 1e-6,
+        "wrr-with-dead-csd {} != cpu-only {}",
+        wrr.makespan,
+        cpu.makespan
+    );
+}
+
+#[test]
+fn csd_failure_survives_epoch_restart() {
+    // Unlike the stop signal, a failure persists into later epochs.
+    let mut costs = FixedCosts::toy_fig6();
+    let mut c = cfg(Strategy::Wrr, 100, 0, 1);
+    c.epochs = 3;
+    c.profile.csd_fail_at_s = 5.0;
+    let (report, trace) = run_schedule(&c, &spec(100), &mut costs).unwrap();
+    assert_eq!(report.n_batches, 300);
+    assert_exact_coverage(&trace, 100, 3);
+    for s in trace
+        .spans
+        .iter()
+        .filter(|s| s.device == Device::Csd && s.phase == Phase::CsdRead)
+    {
+        assert!(s.start < 5.0 + 1e-9);
+    }
+}
+
+#[test]
+fn wrr_stop_signal_bounds_waste() {
+    // After total == n the CSD must stop: waste is at most the batches
+    // in flight, not the whole remaining tail.
+    let mut costs = FixedCosts::toy_fig6();
+    let c = cfg(Strategy::Wrr, 500, 0, 1);
+    let (report, _) = run_schedule(&c, &spec(500), &mut costs).unwrap();
+    assert!(
+        report.wasted_batches <= 3,
+        "wasted {} batches",
+        report.wasted_batches
+    );
+}

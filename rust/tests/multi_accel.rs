@@ -1,0 +1,117 @@
+//! Multi-accelerator (§IV-E) integration: DistributedSampler sharding,
+//! per-GPU CSD directories, and the Table VI 2-GPU rows' shape.
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+use ddlp::trace::{Device, Phase};
+
+fn cfg(strategy: Strategy, n_accel: u32, n: u32, workers: u32) -> ExperimentConfig {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    ExperimentConfig::builder()
+        .model("resnet152")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .n_accel(n_accel)
+        .num_workers(workers)
+        .n_batches(n)
+        .profile(profile)
+        .build()
+        .unwrap()
+}
+
+fn spec(n: u32) -> DatasetSpec {
+    DatasetSpec {
+        n_batches: n,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    }
+}
+
+#[test]
+fn two_gpus_cover_dataset_disjointly() {
+    for strategy in Strategy::ALL {
+        let mut costs = FixedCosts::toy_fig6();
+        let c = cfg(strategy, 2, 200, 0);
+        let (report, trace) = run_schedule(&c, &spec(200), &mut costs).unwrap();
+        assert_eq!(report.n_batches, 200, "{strategy}");
+        // every batch trained exactly once, split across two devices
+        let mut seen = vec![0u8; 200];
+        let mut per_dev = [0u32; 2];
+        for s in trace.spans.iter().filter(|s| s.phase == Phase::Train) {
+            seen[s.batch.unwrap() as usize] += 1;
+            match s.device {
+                Device::Accel(i) => per_dev[i as usize] += 1,
+                d => panic!("train on {d:?}"),
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{strategy}: coverage");
+        assert_eq!(per_dev[0] + per_dev[1], 200);
+        assert!(per_dev[0] > 0 && per_dev[1] > 0, "{strategy}: both GPUs used");
+    }
+}
+
+#[test]
+fn two_gpus_improve_throughput() {
+    // Table VI rows 6–7: 2-GPU per-batch learning time beats 1-GPU.
+    for strategy in [Strategy::CpuOnly, Strategy::Mte, Strategy::Wrr] {
+        let one = run_experiment(&cfg(strategy, 1, 400, 16)).unwrap().report;
+        let two = run_experiment(&cfg(strategy, 2, 400, 16)).unwrap().report;
+        assert!(
+            two.learn_time_per_batch < one.learn_time_per_batch,
+            "{strategy}: 2-GPU {:.3} !< 1-GPU {:.3}",
+            two.learn_time_per_batch,
+            one.learn_time_per_batch
+        );
+    }
+}
+
+#[test]
+fn two_gpu_ddlp_beats_two_gpu_cpu_baseline() {
+    let cpu = run_experiment(&cfg(Strategy::CpuOnly, 2, 400, 0)).unwrap().report;
+    let mte = run_experiment(&cfg(Strategy::Mte, 2, 400, 0)).unwrap().report;
+    let wrr = run_experiment(&cfg(Strategy::Wrr, 2, 400, 0)).unwrap().report;
+    assert!(mte.learn_time_per_batch < cpu.learn_time_per_batch);
+    assert!(wrr.learn_time_per_batch <= mte.learn_time_per_batch * 1.01);
+}
+
+#[test]
+fn csd_directories_keyed_by_gpu() {
+    // WRR round-robins CSD products across per-GPU directories: both
+    // accelerators must consume CSD-sourced batches.
+    let mut costs = FixedCosts::toy_fig6();
+    let c = cfg(Strategy::Wrr, 2, 400, 0);
+    let (_, trace) = run_schedule(&c, &spec(400), &mut costs).unwrap();
+    let mut gds_per_dev = [0u32; 2];
+    for s in trace.spans.iter().filter(|s| s.phase == Phase::GdsRead) {
+        if let Device::Accel(i) = s.device {
+            gds_per_dev[i as usize] += 1;
+        }
+    }
+    assert!(
+        gds_per_dev[0] > 0 && gds_per_dev[1] > 0,
+        "csd batches per gpu: {gds_per_dev:?}"
+    );
+    // round-robin keeps the split balanced within a generous factor
+    let (a, b) = (gds_per_dev[0] as f64, gds_per_dev[1] as f64);
+    assert!(a / b < 2.0 && b / a < 2.0, "unbalanced: {gds_per_dev:?}");
+}
+
+#[test]
+fn four_gpus_still_consistent() {
+    let mut costs = FixedCosts::toy_fig6();
+    let c = cfg(Strategy::Wrr, 4, 403, 0); // non-divisible shard sizes
+    let (report, trace) = run_schedule(&c, &spec(403), &mut costs).unwrap();
+    assert_eq!(report.n_batches, 403);
+    let mut seen = vec![0u8; 403];
+    for s in trace.spans.iter().filter(|s| s.phase == Phase::Train) {
+        seen[s.batch.unwrap() as usize] += 1;
+    }
+    assert!(seen.iter().all(|&c| c == 1));
+}

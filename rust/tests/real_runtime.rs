@@ -1,0 +1,149 @@
+//! Real PJRT execution tests: golden replay of the AOT artifacts and a
+//! short real-mode DDLP run (loss must decrease). Skipped when
+//! `artifacts/` has not been built (`make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use ddlp::config::{ExecMode, ExperimentConfig};
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::pipeline::PipelineKind;
+use ddlp::runtime::{tensor_to_literal, Runtime};
+use ddlp::util::tensorfile::read_tensors;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn preprocess_goldens_replay_through_pjrt() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(&dir).unwrap();
+    // Two representative pipelines (one random, one static) keep the
+    // test under a few seconds; the python suite covers all five.
+    for name in ["preprocess_imagenet1", "preprocess_cifar_gpu"] {
+        let spec = rt.manifest().get(name).unwrap().clone();
+        let golden = read_tensors(&dir.join(spec.golden.as_ref().unwrap())).unwrap();
+        let raw = golden.iter().find(|t| t.name == "raw").unwrap();
+        let rand = golden.iter().find(|t| t.name == "rand").unwrap();
+        let want = golden.iter().find(|t| t.name == "out").unwrap();
+        let out = rt
+            .run(
+                name,
+                &[tensor_to_literal(raw).unwrap(), tensor_to_literal(rand).unwrap()],
+            )
+            .unwrap();
+        let got: Vec<f32> = out[0].to_vec().unwrap();
+        let expect = want.as_f32().unwrap();
+        assert_eq!(got.len(), expect.len(), "{name}: shape");
+        let max_err = got
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "{name}: max |err| = {max_err}");
+    }
+}
+
+#[test]
+fn train_golden_losses_replay_through_pjrt() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(&dir).unwrap();
+    let name = "train_wrn18";
+    let spec = rt.manifest().get(name).unwrap().clone();
+    let golden = read_tensors(&dir.join(spec.golden.as_ref().unwrap())).unwrap();
+    let x = golden.iter().find(|t| t.name == "x").unwrap();
+    let y = golden.iter().find(|t| t.name == "y").unwrap();
+    let want: Vec<f32> = golden.iter().find(|t| t.name == "losses").unwrap().as_f32().unwrap();
+
+    let mut params: Vec<xla::Literal> = rt
+        .load_tensors(spec.params_file.as_ref().unwrap())
+        .unwrap()
+        .into_iter()
+        .map(|(_, l)| l)
+        .collect();
+    let mut losses = Vec::new();
+    for _ in 0..want.len() {
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        inputs.append(&mut params);
+        inputs.push(tensor_to_literal(x).unwrap());
+        inputs.push(tensor_to_literal(y).unwrap());
+        let mut out = rt.run(name, &inputs).unwrap();
+        let loss: Vec<f32> = out[spec.n_params].to_vec().unwrap();
+        losses.push(loss[0]);
+        out.truncate(spec.n_params);
+        params = out;
+    }
+    for (i, (g, w)) in losses.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-2 * w.abs().max(1.0),
+            "step {i}: pjrt loss {g} vs jax golden {w}"
+        );
+    }
+    // and the loss curve decreases
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+}
+
+#[test]
+fn real_mode_wrr_trains_and_loss_decreases() {
+    let dir = require_artifacts!();
+    let cfg = ExperimentConfig::builder()
+        .model("wrn18")
+        .pipeline_kind(PipelineKind::CifarGpu)
+        .strategy(Strategy::Wrr)
+        .num_workers(0)
+        .n_batches(24)
+        .exec(ExecMode::Real {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+        })
+        .build()
+        .unwrap();
+    let result = run_experiment(&cfg).unwrap();
+    assert_eq!(result.report.n_batches, 24);
+    assert_eq!(result.losses.len(), 24);
+    let first = result.losses[0];
+    let last = *result.losses.last().unwrap();
+    assert!(last < first, "loss {first} → {last} did not decrease");
+    // the run actually used both sides
+    assert!(result.report.batches_from_csd > 0, "no CSD batches consumed");
+    assert!(result.report.batches_from_csd < 24, "no CPU batches consumed");
+}
+
+#[test]
+fn real_mode_mte_matches_cpu_numerics() {
+    // Cross-strategy numeric consistency: with the same seed, the set of
+    // losses depends only on (batch, params sequence). MTE and CPU-only
+    // train the same batches in different orders; both must decrease.
+    let dir = require_artifacts!();
+    for strategy in [Strategy::CpuOnly, Strategy::Mte] {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn18")
+            .pipeline_kind(PipelineKind::CifarGpu)
+            .strategy(strategy)
+            .n_batches(16)
+            .exec(ExecMode::Real {
+                artifacts_dir: dir.to_string_lossy().into_owned(),
+            })
+            .build()
+            .unwrap();
+        let result = run_experiment(&cfg).unwrap();
+        assert_eq!(result.losses.len(), 16, "{strategy}");
+        assert!(
+            result.losses.iter().all(|l| l.is_finite()),
+            "{strategy}: non-finite loss"
+        );
+        assert!(result.losses.last().unwrap() < result.losses.first().unwrap());
+    }
+}

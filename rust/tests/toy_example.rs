@@ -1,0 +1,106 @@
+//! Fig. 6 toy example — the paper's analytic schedule, reproduced
+//! exactly by the discrete-event coordinator.
+//!
+//! 1000 samples, batch 1; the coupled CPU stage runs at 4 samples/s,
+//! the CSD at 1 sample/s, the GDS-read+train stage at 8 samples/s.
+//! Paper: MTE takes **225 s** (Eq. 4–5), WRR **222.25 s** (a 1.2%
+//! improvement).
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::Strategy;
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+
+fn toy_cfg(strategy: Strategy) -> ExperimentConfig {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .num_workers(0)
+        .n_batches(1000)
+        .profile(profile)
+        .build()
+        .unwrap()
+}
+
+fn toy_spec() -> DatasetSpec {
+    DatasetSpec {
+        n_batches: 1000,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    }
+}
+
+#[test]
+fn mte_toy_is_225s() {
+    let cfg = toy_cfg(Strategy::Mte);
+    let mut costs = FixedCosts::toy_fig6();
+    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    assert!(
+        (report.makespan - 225.0).abs() < 1e-6,
+        "MTE toy makespan {} != 225",
+        report.makespan
+    );
+    // Eq. 4: the split is 800 CPU / 200 CSD.
+    assert_eq!(report.batches_from_csd, 200);
+    assert_eq!(report.n_batches, 1000);
+}
+
+#[test]
+fn wrr_toy_is_222_25s() {
+    let cfg = toy_cfg(Strategy::Wrr);
+    let mut costs = FixedCosts::toy_fig6();
+    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    assert!(
+        (report.makespan - 222.25).abs() < 0.5,
+        "WRR toy makespan {} != 222.25",
+        report.makespan
+    );
+    assert_eq!(report.n_batches, 1000);
+}
+
+#[test]
+fn wrr_beats_mte_on_toy() {
+    // The paper's headline for Fig. 6: WRR improves on MTE by ~1.2%.
+    let mut c1 = FixedCosts::toy_fig6();
+    let mut c2 = FixedCosts::toy_fig6();
+    let (mte, _) = run_schedule(&toy_cfg(Strategy::Mte), &toy_spec(), &mut c1).unwrap();
+    let (wrr, _) = run_schedule(&toy_cfg(Strategy::Wrr), &toy_spec(), &mut c2).unwrap();
+    assert!(wrr.makespan < mte.makespan);
+    let gain = (mte.makespan - wrr.makespan) / mte.makespan * 100.0;
+    assert!((0.5..2.5).contains(&gain), "gain {gain:.2}% (paper: 1.2%)");
+}
+
+#[test]
+fn cpu_only_toy_is_250s() {
+    // 1000 batches at 4/s coupled = 250 s — the baseline both beat.
+    let cfg = toy_cfg(Strategy::CpuOnly);
+    let mut costs = FixedCosts::toy_fig6();
+    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    assert!(
+        (report.makespan - 250.0).abs() < 1e-6,
+        "CPU-only toy {} != 250",
+        report.makespan
+    );
+    assert_eq!(report.batches_from_csd, 0);
+}
+
+#[test]
+fn csd_only_toy_is_1000s_plus_drain() {
+    // CSD at 1/s dominates: ~1000 s + the last batch's GDS+train.
+    let cfg = toy_cfg(Strategy::CsdOnly);
+    let mut costs = FixedCosts::toy_fig6();
+    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    assert!(
+        (report.makespan - 1000.125).abs() < 1e-6,
+        "CSD-only toy {}",
+        report.makespan
+    );
+    assert_eq!(report.batches_from_csd, 1000);
+}
