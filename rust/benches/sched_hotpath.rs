@@ -19,6 +19,7 @@ fn main() {
         ("wrr+trace", Strategy::Wrr, true),
         ("wrr", Strategy::Wrr, false),
         ("mte", Strategy::Mte, false),
+        ("adaptive", Strategy::Adaptive, false),
         ("cpu_only", Strategy::CpuOnly, false),
     ] {
         let cfg = ExperimentConfig::builder()

@@ -1,4 +1,6 @@
-//! Accelerator engine: consumes preprocessed batches and trains.
+//! Accelerator engine: consumes preprocessed batches and trains. Which
+//! prong feeds the next batch is decided by the active
+//! [`crate::coordinator::policies::SchedPolicy`].
 //!
 //! One [`AccelEngine`] per GPU/DSA. CPU-sourced batches arrive via the
 //! host H2D path (already timed by the host engine); CSD-sourced

@@ -7,7 +7,7 @@
 //! # experiment
 //! model = wrn
 //! pipeline = imagenet1
-//! strategy = wrr        # cpu | csd | mte | wrr
+//! strategy = wrr        # cpu | csd | mte | wrr | adaptive
 //! num_workers = 16
 //! n_batches = 500
 //! epochs = 1
@@ -18,6 +18,10 @@
 //! # device profile overrides
 //! csd_slowdown = 5.0
 //! host_ssd_bw = 3.2e9
+//!
+//! # adaptive-strategy knobs
+//! adaptive_cv_threshold = 0.1
+//! adaptive_min_samples = 16
 //! ```
 //!
 //! Unknown keys are rejected (typo safety). `--set key=value` CLI
@@ -59,6 +63,7 @@ pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
 pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
     let mut b = ExperimentBuilder::default();
     let mut profile = super::DeviceProfile::default();
+    let mut adaptive = super::AdaptiveParams::default();
 
     for (k, v) in map {
         b = match k.as_str() {
@@ -130,10 +135,19 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
                 profile.power.csd_w = v.parse().context("csd_w")?;
                 b
             }
+            // adaptive-strategy knobs
+            "adaptive_cv_threshold" => {
+                adaptive.cv_threshold = v.parse().context("adaptive_cv_threshold")?;
+                b
+            }
+            "adaptive_min_samples" => {
+                adaptive.min_samples = v.parse().context("adaptive_min_samples")?;
+                b
+            }
             _ => bail!("unknown config key {k:?}"),
         };
     }
-    b.profile(profile).build()
+    b.profile(profile).adaptive(adaptive).build()
 }
 
 /// Parse a config file plus `--set k=v` overrides.
@@ -186,5 +200,17 @@ mod tests {
         let cfg = load("csd_slowdown = 7.5\ncpu_process_w = 6.0\n", &[]).unwrap();
         assert_eq!(cfg.profile.csd_slowdown, 7.5);
         assert_eq!(cfg.profile.power.cpu_process_w, 6.0);
+    }
+
+    #[test]
+    fn adaptive_strategy_and_knobs_parse() {
+        let text = "strategy = adaptive\nadaptive_cv_threshold = 0.25\nadaptive_min_samples = 8\n";
+        let cfg = load(text, &[]).unwrap();
+        assert_eq!(cfg.strategy, Strategy::Adaptive);
+        assert_eq!(cfg.adaptive.cv_threshold, 0.25);
+        assert_eq!(cfg.adaptive.min_samples, 8);
+        // knob validation flows through the builder
+        assert!(load("adaptive_cv_threshold = -1\n", &[]).is_err());
+        assert!(load("adaptive_min_samples = 0\n", &[]).is_err());
     }
 }

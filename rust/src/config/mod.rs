@@ -130,6 +130,30 @@ impl Default for DeviceProfile {
     }
 }
 
+/// Knobs for [`Strategy::Adaptive`]'s mode switch (see
+/// `coordinator::policies::adaptive`).
+#[derive(Debug, Clone)]
+pub struct AdaptiveParams {
+    /// Coefficient-of-variation threshold: once both prongs' observed
+    /// per-batch service times have σ/μ at or below this, the policy
+    /// switches from WRR-style polling to MTE-style pre-allocation.
+    pub cv_threshold: f64,
+    /// Minimum observations per prong before the switch is considered.
+    pub min_samples: u32,
+}
+
+impl Default for AdaptiveParams {
+    fn default() -> Self {
+        AdaptiveParams {
+            // Analytic cost models are near-deterministic (cv ≈ 0);
+            // real PJRT wall times jitter well above 10% until the
+            // smoother converges — 0.1 separates the two regimes.
+            cv_threshold: 0.1,
+            min_samples: 16,
+        }
+    }
+}
+
 /// Which data-loading library feeds the accelerator (Table VII).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Loader {
@@ -191,6 +215,8 @@ pub struct ExperimentConfig {
     pub loader: Loader,
     pub exec: ExecMode,
     pub profile: DeviceProfile,
+    /// Mode-switch knobs for [`Strategy::Adaptive`].
+    pub adaptive: AdaptiveParams,
     /// PRNG seed for synthetic data and augmentation draws.
     pub seed: u64,
     /// Record a full trace (needed for Table II / energy / Table IX).
@@ -229,6 +255,7 @@ pub struct ExperimentBuilder {
     loader: Loader,
     exec: ExecMode,
     profile: DeviceProfile,
+    adaptive: AdaptiveParams,
     seed: u64,
     record_trace: bool,
 }
@@ -246,6 +273,7 @@ impl Default for ExperimentBuilder {
             loader: Loader::Torchvision,
             exec: ExecMode::Analytic,
             profile: DeviceProfile::default(),
+            adaptive: AdaptiveParams::default(),
             seed: 0,
             record_trace: true,
         }
@@ -310,6 +338,11 @@ impl ExperimentBuilder {
         self
     }
 
+    pub fn adaptive(mut self, p: AdaptiveParams) -> Self {
+        self.adaptive = p;
+        self
+    }
+
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
         self
@@ -330,6 +363,24 @@ impl ExperimentBuilder {
         if self.epochs == 0 {
             bail!("epochs must be >= 1");
         }
+        // The worker budget is split across per-accelerator DataLoaders;
+        // a non-zero budget below n_accel would silently truncate to 0
+        // workers per host (the old integer-division bug). Reject it.
+        if self.num_workers > 0 && self.num_workers < self.n_accel {
+            bail!(
+                "num_workers ({}) must be 0 or >= n_accel ({}): the host-wide worker \
+                 budget is split across per-accelerator DataLoaders and cannot staff \
+                 every shard",
+                self.num_workers,
+                self.n_accel
+            );
+        }
+        if !self.adaptive.cv_threshold.is_finite() || self.adaptive.cv_threshold <= 0.0 {
+            bail!("adaptive_cv_threshold must be a finite value > 0");
+        }
+        if self.adaptive.min_samples < 2 {
+            bail!("adaptive_min_samples must be >= 2");
+        }
         let cfg = ExperimentConfig {
             model: self.model,
             pipeline: self.pipeline,
@@ -341,6 +392,7 @@ impl ExperimentBuilder {
             loader: self.loader,
             exec: self.exec,
             profile: self.profile,
+            adaptive: self.adaptive,
             seed: self.seed,
             record_trace: self.record_trace,
         };
@@ -366,6 +418,35 @@ mod tests {
         assert!(ExperimentConfig::builder().n_accel(0).build().is_err());
         assert!(ExperimentConfig::builder().n_batches(0).build().is_err());
         assert!(ExperimentConfig::builder().model("not_a_model").build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_underfilled_worker_budget() {
+        // 2 workers cannot staff 4 per-accelerator DataLoaders.
+        let err = ExperimentConfig::builder()
+            .num_workers(2)
+            .n_accel(4)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("num_workers"), "{err}");
+        // 0 workers (main-process loading) is always fine...
+        assert!(ExperimentConfig::builder().num_workers(0).n_accel(4).build().is_ok());
+        // ...and so is a budget that covers every shard.
+        assert!(ExperimentConfig::builder().num_workers(4).n_accel(4).build().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_bad_adaptive_params() {
+        let bad_cv = AdaptiveParams {
+            cv_threshold: 0.0,
+            min_samples: 16,
+        };
+        assert!(ExperimentConfig::builder().adaptive(bad_cv).build().is_err());
+        let bad_n = AdaptiveParams {
+            cv_threshold: 0.1,
+            min_samples: 1,
+        };
+        assert!(ExperimentConfig::builder().adaptive(bad_n).build().is_err());
     }
 
     #[test]

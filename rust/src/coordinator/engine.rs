@@ -1,0 +1,465 @@
+//! The strategy-agnostic scheduling engine.
+//!
+//! [`Engine`] owns every mechanism the five strategies share: the
+//! virtual-time device engines (host DataLoaders, the CSD, the
+//! accelerators), per-shard head/tail cursors and CPU prefetch queues,
+//! trace + energy accounting, and the epoch lifecycle. Policy decisions
+//! — which accelerator advances next and where its next batch comes
+//! from — live behind the [`SchedPolicy`] trait in
+//! [`crate::coordinator::policies`]; [`run`] drives one policy through
+//! all epochs of an experiment (DESIGN.md §Engine/policy split).
+//!
+//! Invariants (tested in `rust/tests/`): every batch of every shard is
+//! consumed exactly once per epoch; MTE's consumption order is
+//! deterministic; WRR never consumes a CSD batch before its write-back
+//! completes; the engine/policy split is byte-identical to the
+//! pre-refactor monolithic scheduler (`rust/tests/golden_parity.rs`).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::accel::{AccelEngine, BatchSource};
+use crate::config::ExperimentConfig;
+use crate::coordinator::cost::{CostProvider, HostBatchCost};
+use crate::coordinator::policies::SchedPolicy;
+use crate::coordinator::Strategy;
+use crate::csd::{CsdEngine, CsdProduct};
+use crate::dataset::{shard_batches, BatchId, DatasetSpec, HeadTailCursor};
+use crate::energy::compute_energy;
+use crate::host::{HostEngine, HostReady};
+use crate::metrics::RunReport;
+use crate::sim::Secs;
+use crate::trace::{Device, Phase, Trace};
+
+/// Upper bound on event-loop iterations per epoch (runaway guard).
+const MAX_ITERS_FACTOR: u64 = 64;
+
+/// A batch that finished preprocessing on one of the two prongs — the
+/// observation events delivered to [`SchedPolicy::on_batch_ready`] so
+/// adaptive policies can learn service-time statistics. Recording is
+/// off unless the policy asks for it
+/// ([`SchedPolicy::wants_ready_events`]), keeping the hot path clean.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchReady {
+    pub batch: BatchId,
+    pub source: BatchSource,
+    /// Estimated steady-state per-batch delivery pace of the prong that
+    /// produced this batch (seconds between consecutive batches). For
+    /// the serial CSD this is read + preprocess + write-back; for the
+    /// CPU path it accounts for worker-lane parallelism and the serial
+    /// collate/H2D floor, so it is comparable to what MTE's own
+    /// wall-clock calibration would measure.
+    pub cost_s: Secs,
+    /// Virtual time at which the batch becomes consumable.
+    pub ready: Secs,
+}
+
+/// The shared scheduling mechanism. One instance lives for the whole
+/// run; per-epoch state is reset by [`Engine::reset_epoch`].
+pub struct Engine<'a> {
+    cfg: &'a ExperimentConfig,
+    costs: &'a mut dyn CostProvider,
+    trace: Trace,
+    hosts: Vec<HostEngine>,
+    csd: CsdEngine,
+    accels: Vec<AccelEngine>,
+    /// Global batch ids per accelerator shard.
+    shards: Vec<Vec<BatchId>>,
+    // ---- per-epoch state ----
+    cursors: Vec<HeadTailCursor>,
+    queues: Vec<VecDeque<HostReady>>,
+    consumed: Vec<u32>,
+    /// Consumed-from-CSD counter (per shard).
+    from_csd: Vec<u32>,
+    /// Total batches consumed across epochs.
+    total_consumed: u64,
+    /// Total CSD-sourced batches consumed across epochs.
+    total_from_csd: u64,
+    /// Wasted (preprocessed, never consumed) batches across epochs.
+    wasted: u32,
+    /// Record [`BatchReady`] events for the active policy?
+    record_events: bool,
+    events: Vec<BatchReady>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        cfg: &'a ExperimentConfig,
+        spec: &DatasetSpec,
+        costs: &'a mut dyn CostProvider,
+    ) -> Self {
+        let n_accel = cfg.n_accel as usize;
+        let shards: Vec<Vec<BatchId>> = (0..n_accel as u32)
+            .map(|r| shard_batches(spec.n_batches, r, cfg.n_accel))
+            .collect();
+        // DDP: `num_workers` is the host-wide worker budget, split across
+        // per-accelerator DataLoaders (paper: 16 threads = 8 per GPU).
+        // A non-zero budget smaller than the accelerator count cannot
+        // staff every DataLoader — the builder rejects that config;
+        // clamp defensively for hand-built configs so no host silently
+        // degrades to main-process (0-worker) loading.
+        let w_per = if cfg.num_workers == 0 {
+            0
+        } else {
+            (cfg.num_workers / cfg.n_accel).max(1)
+        };
+        // DALI's own pipelined hand-off replaces the python collate path.
+        let collate = match cfg.loader {
+            crate::config::Loader::DaliGpu => {
+                cfg.profile.collate_overhead_s * cfg.profile.dali_gpu_collate_factor
+            }
+            _ => cfg.profile.collate_overhead_s,
+        };
+        Engine {
+            cfg,
+            costs,
+            trace: if cfg.record_trace {
+                // ~6 spans per batch (read/pp/h2d + csd triple or train)
+                Trace::with_capacity(6 * (spec.n_batches as usize) * cfg.epochs as usize)
+            } else {
+                Trace::disabled()
+            },
+            hosts: (0..n_accel)
+                .map(|_| HostEngine::new(w_per, cfg.profile.worker_scaling_exp, collate))
+                .collect(),
+            csd: {
+                let mut csd = CsdEngine::new(cfg.n_accel as u16, cfg.profile.csd_signal_latency_s);
+                if cfg.profile.csd_fail_at_s >= 0.0 {
+                    csd.fail_at(cfg.profile.csd_fail_at_s);
+                }
+                csd
+            },
+            accels: (0..n_accel).map(|i| AccelEngine::new(i as u16)).collect(),
+            cursors: shards.iter().map(|s| HeadTailCursor::new(s.len() as u32)).collect(),
+            queues: vec![VecDeque::new(); n_accel],
+            consumed: vec![0; n_accel],
+            from_csd: vec![0; n_accel],
+            shards,
+            total_consumed: 0,
+            total_from_csd: 0,
+            wasted: 0,
+            record_events: false,
+            events: Vec::new(),
+        }
+    }
+
+    /// Restart the CSD, reset cursors/queues/counters; unconsumed queue
+    /// entries are billed as waste.
+    pub fn reset_epoch(&mut self) {
+        self.csd.restart();
+        for (a, shard) in self.shards.iter().enumerate() {
+            self.cursors[a] = HeadTailCursor::new(shard.len() as u32);
+            self.wasted += self.queues[a].len() as u32;
+            self.queues[a].clear();
+            self.consumed[a] = 0;
+            self.from_csd[a] = 0;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // read-only state the policies decide from
+    // ------------------------------------------------------------------
+
+    pub fn cfg(&self) -> &ExperimentConfig {
+        self.cfg
+    }
+
+    pub fn n_accel(&self) -> usize {
+        self.accels.len()
+    }
+
+    pub fn shard_len(&self, a: usize) -> u32 {
+        self.shards[a].len() as u32
+    }
+
+    /// Batches consumed by accelerator `a` this epoch.
+    pub fn consumed(&self, a: usize) -> u32 {
+        self.consumed[a]
+    }
+
+    /// CSD-sourced batches consumed by accelerator `a` this epoch.
+    pub fn from_csd(&self, a: usize) -> u32 {
+        self.from_csd[a]
+    }
+
+    /// Unclaimed batches left on shard `a`'s cursor.
+    pub fn cursor_remaining(&self, a: usize) -> u32 {
+        self.cursors[a].remaining()
+    }
+
+    /// Earliest time accelerator `a` can start new work.
+    pub fn accel_free_at(&self, a: usize) -> Secs {
+        self.accels[a].free_at()
+    }
+
+    /// Latest `free_at` over all accelerators.
+    pub fn max_accel_free(&self) -> Secs {
+        self.accels.iter().map(|x| x.free_at()).fold(0.0, f64::max)
+    }
+
+    /// The unfinished accelerator with the smallest clock (the default
+    /// fairness rule of the dual-pronged strategies).
+    pub fn least_loaded_unfinished(&self) -> Option<usize> {
+        (0..self.accels.len())
+            .filter(|&a| self.consumed[a] < self.shard_len(a))
+            .min_by(|&x, &y| {
+                self.accels[x]
+                    .free_at()
+                    .partial_cmp(&self.accels[y].free_at())
+                    .unwrap()
+            })
+    }
+
+    /// The lowest-index unfinished accelerator (sequential drain order
+    /// of the single-prong baselines).
+    pub fn first_unfinished(&self) -> Option<usize> {
+        (0..self.accels.len()).find(|&a| self.consumed[a] < self.shard_len(a))
+    }
+
+    // ------------------------------------------------------------------
+    // CSD access
+    // ------------------------------------------------------------------
+
+    /// Pop the oldest unconsumed batch from directory `dir` regardless
+    /// of current time (the caller waits until `ready`).
+    pub fn take_next_csd(&mut self, dir: u16) -> Option<CsdProduct> {
+        self.csd.take_next(dir)
+    }
+
+    /// Pop the oldest unconsumed batch from `dir` whose write-back
+    /// completed by `t` (the WRR readiness probe's consume path).
+    pub fn take_ready_csd(&mut self, dir: u16, t: Secs) -> Option<CsdProduct> {
+        self.csd.take_ready(dir, t)
+    }
+
+    /// Time the CSD becomes idle.
+    pub fn csd_drain_time(&self) -> Secs {
+        self.csd.drain_time()
+    }
+
+    /// When the CSD received its start signal this epoch.
+    pub fn csd_started_at(&self) -> Secs {
+        self.csd.started_at()
+    }
+
+    /// Batches the CSD produced so far (all epochs).
+    pub fn csd_produced_count(&self) -> usize {
+        self.csd.produced_ids().len()
+    }
+
+    /// Host stop signal: no CSD production may start at/after `t`.
+    pub fn csd_stop(&mut self, t: Secs) {
+        self.csd.stop(t);
+    }
+
+    /// Charge the WRR readiness probe (`len(os.listdir)`) to `a`'s
+    /// device stream, when the profile prices it.
+    pub fn poll_overhead(&mut self, a: usize) {
+        if self.cfg.profile.poll_cost_s > 0.0 {
+            self.accels[a].overhead(self.cfg.profile.poll_cost_s);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // the two prongs
+    // ------------------------------------------------------------------
+
+    /// Map a shard-local index that a cursor just claimed (head or
+    /// tail) to the global batch id.
+    fn global_id(&self, a: usize, local: BatchId) -> BatchId {
+        self.shards[a][local as usize]
+    }
+
+    /// Prefetch depth of the CPU path.
+    fn depth(&self, a: usize) -> usize {
+        let w = self.hosts[a].workers();
+        if w == 0 {
+            0
+        } else {
+            w as usize + 1
+        }
+    }
+
+    fn note_host_ready(&mut self, a: usize, cost: &HostBatchCost, r: &HostReady) {
+        if self.record_events {
+            self.events.push(BatchReady {
+                batch: r.batch,
+                source: BatchSource::Cpu,
+                // Delegated to the host engine so the pace estimate can
+                // never drift from the timing model it actually applies.
+                cost_s: self.hosts[a].pace_estimate(cost),
+                ready: r.ready,
+            });
+        }
+    }
+
+    /// Refill accelerator `a`'s CPU prefetch queue.
+    fn refill(&mut self, a: usize, now: Secs) {
+        let depth = self.depth(a);
+        while self.queues[a].len() < depth {
+            let Some(local) = self.cursors[a].claim_head() else { break };
+            let gid = self.global_id(a, local);
+            let cost = self.costs.host_batch(gid);
+            let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
+            self.note_host_ready(a, &cost, &ready);
+            self.queues[a].push_back(ready);
+        }
+    }
+
+    /// Next CPU-path batch for accelerator `a` (inline at workers==0,
+    /// queued otherwise).
+    pub fn cpu_next(&mut self, a: usize, now: Secs) -> Option<HostReady> {
+        if self.depth(a) == 0 {
+            let local = self.cursors[a].claim_head()?;
+            let gid = self.global_id(a, local);
+            let cost = self.costs.host_batch(gid);
+            let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
+            self.note_host_ready(a, &cost, &ready);
+            Some(ready)
+        } else {
+            self.refill(a, now);
+            self.queues[a].pop_front()
+        }
+    }
+
+    /// Produce one CSD batch into `dir` from shard `shard_of`; returns
+    /// false when that shard's cursor is exhausted or the CSD stopped.
+    pub fn csd_produce_one(&mut self, dir: u16, shard_of: usize) -> bool {
+        let Some(local) = self.cursors[shard_of].claim_tail() else {
+            return false;
+        };
+        let gid = self.global_id(shard_of, local);
+        let cost = self.costs.csd_batch(gid);
+        match self.csd.produce(gid, dir, &cost, &mut self.trace) {
+            Some(ready) => {
+                if self.record_events {
+                    self.events.push(BatchReady {
+                        batch: gid,
+                        source: BatchSource::Csd,
+                        cost_s: cost.total(),
+                        ready,
+                    });
+                }
+                true
+            }
+            None => {
+                // Stop signal or device failure raced the claim: return
+                // the batch to the cursor so the CPU head can pick it up
+                // — graceful degradation to the classical path.
+                self.cursors[shard_of].unclaim_tail();
+                false
+            }
+        }
+    }
+
+    /// Consume one batch on accelerator `a`.
+    pub fn consume(&mut self, a: usize, gid: BatchId, source: BatchSource, data_ready: Secs) {
+        let cost = self.costs.train(gid, source == BatchSource::Csd);
+        self.accels[a].consume(gid, source, data_ready, &cost, &mut self.trace);
+        self.consumed[a] += 1;
+        self.total_consumed += 1;
+        if source == BatchSource::Csd {
+            self.from_csd[a] += 1;
+            self.total_from_csd += 1;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // lifecycle plumbing used by `run`
+    // ------------------------------------------------------------------
+
+    fn iter_budget(&self) -> u64 {
+        (self.shards.iter().map(|s| s.len() as u64).sum::<u64>() + 16) * MAX_ITERS_FACTOR
+    }
+
+    fn drain_events(&mut self) -> Vec<BatchReady> {
+        std::mem::take(&mut self.events)
+    }
+
+    fn finish(mut self) -> (RunReport, Trace) {
+        let report = self.build_report();
+        (report, self.trace)
+    }
+
+    fn build_report(&mut self) -> RunReport {
+        self.wasted += self.csd.wasted();
+        for q in &self.queues {
+            self.wasted += q.len() as u32;
+        }
+        let makespan = self
+            .accels
+            .iter()
+            .map(|a| a.free_at())
+            .fold(self.trace.makespan(), f64::max);
+        let n = self.total_consumed.max(1);
+        let t = &self.trace;
+        let host_busy = t.busy_where(|s| s.device.is_host_cpu());
+        // DDP main processes (one per accelerator) + worker processes.
+        let n_processes = match self.cfg.strategy {
+            Strategy::CsdOnly => 0, // paper bills the CSD column CSD-only
+            _ => self.cfg.n_accel + self.cfg.num_workers,
+        };
+        let energy = compute_energy(
+            &self.cfg.profile.power,
+            makespan,
+            n_processes,
+            self.cfg.strategy.uses_csd(),
+            n as u32,
+        );
+        RunReport {
+            makespan,
+            n_batches: n as u32,
+            learn_time_per_batch: makespan / n as f64,
+            t_io: t.busy_where(|s| s.phase == Phase::SsdRead),
+            t_cpu: t.busy_where(|s| s.phase == Phase::CpuPreprocess),
+            t_csd: t.busy_where(|s| s.device == Device::Csd),
+            t_gpu: t.busy_where(|s| s.phase == Phase::Train),
+            t_gds: t.busy_where(|s| s.phase == Phase::GdsRead),
+            cpu_dram_time_per_batch: host_busy / n as f64,
+            batches_from_csd: self.total_from_csd as u32,
+            wasted_batches: self.wasted,
+            energy,
+        }
+    }
+}
+
+/// Drive `policy` through all epochs of `cfg` against `costs`.
+///
+/// The per-epoch protocol: `reset_epoch` → [`SchedPolicy::on_epoch_start`]
+/// → repeat { [`SchedPolicy::select_accel`] → [`SchedPolicy::claim_next`]
+/// → deliver [`BatchReady`] events } until no accelerator remains →
+/// [`SchedPolicy::on_epoch_end`] → [`SchedPolicy::calibrate`].
+pub fn run(
+    cfg: &ExperimentConfig,
+    spec: &DatasetSpec,
+    costs: &mut dyn CostProvider,
+    policy: &mut dyn SchedPolicy,
+) -> Result<(RunReport, Trace)> {
+    let mut eng = Engine::new(cfg, spec, costs);
+    for _epoch in 0..cfg.epochs {
+        eng.reset_epoch();
+        eng.record_events = policy.wants_ready_events();
+        policy.on_epoch_start(&mut eng)?;
+        for ev in eng.drain_events() {
+            policy.on_batch_ready(&ev);
+        }
+        let budget = eng.iter_budget();
+        let mut iters: u64 = 0;
+        while let Some(a) = policy.select_accel(&eng) {
+            iters += 1;
+            if iters > budget {
+                bail!("{}: event loop did not converge", policy.name());
+            }
+            policy.claim_next(&mut eng, a)?;
+            if !eng.events.is_empty() {
+                for ev in eng.drain_events() {
+                    policy.on_batch_ready(&ev);
+                }
+            }
+        }
+        policy.on_epoch_end(&mut eng)?;
+        policy.calibrate(&eng);
+    }
+    Ok(eng.finish())
+}

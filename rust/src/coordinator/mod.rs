@@ -1,6 +1,6 @@
 //! L3 coordinator — the paper's contribution.
 //!
-//! Implements the four data-feeding strategies of the evaluation:
+//! Implements the five data-feeding strategies:
 //!
 //! * [`Strategy::CpuOnly`] — the classical PyTorch path (baseline);
 //! * [`Strategy::CsdOnly`] — near-storage preprocessing only (baseline);
@@ -9,14 +9,25 @@
 //!   order (all CPU-side batches, then all CSD-side batches via GDS);
 //! * [`Strategy::Wrr`] — *Weighted Round Robin* (Alg. 2): real-time
 //!   readiness polling of the CSD output directory before every
-//!   iteration, consuming CSD batches as soon as they exist.
+//!   iteration, consuming CSD batches as soon as they exist;
+//! * [`Strategy::Adaptive`] — hybrid: starts in WRR polling mode and
+//!   switches to MTE-style pre-allocation once observed CPU/CSD
+//!   batch-time variance falls below `adaptive.cv_threshold` —
+//!   exercising the consistency/efficiency trade-off the paper only
+//!   studies at its two extremes.
 //!
-//! All strategies run on the same virtual-time engine set
-//! ([`crate::host`], [`crate::csd`], [`crate::accel`]) with durations
-//! from a [`cost::CostProvider`] — calibrated models (benches) or real
-//! PJRT executions (the end-to-end examples).
+//! The scheduler is split into a strategy-agnostic virtual-time
+//! [`engine`] (event loop, per-shard cursors/queues, trace + energy
+//! accounting, epoch lifecycle) and one [`policies::SchedPolicy`]
+//! implementation per strategy. All strategies run on the same device
+//! engines ([`crate::host`], [`crate::csd`], [`crate::accel`]) with
+//! durations from a [`cost::CostProvider`] — calibrated models
+//! (benches) or real PJRT executions (the end-to-end examples).
+//! [`schedule::run_schedule`] is the stable entry point.
 
 pub mod cost;
+pub mod engine;
+pub mod policies;
 pub mod schedule;
 
 use anyhow::Result;
@@ -33,14 +44,19 @@ pub enum Strategy {
     CsdOnly,
     Mte,
     Wrr,
+    /// WRR polling that hands over to MTE pre-allocation once the
+    /// observed per-prong batch-time variance settles (see
+    /// [`policies::AdaptivePolicy`]).
+    Adaptive,
 }
 
 impl Strategy {
-    pub const ALL: [Strategy; 4] = [
+    pub const ALL: [Strategy; 5] = [
         Strategy::CpuOnly,
         Strategy::CsdOnly,
         Strategy::Mte,
         Strategy::Wrr,
+        Strategy::Adaptive,
     ];
 
     pub fn parse(s: &str) -> Option<Strategy> {
@@ -49,6 +65,7 @@ impl Strategy {
             "csd" | "csd_only" => Strategy::CsdOnly,
             "mte" => Strategy::Mte,
             "wrr" => Strategy::Wrr,
+            "adaptive" | "adp" => Strategy::Adaptive,
             _ => return None,
         })
     }
@@ -59,6 +76,7 @@ impl Strategy {
             Strategy::CsdOnly => "csd",
             Strategy::Mte => "mte",
             Strategy::Wrr => "wrr",
+            Strategy::Adaptive => "adaptive",
         }
     }
 
@@ -140,5 +158,12 @@ mod tests {
         assert!(Strategy::Mte.uses_csd());
         assert!(Strategy::Wrr.uses_csd());
         assert!(Strategy::CsdOnly.uses_csd());
+        assert!(Strategy::Adaptive.uses_csd());
+    }
+
+    #[test]
+    fn adaptive_parses() {
+        assert_eq!(Strategy::parse("adaptive"), Some(Strategy::Adaptive));
+        assert_eq!(Strategy::parse("ADP"), Some(Strategy::Adaptive));
     }
 }

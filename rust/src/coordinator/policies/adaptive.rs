@@ -1,0 +1,205 @@
+//! Adaptive — a hybrid of the paper's two strategies.
+//!
+//! The paper studies the consistency/efficiency trade-off only at its
+//! extremes: WRR reacts to real-time readiness (robust to noisy batch
+//! times, pays a poll per iteration), MTE pre-allocates from a one-shot
+//! calibration (zero steady-state overhead, fragile when batch times
+//! drift). Adaptive walks between them:
+//!
+//! ```text
+//!             cv(cpu) ≤ τ  and  cv(csd) ≤ τ
+//!   ┌─────────┐  (≥ min_samples each side)  ┌──────────────┐
+//!   │ Polling  │ ──────────────────────────▶ │ Pre-allocate │
+//!   │ (WRR)    │        epoch boundary       │ (MTE, ratio  │
+//!   └─────────┘                              │  from polls) │
+//!        ▲                                   └──────────────┘
+//!        └── start state; no transition back (a drifting
+//!            workload re-enters via a new run)
+//! ```
+//!
+//! While polling it records every batch's estimated per-prong delivery
+//! pace ([`BatchReady`] events — worker parallelism and the serial
+//! collate floor already folded in, so the numbers are comparable to
+//! MTE's own wall-clock calibration); at each epoch boundary it
+//! computes the coefficient of variation (σ/μ) of both sides. Once
+//! both fall below `adaptive.cv_threshold`, the observed means become
+//! MTE's `(t_cpu, t_csd)` ratio and subsequent epochs run MTE-style
+//! pre-allocation with no calibration epoch and no polling.
+
+use anyhow::Result;
+
+use crate::accel::BatchSource;
+use crate::config::AdaptiveParams;
+use crate::coordinator::engine::{BatchReady, Engine};
+use crate::coordinator::policies::{MtePolicy, SchedPolicy, WrrPolicy};
+
+/// Mean and coefficient of variation (σ/μ) of a sample.
+fn mean_cv(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if mean <= 0.0 {
+        return (mean, f64::INFINITY);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt() / mean)
+}
+
+/// `Strategy::Adaptive`: WRR polling until observed batch-time variance
+/// settles, then MTE pre-allocation calibrated from the polled means.
+#[derive(Debug)]
+pub struct AdaptivePolicy {
+    wrr: WrrPolicy,
+    mte: MtePolicy,
+    /// False: polling (WRR) mode; true: pre-allocation (MTE) mode.
+    prealloc: bool,
+    params: AdaptiveParams,
+    obs_cpu: Vec<f64>,
+    obs_csd: Vec<f64>,
+}
+
+impl AdaptivePolicy {
+    pub fn new(params: &AdaptiveParams) -> Self {
+        AdaptivePolicy {
+            wrr: WrrPolicy::default(),
+            mte: MtePolicy::default(),
+            prealloc: false,
+            params: params.clone(),
+            obs_cpu: Vec::new(),
+            obs_csd: Vec::new(),
+        }
+    }
+
+    /// Is the policy still in its WRR polling mode?
+    pub fn polling(&self) -> bool {
+        !self.prealloc
+    }
+
+    fn inner(&mut self) -> &mut dyn SchedPolicy {
+        if self.prealloc {
+            &mut self.mte
+        } else {
+            &mut self.wrr
+        }
+    }
+}
+
+impl SchedPolicy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn wants_ready_events(&self) -> bool {
+        !self.prealloc
+    }
+
+    fn on_epoch_start(&mut self, eng: &mut Engine<'_>) -> Result<()> {
+        self.inner().on_epoch_start(eng)
+    }
+
+    fn select_accel(&mut self, eng: &Engine<'_>) -> Option<usize> {
+        self.inner().select_accel(eng)
+    }
+
+    fn claim_next(&mut self, eng: &mut Engine<'_>, a: usize) -> Result<()> {
+        self.inner().claim_next(eng, a)
+    }
+
+    fn on_batch_ready(&mut self, ev: &BatchReady) {
+        if self.prealloc {
+            return;
+        }
+        match ev.source {
+            BatchSource::Cpu => self.obs_cpu.push(ev.cost_s),
+            BatchSource::Csd => self.obs_csd.push(ev.cost_s),
+        }
+    }
+
+    fn on_epoch_end(&mut self, eng: &mut Engine<'_>) -> Result<()> {
+        self.inner().on_epoch_end(eng)
+    }
+
+    fn calibrate(&mut self, _eng: &Engine<'_>) {
+        if self.prealloc {
+            return;
+        }
+        let min = self.params.min_samples as usize;
+        if self.obs_cpu.len() < min || self.obs_csd.len() < min {
+            return;
+        }
+        let (t_cpu, cv_cpu) = mean_cv(&self.obs_cpu);
+        let (t_csd, cv_csd) = mean_cv(&self.obs_csd);
+        if cv_cpu <= self.params.cv_threshold && cv_csd <= self.params.cv_threshold {
+            if std::env::var_os("DDLP_DEBUG").is_some() {
+                eprintln!(
+                    "[adaptive] switch to pre-allocation: t_cpu={t_cpu:.4}s (cv {cv_cpu:.3}) \
+                     t_csd={t_csd:.4}s (cv {cv_csd:.3})"
+                );
+            }
+            self.mte.set_ratio(t_cpu, t_csd);
+            self.prealloc = true;
+            self.obs_cpu.clear();
+            self.obs_csd.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_cv_constant_sample_is_zero() {
+        let (m, cv) = mean_cv(&[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(cv, 0.0);
+    }
+
+    #[test]
+    fn mean_cv_spread_sample_is_positive() {
+        let (m, cv) = mean_cv(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert!((cv - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibrate_gates_on_min_samples_and_cv() {
+        use crate::config::ExperimentConfig;
+        use crate::coordinator::cost::FixedCosts;
+        use crate::coordinator::engine::Engine;
+        use crate::dataset::DatasetSpec;
+        use crate::pipeline::PipelineKind;
+
+        let cfg = ExperimentConfig::builder().n_batches(10).build().unwrap();
+        let spec = DatasetSpec {
+            n_batches: 10,
+            batch_size: 1,
+            pipeline: PipelineKind::ImageNet1,
+            seed: 0,
+        };
+        let mut costs = FixedCosts::toy_fig6();
+        let eng = Engine::new(&cfg, &spec, &mut costs);
+        let params = AdaptiveParams {
+            cv_threshold: 0.5,
+            min_samples: 4,
+        };
+
+        // Below min_samples on one prong: no switch, even at cv = 0.
+        let mut p = AdaptivePolicy::new(&params);
+        p.obs_cpu = vec![1.0; 3];
+        p.obs_csd = vec![1.0; 8];
+        p.calibrate(&eng);
+        assert!(p.polling(), "switched below min_samples");
+
+        // Enough samples and cv = 0: the switch fires.
+        p.obs_cpu = vec![1.0; 4];
+        p.calibrate(&eng);
+        assert!(!p.polling(), "cv=0 with enough samples must switch");
+
+        // Enough samples but cv far above threshold: no switch.
+        let mut q = AdaptivePolicy::new(&params);
+        q.obs_cpu = vec![0.1, 2.0, 0.1, 2.0];
+        q.obs_csd = vec![1.0; 4];
+        q.calibrate(&eng);
+        assert!(q.polling(), "switched despite cv >> threshold");
+    }
+}

@@ -1,0 +1,34 @@
+//! The classical PyTorch baseline: the host CPU preprocesses every
+//! batch; the CSD stays dark.
+
+use anyhow::{bail, Result};
+
+use crate::accel::BatchSource;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::policies::SchedPolicy;
+
+/// `Strategy::CpuOnly`: each accelerator drains its shard head-to-tail
+/// through the SSD → host DRAM → preprocess → H2D path. Accelerators
+/// are advanced sequentially — with only one feeding path there is
+/// nothing to interleave.
+#[derive(Debug, Default)]
+pub struct CpuOnlyPolicy;
+
+impl SchedPolicy for CpuOnlyPolicy {
+    fn name(&self) -> &'static str {
+        "cpu_only"
+    }
+
+    fn select_accel(&mut self, eng: &Engine<'_>) -> Option<usize> {
+        eng.first_unfinished()
+    }
+
+    fn claim_next(&mut self, eng: &mut Engine<'_>, a: usize) -> Result<()> {
+        let now = eng.accel_free_at(a);
+        let Some(r) = eng.cpu_next(a, now) else {
+            bail!("cpu_only: cursor exhausted early");
+        };
+        eng.consume(a, r.batch, BatchSource::Cpu, r.ready);
+        Ok(())
+    }
+}

@@ -1,0 +1,51 @@
+//! Near-storage-only baseline: the CSD preprocesses every batch; the
+//! accelerator reads the results via direct storage (GDS).
+
+use anyhow::{bail, Result};
+
+use crate::accel::BatchSource;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::policies::SchedPolicy;
+
+/// `Strategy::CsdOnly`: the whole dataset is produced eagerly at epoch
+/// start (round-robin across per-accelerator output directories), then
+/// each accelerator drains its directory in completion order.
+#[derive(Debug, Default)]
+pub struct CsdOnlyPolicy;
+
+impl SchedPolicy for CsdOnlyPolicy {
+    fn name(&self) -> &'static str {
+        "csd_only"
+    }
+
+    fn on_epoch_start(&mut self, eng: &mut Engine<'_>) -> Result<()> {
+        // Round-robin production across directories.
+        let n = eng.n_accel();
+        let mut dir = 0usize;
+        loop {
+            let mut any = false;
+            for _ in 0..n {
+                if eng.csd_produce_one(dir as u16, dir) {
+                    any = true;
+                }
+                dir = (dir + 1) % n;
+            }
+            if !any {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    fn select_accel(&mut self, eng: &Engine<'_>) -> Option<usize> {
+        eng.first_unfinished()
+    }
+
+    fn claim_next(&mut self, eng: &mut Engine<'_>, a: usize) -> Result<()> {
+        let Some(p) = eng.take_next_csd(a as u16) else {
+            bail!("csd_only: production underflow");
+        };
+        eng.consume(a, p.batch, BatchSource::Csd, p.ready);
+        Ok(())
+    }
+}

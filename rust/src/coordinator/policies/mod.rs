@@ -1,0 +1,103 @@
+//! The pluggable policy layer of the scheduler.
+//!
+//! Each data-feeding strategy is one [`SchedPolicy`] implementation
+//! driven by the strategy-agnostic event loop in
+//! [`crate::coordinator::engine`]. The engine owns mechanism (device
+//! lanes, cursors, queues, trace, epoch lifecycle); a policy owns only
+//! decisions: which accelerator advances next, where its next batch
+//! comes from, and what to learn from observed service times. Adding a
+//! strategy means adding a file here — the engine, config plumbing, and
+//! report accounting are untouched (DESIGN.md §Engine/policy split).
+
+pub mod adaptive;
+pub mod cpu_only;
+pub mod csd_only;
+pub mod mte;
+pub mod wrr;
+
+pub use adaptive::AdaptivePolicy;
+pub use cpu_only::CpuOnlyPolicy;
+pub use csd_only::CsdOnlyPolicy;
+pub use mte::MtePolicy;
+pub use wrr::WrrPolicy;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::{BatchReady, Engine};
+use crate::coordinator::Strategy;
+
+/// One data-feeding strategy, as seen by the engine's event loop.
+///
+/// Lifecycle per epoch: [`on_epoch_start`](SchedPolicy::on_epoch_start)
+/// → repeat { [`select_accel`](SchedPolicy::select_accel) →
+/// [`claim_next`](SchedPolicy::claim_next) →
+/// [`on_batch_ready`](SchedPolicy::on_batch_ready) for each batch that
+/// finished preprocessing } → [`on_epoch_end`](SchedPolicy::on_epoch_end)
+/// → [`calibrate`](SchedPolicy::calibrate).
+pub trait SchedPolicy {
+    /// Short name used in diagnostics ("mte", "wrr", ...).
+    fn name(&self) -> &'static str;
+
+    /// Should the engine record [`BatchReady`] observation events?
+    /// Default off — event recording costs a push per scheduled batch.
+    fn wants_ready_events(&self) -> bool {
+        false
+    }
+
+    /// Epoch setup: eager CSD production, allocation resets, ...
+    fn on_epoch_start(&mut self, _eng: &mut Engine<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Choose the accelerator to advance next; `None` ends the epoch.
+    /// Default: the unfinished accelerator with the smallest clock.
+    fn select_accel(&mut self, eng: &Engine<'_>) -> Option<usize> {
+        eng.least_loaded_unfinished()
+    }
+
+    /// Advance accelerator `a` by one scheduling step, consuming at
+    /// least one batch (WRR consumes up to two: a ready CSD batch plus
+    /// a CPU batch).
+    fn claim_next(&mut self, eng: &mut Engine<'_>, a: usize) -> Result<()>;
+
+    /// Observation hook: a batch finished preprocessing on one prong.
+    /// Only delivered while [`wants_ready_events`](SchedPolicy::wants_ready_events)
+    /// returns true.
+    fn on_batch_ready(&mut self, _ev: &BatchReady) {}
+
+    /// Epoch teardown (e.g. WRR's stop signal to the CSD).
+    fn on_epoch_end(&mut self, _eng: &mut Engine<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Epoch-boundary recalibration: update learned throughput state
+    /// (e.g. the Adaptive policy's mode-switch decision).
+    fn calibrate(&mut self, _eng: &Engine<'_>) {}
+}
+
+/// Build the policy for `cfg.strategy`.
+pub fn for_config(cfg: &ExperimentConfig) -> Box<dyn SchedPolicy> {
+    match cfg.strategy {
+        Strategy::CpuOnly => Box::new(CpuOnlyPolicy),
+        Strategy::CsdOnly => Box::new(CsdOnlyPolicy),
+        Strategy::Mte => Box::new(MtePolicy::default()),
+        Strategy::Wrr => Box::new(WrrPolicy::default()),
+        Strategy::Adaptive => Box::new(AdaptivePolicy::new(&cfg.adaptive)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn factory_covers_every_strategy() {
+        for s in Strategy::ALL {
+            let cfg = ExperimentConfig::builder().strategy(s).build().unwrap();
+            let p = for_config(&cfg);
+            assert!(!p.name().is_empty());
+        }
+    }
+}

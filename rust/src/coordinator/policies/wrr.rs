@@ -1,0 +1,86 @@
+//! WRR — *Weighted Round Robin* (paper Alg. 2).
+//!
+//! Before each iteration the host probes the CSD output directory; a
+//! ready batch is consumed immediately, otherwise (and additionally)
+//! one CPU batch is consumed. The CSD preprocesses from the tail until
+//! the host's stop signal at epoch end.
+
+use anyhow::{bail, Result};
+
+use crate::accel::BatchSource;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::policies::SchedPolicy;
+
+/// `Strategy::Wrr`: real-time readiness polling of the CSD output
+/// directory before every iteration.
+#[derive(Debug, Default)]
+pub struct WrrPolicy {
+    /// Round-robin production pointer across directories (§IV-E: "CSD
+    /// alternately writes each preprocessed batch across all
+    /// directories to smooth load distribution").
+    rr: usize,
+}
+
+impl SchedPolicy for WrrPolicy {
+    fn name(&self) -> &'static str {
+        "wrr"
+    }
+
+    fn on_epoch_start(&mut self, _eng: &mut Engine<'_>) -> Result<()> {
+        self.rr = 0;
+        Ok(())
+    }
+
+    fn claim_next(&mut self, eng: &mut Engine<'_>, a: usize) -> Result<()> {
+        let n_accel = eng.n_accel();
+        let now = eng.accel_free_at(a);
+
+        // Lazy CSD production up to `now`, round-robin over dirs.
+        let mut guard = 0;
+        while eng.csd_drain_time() <= now && guard < 4 * n_accel {
+            let dir = self.rr % n_accel;
+            self.rr += 1;
+            if eng.consumed(dir) < eng.shard_len(dir) && eng.csd_produce_one(dir as u16, dir) {
+                guard = 0;
+            } else {
+                guard += 1;
+            }
+        }
+
+        // The readiness probe (len(os.listdir)) costs a poll.
+        eng.poll_overhead(a);
+        let now = eng.accel_free_at(a);
+
+        // Alg. 2 line 7: if the CSD finished a batch, train with it.
+        if let Some(p) = eng.take_ready_csd(a as u16, now) {
+            eng.consume(a, p.batch, BatchSource::Csd, now);
+            if eng.consumed(a) >= eng.shard_len(a) {
+                return Ok(()); // break-check after the CSD consume
+            }
+        }
+        let now = eng.accel_free_at(a);
+        // Alg. 2 line 11: one CPU batch.
+        if let Some(r) = eng.cpu_next(a, now) {
+            eng.consume(a, r.batch, BatchSource::Cpu, r.ready);
+        } else if let Some(p) = eng.take_next_csd(a as u16) {
+            // Head exhausted: drain CSD products (wait if needed).
+            eng.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
+        } else if eng.cursor_remaining(a) > 0 {
+            // Tail claims remain but production lagged: force one.
+            if eng.csd_produce_one(a as u16, a) {
+                let p = eng.take_next_csd(a as u16).expect("just produced");
+                eng.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
+            }
+        } else if eng.consumed(a) < eng.shard_len(a) {
+            bail!("wrr: accelerator {a} starved at {now:.3}s");
+        }
+        Ok(())
+    }
+
+    fn on_epoch_end(&mut self, eng: &mut Engine<'_>) -> Result<()> {
+        // Alg. 2 line 15: total == n → signal the CSD to stop.
+        let end = eng.max_accel_free();
+        eng.csd_stop(end);
+        Ok(())
+    }
+}

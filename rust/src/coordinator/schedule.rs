@@ -1,531 +1,24 @@
-//! The strategy schedulers: CPU-only, CSD-only, MTE (Alg. 1) and WRR
-//! (Alg. 2), single- and multi-accelerator.
+//! Compatibility entry point for the scheduler.
 //!
-//! All four run the same event loop skeleton: repeatedly advance the
-//! accelerator with the smallest clock, let it claim its next batch
-//! according to the strategy, and keep the CSD's production lazily
-//! scheduled up to the current virtual time. Invariants (tested in
-//! `rust/tests/`): every batch of every shard is consumed exactly once
-//! per epoch; MTE's consumption order is deterministic; WRR never
-//! consumes a CSD batch before its write-back completes.
+//! The 550-line monolithic event loop that used to live here was split
+//! into the strategy-agnostic engine ([`crate::coordinator::engine`])
+//! and one policy per strategy ([`crate::coordinator::policies`]);
+//! see DESIGN.md §Engine/policy split. `run_schedule` remains the
+//! stable entry point so existing callers (benches, tests, examples,
+//! the real-execution session) don't churn: it builds the policy for
+//! `cfg.strategy` and drives it through the engine. The split is
+//! asserted byte-identical to the pre-refactor scheduler by
+//! `rust/tests/golden_parity.rs`.
 
-use std::collections::VecDeque;
+use anyhow::Result;
 
-use anyhow::{bail, Result};
-
-use crate::accel::{AccelEngine, BatchSource};
 use crate::config::ExperimentConfig;
 use crate::coordinator::cost::CostProvider;
-use crate::coordinator::Strategy;
-use crate::csd::CsdEngine;
-use crate::dataset::{shard_batches, BatchId, DatasetSpec, HeadTailCursor};
-use crate::energy::compute_energy;
-use crate::host::{HostEngine, HostReady};
+use crate::coordinator::engine;
+use crate::coordinator::policies;
+use crate::dataset::DatasetSpec;
 use crate::metrics::RunReport;
-use crate::sim::Secs;
-use crate::trace::{Device, Phase, Trace};
-
-/// Calibration sample size (paper: "average time … to train 10 batches").
-const CAL_BATCHES: u32 = 10;
-
-/// Upper bound on event-loop iterations per epoch (runaway guard).
-const MAX_ITERS_FACTOR: u64 = 64;
-
-struct Sched<'a> {
-    cfg: &'a ExperimentConfig,
-    costs: &'a mut dyn CostProvider,
-    trace: Trace,
-    hosts: Vec<HostEngine>,
-    csd: CsdEngine,
-    accels: Vec<AccelEngine>,
-    /// Global batch ids per accelerator shard.
-    shards: Vec<Vec<BatchId>>,
-    // ---- per-epoch state ----
-    cursors: Vec<HeadTailCursor>,
-    queues: Vec<VecDeque<HostReady>>,
-    consumed: Vec<u32>,
-    /// Consumed-from-CSD counter (per shard).
-    from_csd: Vec<u32>,
-    /// MTE ratio (t_cpu, t_csd) once measured; persists across epochs.
-    mte_ratio: Option<(f64, f64)>,
-    /// Total batches consumed across epochs.
-    total_consumed: u64,
-    /// Total CSD-sourced batches consumed across epochs.
-    total_from_csd: u64,
-    /// Wasted (preprocessed, never consumed) batches across epochs.
-    wasted: u32,
-}
-
-impl<'a> Sched<'a> {
-    fn new(cfg: &'a ExperimentConfig, spec: &DatasetSpec, costs: &'a mut dyn CostProvider) -> Self {
-        let n_accel = cfg.n_accel as usize;
-        let shards: Vec<Vec<BatchId>> = (0..n_accel as u32)
-            .map(|r| shard_batches(spec.n_batches, r, cfg.n_accel))
-            .collect();
-        // DDP: `num_workers` is the host-wide worker budget, split across
-        // per-accelerator DataLoaders (paper: 16 threads = 8 per GPU).
-        let w_per = cfg.num_workers / cfg.n_accel;
-        // DALI's own pipelined hand-off replaces the python collate path.
-        let collate = match cfg.loader {
-            crate::config::Loader::DaliGpu => {
-                cfg.profile.collate_overhead_s * cfg.profile.dali_gpu_collate_factor
-            }
-            _ => cfg.profile.collate_overhead_s,
-        };
-        Sched {
-            cfg,
-            costs,
-            trace: if cfg.record_trace {
-                // ~6 spans per batch (read/pp/h2d + csd triple or train)
-                Trace::with_capacity(6 * (spec.n_batches as usize) * cfg.epochs as usize)
-            } else {
-                Trace::disabled()
-            },
-            hosts: (0..n_accel)
-                .map(|_| HostEngine::new(w_per, cfg.profile.worker_scaling_exp, collate))
-                .collect(),
-            csd: {
-                let mut csd = CsdEngine::new(cfg.n_accel as u16, cfg.profile.csd_signal_latency_s);
-                if cfg.profile.csd_fail_at_s >= 0.0 {
-                    csd.fail_at(cfg.profile.csd_fail_at_s);
-                }
-                csd
-            },
-            accels: (0..n_accel).map(|i| AccelEngine::new(i as u16)).collect(),
-            cursors: shards.iter().map(|s| HeadTailCursor::new(s.len() as u32)).collect(),
-            queues: vec![VecDeque::new(); n_accel],
-            consumed: vec![0; n_accel],
-            from_csd: vec![0; n_accel],
-            shards,
-            mte_ratio: None,
-            total_consumed: 0,
-            total_from_csd: 0,
-            wasted: 0,
-        }
-    }
-
-    fn reset_epoch(&mut self) {
-        self.csd.restart();
-        for (a, shard) in self.shards.iter().enumerate() {
-            self.cursors[a] = HeadTailCursor::new(shard.len() as u32);
-            self.wasted += self.queues[a].len() as u32;
-            self.queues[a].clear();
-            self.consumed[a] = 0;
-            self.from_csd[a] = 0;
-        }
-    }
-
-    fn shard_len(&self, a: usize) -> u32 {
-        self.shards[a].len() as u32
-    }
-
-    /// Map a shard-local head index that the cursor just claimed to the
-    /// global batch id.
-    fn head_id(&self, a: usize, local: BatchId) -> BatchId {
-        self.shards[a][local as usize]
-    }
-
-    fn tail_id(&self, a: usize, local: BatchId) -> BatchId {
-        self.shards[a][local as usize]
-    }
-
-    /// Prefetch depth of the CPU path.
-    fn depth(&self, a: usize) -> usize {
-        let w = self.hosts[a].workers();
-        if w == 0 {
-            0
-        } else {
-            w as usize + 1
-        }
-    }
-
-    /// Refill accelerator `a`'s CPU prefetch queue.
-    fn refill(&mut self, a: usize, now: Secs) {
-        let depth = self.depth(a);
-        while self.queues[a].len() < depth {
-            let Some(local) = self.cursors[a].claim_head() else { break };
-            let gid = self.head_id(a, local);
-            let cost = self.costs.host_batch(gid);
-            let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
-            self.queues[a].push_back(ready);
-        }
-    }
-
-    /// Next CPU-path batch for accelerator `a` (inline at workers==0,
-    /// queued otherwise).
-    fn cpu_next(&mut self, a: usize, now: Secs) -> Option<HostReady> {
-        if self.depth(a) == 0 {
-            let local = self.cursors[a].claim_head()?;
-            let gid = self.head_id(a, local);
-            let cost = self.costs.host_batch(gid);
-            Some(self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace))
-        } else {
-            self.refill(a, now);
-            self.queues[a].pop_front()
-        }
-    }
-
-    /// Produce one CSD batch into `dir` from shard `shard_of`; returns
-    /// false when that shard's cursor is exhausted or the CSD stopped.
-    fn csd_produce_one(&mut self, dir: u16, shard_of: usize) -> bool {
-        let Some(local) = self.cursors[shard_of].claim_tail() else {
-            return false;
-        };
-        let gid = self.tail_id(shard_of, local);
-        let cost = self.costs.csd_batch(gid);
-        if self.csd.produce(gid, dir, &cost, &mut self.trace).is_none() {
-            // Stop signal or device failure raced the claim: return the
-            // batch to the cursor so the CPU head can pick it up —
-            // graceful degradation to the classical path.
-            self.cursors[shard_of].unclaim_tail();
-            return false;
-        }
-        true
-    }
-
-    /// Consume one batch on accelerator `a`.
-    fn consume(&mut self, a: usize, gid: BatchId, source: BatchSource, data_ready: Secs) {
-        let cost = self.costs.train(gid, source == BatchSource::Csd);
-        self.accels[a].consume(gid, source, data_ready, &cost, &mut self.trace);
-        self.consumed[a] += 1;
-        self.total_consumed += 1;
-        if source == BatchSource::Csd {
-            self.from_csd[a] += 1;
-            self.total_from_csd += 1;
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // strategies
-    // ------------------------------------------------------------------
-
-    /// Classical PyTorch path: CPU preprocesses everything.
-    fn epoch_cpu_only(&mut self) -> Result<()> {
-        for a in 0..self.accels.len() {
-            while self.consumed[a] < self.shard_len(a) {
-                let now = self.accels[a].free_at();
-                let Some(r) = self.cpu_next(a, now) else {
-                    bail!("cpu_only: cursor exhausted early");
-                };
-                self.consume(a, r.batch, BatchSource::Cpu, r.ready);
-            }
-        }
-        Ok(())
-    }
-
-    /// CSD preprocesses everything; the accelerator reads via GDS.
-    fn epoch_csd_only(&mut self) -> Result<()> {
-        // Round-robin production across directories.
-        let n = self.accels.len();
-        let mut dir = 0usize;
-        loop {
-            let mut any = false;
-            for _ in 0..n {
-                if self.csd_produce_one(dir as u16, dir) {
-                    any = true;
-                }
-                dir = (dir + 1) % n;
-            }
-            if !any {
-                break;
-            }
-        }
-        for a in 0..n {
-            while self.consumed[a] < self.shard_len(a) {
-                let Some(p) = self.csd.take_next(a as u16) else {
-                    bail!("csd_only: production underflow");
-                };
-                self.consume(a, p.batch, BatchSource::Csd, p.ready);
-            }
-        }
-        Ok(())
-    }
-
-    /// MTE (Alg. 1). Epoch 0 measures `t_cpu`/`t_csd` over the first
-    /// [`CAL_BATCHES`] batches of each side (Eq. 1), then pre-allocates
-    /// `n_cpu`/`n_csd` (Eq. 2–3). The accelerator consumes all CPU-side
-    /// batches first, then all CSD-side batches — deterministic order.
-    fn epoch_mte(&mut self) -> Result<()> {
-        let n_accel = self.accels.len();
-        // One CSD serves all shards: its per-shard effective batch time
-        // is n_accel × the raw batch time.
-        let csd_share_factor = n_accel as f64;
-        // Per-shard CPU allocation (None until the ratio is known).
-        let mut n_cpu: Vec<Option<u32>> = vec![None; n_accel];
-        if let Some((t_cpu, t_csd)) = self.mte_ratio {
-            for a in 0..n_accel {
-                n_cpu[a] = Some(mte_split(self.shard_len(a), t_cpu, t_csd * csd_share_factor));
-            }
-        }
-
-        // CSD production bookkeeping: fills dir 0's allocation, then dir
-        // 1, … (§IV-E: sequential directories to minimize switching).
-        let mut csd_dir = 0usize;
-        let mut csd_done = vec![0u32; n_accel];
-        // Schedule initial calibration production (dir 0) eagerly.
-        let cal = CAL_BATCHES.min(self.shard_len(0) / 3).max(1);
-        if self.mte_ratio.is_none() {
-            for _ in 0..cal {
-                if self.csd_produce_one(0, 0) {
-                    csd_done[0] += 1;
-                }
-            }
-        }
-
-        // Measurement state: the CPU-side rate is sampled on accelerator
-        // 0 (a per-GPU rate — the allocation is per shard). A short
-        // warmup is excluded so DataLoader ramp-up does not bias the
-        // steady-state rate (the paper measures during live training,
-        // where the pipeline is already warm).
-        let warmup: u32 = if self.shard_len(0) >= 3 * (cal + 2) { 2 } else { 0 };
-        let mut cpu_cal_start: Option<Secs> = None;
-        let mut cpu_cal_end: Option<Secs> = None;
-        let epoch_start: Secs = self.accels.iter().map(|x| x.free_at()).fold(0.0, f64::max);
-
-        let budget = (self.shards.iter().map(|s| s.len() as u64).sum::<u64>() + 16)
-            * MAX_ITERS_FACTOR;
-        let mut iters = 0u64;
-        loop {
-            iters += 1;
-            if iters > budget {
-                bail!("mte: event loop did not converge");
-            }
-            // Resolve the split as soon as both measurements exist.
-            if n_cpu.iter().any(|x| x.is_none()) {
-                if let (Some(cpu_end), true) = (cpu_cal_end, csd_done[0] >= cal) {
-                    let cal_base = cpu_cal_start.unwrap_or(epoch_start);
-                    let t_cpu = (cpu_end - cal_base) / cal as f64;
-                    let csd_products = self.csd.produced_ids().len() as f64;
-                    let t_csd = (self.csd.drain_time() - self.csd.started_at()) / csd_products;
-                    if std::env::var_os("DDLP_DEBUG").is_some() {
-                        eprintln!(
-                            "[mte] calibration: t_cpu={t_cpu:.4}s t_csd={t_csd:.4}s (cal={cal}, products={csd_products})"
-                        );
-                    }
-                    self.mte_ratio = Some((t_cpu, t_csd));
-                    for a in 0..n_accel {
-                        let split =
-                            mte_split(self.shard_len(a), t_cpu, t_csd * csd_share_factor);
-                        // never below what's already consumed/claimed
-                        n_cpu[a] = Some(split.max(self.consumed[a] - self.from_csd[a]));
-                    }
-                }
-            }
-            // Keep the CSD filling its allocations once they are known.
-            if let Some(ratio) = self.mte_ratio {
-                while csd_dir < n_accel {
-                    let quota = self.shard_len(csd_dir) - n_cpu[csd_dir].unwrap_or_else(|| {
-                        mte_split(self.shard_len(csd_dir), ratio.0, ratio.1 * csd_share_factor)
-                    });
-                    if csd_done[csd_dir] >= quota {
-                        csd_dir += 1;
-                        continue;
-                    }
-                    if self.csd_produce_one(csd_dir as u16, csd_dir) {
-                        csd_done[csd_dir] += 1;
-                    } else {
-                        csd_dir += 1;
-                    }
-                }
-            }
-
-            // Advance the least-loaded unfinished accelerator.
-            let Some(a) = (0..n_accel)
-                .filter(|&a| self.consumed[a] < self.shard_len(a))
-                .min_by(|&x, &y| {
-                    self.accels[x]
-                        .free_at()
-                        .partial_cmp(&self.accels[y].free_at())
-                        .unwrap()
-                })
-            else {
-                break;
-            };
-            let now = self.accels[a].free_at();
-            let cpu_phase_active = match n_cpu[a] {
-                None => true, // pre-decision: keep consuming CPU batches
-                Some(limit) => (self.consumed[a] - self.from_csd[a]) < limit,
-            };
-            if cpu_phase_active {
-                if let Some(r) = self.cpu_next(a, now) {
-                    self.consume(a, r.batch, BatchSource::Cpu, r.ready);
-                    if a == 0 {
-                        let done = self.consumed[0] - self.from_csd[0];
-                        if warmup > 0 && cpu_cal_start.is_none() && done == warmup {
-                            cpu_cal_start = Some(self.accels[0].free_at());
-                        }
-                        if cpu_cal_end.is_none() && done == warmup + cal {
-                            cpu_cal_end = Some(self.accels[0].free_at());
-                        }
-                    }
-                    continue;
-                }
-                // Head exhausted before the split resolved (tiny shard):
-                // fall through to the CSD phase.
-                if n_cpu[a].is_none() {
-                    n_cpu[a] = Some(self.consumed[a] - self.from_csd[a]);
-                }
-            }
-            // CSD phase: deterministic drain of this accelerator's dir.
-            if let Some(p) = self.csd.take_next(a as u16) {
-                self.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
-            } else if self.cursors[a].remaining() > 0 && self.csd_produce_one(a as u16, a) {
-                csd_done[a] += 1;
-                // consume on the next loop turn
-            } else if let Some(r) = self.cpu_next(a, now) {
-                // Allocation rounding left a head batch: finish on CPU.
-                self.consume(a, r.batch, BatchSource::Cpu, r.ready);
-            } else {
-                bail!("mte: accelerator {a} starved at {now:.3}s");
-            }
-        }
-        Ok(())
-    }
-
-    /// WRR (Alg. 2): before each iteration the host probes the CSD
-    /// output directory; a ready batch is consumed immediately,
-    /// otherwise (and additionally) one CPU batch is consumed. The CSD
-    /// preprocesses from the tail until the host's stop signal.
-    fn epoch_wrr(&mut self) -> Result<()> {
-        let n_accel = self.accels.len();
-        // Round-robin production pointer across directories (§IV-E:
-        // "CSD alternately writes each preprocessed batch across all
-        // directories to smooth load distribution").
-        let mut rr = 0usize;
-        let budget = (self.shards.iter().map(|s| s.len() as u64).sum::<u64>() + 16)
-            * MAX_ITERS_FACTOR;
-        let mut iters = 0u64;
-        loop {
-            iters += 1;
-            if iters > budget {
-                bail!("wrr: event loop did not converge");
-            }
-            let Some(a) = (0..n_accel)
-                .filter(|&a| self.consumed[a] < self.shard_len(a))
-                .min_by(|&x, &y| {
-                    self.accels[x]
-                        .free_at()
-                        .partial_cmp(&self.accels[y].free_at())
-                        .unwrap()
-                })
-            else {
-                break;
-            };
-            let now = self.accels[a].free_at();
-
-            // Lazy CSD production up to `now`, round-robin over dirs.
-            let mut guard = 0;
-            while self.csd.drain_time() <= now && guard < 4 * n_accel {
-                let dir = rr % n_accel;
-                rr += 1;
-                if self.consumed[dir] < self.shard_len(dir) && self.csd_produce_one(dir as u16, dir)
-                {
-                    guard = 0;
-                } else {
-                    guard += 1;
-                }
-            }
-
-            // The readiness probe (len(os.listdir)) costs a poll.
-            if self.cfg.profile.poll_cost_s > 0.0 {
-                self.accels[a].overhead(self.cfg.profile.poll_cost_s);
-            }
-            let now = self.accels[a].free_at();
-
-            // Alg. 2 line 7: if the CSD finished a batch, train with it.
-            if let Some(p) = self.csd.take_ready(a as u16, now) {
-                self.consume(a, p.batch, BatchSource::Csd, now);
-                if self.consumed[a] >= self.shard_len(a) {
-                    continue; // break-check after the CSD consume
-                }
-            }
-            let now = self.accels[a].free_at();
-            // Alg. 2 line 11: one CPU batch.
-            if let Some(r) = self.cpu_next(a, now) {
-                self.consume(a, r.batch, BatchSource::Cpu, r.ready);
-            } else {
-                // Head exhausted: drain CSD products (wait if needed).
-                if let Some(p) = self.csd.take_next(a as u16) {
-                    self.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
-                } else if self.cursors[a].remaining() > 0 {
-                    // Tail claims remain but production lagged: force one.
-                    if self.csd_produce_one(a as u16, a) {
-                        let p = self.csd.take_next(a as u16).expect("just produced");
-                        self.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
-                    }
-                } else if self.consumed[a] < self.shard_len(a) {
-                    bail!("wrr: accelerator {a} starved at {now:.3}s");
-                }
-            }
-        }
-        // Alg. 2 line 15: total == n → signal the CSD to stop.
-        let end = self.accels.iter().map(|x| x.free_at()).fold(0.0, f64::max);
-        self.csd.stop(end);
-        Ok(())
-    }
-
-    fn run(mut self) -> Result<(RunReport, Trace)> {
-        for _epoch in 0..self.cfg.epochs {
-            self.reset_epoch();
-            match self.cfg.strategy {
-                Strategy::CpuOnly => self.epoch_cpu_only()?,
-                Strategy::CsdOnly => self.epoch_csd_only()?,
-                Strategy::Mte => self.epoch_mte()?,
-                Strategy::Wrr => self.epoch_wrr()?,
-            }
-        }
-        let report = self.build_report();
-        Ok((report, self.trace))
-    }
-
-    fn build_report(&mut self) -> RunReport {
-        self.wasted += self.csd.wasted();
-        for q in &self.queues {
-            self.wasted += q.len() as u32;
-        }
-        let makespan = self
-            .accels
-            .iter()
-            .map(|a| a.free_at())
-            .fold(self.trace.makespan(), f64::max);
-        let n = self.total_consumed.max(1);
-        let t = &self.trace;
-        let host_busy = t.busy_where(|s| s.device.is_host_cpu());
-        // DDP main processes (one per accelerator) + worker processes.
-        let n_processes = match self.cfg.strategy {
-            Strategy::CsdOnly => 0, // paper bills the CSD column CSD-only
-            _ => self.cfg.n_accel + self.cfg.num_workers,
-        };
-        let energy = compute_energy(
-            &self.cfg.profile.power,
-            makespan,
-            n_processes,
-            self.cfg.strategy.uses_csd(),
-            n as u32,
-        );
-        RunReport {
-            makespan,
-            n_batches: n as u32,
-            learn_time_per_batch: makespan / n as f64,
-            t_io: t.busy_where(|s| s.phase == Phase::SsdRead),
-            t_cpu: t.busy_where(|s| s.phase == Phase::CpuPreprocess),
-            t_csd: t.busy_where(|s| s.device == Device::Csd),
-            t_gpu: t.busy_where(|s| s.phase == Phase::Train),
-            t_gds: t.busy_where(|s| s.phase == Phase::GdsRead),
-            cpu_dram_time_per_batch: host_busy / n as f64,
-            batches_from_csd: self.total_from_csd as u32,
-            wasted_batches: self.wasted,
-            energy,
-        }
-    }
-}
-
-/// Eq. 2–3: the CPU-side share of `n` given measured per-batch times.
-fn mte_split(n: u32, t_cpu: f64, t_csd: f64) -> u32 {
-    // p_cpu/p_csd = t_csd/t_cpu  ⇒  n_cpu = n·t_csd/(t_cpu+t_csd)
-    let frac = t_csd / (t_cpu + t_csd);
-    ((n as f64 * frac).round() as u32).min(n)
-}
+use crate::trace::Trace;
 
 /// Run all epochs of `cfg` against `costs`.
 pub fn run_schedule(
@@ -533,22 +26,35 @@ pub fn run_schedule(
     spec: &DatasetSpec,
     costs: &mut dyn CostProvider,
 ) -> Result<(RunReport, Trace)> {
-    Sched::new(cfg, spec, costs).run()
+    let mut policy = policies::for_config(cfg);
+    engine::run(cfg, spec, costs, policy.as_mut())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::cost::FixedCosts;
+    use crate::coordinator::Strategy;
+    use crate::pipeline::PipelineKind;
 
     #[test]
-    fn mte_split_matches_toy() {
-        // toy: t_cpu=0.25, t_csd=1.0, n=1000 → 800 (Eq. 4)
-        assert_eq!(mte_split(1000, 0.25, 1.0), 800);
-    }
-
-    #[test]
-    fn mte_split_bounds() {
-        assert_eq!(mte_split(10, 1.0, 1e12), 10);
-        assert_eq!(mte_split(10, 1e12, 1.0), 0);
+    fn shim_runs_every_strategy() {
+        for s in Strategy::ALL {
+            let cfg = ExperimentConfig::builder()
+                .model("wrn")
+                .strategy(s)
+                .n_batches(40)
+                .build()
+                .unwrap();
+            let spec = DatasetSpec {
+                n_batches: 40,
+                batch_size: 1,
+                pipeline: PipelineKind::ImageNet1,
+                seed: 0,
+            };
+            let mut costs = FixedCosts::toy_fig6();
+            let (report, _) = run_schedule(&cfg, &spec, &mut costs).unwrap();
+            assert_eq!(report.n_batches, 40, "{s}");
+        }
     }
 }

@@ -1,4 +1,5 @@
-//! CSD engine: the near-storage side of the dual-pronged pipeline.
+//! CSD engine: the near-storage side of the dual-pronged pipeline,
+//! driven by the tail cursor of [`crate::coordinator::engine::Engine`].
 //!
 //! Models the paper's Zynq-7000/Newport-style device: a single
 //! energy-efficient core that, on receiving the one-shot start signal

@@ -13,7 +13,7 @@ use crate::sim::Secs;
 const J_PER_KWH: f64 = 3.6e6;
 
 /// Energy outcome of one run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EnergyReport {
     /// Average Joules per consumed batch (Table VIII left numbers).
     pub joules_per_batch: f64,

@@ -1,4 +1,5 @@
-//! Host engine: the CPU side of the dual-pronged pipeline.
+//! Host engine: the CPU side of the dual-pronged pipeline, driven by
+//! the head cursor of [`crate::coordinator::engine::Engine`].
 //!
 //! Models a PyTorch-style DataLoader: `num_workers == 0` preprocesses in
 //! the main process (read+pp serialize with training on the consumer
@@ -111,6 +112,25 @@ impl HostEngine {
     pub fn cpu_busy(&self) -> Secs {
         self.main.busy_total() + self.pool.as_ref().map_or(0.0, |p| p.busy_total())
     }
+
+    /// Estimated steady-state delivery interval between batches on this
+    /// host (seconds/batch): serial read+pp+H2D in main-process mode;
+    /// in worker mode, the lane occupancy `read + pp·lane_factor`
+    /// amortized over the pool, floored by the serial collate+H2D
+    /// hand-off on the main process (Amdahl). This is the engine's
+    /// source for [`crate::coordinator::engine::BatchReady`]
+    /// observations, kept here so it can never drift from the timing
+    /// model [`HostEngine::schedule_batch`] actually applies.
+    pub fn pace_estimate(&self, cost: &HostBatchCost) -> Secs {
+        match &self.pool {
+            None => cost.read_s + cost.pp_s + cost.xfer_s,
+            Some(pool) => {
+                let w = pool.len() as f64;
+                let worker_pace = (cost.read_s + cost.pp_s * self.lane_factor) / w;
+                worker_pace.max(self.collate_s + cost.xfer_s)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +189,19 @@ mod tests {
         let mut t = Trace::new();
         h.schedule_batch(0, &cost(), 0.0, &mut t);
         assert!((h.cpu_busy() - 1.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pace_estimate_matches_both_modes() {
+        // main-process mode: the full serial path
+        let h0 = HostEngine::new(0, 0.85, 1.7);
+        assert!((h0.pace_estimate(&cost()) - 1.15).abs() < 1e-9);
+        // perfect 4-way scaling, no collate: lane 1.1s / 4 = 0.275
+        let h4 = HostEngine::new(4, 1.0, 0.0);
+        assert!((h4.pace_estimate(&cost()) - 0.275).abs() < 1e-9);
+        // 16 workers: the serial collate+H2D floor dominates
+        let h16 = HostEngine::new(16, 0.85, 1.7);
+        assert!((h16.pace_estimate(&cost()) - 1.75).abs() < 1e-9);
     }
 
     #[test]

@@ -8,12 +8,16 @@
 //!   [`coordinator`] module implements the MTE and WRR strategies that
 //!   let the host CPU and a Computational Storage Device preprocess a
 //!   dataset from both ends simultaneously while the accelerator
-//!   dynamically consumes whichever side is ready.
+//!   dynamically consumes whichever side is ready, plus an Adaptive
+//!   hybrid that starts with WRR's polling and hands over to MTE's
+//!   pre-allocation once batch times settle. The scheduler is split
+//!   into a strategy-agnostic engine ([`coordinator::engine`]) and
+//!   pluggable policies ([`coordinator::policies`]).
 //! * **L2/L1 (build-time python)** — the Table IV preprocessing
 //!   pipelines (Pallas kernels fused into JAX graphs) and tiny trainable
 //!   models, AOT-lowered to HLO text in `artifacts/` and executed here
-//!   through the PJRT C API ([`runtime`]). Python never runs on the
-//!   request path.
+//!   through the PJRT C API ([`runtime`], behind the `pjrt` cargo
+//!   feature). Python never runs on the request path.
 //!
 //! Hardware the paper requires (A100/TPU accelerators, a Zynq CSD,
 //! GPUDirect Storage) is simulated by calibrated device models driven in

@@ -77,8 +77,9 @@ fn real_main() -> Result<()> {
                  usage:\n  ddlp run   [--config FILE] [--set k=v]...\n  \
                  ddlp sweep [--config FILE] [--set k=v]...\n  \
                  ddlp e2e   [--artifacts DIR] [--set k=v]...\n  \
-                 ddlp version\n\nconfig keys: model, pipeline, strategy, num_workers, \
-                 n_accel, n_batches, epochs, loader, seed, csd_slowdown, ...\n\
+                 ddlp version\n\nconfig keys: model, pipeline, strategy (cpu|csd|mte|wrr|adaptive), \
+                 num_workers, n_accel, n_batches, epochs, loader, seed, csd_slowdown, \
+                 adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()
             );

@@ -9,7 +9,11 @@ use crate::sim::Secs;
 
 /// §VII-C decomposition of one run plus the per-batch aggregates the
 /// tables report.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is bit-exact on the f64 fields — the golden-parity suite
+/// asserts the engine/policy scheduler reproduces the pre-refactor
+/// monolith to the last bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
     /// Wall-clock (virtual) seconds for the whole run.
     pub makespan: Secs,

@@ -1,0 +1,194 @@
+//! PJRT glue: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
+//! `HloModuleProto` → `XlaComputation` → compile → execute. Text is the
+//! interchange format because jax ≥ 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1's proto path rejects (see aot.py).
+//!
+//! Executables compile lazily and are cached; one compiled executable
+//! per model/pipeline variant, reused across every batch of a run.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::util::tensorfile::{DType, Tensor};
+
+/// DTNS dtype → xla element type.
+fn element_type(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::U8 => xla::ElementType::U8,
+        DType::I32 => xla::ElementType::S32,
+        DType::I64 => xla::ElementType::S64,
+    }
+}
+
+/// Convert a DTNS tensor into an xla literal (zero reinterpretation:
+/// both sides are little-endian C-contiguous).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(element_type(t.dtype), &t.dims, &t.data)
+        .map_err(|e| anyhow::anyhow!("literal for {}: {e:?}", t.name))
+}
+
+/// Convert an xla literal back to a DTNS tensor.
+pub fn literal_to_tensor(name: &str, lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = match shape.ty() {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::U8 => DType::U8,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::S64 => DType::I64,
+        other => bail!("unsupported element type {other:?}"),
+    };
+    let data = raw_bytes(lit, dtype)?;
+    Ok(Tensor {
+        name: name.to_string(),
+        dtype,
+        dims,
+        data,
+    })
+}
+
+fn raw_bytes(lit: &xla::Literal, dtype: DType) -> Result<Vec<u8>> {
+    Ok(match dtype {
+        DType::F32 => {
+            let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let mut out = Vec::with_capacity(v.len() * 4);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        DType::I32 => {
+            let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let mut out = Vec::with_capacity(v.len() * 4);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        DType::I64 => {
+            let v: Vec<i64> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let mut out = Vec::with_capacity(v.len() * 8);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        DType::U8 => {
+            let v: Vec<u8> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            v
+        }
+    })
+}
+
+/// The artifact runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.path(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on literal inputs; returns the decomposed
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let spec = self.manifest.get(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, expected {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let exe = self.exes.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        let mut tuple = tuple;
+        tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Load a DTNS file from the artifacts dir as literals.
+    pub fn load_tensors(&self, rel: &str) -> Result<Vec<(String, xla::Literal)>> {
+        let tensors = crate::util::tensorfile::read_tensors(&self.manifest.path(rel))?;
+        tensors
+            .iter()
+            .map(|t| Ok((t.name.clone(), tensor_to_literal(t)?)))
+            .collect()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn loaded_count(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+/// Helper: f32 literal from a slice + dims.
+pub fn f32_literal(dims: &[usize], vals: &[f32]) -> Result<xla::Literal> {
+    tensor_to_literal(&Tensor::from_f32("x", dims, vals))
+}
+
+/// Helper: u8 literal.
+pub fn u8_literal(dims: &[usize], vals: Vec<u8>) -> Result<xla::Literal> {
+    tensor_to_literal(&Tensor::from_u8("x", dims, vals))
+}
+
+/// Helper: i32 literal.
+pub fn i32_literal(dims: &[usize], vals: &[i32]) -> Result<xla::Literal> {
+    tensor_to_literal(&Tensor::from_i32("x", dims, vals))
+}
+
+/// Helper: scalar f32 from a literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?
+        .first()
+        .copied()
+        .context("empty literal")
+}

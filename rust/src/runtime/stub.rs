@@ -1,0 +1,63 @@
+//! Stub real-execution session for builds without the `pjrt` feature.
+//!
+//! The offline image does not ship the `xla` crate, so `ExecMode::Real`
+//! cannot execute artifacts. This stub keeps the coordinator's
+//! real-mode code path compiling (same public surface as the PJRT
+//! [`RealSession`]) and fails fast — with an actionable message — the
+//! moment a session is constructed. Analytic mode is unaffected.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::DeviceProfile;
+use crate::coordinator::cost::{CostProvider, CsdBatchCost, HostBatchCost, TrainCost};
+use crate::dataset::BatchId;
+
+/// Unconstructable placeholder for the PJRT-backed session.
+pub struct RealSession {
+    _unconstructable: std::convert::Infallible,
+}
+
+impl RealSession {
+    /// Always fails: this build carries no PJRT runtime.
+    pub fn new(
+        _artifacts_dir: &Path,
+        _pipeline_artifact: &str,
+        _train_artifact: &str,
+        _seed: u64,
+        _profile: &DeviceProfile,
+    ) -> Result<RealSession> {
+        bail!(
+            "this build has no PJRT runtime: rebuild with `--features pjrt` (and the \
+             vendored `xla` crate wired into rust/Cargo.toml) to run ExecMode::Real"
+        );
+    }
+
+    pub fn losses(&self) -> &[f32] {
+        &[]
+    }
+
+    pub fn steps(&self) -> u64 {
+        0
+    }
+
+    /// Batches preprocessed but not yet trained.
+    pub fn pending_count(&self) -> usize {
+        0
+    }
+}
+
+impl CostProvider for RealSession {
+    fn host_batch(&mut self, _b: BatchId) -> HostBatchCost {
+        match self._unconstructable {}
+    }
+
+    fn csd_batch(&mut self, _b: BatchId) -> CsdBatchCost {
+        match self._unconstructable {}
+    }
+
+    fn train(&mut self, _b: BatchId, _from_csd: bool) -> TrainCost {
+        match self._unconstructable {}
+    }
+}

@@ -49,8 +49,9 @@ pub enum Phase {
     AccelPreprocess,
 }
 
-/// One scheduled interval.
-#[derive(Debug, Clone, Copy)]
+/// One scheduled interval. (`PartialEq` is bit-exact on start/end —
+/// used by the golden-parity suite.)
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Span {
     pub device: Device,
     pub phase: Phase,

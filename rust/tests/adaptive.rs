@@ -1,0 +1,264 @@
+//! The Adaptive hybrid strategy: WRR polling until observed batch-time
+//! variance settles, then MTE-style pre-allocation.
+//!
+//! Covers: CLI/config exposure, byte-parity with WRR while polling,
+//! exactly-once consumption under 1/2/4 accelerators across epochs,
+//! the mode switch (later epochs show MTE's deterministic block order),
+//! and refusal to switch while service times stay noisy.
+
+use ddlp::config::{AdaptiveParams, DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::{CostProvider, CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::dataset::{BatchId, DatasetSpec};
+use ddlp::pipeline::PipelineKind;
+use ddlp::trace::{Device, Phase, Trace};
+use ddlp::util::prop::{run_prop, Gen};
+
+fn cfg(strategy: Strategy, n: u32, workers: u32, n_accel: u32, epochs: u32) -> ExperimentConfig {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .num_workers(workers)
+        .n_accel(n_accel)
+        .n_batches(n)
+        .epochs(epochs)
+        .profile(profile)
+        .build()
+        .unwrap()
+}
+
+fn spec(n: u32) -> DatasetSpec {
+    DatasetSpec {
+        n_batches: n,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    }
+}
+
+fn rand_costs(g: &mut Gen) -> FixedCosts {
+    let pp = g.float(0.05, 1.0);
+    let csd_pp = pp * g.float(1.5, 10.0);
+    let train = g.float(0.01, 0.5);
+    FixedCosts {
+        host: HostBatchCost {
+            read_s: g.float(0.0, 0.05),
+            pp_s: pp,
+            xfer_s: g.float(0.0, 0.02),
+            accel_pp_s: 0.0,
+        },
+        csd: CsdBatchCost {
+            read_s: g.float(0.0, 0.05),
+            pp_s: csd_pp,
+            write_s: g.float(0.0, 0.05),
+        },
+        train_cpu: TrainCost {
+            gds_s: 0.0,
+            train_s: train,
+        },
+        train_csd: TrainCost {
+            gds_s: g.float(0.0, 0.05),
+            train_s: train,
+        },
+    }
+}
+
+/// For each Train span on `dev`, in consumption order: was the batch
+/// CSD-fed? (The accelerator records a GdsRead immediately before the
+/// Train of a CSD-sourced batch; trace order is recording order.)
+fn train_sources(trace: &Trace, dev: Device) -> Vec<(u32, bool)> {
+    let mut out = Vec::new();
+    let mut prev_gds: Option<u32> = None;
+    for s in trace.spans.iter().filter(|s| s.device == dev) {
+        match s.phase {
+            Phase::GdsRead => prev_gds = Some(s.batch.unwrap()),
+            Phase::Train => {
+                let b = s.batch.unwrap();
+                out.push((b, prev_gds == Some(b)));
+                prev_gds = None;
+            }
+            _ => prev_gds = None,
+        }
+    }
+    out
+}
+
+#[test]
+fn adaptive_runs_in_analytic_mode_under_1_2_4_accels() {
+    for n_accel in [1u32, 2, 4] {
+        let c = cfg(Strategy::Adaptive, 64, 0, n_accel, 2);
+        let report = run_experiment(&c).unwrap().report;
+        assert_eq!(report.n_batches, 128, "n_accel={n_accel}");
+        assert!(report.batches_from_csd > 0, "n_accel={n_accel}: csd idle");
+        assert!(report.makespan > 0.0);
+    }
+}
+
+#[test]
+fn adaptive_first_epoch_is_byte_identical_to_wrr() {
+    // Before any calibration the policy *is* WRR — reports and traces
+    // must match bit for bit under every accelerator count.
+    for n_accel in [1u32, 2, 4] {
+        let mut ca = FixedCosts::toy_fig6();
+        let mut cw = FixedCosts::toy_fig6();
+        let (ra, ta) = run_schedule(
+            &cfg(Strategy::Adaptive, 120, 0, n_accel, 1),
+            &spec(120),
+            &mut ca,
+        )
+        .unwrap();
+        let (rw, tw) = run_schedule(
+            &cfg(Strategy::Wrr, 120, 0, n_accel, 1),
+            &spec(120),
+            &mut cw,
+        )
+        .unwrap();
+        assert_eq!(ra.makespan, rw.makespan, "n_accel={n_accel}");
+        assert_eq!(ra.batches_from_csd, rw.batches_from_csd);
+        assert_eq!(ta.spans, tw.spans, "n_accel={n_accel}: trace diverged");
+    }
+}
+
+#[test]
+fn prop_adaptive_exactly_once_consumption() {
+    // The core safety property across mode switches: every batch of
+    // every shard is trained exactly once per epoch.
+    run_prop("adaptive: exactly-once per epoch", 40, |g| {
+        let n = g.size(50, 250) as u32;
+        let n_accel = *g.choose(&[1u32, 2, 4]);
+        let workers = *g.choose(&[0u32, 4, 16]);
+        let epochs = *g.choose(&[1u32, 2, 3]);
+        let mut costs = rand_costs(g);
+        let c = cfg(Strategy::Adaptive, n, workers, n_accel, epochs);
+        let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        assert_eq!(report.n_batches, n * epochs);
+        let mut counts = vec![0u32; n as usize];
+        for s in &trace.spans {
+            if s.phase == Phase::Train {
+                counts[s.batch.unwrap() as usize] += 1;
+            }
+        }
+        for (b, &cnt) in counts.iter().enumerate() {
+            assert_eq!(cnt, epochs, "batch {b} trained {cnt} times, want {epochs}");
+        }
+    });
+}
+
+#[test]
+fn adaptive_switches_to_prealloc_after_variance_settles() {
+    // Deterministic costs → cv = 0 → the switch fires after epoch 1.
+    // Post-switch epochs must show MTE's signature: each accelerator
+    // consumes its whole CPU block before any CSD batch. Epoch 1 (WRR
+    // polling) interleaves CSD consumption with CPU consumption.
+    let n = 200u32;
+    let epochs = 3u32;
+    let mut costs = FixedCosts::toy_fig6();
+    let c = cfg(Strategy::Adaptive, n, 0, 1, epochs);
+    let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+    assert_eq!(report.n_batches, n * epochs);
+
+    let srcs = train_sources(&trace, Device::Accel(0));
+    assert_eq!(srcs.len(), (n * epochs) as usize);
+    let epoch = |e: usize| &srcs[e * n as usize..(e + 1) * n as usize];
+
+    // Epoch 1: polling interleaves — some CPU batch after the first CSD.
+    let e0 = epoch(0);
+    let first_csd = e0.iter().position(|&(_, csd)| csd);
+    let interleaved = match first_csd {
+        Some(i) => e0[i..].iter().any(|&(_, csd)| !csd),
+        None => false,
+    };
+    assert!(interleaved, "epoch 1 should show WRR interleaving");
+
+    // Epochs 2 and 3: pre-allocation — a CPU block then a CSD block,
+    // with both prongs used.
+    for e in 1..epochs as usize {
+        let chunk = epoch(e);
+        let first_csd = chunk
+            .iter()
+            .position(|&(_, csd)| csd)
+            .unwrap_or_else(|| panic!("epoch {} consumed no CSD batch", e + 1));
+        assert!(first_csd > 0, "epoch {} consumed no CPU batch", e + 1);
+        assert!(
+            chunk[first_csd..].iter().all(|&(_, csd)| csd),
+            "epoch {}: CPU batch consumed after a CSD batch (still polling?)",
+            e + 1
+        );
+    }
+}
+
+/// Per-batch cost provider whose CPU/CSD service times oscillate far
+/// beyond the switch threshold.
+struct NoisyCosts {
+    base: FixedCosts,
+}
+
+impl CostProvider for NoisyCosts {
+    fn host_batch(&mut self, b: BatchId) -> HostBatchCost {
+        let mut c = self.base.host;
+        c.pp_s = if b % 2 == 0 { 0.1 } else { 0.6 };
+        c
+    }
+
+    fn csd_batch(&mut self, b: BatchId) -> CsdBatchCost {
+        let mut c = self.base.csd;
+        c.pp_s = if b % 2 == 0 { 0.5 } else { 2.0 };
+        c
+    }
+
+    fn train(&mut self, b: BatchId, from_csd: bool) -> TrainCost {
+        self.base.train(b, from_csd)
+    }
+}
+
+#[test]
+fn adaptive_keeps_polling_under_noisy_service_times() {
+    // cv of {0.1, 0.6} is ~0.71 ≫ the 0.1 threshold: the policy must
+    // never switch, so the whole multi-epoch run stays byte-identical
+    // to plain WRR.
+    let mk = || NoisyCosts {
+        base: FixedCosts::toy_fig6(),
+    };
+    let mut ca = mk();
+    let mut cw = mk();
+    let (ra, ta) = run_schedule(&cfg(Strategy::Adaptive, 150, 0, 2, 3), &spec(150), &mut ca)
+        .unwrap();
+    let (rw, tw) = run_schedule(&cfg(Strategy::Wrr, 150, 0, 2, 3), &spec(150), &mut cw).unwrap();
+    assert_eq!(ra.makespan, rw.makespan);
+    assert_eq!(ta.spans, tw.spans, "noisy adaptive diverged from wrr");
+}
+
+#[test]
+fn adaptive_exposed_through_config_and_cli_keys() {
+    use ddlp::config::file as cfgfile;
+
+    let text = "strategy = adaptive\nn_batches = 40\n";
+    let c = cfgfile::load(text, &[]).unwrap();
+    assert_eq!(c.strategy, Strategy::Adaptive);
+
+    // --set style overrides, as the ddlp CLI forwards them.
+    let overrides = [
+        ("strategy".to_string(), "adaptive".to_string()),
+        ("adaptive_cv_threshold".to_string(), "0.3".to_string()),
+        ("adaptive_min_samples".to_string(), "4".to_string()),
+    ];
+    let c = cfgfile::load("", &overrides).unwrap();
+    assert_eq!(c.strategy, Strategy::Adaptive);
+    assert_eq!(c.adaptive.cv_threshold, 0.3);
+    assert_eq!(c.adaptive.min_samples, 4);
+
+    // A tighter min_samples still runs end to end.
+    let mut full = cfg(Strategy::Adaptive, 60, 0, 1, 2);
+    full.adaptive = AdaptiveParams {
+        cv_threshold: 0.3,
+        min_samples: 4,
+    };
+    let mut costs = FixedCosts::toy_fig6();
+    let (report, _) = run_schedule(&full, &spec(60), &mut costs).unwrap();
+    assert_eq!(report.n_batches, 120);
+}

@@ -1,0 +1,599 @@
+//! Golden parity: the engine/policy split must be **byte-identical** to
+//! the pre-refactor monolithic scheduler — same `RunReport`, same trace
+//! span sequence, bit-exact f64s — for every strategy × accelerator
+//! count × worker budget × cost model × epoch count combination.
+//!
+//! The reference implementation below (`legacy` module) is the old
+//! `coordinator/schedule.rs` event loop, preserved verbatim (only
+//! `crate::` paths renamed) against the crate's public device engines.
+//! Configs keep `num_workers == 0` or `num_workers >= n_accel` so the
+//! legacy integer-division worker split matches the fixed, clamped one.
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::{AnalyticCosts, CostProvider, FixedCosts};
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::Strategy;
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+
+/// The pre-refactor scheduler, verbatim.
+mod legacy {
+    use std::collections::VecDeque;
+
+    use anyhow::{bail, Result};
+
+    use ddlp::accel::{AccelEngine, BatchSource};
+    use ddlp::config::{ExperimentConfig, Loader};
+    use ddlp::coordinator::cost::CostProvider;
+    use ddlp::coordinator::Strategy;
+    use ddlp::csd::CsdEngine;
+    use ddlp::dataset::{shard_batches, BatchId, DatasetSpec, HeadTailCursor};
+    use ddlp::energy::compute_energy;
+    use ddlp::host::{HostEngine, HostReady};
+    use ddlp::metrics::RunReport;
+    use ddlp::sim::Secs;
+    use ddlp::trace::{Device, Phase, Trace};
+
+    const CAL_BATCHES: u32 = 10;
+    const MAX_ITERS_FACTOR: u64 = 64;
+
+    struct Sched<'a> {
+        cfg: &'a ExperimentConfig,
+        costs: &'a mut dyn CostProvider,
+        trace: Trace,
+        hosts: Vec<HostEngine>,
+        csd: CsdEngine,
+        accels: Vec<AccelEngine>,
+        shards: Vec<Vec<BatchId>>,
+        cursors: Vec<HeadTailCursor>,
+        queues: Vec<VecDeque<HostReady>>,
+        consumed: Vec<u32>,
+        from_csd: Vec<u32>,
+        mte_ratio: Option<(f64, f64)>,
+        total_consumed: u64,
+        total_from_csd: u64,
+        wasted: u32,
+    }
+
+    impl<'a> Sched<'a> {
+        fn new(
+            cfg: &'a ExperimentConfig,
+            spec: &DatasetSpec,
+            costs: &'a mut dyn CostProvider,
+        ) -> Self {
+            let n_accel = cfg.n_accel as usize;
+            let shards: Vec<Vec<BatchId>> = (0..n_accel as u32)
+                .map(|r| shard_batches(spec.n_batches, r, cfg.n_accel))
+                .collect();
+            let w_per = cfg.num_workers / cfg.n_accel;
+            let collate = match cfg.loader {
+                Loader::DaliGpu => {
+                    cfg.profile.collate_overhead_s * cfg.profile.dali_gpu_collate_factor
+                }
+                _ => cfg.profile.collate_overhead_s,
+            };
+            Sched {
+                cfg,
+                costs,
+                trace: if cfg.record_trace {
+                    Trace::with_capacity(6 * (spec.n_batches as usize) * cfg.epochs as usize)
+                } else {
+                    Trace::disabled()
+                },
+                hosts: (0..n_accel)
+                    .map(|_| HostEngine::new(w_per, cfg.profile.worker_scaling_exp, collate))
+                    .collect(),
+                csd: {
+                    let mut csd =
+                        CsdEngine::new(cfg.n_accel as u16, cfg.profile.csd_signal_latency_s);
+                    if cfg.profile.csd_fail_at_s >= 0.0 {
+                        csd.fail_at(cfg.profile.csd_fail_at_s);
+                    }
+                    csd
+                },
+                accels: (0..n_accel).map(|i| AccelEngine::new(i as u16)).collect(),
+                cursors: shards.iter().map(|s| HeadTailCursor::new(s.len() as u32)).collect(),
+                queues: vec![VecDeque::new(); n_accel],
+                consumed: vec![0; n_accel],
+                from_csd: vec![0; n_accel],
+                shards,
+                mte_ratio: None,
+                total_consumed: 0,
+                total_from_csd: 0,
+                wasted: 0,
+            }
+        }
+
+        fn reset_epoch(&mut self) {
+            self.csd.restart();
+            for (a, shard) in self.shards.iter().enumerate() {
+                self.cursors[a] = HeadTailCursor::new(shard.len() as u32);
+                self.wasted += self.queues[a].len() as u32;
+                self.queues[a].clear();
+                self.consumed[a] = 0;
+                self.from_csd[a] = 0;
+            }
+        }
+
+        fn shard_len(&self, a: usize) -> u32 {
+            self.shards[a].len() as u32
+        }
+
+        fn head_id(&self, a: usize, local: BatchId) -> BatchId {
+            self.shards[a][local as usize]
+        }
+
+        fn tail_id(&self, a: usize, local: BatchId) -> BatchId {
+            self.shards[a][local as usize]
+        }
+
+        fn depth(&self, a: usize) -> usize {
+            let w = self.hosts[a].workers();
+            if w == 0 {
+                0
+            } else {
+                w as usize + 1
+            }
+        }
+
+        fn refill(&mut self, a: usize, now: Secs) {
+            let depth = self.depth(a);
+            while self.queues[a].len() < depth {
+                let Some(local) = self.cursors[a].claim_head() else { break };
+                let gid = self.head_id(a, local);
+                let cost = self.costs.host_batch(gid);
+                let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
+                self.queues[a].push_back(ready);
+            }
+        }
+
+        fn cpu_next(&mut self, a: usize, now: Secs) -> Option<HostReady> {
+            if self.depth(a) == 0 {
+                let local = self.cursors[a].claim_head()?;
+                let gid = self.head_id(a, local);
+                let cost = self.costs.host_batch(gid);
+                Some(self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace))
+            } else {
+                self.refill(a, now);
+                self.queues[a].pop_front()
+            }
+        }
+
+        fn csd_produce_one(&mut self, dir: u16, shard_of: usize) -> bool {
+            let Some(local) = self.cursors[shard_of].claim_tail() else {
+                return false;
+            };
+            let gid = self.tail_id(shard_of, local);
+            let cost = self.costs.csd_batch(gid);
+            if self.csd.produce(gid, dir, &cost, &mut self.trace).is_none() {
+                self.cursors[shard_of].unclaim_tail();
+                return false;
+            }
+            true
+        }
+
+        fn consume(&mut self, a: usize, gid: BatchId, source: BatchSource, data_ready: Secs) {
+            let cost = self.costs.train(gid, source == BatchSource::Csd);
+            self.accels[a].consume(gid, source, data_ready, &cost, &mut self.trace);
+            self.consumed[a] += 1;
+            self.total_consumed += 1;
+            if source == BatchSource::Csd {
+                self.from_csd[a] += 1;
+                self.total_from_csd += 1;
+            }
+        }
+
+        fn epoch_cpu_only(&mut self) -> Result<()> {
+            for a in 0..self.accels.len() {
+                while self.consumed[a] < self.shard_len(a) {
+                    let now = self.accels[a].free_at();
+                    let Some(r) = self.cpu_next(a, now) else {
+                        bail!("cpu_only: cursor exhausted early");
+                    };
+                    self.consume(a, r.batch, BatchSource::Cpu, r.ready);
+                }
+            }
+            Ok(())
+        }
+
+        fn epoch_csd_only(&mut self) -> Result<()> {
+            let n = self.accels.len();
+            let mut dir = 0usize;
+            loop {
+                let mut any = false;
+                for _ in 0..n {
+                    if self.csd_produce_one(dir as u16, dir) {
+                        any = true;
+                    }
+                    dir = (dir + 1) % n;
+                }
+                if !any {
+                    break;
+                }
+            }
+            for a in 0..n {
+                while self.consumed[a] < self.shard_len(a) {
+                    let Some(p) = self.csd.take_next(a as u16) else {
+                        bail!("csd_only: production underflow");
+                    };
+                    self.consume(a, p.batch, BatchSource::Csd, p.ready);
+                }
+            }
+            Ok(())
+        }
+
+        fn epoch_mte(&mut self) -> Result<()> {
+            let n_accel = self.accels.len();
+            let csd_share_factor = n_accel as f64;
+            let mut n_cpu: Vec<Option<u32>> = vec![None; n_accel];
+            if let Some((t_cpu, t_csd)) = self.mte_ratio {
+                for (a, slot) in n_cpu.iter_mut().enumerate() {
+                    *slot = Some(mte_split(self.shard_len(a), t_cpu, t_csd * csd_share_factor));
+                }
+            }
+
+            let mut csd_dir = 0usize;
+            let mut csd_done = vec![0u32; n_accel];
+            let cal = CAL_BATCHES.min(self.shard_len(0) / 3).max(1);
+            if self.mte_ratio.is_none() {
+                for _ in 0..cal {
+                    if self.csd_produce_one(0, 0) {
+                        csd_done[0] += 1;
+                    }
+                }
+            }
+
+            let warmup: u32 = if self.shard_len(0) >= 3 * (cal + 2) { 2 } else { 0 };
+            let mut cpu_cal_start: Option<Secs> = None;
+            let mut cpu_cal_end: Option<Secs> = None;
+            let epoch_start: Secs = self.accels.iter().map(|x| x.free_at()).fold(0.0, f64::max);
+
+            let budget = (self.shards.iter().map(|s| s.len() as u64).sum::<u64>() + 16)
+                * MAX_ITERS_FACTOR;
+            let mut iters = 0u64;
+            loop {
+                iters += 1;
+                if iters > budget {
+                    bail!("mte: event loop did not converge");
+                }
+                if n_cpu.iter().any(|x| x.is_none()) {
+                    if let (Some(cpu_end), true) = (cpu_cal_end, csd_done[0] >= cal) {
+                        let cal_base = cpu_cal_start.unwrap_or(epoch_start);
+                        let t_cpu = (cpu_end - cal_base) / cal as f64;
+                        let csd_products = self.csd.produced_ids().len() as f64;
+                        let t_csd =
+                            (self.csd.drain_time() - self.csd.started_at()) / csd_products;
+                        self.mte_ratio = Some((t_cpu, t_csd));
+                        for (a, slot) in n_cpu.iter_mut().enumerate() {
+                            let split =
+                                mte_split(self.shard_len(a), t_cpu, t_csd * csd_share_factor);
+                            *slot = Some(split.max(self.consumed[a] - self.from_csd[a]));
+                        }
+                    }
+                }
+                if let Some(ratio) = self.mte_ratio {
+                    while csd_dir < n_accel {
+                        let quota = self.shard_len(csd_dir)
+                            - n_cpu[csd_dir].unwrap_or_else(|| {
+                                mte_split(
+                                    self.shard_len(csd_dir),
+                                    ratio.0,
+                                    ratio.1 * csd_share_factor,
+                                )
+                            });
+                        if csd_done[csd_dir] >= quota {
+                            csd_dir += 1;
+                            continue;
+                        }
+                        if self.csd_produce_one(csd_dir as u16, csd_dir) {
+                            csd_done[csd_dir] += 1;
+                        } else {
+                            csd_dir += 1;
+                        }
+                    }
+                }
+
+                let Some(a) = (0..n_accel)
+                    .filter(|&a| self.consumed[a] < self.shard_len(a))
+                    .min_by(|&x, &y| {
+                        self.accels[x]
+                            .free_at()
+                            .partial_cmp(&self.accels[y].free_at())
+                            .unwrap()
+                    })
+                else {
+                    break;
+                };
+                let now = self.accels[a].free_at();
+                let cpu_phase_active = match n_cpu[a] {
+                    None => true,
+                    Some(limit) => (self.consumed[a] - self.from_csd[a]) < limit,
+                };
+                if cpu_phase_active {
+                    if let Some(r) = self.cpu_next(a, now) {
+                        self.consume(a, r.batch, BatchSource::Cpu, r.ready);
+                        if a == 0 {
+                            let done = self.consumed[0] - self.from_csd[0];
+                            if warmup > 0 && cpu_cal_start.is_none() && done == warmup {
+                                cpu_cal_start = Some(self.accels[0].free_at());
+                            }
+                            if cpu_cal_end.is_none() && done == warmup + cal {
+                                cpu_cal_end = Some(self.accels[0].free_at());
+                            }
+                        }
+                        continue;
+                    }
+                    if n_cpu[a].is_none() {
+                        n_cpu[a] = Some(self.consumed[a] - self.from_csd[a]);
+                    }
+                }
+                if let Some(p) = self.csd.take_next(a as u16) {
+                    self.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
+                } else if self.cursors[a].remaining() > 0 && self.csd_produce_one(a as u16, a) {
+                    csd_done[a] += 1;
+                } else if let Some(r) = self.cpu_next(a, now) {
+                    self.consume(a, r.batch, BatchSource::Cpu, r.ready);
+                } else {
+                    bail!("mte: accelerator {a} starved at {now:.3}s");
+                }
+            }
+            Ok(())
+        }
+
+        fn epoch_wrr(&mut self) -> Result<()> {
+            let n_accel = self.accels.len();
+            let mut rr = 0usize;
+            let budget = (self.shards.iter().map(|s| s.len() as u64).sum::<u64>() + 16)
+                * MAX_ITERS_FACTOR;
+            let mut iters = 0u64;
+            loop {
+                iters += 1;
+                if iters > budget {
+                    bail!("wrr: event loop did not converge");
+                }
+                let Some(a) = (0..n_accel)
+                    .filter(|&a| self.consumed[a] < self.shard_len(a))
+                    .min_by(|&x, &y| {
+                        self.accels[x]
+                            .free_at()
+                            .partial_cmp(&self.accels[y].free_at())
+                            .unwrap()
+                    })
+                else {
+                    break;
+                };
+                let now = self.accels[a].free_at();
+
+                let mut guard = 0;
+                while self.csd.drain_time() <= now && guard < 4 * n_accel {
+                    let dir = rr % n_accel;
+                    rr += 1;
+                    if self.consumed[dir] < self.shard_len(dir)
+                        && self.csd_produce_one(dir as u16, dir)
+                    {
+                        guard = 0;
+                    } else {
+                        guard += 1;
+                    }
+                }
+
+                if self.cfg.profile.poll_cost_s > 0.0 {
+                    self.accels[a].overhead(self.cfg.profile.poll_cost_s);
+                }
+                let now = self.accels[a].free_at();
+
+                if let Some(p) = self.csd.take_ready(a as u16, now) {
+                    self.consume(a, p.batch, BatchSource::Csd, now);
+                    if self.consumed[a] >= self.shard_len(a) {
+                        continue;
+                    }
+                }
+                let now = self.accels[a].free_at();
+                if let Some(r) = self.cpu_next(a, now) {
+                    self.consume(a, r.batch, BatchSource::Cpu, r.ready);
+                } else {
+                    if let Some(p) = self.csd.take_next(a as u16) {
+                        self.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
+                    } else if self.cursors[a].remaining() > 0 {
+                        if self.csd_produce_one(a as u16, a) {
+                            let p = self.csd.take_next(a as u16).expect("just produced");
+                            self.consume(a, p.batch, BatchSource::Csd, p.ready.max(now));
+                        }
+                    } else if self.consumed[a] < self.shard_len(a) {
+                        bail!("wrr: accelerator {a} starved at {now:.3}s");
+                    }
+                }
+            }
+            let end = self.accels.iter().map(|x| x.free_at()).fold(0.0, f64::max);
+            self.csd.stop(end);
+            Ok(())
+        }
+
+        fn run(mut self) -> Result<(RunReport, Trace)> {
+            for _epoch in 0..self.cfg.epochs {
+                self.reset_epoch();
+                match self.cfg.strategy {
+                    Strategy::CpuOnly => self.epoch_cpu_only()?,
+                    Strategy::CsdOnly => self.epoch_csd_only()?,
+                    Strategy::Mte => self.epoch_mte()?,
+                    Strategy::Wrr => self.epoch_wrr()?,
+                    Strategy::Adaptive => bail!("legacy scheduler predates adaptive"),
+                }
+            }
+            let report = self.build_report();
+            Ok((report, self.trace))
+        }
+
+        fn build_report(&mut self) -> RunReport {
+            self.wasted += self.csd.wasted();
+            for q in &self.queues {
+                self.wasted += q.len() as u32;
+            }
+            let makespan = self
+                .accels
+                .iter()
+                .map(|a| a.free_at())
+                .fold(self.trace.makespan(), f64::max);
+            let n = self.total_consumed.max(1);
+            let t = &self.trace;
+            let host_busy = t.busy_where(|s| s.device.is_host_cpu());
+            let n_processes = match self.cfg.strategy {
+                Strategy::CsdOnly => 0,
+                _ => self.cfg.n_accel + self.cfg.num_workers,
+            };
+            let energy = compute_energy(
+                &self.cfg.profile.power,
+                makespan,
+                n_processes,
+                self.cfg.strategy.uses_csd(),
+                n as u32,
+            );
+            RunReport {
+                makespan,
+                n_batches: n as u32,
+                learn_time_per_batch: makespan / n as f64,
+                t_io: t.busy_where(|s| s.phase == Phase::SsdRead),
+                t_cpu: t.busy_where(|s| s.phase == Phase::CpuPreprocess),
+                t_csd: t.busy_where(|s| s.device == Device::Csd),
+                t_gpu: t.busy_where(|s| s.phase == Phase::Train),
+                t_gds: t.busy_where(|s| s.phase == Phase::GdsRead),
+                cpu_dram_time_per_batch: host_busy / n as f64,
+                batches_from_csd: self.total_from_csd as u32,
+                wasted_batches: self.wasted,
+                energy,
+            }
+        }
+    }
+
+    fn mte_split(n: u32, t_cpu: f64, t_csd: f64) -> u32 {
+        let frac = t_csd / (t_cpu + t_csd);
+        ((n as f64 * frac).round() as u32).min(n)
+    }
+
+    pub fn run_schedule_legacy(
+        cfg: &ExperimentConfig,
+        spec: &DatasetSpec,
+        costs: &mut dyn CostProvider,
+    ) -> Result<(RunReport, Trace)> {
+        Sched::new(cfg, spec, costs).run()
+    }
+}
+
+const N_BATCHES: u32 = 120;
+
+fn cfg(strategy: Strategy, n_accel: u32, workers: u32, epochs: u32) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .num_workers(workers)
+        .n_accel(n_accel)
+        .n_batches(N_BATCHES)
+        .epochs(epochs)
+        .build()
+        .unwrap()
+}
+
+fn spec() -> DatasetSpec {
+    DatasetSpec {
+        n_batches: N_BATCHES,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    }
+}
+
+fn assert_parity(
+    c: &ExperimentConfig,
+    costs_new: &mut dyn CostProvider,
+    costs_old: &mut dyn CostProvider,
+) {
+    let label = format!(
+        "{} n_accel={} workers={} epochs={}",
+        c.strategy, c.n_accel, c.num_workers, c.epochs
+    );
+    let (r_new, t_new) = run_schedule(c, &spec(), costs_new).unwrap();
+    let (r_old, t_old) = legacy::run_schedule_legacy(c, &spec(), costs_old).unwrap();
+    assert_eq!(r_new, r_old, "RunReport diverged: {label}");
+    assert_eq!(
+        t_new.spans.len(),
+        t_old.spans.len(),
+        "span count diverged: {label}"
+    );
+    for (i, (sn, so)) in t_new.spans.iter().zip(t_old.spans.iter()).enumerate() {
+        assert_eq!(sn, so, "span {i} diverged: {label}");
+    }
+}
+
+const LEGACY_STRATEGIES: [Strategy; 4] = [
+    Strategy::CpuOnly,
+    Strategy::CsdOnly,
+    Strategy::Mte,
+    Strategy::Wrr,
+];
+
+#[test]
+fn parity_fixed_costs_all_strategies_accels_workers_epochs() {
+    for strategy in LEGACY_STRATEGIES {
+        for n_accel in [1u32, 2, 4] {
+            for workers in [0u32, 16] {
+                for epochs in [1u32, 3] {
+                    let c = cfg(strategy, n_accel, workers, epochs);
+                    let mut a = FixedCosts::toy_fig6();
+                    let mut b = FixedCosts::toy_fig6();
+                    assert_parity(&c, &mut a, &mut b);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_analytic_costs_all_strategies_accels() {
+    for strategy in LEGACY_STRATEGIES {
+        for n_accel in [1u32, 2, 4] {
+            for workers in [0u32, 16] {
+                let c = cfg(strategy, n_accel, workers, 2);
+                let mut a = AnalyticCosts::new(&c, &spec()).unwrap();
+                let mut b = a.clone();
+                assert_parity(&c, &mut a, &mut b);
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_with_zeroed_latency_profile() {
+    // The profile used throughout the invariants suite.
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    for strategy in LEGACY_STRATEGIES {
+        for n_accel in [1u32, 2, 4] {
+            let c = ExperimentConfig::builder()
+                .model("wrn")
+                .pipeline_kind(PipelineKind::ImageNet1)
+                .strategy(strategy)
+                .n_accel(n_accel)
+                .n_batches(N_BATCHES)
+                .profile(profile.clone())
+                .build()
+                .unwrap();
+            let mut a = FixedCosts::toy_fig6();
+            let mut b = FixedCosts::toy_fig6();
+            assert_parity(&c, &mut a, &mut b);
+        }
+    }
+}
+
+#[test]
+fn parity_under_csd_failure() {
+    // Graceful-degradation paths must also be preserved exactly.
+    for strategy in [Strategy::Mte, Strategy::Wrr] {
+        let mut c = cfg(strategy, 2, 0, 2);
+        c.profile.csd_fail_at_s = 40.0;
+        let mut a = FixedCosts::toy_fig6();
+        let mut b = FixedCosts::toy_fig6();
+        assert_parity(&c, &mut a, &mut b);
+    }
+}

@@ -104,6 +104,36 @@ fn csd_directories_keyed_by_gpu() {
 }
 
 #[test]
+fn worker_budget_validated_and_clamped() {
+    // The host-wide worker budget is split across per-accelerator
+    // DataLoaders. A non-zero budget below n_accel used to truncate to
+    // 0 workers per host silently; the builder now rejects it.
+    let err = ExperimentConfig::builder()
+        .model("resnet152")
+        .num_workers(2)
+        .n_accel(4)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("num_workers"), "{err}");
+
+    // A hand-built config that bypasses the builder is clamped to at
+    // least one worker per host instead of degrading to main-process
+    // loading.
+    let mut c = cfg(Strategy::Wrr, 2, 100, 2);
+    c.num_workers = 1; // budget 1 across 2 accelerators
+    let mut costs = FixedCosts::toy_fig6();
+    let (report, trace) = run_schedule(&c, &spec(100), &mut costs).unwrap();
+    assert_eq!(report.n_batches, 100);
+    let worker_busy = trace.busy_where(|s| matches!(s.device, Device::CpuWorker(_)));
+    assert!(worker_busy > 0.0, "clamp failed: no worker lanes used");
+    let mut seen = vec![0u8; 100];
+    for s in trace.spans.iter().filter(|s| s.phase == Phase::Train) {
+        seen[s.batch.unwrap() as usize] += 1;
+    }
+    assert!(seen.iter().all(|&n| n == 1), "coverage broken under clamp");
+}
+
+#[test]
 fn four_gpus_still_consistent() {
     let mut costs = FixedCosts::toy_fig6();
     let c = cfg(Strategy::Wrr, 4, 403, 0); // non-divisible shard sizes
