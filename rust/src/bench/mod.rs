@@ -5,6 +5,12 @@
 //! All are analytic-mode, steady-state (multi-epoch) measurements at
 //! the paper's batch sizes; see DESIGN.md §Calibration for why only the
 //! *shape* (orderings, ratios, crossovers) is comparable.
+//!
+//! Every table/figure cell is an independent experiment, so the
+//! generators fan the cells out across cores with
+//! [`crate::util::par_map`] and assemble rows in a fixed order —
+//! output is deterministic and byte-identical to the old serial loops
+//! (virtual-time simulation; no shared state between cells).
 
 use anyhow::Result;
 
@@ -15,6 +21,7 @@ use crate::coordinator::{run_experiment, Strategy};
 use crate::dataset::DatasetSpec;
 use crate::metrics::{fmt_s, RunReport, Table};
 use crate::pipeline::PipelineKind;
+use crate::util::par_map;
 
 /// Batches per epoch for the table benches (enough for calibration and
 /// steady state while keeping `cargo bench` fast).
@@ -38,23 +45,23 @@ fn run_one(
         .n_batches(N_BATCHES)
         .epochs(EPOCHS)
         .loader(loader)
+        // Tables only read the RunReport, which streaming stats keep
+        // exact — no need to store ~6·n_batches·epochs spans per cell.
+        .record_trace(false)
         .build()?;
     Ok(run_experiment(&cfg)?.report)
 }
 
-/// The seven Table VI column variants for one row.
-fn table6_row(model: &str, pipeline: PipelineKind, n_accel: u32) -> Result<[f64; 7]> {
-    let tv = Loader::Torchvision;
-    Ok([
-        run_one(model, pipeline, Strategy::CpuOnly, 0, n_accel, tv)?.learn_time_per_batch,
-        run_one(model, pipeline, Strategy::CpuOnly, 16, n_accel, tv)?.learn_time_per_batch,
-        run_one(model, pipeline, Strategy::CsdOnly, 0, n_accel, tv)?.learn_time_per_batch,
-        run_one(model, pipeline, Strategy::Mte, 0, n_accel, tv)?.learn_time_per_batch,
-        run_one(model, pipeline, Strategy::Wrr, 0, n_accel, tv)?.learn_time_per_batch,
-        run_one(model, pipeline, Strategy::Mte, 16, n_accel, tv)?.learn_time_per_batch,
-        run_one(model, pipeline, Strategy::Wrr, 16, n_accel, tv)?.learn_time_per_batch,
-    ])
-}
+/// The seven Table VI / Table VIII column variants.
+const TABLE_VARIANTS: [(Strategy, u32); 7] = [
+    (Strategy::CpuOnly, 0),
+    (Strategy::CpuOnly, 16),
+    (Strategy::CsdOnly, 0),
+    (Strategy::Mte, 0),
+    (Strategy::Wrr, 0),
+    (Strategy::Mte, 16),
+    (Strategy::Wrr, 16),
+];
 
 /// Table VI: average learning time (s) per batch, models × pipelines ×
 /// {CPU₀, CPU₁₆, CSD, MTE₀, WRR₀, MTE₁₆, WRR₁₆}, plus the 2-GPU rows.
@@ -67,17 +74,39 @@ pub fn table6() -> Result<Table> {
         PipelineKind::ImageNet2,
         PipelineKind::ImageNet3,
     ];
+    // (row label, model, pipeline, n_accel) in final table order.
+    let mut rows: Vec<(String, &str, PipelineKind, u32)> = Vec::new();
     for pipeline in imagenet {
         for model in ["wrn", "resnet152", "vit", "vgg", "alexnet"] {
-            let r = table6_row(model, pipeline, 1)?;
-            t.row(row_cells(model, &r, pipeline.name()));
+            rows.push((model.to_string(), model, pipeline, 1));
         }
         if pipeline == PipelineKind::ImageNet1 {
             for model in ["vit", "resnet152"] {
-                let r = table6_row(model, pipeline, 2)?;
-                t.row(row_cells(&format!("{model} (2GPUs)"), &r, pipeline.name()));
+                rows.push((format!("{model} (2GPUs)"), model, pipeline, 2));
             }
         }
+    }
+    // One job per cell: rows × 7 variants, all independent experiments.
+    let jobs: Vec<(&str, PipelineKind, u32, Strategy, u32)> = rows
+        .iter()
+        .flat_map(|row| {
+            let (model, pipeline, n_accel) = (row.1, row.2, row.3);
+            TABLE_VARIANTS
+                .iter()
+                .map(move |&(s, w)| (model, pipeline, n_accel, s, w))
+        })
+        .collect();
+    let cells = par_map(jobs, |(model, pipeline, n_accel, s, w)| {
+        run_one(model, pipeline, s, w, n_accel, Loader::Torchvision)
+            .map(|r| r.learn_time_per_batch)
+    });
+    let mut cells = cells.into_iter();
+    for (label, _, pipeline, _) in &rows {
+        let mut r = [0.0f64; 7];
+        for v in r.iter_mut() {
+            *v = cells.next().expect("cell count mismatch")?;
+        }
+        t.row(row_cells(label, &r, pipeline.name()));
     }
     Ok(t)
 }
@@ -93,15 +122,27 @@ fn row_cells(model: &str, r: &[f64; 7], pipeline: &str) -> Vec<String> {
 pub fn table7() -> Result<Table> {
     let mut t = Table::new(vec!["model", "TV", "DALI_C", "DALI_G", "MTE_D", "WRR_D"]);
     let p = PipelineKind::ImageNet1;
-    for model in ["wrn", "vit"] {
-        let cells = vec![
-            model.to_string(),
-            fmt_s(run_one(model, p, Strategy::CpuOnly, 16, 1, Loader::Torchvision)?.learn_time_per_batch),
-            fmt_s(run_one(model, p, Strategy::CpuOnly, 16, 1, Loader::DaliCpu)?.learn_time_per_batch),
-            fmt_s(run_one(model, p, Strategy::CpuOnly, 16, 1, Loader::DaliGpu)?.learn_time_per_batch),
-            fmt_s(run_one(model, p, Strategy::Mte, 16, 1, Loader::DaliGpu)?.learn_time_per_batch),
-            fmt_s(run_one(model, p, Strategy::Wrr, 16, 1, Loader::DaliGpu)?.learn_time_per_batch),
-        ];
+    const COLS: [(Strategy, Loader); 5] = [
+        (Strategy::CpuOnly, Loader::Torchvision),
+        (Strategy::CpuOnly, Loader::DaliCpu),
+        (Strategy::CpuOnly, Loader::DaliGpu),
+        (Strategy::Mte, Loader::DaliGpu),
+        (Strategy::Wrr, Loader::DaliGpu),
+    ];
+    let models = ["wrn", "vit"];
+    let jobs: Vec<(&str, Strategy, Loader)> = models
+        .iter()
+        .flat_map(|&model| COLS.iter().map(move |&(s, l)| (model, s, l)))
+        .collect();
+    let vals = par_map(jobs, |(model, s, l)| {
+        run_one(model, p, s, 16, 1, l).map(|r| r.learn_time_per_batch)
+    });
+    let mut vals = vals.into_iter();
+    for model in models {
+        let mut cells = vec![model.to_string()];
+        for _ in 0..COLS.len() {
+            cells.push(fmt_s(vals.next().expect("cell count mismatch")?));
+        }
         t.row(cells);
     }
     Ok(t)
@@ -113,20 +154,20 @@ pub fn table8() -> Result<Table> {
         "model", "CPU_0", "CPU_16", "CSD", "MTE_0", "WRR_0", "MTE_16", "WRR_16",
     ]);
     let p = PipelineKind::ImageNet1;
-    let variants: [(Strategy, u32); 7] = [
-        (Strategy::CpuOnly, 0),
-        (Strategy::CpuOnly, 16),
-        (Strategy::CsdOnly, 0),
-        (Strategy::Mte, 0),
-        (Strategy::Wrr, 0),
-        (Strategy::Mte, 16),
-        (Strategy::Wrr, 16),
-    ];
-    for model in ["wrn", "resnet152", "vit", "vgg", "alexnet"] {
+    let models = ["wrn", "resnet152", "vit", "vgg", "alexnet"];
+    let jobs: Vec<(&str, Strategy, u32)> = models
+        .iter()
+        .flat_map(|&model| TABLE_VARIANTS.iter().map(move |&(s, w)| (model, s, w)))
+        .collect();
+    let reps = par_map(jobs, |(model, s, w)| {
+        run_one(model, p, s, w, 1, Loader::Torchvision)
+    });
+    let mut reps = reps.into_iter();
+    for model in models {
         let mut cells = vec![model.to_string()];
         let batches_per_epoch = batches_per_epoch(model);
-        for (s, w) in variants {
-            let rep = run_one(model, p, s, w, 1, Loader::Torchvision)?;
+        for _ in 0..TABLE_VARIANTS.len() {
+            let rep = reps.next().expect("cell count mismatch")?;
             let cost = rep.energy.cost_usd(100, 0.095, batches_per_epoch);
             cells.push(format!("{}/{}", fmt_s(rep.energy.joules_per_batch), fmt_s(cost)));
         }
@@ -147,7 +188,7 @@ pub fn table9() -> Result<Table> {
         "model", "CPU_0", "CPU_16", "MTE_0", "WRR_0", "MTE_16", "WRR_16",
     ]);
     let p = PipelineKind::ImageNet1;
-    let variants: [(Strategy, u32); 6] = [
+    const VARIANTS: [(Strategy, u32); 6] = [
         (Strategy::CpuOnly, 0),
         (Strategy::CpuOnly, 16),
         (Strategy::Mte, 0),
@@ -155,11 +196,19 @@ pub fn table9() -> Result<Table> {
         (Strategy::Mte, 16),
         (Strategy::Wrr, 16),
     ];
-    for model in ["wrn", "resnet152", "vit", "vgg", "alexnet"] {
+    let models = ["wrn", "resnet152", "vit", "vgg", "alexnet"];
+    let jobs: Vec<(&str, Strategy, u32)> = models
+        .iter()
+        .flat_map(|&model| VARIANTS.iter().map(move |&(s, w)| (model, s, w)))
+        .collect();
+    let vals = par_map(jobs, |(model, s, w)| {
+        run_one(model, p, s, w, 1, Loader::Torchvision).map(|r| r.cpu_dram_time_per_batch)
+    });
+    let mut vals = vals.into_iter();
+    for model in models {
         let mut cells = vec![model.to_string()];
-        for (s, w) in variants {
-            let rep = run_one(model, p, s, w, 1, Loader::Torchvision)?;
-            cells.push(fmt_s(rep.cpu_dram_time_per_batch));
+        for _ in 0..VARIANTS.len() {
+            cells.push(fmt_s(vals.next().expect("cell count mismatch")?));
         }
         t.row(cells);
     }
@@ -214,50 +263,65 @@ pub fn fig8() -> Result<Table> {
     let mut t = Table::new(vec![
         "target", "model", "CPU_0", "CSD", "MTE_0", "WRR_0", "CPU_16", "MTE_16", "WRR_16",
     ]);
-    let tv = Loader::Torchvision;
-    // (a) GPU
-    let p = PipelineKind::CifarGpu;
-    t.row(vec![
-        "GPU".to_string(),
-        "wrn18".to_string(),
-        fmt_s(run_one("wrn18", p, Strategy::CpuOnly, 0, 1, tv)?.learn_time_per_batch),
-        fmt_s(run_one("wrn18", p, Strategy::CsdOnly, 0, 1, tv)?.learn_time_per_batch),
-        fmt_s(run_one("wrn18", p, Strategy::Mte, 0, 1, tv)?.learn_time_per_batch),
-        fmt_s(run_one("wrn18", p, Strategy::Wrr, 0, 1, tv)?.learn_time_per_batch),
-        fmt_s(run_one("wrn18", p, Strategy::CpuOnly, 16, 1, tv)?.learn_time_per_batch),
-        fmt_s(run_one("wrn18", p, Strategy::Mte, 16, 1, tv)?.learn_time_per_batch),
-        fmt_s(run_one("wrn18", p, Strategy::Wrr, 16, 1, tv)?.learn_time_per_batch),
-    ]);
     // (b) DSA: no num_workers tuning supported (paper), workers = 0 only.
     // The DSA pipeline upsamples 32→224; the Zynq's ARM core is far
     // slower on interpolation-heavy work than the generic 3.5× factor —
     // calibrated at 20× for this experiment (EXPERIMENTS.md Fig. 8).
-    let p = PipelineKind::CifarDsa;
     let run_dsa = |strategy: Strategy| -> Result<f64> {
         let mut profile = crate::config::DeviceProfile::default();
         profile.csd_slowdown = 20.0;
         let cfg = ExperimentConfig::builder()
             .model("vit_dsa")
-            .pipeline_kind(p)
+            .pipeline_kind(PipelineKind::CifarDsa)
             .strategy(strategy)
             .num_workers(0)
             .n_batches(N_BATCHES)
             .epochs(EPOCHS)
             .profile(profile)
+            .record_trace(false)
             .build()?;
         Ok(run_experiment(&cfg)?.report.learn_time_per_batch)
     };
-    t.row(vec![
-        "DSA".to_string(),
-        "vit_dsa".to_string(),
-        fmt_s(run_dsa(Strategy::CpuOnly)?),
-        fmt_s(run_dsa(Strategy::CsdOnly)?),
-        fmt_s(run_dsa(Strategy::Mte)?),
-        fmt_s(run_dsa(Strategy::Wrr)?),
-        "-".to_string(),
-        "-".to_string(),
-        "-".to_string(),
-    ]);
+    // One flat job list over both targets, fanned out together:
+    // (is_dsa, strategy, workers) — GPU row first, then the DSA row.
+    const GPU_COLS: [(Strategy, u32); 7] = [
+        (Strategy::CpuOnly, 0),
+        (Strategy::CsdOnly, 0),
+        (Strategy::Mte, 0),
+        (Strategy::Wrr, 0),
+        (Strategy::CpuOnly, 16),
+        (Strategy::Mte, 16),
+        (Strategy::Wrr, 16),
+    ];
+    const DSA_COLS: [Strategy; 4] = [
+        Strategy::CpuOnly,
+        Strategy::CsdOnly,
+        Strategy::Mte,
+        Strategy::Wrr,
+    ];
+    let mut jobs: Vec<(bool, Strategy, u32)> =
+        GPU_COLS.iter().map(|&(s, w)| (false, s, w)).collect();
+    jobs.extend(DSA_COLS.iter().map(|&s| (true, s, 0)));
+    let vals = par_map(jobs, |(is_dsa, s, w)| -> Result<f64> {
+        if is_dsa {
+            run_dsa(s)
+        } else {
+            Ok(run_one("wrn18", PipelineKind::CifarGpu, s, w, 1, Loader::Torchvision)?
+                .learn_time_per_batch)
+        }
+    });
+    let mut vals = vals.into_iter();
+    let mut gpu_row = vec!["GPU".to_string(), "wrn18".to_string()];
+    for _ in 0..GPU_COLS.len() {
+        gpu_row.push(fmt_s(vals.next().expect("cell count mismatch")?));
+    }
+    t.row(gpu_row);
+    let mut dsa_row = vec!["DSA".to_string(), "vit_dsa".to_string()];
+    for _ in 0..DSA_COLS.len() {
+        dsa_row.push(fmt_s(vals.next().expect("cell count mismatch")?));
+    }
+    dsa_row.extend(["-".to_string(), "-".to_string(), "-".to_string()]);
+    t.row(dsa_row);
     Ok(t)
 }
 
@@ -283,6 +347,7 @@ pub fn fig6() -> Result<Table> {
             .strategy(strategy)
             .n_batches(1000)
             .profile(profile.clone())
+            .record_trace(false)
             .build()?;
         let mut costs = FixedCosts::toy_fig6();
         let (report, _) = run_schedule(&cfg, &spec, &mut costs)?;

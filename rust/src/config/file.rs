@@ -14,6 +14,7 @@
 //! n_accel = 1
 //! loader = torchvision  # torchvision | dali_cpu | dali_gpu
 //! seed = 0
+//! trace_mode = full     # full | stats_only (streaming stats, O(1) mem)
 //!
 //! # device profile overrides
 //! csd_slowdown = 5.0
@@ -87,6 +88,13 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
             "epochs" => b.epochs(v.parse().context("epochs")?),
             "seed" => b.seed(v.parse().context("seed")?),
             "record_trace" => b.record_trace(v.parse().context("record_trace")?),
+            // Readable alias: full span timeline vs streaming-stats-only
+            // (O(1) memory; reports stay exact either way).
+            "trace_mode" => match v.as_str() {
+                "full" => b.record_trace(true),
+                "stats_only" | "stats" => b.record_trace(false),
+                _ => bail!("bad trace_mode {v:?} (expected full | stats_only)"),
+            },
             "artifacts_dir" => b.exec(super::ExecMode::Real {
                 artifacts_dir: v.clone(),
             }),
@@ -193,6 +201,16 @@ mod tests {
         assert!(load("strategy = warp\n", &[]).is_err());
         assert!(load("num_workers = many\n", &[]).is_err());
         assert!(load("pipeline = imagenet9\n", &[]).is_err());
+    }
+
+    #[test]
+    fn trace_mode_parses() {
+        assert!(load("trace_mode = full\n", &[]).unwrap().record_trace);
+        assert!(!load("trace_mode = stats_only\n", &[]).unwrap().record_trace);
+        assert!(!load("trace_mode = stats\n", &[]).unwrap().record_trace);
+        assert!(load("trace_mode = off\n", &[]).is_err());
+        // the boolean key keeps working
+        assert!(!load("record_trace = false\n", &[]).unwrap().record_trace);
     }
 
     #[test]

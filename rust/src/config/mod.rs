@@ -219,7 +219,12 @@ pub struct ExperimentConfig {
     pub adaptive: AdaptiveParams,
     /// PRNG seed for synthetic data and augmentation draws.
     pub seed: u64,
-    /// Record a full trace (needed for Table II / energy / Table IX).
+    /// Store the full span timeline (needed for the Table II overlap
+    /// analysis and other interval queries). When `false` the run is
+    /// *stats-only*: streaming [`crate::trace::TraceStats`] still make
+    /// every `RunReport` field exact (bit-identical to a full-trace
+    /// run) at O(1) trace memory — only span-level queries are off.
+    /// Config-file key: `record_trace` or `trace_mode = full|stats_only`.
     pub record_trace: bool,
 }
 

@@ -30,7 +30,7 @@ use crate::energy::compute_energy;
 use crate::host::{HostEngine, HostReady};
 use crate::metrics::RunReport;
 use crate::sim::Secs;
-use crate::trace::{Device, Phase, Trace};
+use crate::trace::Trace;
 
 /// Upper bound on event-loop iterations per epoch (runaway guard).
 const MAX_ITERS_FACTOR: u64 = 64;
@@ -115,10 +115,18 @@ impl<'a> Engine<'a> {
             cfg,
             costs,
             trace: if cfg.record_trace {
-                // ~6 spans per batch (read/pp/h2d + csd triple or train)
-                Trace::with_capacity(6 * (spec.n_batches as usize) * cfg.epochs as usize)
+                // ~6 spans per batch (read/pp/h2d + csd triple or train);
+                // with_capacity caps the speculative reservation so huge
+                // n_batches × epochs configs can't pre-allocate GBs.
+                Trace::with_capacity(
+                    6usize
+                        .saturating_mul(spec.n_batches as usize)
+                        .saturating_mul(cfg.epochs as usize),
+                )
             } else {
-                Trace::disabled()
+                // Streaming stats only: reports stay exact (bit-identical
+                // to a span-recorded run) at O(1) trace memory.
+                Trace::stats_only()
             },
             hosts: (0..n_accel)
                 .map(|_| HostEngine::new(w_per, cfg.profile.worker_scaling_exp, collate))
@@ -203,12 +211,7 @@ impl<'a> Engine<'a> {
     pub fn least_loaded_unfinished(&self) -> Option<usize> {
         (0..self.accels.len())
             .filter(|&a| self.consumed[a] < self.shard_len(a))
-            .min_by(|&x, &y| {
-                self.accels[x]
-                    .free_at()
-                    .partial_cmp(&self.accels[y].free_at())
-                    .unwrap()
-            })
+            .min_by(|&x, &y| self.accels[x].free_at().total_cmp(&self.accels[y].free_at()))
     }
 
     /// The lowest-index unfinished accelerator (sequential drain order
@@ -373,8 +376,14 @@ impl<'a> Engine<'a> {
         (self.shards.iter().map(|s| s.len() as u64).sum::<u64>() + 16) * MAX_ITERS_FACTOR
     }
 
-    fn drain_events(&mut self) -> Vec<BatchReady> {
-        std::mem::take(&mut self.events)
+    /// Move pending [`BatchReady`] events into `out` (cleared first).
+    /// The two vectors swap roles, so across the run the event path
+    /// settles into zero allocations: capacity ping-pongs between the
+    /// engine buffer and the loop's scratch buffer instead of a fresh
+    /// `Vec` per iteration (the old `mem::take`).
+    fn drain_events_into(&mut self, out: &mut Vec<BatchReady>) {
+        out.clear();
+        std::mem::swap(&mut self.events, out);
     }
 
     fn finish(mut self) -> (RunReport, Trace) {
@@ -382,19 +391,22 @@ impl<'a> Engine<'a> {
         (report, self.trace)
     }
 
+    /// Synthesize the run report from the streaming [`TraceStats`] —
+    /// O(1): no span-log scans, valid in `stats_only` mode, and
+    /// bit-identical to the old 6-pass `busy_where` synthesis because
+    /// the stats accumulate in span-insertion order.
     fn build_report(&mut self) -> RunReport {
         self.wasted += self.csd.wasted();
         for q in &self.queues {
             self.wasted += q.len() as u32;
         }
+        let st = self.trace.stats();
         let makespan = self
             .accels
             .iter()
             .map(|a| a.free_at())
-            .fold(self.trace.makespan(), f64::max);
+            .fold(st.makespan(), f64::max);
         let n = self.total_consumed.max(1);
-        let t = &self.trace;
-        let host_busy = t.busy_where(|s| s.device.is_host_cpu());
         // DDP main processes (one per accelerator) + worker processes.
         let n_processes = match self.cfg.strategy {
             Strategy::CsdOnly => 0, // paper bills the CSD column CSD-only
@@ -411,12 +423,12 @@ impl<'a> Engine<'a> {
             makespan,
             n_batches: n as u32,
             learn_time_per_batch: makespan / n as f64,
-            t_io: t.busy_where(|s| s.phase == Phase::SsdRead),
-            t_cpu: t.busy_where(|s| s.phase == Phase::CpuPreprocess),
-            t_csd: t.busy_where(|s| s.device == Device::Csd),
-            t_gpu: t.busy_where(|s| s.phase == Phase::Train),
-            t_gds: t.busy_where(|s| s.phase == Phase::GdsRead),
-            cpu_dram_time_per_batch: host_busy / n as f64,
+            t_io: st.t_io(),
+            t_cpu: st.t_cpu(),
+            t_csd: st.t_csd(),
+            t_gpu: st.t_gpu(),
+            t_gds: st.t_gds(),
+            cpu_dram_time_per_batch: st.host_busy() / n as f64,
             batches_from_csd: self.total_from_csd as u32,
             wasted_batches: self.wasted,
             energy,
@@ -437,12 +449,16 @@ pub fn run(
     policy: &mut dyn SchedPolicy,
 ) -> Result<(RunReport, Trace)> {
     let mut eng = Engine::new(cfg, spec, costs);
+    // Reusable event scratch buffer: swapped with the engine's event
+    // vector each delivery round, so steady state allocates nothing.
+    let mut ready_buf: Vec<BatchReady> = Vec::new();
     for _epoch in 0..cfg.epochs {
         eng.reset_epoch();
         eng.record_events = policy.wants_ready_events();
         policy.on_epoch_start(&mut eng)?;
-        for ev in eng.drain_events() {
-            policy.on_batch_ready(&ev);
+        eng.drain_events_into(&mut ready_buf);
+        for ev in &ready_buf {
+            policy.on_batch_ready(ev);
         }
         let budget = eng.iter_budget();
         let mut iters: u64 = 0;
@@ -453,8 +469,9 @@ pub fn run(
             }
             policy.claim_next(&mut eng, a)?;
             if !eng.events.is_empty() {
-                for ev in eng.drain_events() {
-                    policy.on_batch_ready(&ev);
+                eng.drain_events_into(&mut ready_buf);
+                for ev in &ready_buf {
+                    policy.on_batch_ready(ev);
                 }
             }
         }

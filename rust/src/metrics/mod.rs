@@ -10,6 +10,11 @@ use crate::sim::Secs;
 /// §VII-C decomposition of one run plus the per-batch aggregates the
 /// tables report.
 ///
+/// All fields are synthesized in O(1) from the streaming
+/// [`crate::trace::TraceStats`], so they are exact (and identical)
+/// whether the run kept the full span timeline or ran stats-only
+/// (`record_trace = false`).
+///
 /// `PartialEq` is bit-exact on the f64 fields — the golden-parity suite
 /// asserts the engine/policy scheduler reproduces the pre-refactor
 /// monolith to the last bit.

@@ -24,6 +24,41 @@ impl Device {
     pub fn is_host_cpu(self) -> bool {
         matches!(self, Device::CpuMain | Device::CpuWorker(_))
     }
+
+    /// Coarse class used by the streaming statistics: individual worker
+    /// or accelerator indices collapse into one bucket per resource
+    /// kind (the granularity every report field is defined at).
+    pub fn class(self) -> DeviceClass {
+        match self {
+            Device::CpuMain | Device::CpuWorker(_) => DeviceClass::HostCpu,
+            Device::Csd => DeviceClass::Csd,
+            Device::Accel(_) => DeviceClass::Accel,
+        }
+    }
+}
+
+/// Device class for per-class × per-phase busy-time aggregation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    /// Host main process + DataLoader workers.
+    HostCpu,
+    /// The CSD's embedded core.
+    Csd,
+    /// Any accelerator (GPU/DSA).
+    Accel,
+}
+
+impl DeviceClass {
+    pub const ALL: [DeviceClass; 3] =
+        [DeviceClass::HostCpu, DeviceClass::Csd, DeviceClass::Accel];
+    pub const COUNT: usize = DeviceClass::ALL.len();
+
+    /// Fieldless enum: the discriminant *is* the matrix index. `ALL`
+    /// must list variants in declaration order (tested below); a new
+    /// variant missing from `ALL` panics out-of-bounds on first use.
+    fn index(self) -> usize {
+        self as usize
+    }
 }
 
 /// What the device spent the interval doing.
@@ -49,6 +84,28 @@ pub enum Phase {
     AccelPreprocess,
 }
 
+impl Phase {
+    pub const ALL: [Phase; 9] = [
+        Phase::SsdRead,
+        Phase::CpuPreprocess,
+        Phase::H2d,
+        Phase::CsdRead,
+        Phase::CsdPreprocess,
+        Phase::CsdWrite,
+        Phase::GdsRead,
+        Phase::Train,
+        Phase::AccelPreprocess,
+    ];
+    pub const COUNT: usize = Phase::ALL.len();
+
+    /// Fieldless enum: the discriminant *is* the matrix index. `ALL`
+    /// must list variants in declaration order (tested below); a new
+    /// variant missing from `ALL` panics out-of-bounds on first use.
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
 /// One scheduled interval. (`PartialEq` is bit-exact on start/end —
 /// used by the golden-parity suite.)
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -61,11 +118,132 @@ pub struct Span {
     pub end: Secs,
 }
 
+/// Streaming per-run statistics, updated inline by [`Trace::record`].
+///
+/// Every accumulator is advanced **in span-insertion order**, so each
+/// sum is bit-identical to the equivalent [`Trace::busy_where`]
+/// filter-and-sum over the full span log (f64 addition is
+/// order-sensitive; same values added in the same order give the same
+/// bits — the golden-parity suite depends on this). This is what lets
+/// [`crate::coordinator::engine::Engine`] build a full `RunReport` in
+/// O(1) without retaining any spans.
+///
+/// Memory is O(1): a fixed `DeviceClass × Phase` matrix plus a handful
+/// of scalars, regardless of `n_batches × epochs`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceStats {
+    /// Busy-seconds per device class × phase (insertion-order sums).
+    busy: [[Secs; Phase::COUNT]; DeviceClass::COUNT],
+    // Dedicated accumulators for the report fields. The ones that span
+    // several phases (t_csd, host_busy) cannot be recovered bit-exactly
+    // from the matrix — summing its cells reorders the additions — so
+    // each report predicate gets its own insertion-order sum.
+    t_io: Secs,
+    t_cpu: Secs,
+    t_csd: Secs,
+    t_gpu: Secs,
+    t_gds: Secs,
+    host_busy: Secs,
+    /// Running `max(end)` (identical to folding `f64::max` over spans).
+    makespan: Secs,
+    n_spans: u64,
+}
+
+impl TraceStats {
+    #[inline]
+    fn add(&mut self, device: Device, phase: Phase, start: Secs, end: Secs) {
+        let dur = end - start;
+        self.busy[device.class().index()][phase.index()] += dur;
+        match phase {
+            Phase::SsdRead => self.t_io += dur,
+            Phase::CpuPreprocess => self.t_cpu += dur,
+            Phase::Train => self.t_gpu += dur,
+            Phase::GdsRead => self.t_gds += dur,
+            _ => {}
+        }
+        if device == Device::Csd {
+            self.t_csd += dur;
+        }
+        if device.is_host_cpu() {
+            self.host_busy += dur;
+        }
+        self.makespan = self.makespan.max(end);
+        self.n_spans += 1;
+    }
+
+    /// Busy seconds of one device class × phase cell.
+    pub fn busy(&self, class: DeviceClass, phase: Phase) -> Secs {
+        self.busy[class.index()][phase.index()]
+    }
+
+    /// Total busy seconds of a device class (sum over phases). Exact in
+    /// value terms but *not* guaranteed bit-identical to a
+    /// `busy_where` over the interleaved span log — use the dedicated
+    /// accessors ([`TraceStats::t_csd`], [`TraceStats::host_busy`]) for
+    /// report-grade parity.
+    pub fn class_busy(&self, class: DeviceClass) -> Secs {
+        self.busy[class.index()].iter().sum()
+    }
+
+    /// T_io: host-path storage I/O busy seconds (`Phase::SsdRead`).
+    pub fn t_io(&self) -> Secs {
+        self.t_io
+    }
+
+    /// T_cpu: CPU preprocessing busy seconds (`Phase::CpuPreprocess`).
+    pub fn t_cpu(&self) -> Secs {
+        self.t_cpu
+    }
+
+    /// T_csd: CSD busy seconds (read + preprocess + write-back).
+    pub fn t_csd(&self) -> Secs {
+        self.t_csd
+    }
+
+    /// T_gpu: accelerator training busy seconds (`Phase::Train`).
+    pub fn t_gpu(&self) -> Secs {
+        self.t_gpu
+    }
+
+    /// GDS read seconds (`Phase::GdsRead`).
+    pub fn t_gds(&self) -> Secs {
+        self.t_gds
+    }
+
+    /// Host CPU busy seconds, main process + workers, all phases
+    /// (the Table IX "CPU and DRAM usage" numerator).
+    pub fn host_busy(&self) -> Secs {
+        self.host_busy
+    }
+
+    /// Latest span end time seen so far.
+    pub fn makespan(&self) -> Secs {
+        self.makespan
+    }
+
+    /// Spans recorded (stored or not).
+    pub fn n_spans(&self) -> u64 {
+        self.n_spans
+    }
+}
+
+/// Cap on speculative span pre-reservation: a huge `n_batches × epochs`
+/// config must not pre-allocate gigabytes up front (~1M spans ≈ 40 MB;
+/// the vector still grows on demand past this).
+pub const MAX_SPAN_PREALLOC: usize = 1 << 20;
+
 /// Recorded timeline of a run.
+///
+/// Streaming statistics ([`TraceStats`]) are always on — every
+/// constructor accumulates them inline in `record`. Span *storage* is
+/// what the modes differ on: [`Trace::new`]/[`Trace::with_capacity`]
+/// keep the full timeline (overlap analysis, Table II), while
+/// [`Trace::stats_only`] discards spans and keeps O(1) memory.
 #[derive(Debug, Clone)]
 pub struct Trace {
     pub spans: Vec<Span>,
-    enabled: bool,
+    stats: TraceStats,
+    store_spans: bool,
 }
 
 impl Default for Trace {
@@ -78,39 +256,60 @@ impl Trace {
     pub fn new() -> Self {
         Trace {
             spans: Vec::new(),
-            enabled: true,
+            stats: TraceStats::default(),
+            store_spans: true,
         }
     }
 
     /// Enabled trace with pre-reserved span capacity (hot path: avoids
-    /// reallocation-copies of the span log during long runs).
+    /// reallocation-copies of the span log during long runs). The
+    /// reservation is capped at [`MAX_SPAN_PREALLOC`].
     pub fn with_capacity(spans: usize) -> Self {
         Trace {
-            spans: Vec::with_capacity(spans),
-            enabled: true,
+            spans: Vec::with_capacity(spans.min(MAX_SPAN_PREALLOC)),
+            stats: TraceStats::default(),
+            store_spans: true,
         }
     }
 
-    /// A no-op trace: `record` discards spans (hot-path benchmarking;
-    /// trace-derived report fields come back zero).
-    pub fn disabled() -> Self {
+    /// Streaming-statistics-only trace: `record` updates [`TraceStats`]
+    /// but stores no spans (O(1) memory). Reports built from it are
+    /// bit-identical to full-trace runs; only timeline queries
+    /// (`busy_where`/`overlap_where`/`consumption_order`) see an empty
+    /// span log.
+    pub fn stats_only() -> Self {
         Trace {
             spans: Vec::new(),
-            enabled: false,
+            stats: TraceStats::default(),
+            store_spans: false,
         }
     }
 
+    /// Backward-compatible alias for [`Trace::stats_only`]. (Streaming
+    /// stats are always on; "disabled" only ever disabled span
+    /// storage in practice, and zeroed report fields were a bug.)
+    pub fn disabled() -> Self {
+        Trace::stats_only()
+    }
+
+    /// Is the full span timeline being stored?
     pub fn is_enabled(&self) -> bool {
-        self.enabled
+        self.store_spans
+    }
+
+    /// The streaming statistics accumulated so far.
+    pub fn stats(&self) -> &TraceStats {
+        &self.stats
     }
 
     /// Record an interval. Zero-length spans are kept (they mark events).
     #[inline]
     pub fn record(&mut self, device: Device, phase: Phase, batch: Option<u32>, start: Secs, end: Secs) {
-        if !self.enabled {
+        debug_assert!(end >= start, "span ends before it starts");
+        self.stats.add(device, phase, start, end);
+        if !self.store_spans {
             return;
         }
-        debug_assert!(end >= start, "span ends before it starts");
         self.spans.push(Span {
             device,
             phase,
@@ -120,9 +319,10 @@ impl Trace {
         });
     }
 
-    /// Latest end time over all spans.
+    /// Latest end time over all recorded spans — O(1), from the
+    /// streaming stats (identical to folding `f64::max` over the log).
     pub fn makespan(&self) -> Secs {
-        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+        self.stats.makespan
     }
 
     /// Total busy time of the spans selected by `pred` (sum of
@@ -180,7 +380,7 @@ impl Trace {
             .iter()
             .filter(|s| s.phase == Phase::Train && s.batch.is_some())
             .collect();
-        trains.sort_by(|x, y| x.start.partial_cmp(&y.start).unwrap());
+        trains.sort_by(|x, y| x.start.total_cmp(&y.start));
         trains
             .iter()
             .map(|s| (s.batch.unwrap(), s.device))
@@ -205,7 +405,7 @@ impl Trace {
 
 /// Merge intervals in place (sorted, coalesced).
 fn merge(iv: &mut Vec<(Secs, Secs)>) {
-    iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut out: Vec<(Secs, Secs)> = Vec::with_capacity(iv.len());
     for &(s, e) in iv.iter() {
         match out.last_mut() {
@@ -296,6 +496,72 @@ mod tests {
         t.record(Device::Accel(0), Phase::Train, Some(1), 0.0, 1.0);
         let order: Vec<u32> = t.consumption_order().iter().map(|(b, _)| *b).collect();
         assert_eq!(order, vec![1, 5]);
+    }
+
+    #[test]
+    fn stats_match_busy_where_bitwise() {
+        let mut t = Trace::new();
+        t.record(Device::CpuMain, Phase::SsdRead, Some(0), 0.0, 0.3);
+        t.record(Device::CpuMain, Phase::CpuPreprocess, Some(0), 0.3, 1.1);
+        t.record(Device::Csd, Phase::CsdRead, Some(1), 0.0, 0.2);
+        t.record(Device::Csd, Phase::CsdPreprocess, Some(1), 0.2, 0.9);
+        t.record(Device::Csd, Phase::CsdWrite, Some(1), 0.9, 1.0);
+        t.record(Device::Accel(0), Phase::GdsRead, Some(1), 1.0, 1.2);
+        t.record(Device::Accel(0), Phase::Train, Some(1), 1.2, 2.2);
+        let st = t.stats();
+        assert_eq!(st.t_io().to_bits(), t.busy_where(|s| s.phase == Phase::SsdRead).to_bits());
+        assert_eq!(
+            st.t_csd().to_bits(),
+            t.busy_where(|s| s.device == Device::Csd).to_bits()
+        );
+        assert_eq!(
+            st.host_busy().to_bits(),
+            t.busy_where(|s| s.device.is_host_cpu()).to_bits()
+        );
+        assert_eq!(st.makespan(), t.spans.iter().map(|s| s.end).fold(0.0, f64::max));
+        assert_eq!(st.n_spans(), t.spans.len() as u64);
+    }
+
+    #[test]
+    fn stats_only_stores_no_spans_but_accumulates() {
+        let mut full = Trace::new();
+        let mut lean = Trace::stats_only();
+        for t in [&mut full, &mut lean] {
+            t.record(Device::Csd, Phase::CsdPreprocess, Some(0), 0.0, 2.0);
+            t.record(Device::Accel(0), Phase::Train, Some(0), 2.0, 5.0);
+        }
+        assert!(lean.spans.is_empty());
+        assert!(!lean.is_enabled());
+        assert_eq!(lean.stats(), full.stats());
+        assert_eq!(lean.makespan(), 5.0);
+    }
+
+    #[test]
+    fn with_capacity_prealloc_is_capped() {
+        let t = Trace::with_capacity(usize::MAX / 2);
+        assert!(t.spans.capacity() <= MAX_SPAN_PREALLOC);
+        let small = Trace::with_capacity(64);
+        assert!(small.spans.capacity() >= 64);
+    }
+
+    #[test]
+    fn class_collapses_indices() {
+        assert_eq!(Device::CpuMain.class(), DeviceClass::HostCpu);
+        assert_eq!(Device::CpuWorker(7).class(), DeviceClass::HostCpu);
+        assert_eq!(Device::Csd.class(), DeviceClass::Csd);
+        assert_eq!(Device::Accel(3).class(), DeviceClass::Accel);
+    }
+
+    #[test]
+    fn all_lists_match_declaration_order() {
+        // index() is the enum discriminant; ALL must enumerate the
+        // variants in that same order or the stats matrix misattributes.
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i, "{p:?}");
+        }
+        for (i, c) in DeviceClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i, "{c:?}");
+        }
     }
 
     #[test]

@@ -1,13 +1,15 @@
-//! Small self-contained utilities: PRNG, JSON parsing, DTNS tensor files
-//! and a miniature property-testing harness.
+//! Small self-contained utilities: PRNG, JSON parsing, DTNS tensor files,
+//! a miniature property-testing harness and a scoped-thread parallel map.
 //!
 //! These exist in-repo because the build is fully offline (no crates.io
 //! access beyond the vendored set); `DESIGN.md` records the substitutions
 //! (`prop` ≈ proptest, [`json`] ≈ serde_json for the manifest subset).
 
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod prop;
 pub mod tensorfile;
 
+pub use par::par_map;
 pub use prng::Prng;

@@ -1,0 +1,111 @@
+//! Minimal scoped-thread parallel map (offline stand-in for rayon).
+//!
+//! The paper-table generators ([`crate::bench`]) run dozens of
+//! independent experiments per table; `par_map` fans them out across
+//! the machine's cores while returning results **in input order**, so
+//! table rows stay deterministic regardless of completion order.
+//!
+//! Work distribution is a shared atomic cursor over the task list
+//! (work-stealing-free, but experiments are coarse enough that static
+//! imbalance is negligible). Worker panics propagate to the caller via
+//! `std::thread::scope`'s join, so a failing experiment still fails the
+//! bench/test loudly.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to every item, on up to `available_parallelism()` threads;
+/// the result vector preserves input order. Falls back to a sequential
+/// map for empty/singleton inputs or single-core machines.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let tasks: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = tasks[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("par_map task claimed twice");
+                let out = f(task);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("par_map worker exited without a result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map((0..100).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<i32> = par_map(Vec::new(), |x: i32| x);
+        assert!(empty.is_empty());
+        assert_eq!(par_map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn captures_environment_by_reference() {
+        let base = 10;
+        let out = par_map(vec![1, 2, 3], |x| x + base);
+        assert_eq!(out, vec![11, 12, 13]);
+    }
+
+    #[test]
+    fn results_may_be_fallible() {
+        let out: Vec<Result<i32, String>> =
+            par_map(vec![1, 0, 3], |x| {
+                if x == 0 {
+                    Err("zero".to_string())
+                } else {
+                    Ok(x)
+                }
+            });
+        assert!(out[0].is_ok() && out[1].is_err() && out[2].is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panics_propagate() {
+        par_map(vec![1, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

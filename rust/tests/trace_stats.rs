@@ -1,0 +1,158 @@
+//! Streaming trace aggregation (`TraceStats`):
+//!
+//! 1. Property: for random span sets, every stats accumulator equals
+//!    the corresponding `busy_where` filter-and-sum **bit-exactly**
+//!    (insertion-order accumulation), and the stats survive
+//!    `stats_only` mode unchanged.
+//! 2. End-to-end: `RunReport`s are bit-identical between stats-only
+//!    (`record_trace(false)`) and full-trace runs for every strategy ×
+//!    accelerator count — the old `record_trace(false)` zeroed-fields
+//!    gap stays closed.
+
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::Strategy;
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+use ddlp::trace::{Device, DeviceClass, Phase, Span, Trace};
+use ddlp::util::prop::run_prop;
+
+const DEVICES: [Device; 7] = [
+    Device::CpuMain,
+    Device::CpuWorker(0),
+    Device::CpuWorker(1),
+    Device::CpuWorker(2),
+    Device::Csd,
+    Device::Accel(0),
+    Device::Accel(1),
+];
+
+#[test]
+fn prop_stats_equal_busy_where_bitwise() {
+    run_prop("TraceStats == busy_where (bit-exact)", 100, |g| {
+        let mut full = Trace::new();
+        let mut lean = Trace::stats_only();
+        let n = g.size(0, 60);
+        for _ in 0..n {
+            let dev = *g.choose(&DEVICES);
+            let phase = *g.choose(&Phase::ALL);
+            let start = g.float(0.0, 50.0);
+            let dur = g.float(0.0, 5.0);
+            let batch = if g.bool() { Some(g.int(0, 1000) as u32) } else { None };
+            full.record(dev, phase, batch, start, start + dur);
+            lean.record(dev, phase, batch, start, start + dur);
+        }
+        let st = full.stats();
+
+        // Per-class × per-phase cells match the filtered span sums.
+        for class in DeviceClass::ALL {
+            for phase in Phase::ALL {
+                let expect = full
+                    .busy_where(|s: &Span| s.device.class() == class && s.phase == phase);
+                assert_eq!(
+                    st.busy(class, phase).to_bits(),
+                    expect.to_bits(),
+                    "cell ({class:?}, {phase:?})"
+                );
+            }
+        }
+        // Dedicated report accumulators match their predicates.
+        assert_eq!(
+            st.t_io().to_bits(),
+            full.busy_where(|s| s.phase == Phase::SsdRead).to_bits()
+        );
+        assert_eq!(
+            st.t_cpu().to_bits(),
+            full.busy_where(|s| s.phase == Phase::CpuPreprocess).to_bits()
+        );
+        assert_eq!(
+            st.t_csd().to_bits(),
+            full.busy_where(|s| s.device == Device::Csd).to_bits()
+        );
+        assert_eq!(
+            st.t_gpu().to_bits(),
+            full.busy_where(|s| s.phase == Phase::Train).to_bits()
+        );
+        assert_eq!(
+            st.t_gds().to_bits(),
+            full.busy_where(|s| s.phase == Phase::GdsRead).to_bits()
+        );
+        assert_eq!(
+            st.host_busy().to_bits(),
+            full.busy_where(|s| s.device.is_host_cpu()).to_bits()
+        );
+        // Makespan matches the old full-scan fold.
+        let scan = full.spans.iter().map(|s| s.end).fold(0.0f64, f64::max);
+        assert_eq!(st.makespan().to_bits(), scan.to_bits());
+        assert_eq!(st.n_spans(), full.spans.len() as u64);
+
+        // stats_only mode: no spans stored, identical statistics.
+        assert!(lean.spans.is_empty());
+        assert_eq!(lean.stats(), st);
+    });
+}
+
+fn report_pair(
+    strategy: Strategy,
+    n_accel: u32,
+    workers: u32,
+    record_trace: bool,
+) -> ddlp::metrics::RunReport {
+    let n_batches = 96;
+    let cfg = ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .num_workers(workers)
+        .n_accel(n_accel)
+        .n_batches(n_batches)
+        .epochs(2)
+        .record_trace(record_trace)
+        .build()
+        .unwrap();
+    let spec = DatasetSpec {
+        n_batches,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    };
+    let mut costs = FixedCosts::toy_fig6();
+    let (report, trace) = run_schedule(&cfg, &spec, &mut costs).unwrap();
+    assert_eq!(
+        trace.is_enabled(),
+        record_trace,
+        "trace mode must follow cfg.record_trace"
+    );
+    if !record_trace {
+        assert!(trace.spans.is_empty(), "stats-only run must store no spans");
+        assert!(trace.stats().n_spans() > 0, "stats must still accumulate");
+    }
+    report
+}
+
+/// `RunReport` derives `PartialEq` bit-exactly on its f64 fields, so
+/// one `assert_eq!` per combination is the full field-for-field check.
+#[test]
+fn stats_only_reports_bit_identical_to_full_trace() {
+    for strategy in Strategy::ALL {
+        for n_accel in [1u32, 2, 4] {
+            for workers in [0u32, 8] {
+                let full = report_pair(strategy, n_accel, workers, true);
+                let lean = report_pair(strategy, n_accel, workers, false);
+                assert_eq!(
+                    full, lean,
+                    "report diverged: {strategy} n_accel={n_accel} workers={workers}"
+                );
+                // The old gap: these fields came back zero without spans.
+                if strategy != Strategy::CsdOnly {
+                    assert!(lean.t_cpu > 0.0, "{strategy}: t_cpu should be real");
+                }
+                if strategy.uses_csd() {
+                    assert!(lean.t_csd > 0.0, "{strategy}: t_csd should be real");
+                }
+                assert!(lean.t_gpu > 0.0, "{strategy}: t_gpu should be real");
+            }
+        }
+    }
+}
