@@ -1,0 +1,195 @@
+//! L3 weak-scaling microbenchmark: scheduling throughput of the
+//! stats-only WRR event loop as the accelerator fleet grows, at a
+//! fixed batches-per-accelerator load (DESIGN.md §Performance:
+//! per-iteration cost O(log n_accel), coordinator memory
+//! O(n_accel + outstanding CSD products)).
+//!
+//! The paper's testbed stops at a handful of accelerators; the ROADMAP
+//! north-star serves fleets. Before this harness the engine's
+//! per-iteration linear scans made total scheduling throughput degrade
+//! super-linearly with n_accel; with the index-min selection heap it
+//! should stay within a small factor across the sweep
+//! (n_accel ∈ {4, 16, 64, 256}).
+//!
+//! Besides the stdout report, results are written to
+//! `BENCH_sched_scale.json` (per fleet size: total batches/s, per-accel
+//! batches/s, virtual makespan, plus the 4→256 weak-scaling ratio) so
+//! the scaling trajectory is machine-checkable across PRs.
+//!
+//! Env knobs (CI perf smoke):
+//!   SCHED_SCALE_BPA        batches per accelerator        (default 500)
+//!   SCHED_SCALE_MIN_WRR    min total batches/s at n_accel = 64; below
+//!                          it the bench exits non-zero.
+//!   SCHED_SCALE_MAX_RATIO  max allowed total-throughput degradation
+//!                          ratio bps(n=4)/bps(n=256); above it the
+//!                          bench exits non-zero.
+use std::time::Instant;
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::Strategy;
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+
+/// Weak-scaling sweep: fleet sizes at fixed batches-per-accelerator.
+const FLEETS: [u32; 4] = [4, 16, 64, 256];
+
+/// Minimum batches timed per row (small-fleet runs are repeated up to
+/// this volume so the ratio isn't noise on a millisecond measurement).
+const MIN_MEASURED_BATCHES: u32 = 20_000;
+
+struct Row {
+    n_accel: u32,
+    batches_per_s: f64,
+    per_accel_batches_per_s: f64,
+    makespan_s: f64,
+}
+
+/// Read an f64 env knob. A knob that is *set but unparsable* is a hard
+/// error — silently ignoring it would disable the CI perf gate.
+fn env_f64(key: &str) -> Option<f64> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!("[sched_scale] FAIL: {key}={raw:?} is not a number");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Read a strictly-positive integer env knob (same hard-error policy —
+/// a fractional or zero load would silently skew the recorded baseline).
+fn env_u32_pos(key: &str) -> Option<u32> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse::<u32>() {
+        Ok(v) if v > 0 => Some(v),
+        _ => {
+            eprintln!("[sched_scale] FAIL: {key}={raw:?} is not a positive integer");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let bpa: u32 = env_u32_pos("SCHED_SCALE_BPA").unwrap_or(500);
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    let mut rows: Vec<Row> = Vec::new();
+    for n_accel in FLEETS {
+        let n = bpa * n_accel;
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            // One DataLoader worker per accelerator: the smallest
+            // staffed configuration, so the queue path is exercised
+            // without drowning the selection cost being measured.
+            .num_workers(n_accel)
+            .n_accel(n_accel)
+            .n_batches(n)
+            .record_trace(false)
+            .profile(profile.clone())
+            .build()
+            .unwrap();
+        let spec = DatasetSpec {
+            n_batches: n,
+            batch_size: 1,
+            pipeline: PipelineKind::ImageNet1,
+            seed: 0,
+        };
+        // Small fleets schedule few batches per run; repeat them until
+        // every row measures a comparable batch volume, so the
+        // weak-scaling ratio is not timer noise on a millisecond run.
+        let reps = (MIN_MEASURED_BATCHES / n).max(1);
+        let mut makespan = 0.0f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut costs = FixedCosts::toy_fig6();
+            let (report, _) = run_schedule(&cfg, &spec, &mut costs).unwrap();
+            makespan = report.makespan;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let batches_per_s = (n as f64 * reps as f64) / dt;
+        let per_accel = batches_per_s / n_accel as f64;
+        println!(
+            "[sched_scale] wrr n_accel={n_accel:<4} {n:>7} batches x{reps} in {dt:.3}s = \
+             {batches_per_s:>10.0} batches/s ({per_accel:.0}/accel, makespan {makespan:.0}s virtual)"
+        );
+        rows.push(Row {
+            n_accel,
+            batches_per_s,
+            per_accel_batches_per_s: per_accel,
+            makespan_s: makespan,
+        });
+    }
+
+    // Weak-scaling figure of merit: total scheduling throughput at the
+    // largest fleet vs the smallest. A linear-scan engine degrades
+    // ~n×; the O(log n) engine should hold this near 1.
+    let bps_first = rows.first().map(|r| r.batches_per_s).unwrap_or(0.0);
+    let bps_last = rows.last().map(|r| r.batches_per_s).unwrap_or(0.0);
+    let ratio = if bps_last > 0.0 {
+        bps_first / bps_last
+    } else {
+        f64::INFINITY
+    };
+    println!(
+        "[sched_scale] weak-scaling ratio bps(n={})/bps(n={}) = {ratio:.2}",
+        FLEETS[0],
+        FLEETS[FLEETS.len() - 1]
+    );
+
+    // Machine-readable scaling record, tracked across PRs.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"sched_scale\",\n");
+    json.push_str(&format!("  \"batches_per_accel\": {bpa},\n"));
+    json.push_str(&format!("  \"weak_scaling_ratio\": {ratio:.3},\n"));
+    json.push_str(&format!(
+        "  \"ratio_definition\": \"total batches_per_s at n_accel={} / total batches_per_s at \
+         n_accel={} (weak scaling at fixed batches per accelerator; 1.0 = flat)\",\n",
+        FLEETS[0],
+        FLEETS[FLEETS.len() - 1]
+    ));
+    json.push_str("  \"results\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"wrr_n{}\": {{\"batches_per_s\": {:.1}, \"per_accel_batches_per_s\": {:.1}, \
+             \"makespan_s\": {:.6}}}{comma}\n",
+            r.n_accel, r.batches_per_s, r.per_accel_batches_per_s, r.makespan_s
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_sched_scale.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[sched_scale] wrote {path}"),
+        Err(e) => eprintln!("[sched_scale] WARNING: could not write {path}: {e}"),
+    }
+
+    // CI perf smoke: conservative total-throughput floor at n_accel=64.
+    if let Some(floor) = env_f64("SCHED_SCALE_MIN_WRR") {
+        let r64 = rows
+            .iter()
+            .find(|r| r.n_accel == 64)
+            .expect("n_accel=64 row present");
+        if r64.batches_per_s < floor {
+            eprintln!(
+                "[sched_scale] FAIL: stats-only WRR at n_accel=64 {:.0} batches/s < floor {floor:.0}",
+                r64.batches_per_s
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "[sched_scale] perf smoke OK: n_accel=64 {:.0} >= {floor:.0} batches/s",
+            r64.batches_per_s
+        );
+    }
+    if let Some(max_ratio) = env_f64("SCHED_SCALE_MAX_RATIO") {
+        if ratio > max_ratio {
+            eprintln!("[sched_scale] FAIL: ratio {ratio:.2} > allowed {max_ratio:.2}");
+            std::process::exit(1);
+        }
+        println!("[sched_scale] weak scaling OK: ratio {ratio:.2} <= {max_ratio:.2}");
+    }
+}

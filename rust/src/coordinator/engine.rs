@@ -14,6 +14,15 @@
 //! deterministic; WRR never consumes a CSD batch before its write-back
 //! completes; the engine/policy split is byte-identical to the
 //! pre-refactor monolithic scheduler (`rust/tests/golden_parity.rs`).
+//!
+//! Fleet scaling (DESIGN.md §Performance): the per-iteration control
+//! path is O(log n_accel) — accelerator selection reads an incremental
+//! `(free_at, index)` index-min heap instead of scanning every
+//! accelerator — and engine memory is O(n_accel + outstanding CSD
+//! products): shards are arithmetic [`ShardView`]s and the CSD product
+//! log compacts at epoch boundaries. All of it preserves the linear
+//! implementations' observable behavior bit-exactly
+//! (`rust/tests/fleet_scale.rs`).
 
 use std::collections::VecDeque;
 
@@ -25,12 +34,13 @@ use crate::coordinator::cost::{CostProvider, HostBatchCost};
 use crate::coordinator::policies::SchedPolicy;
 use crate::coordinator::Strategy;
 use crate::csd::{CsdEngine, CsdProduct};
-use crate::dataset::{shard_batches, BatchId, DatasetSpec, HeadTailCursor};
+use crate::dataset::{BatchId, DatasetSpec, HeadTailCursor, ShardView};
 use crate::energy::compute_energy;
 use crate::host::{HostEngine, HostReady};
 use crate::metrics::RunReport;
 use crate::sim::Secs;
 use crate::trace::Trace;
+use crate::util::idxheap::IdxMinHeap;
 
 /// Upper bound on event-loop iterations per epoch (runaway guard).
 const MAX_ITERS_FACTOR: u64 = 64;
@@ -64,8 +74,21 @@ pub struct Engine<'a> {
     hosts: Vec<HostEngine>,
     csd: CsdEngine,
     accels: Vec<AccelEngine>,
-    /// Global batch ids per accelerator shard.
-    shards: Vec<Vec<BatchId>>,
+    /// Arithmetic shard views (O(1) memory each — the materialized
+    /// per-rank id vectors are gone; `dataset::shard_batches` remains
+    /// as the test oracle).
+    shards: Vec<ShardView>,
+    /// Unfinished accelerators keyed on `(free_at, index)`: `peek` is
+    /// the old linear `min_by(total_cmp)` scan, bit-exactly, at
+    /// O(log n) per update instead of O(n) per event-loop iteration.
+    ready_accels: IdxMinHeap,
+    /// Lowest-index unfinished accelerator (the sequential drain order
+    /// of the single-prong baselines); advanced monotonically as
+    /// accelerators finish, O(n) amortized per epoch.
+    first_unfinished_idx: usize,
+    /// Running max of accelerator `free_at` — exact, because device
+    /// lanes never move backwards.
+    max_free: Secs,
     // ---- per-epoch state ----
     cursors: Vec<HeadTailCursor>,
     queues: Vec<VecDeque<HostReady>>,
@@ -76,8 +99,9 @@ pub struct Engine<'a> {
     total_consumed: u64,
     /// Total CSD-sourced batches consumed across epochs.
     total_from_csd: u64,
-    /// Wasted (preprocessed, never consumed) batches across epochs.
-    wasted: u32,
+    /// Wasted (preprocessed, never consumed) batches across epochs
+    /// (`u64` end-to-end — long multi-epoch runs must not truncate).
+    wasted: u64,
     /// Record [`BatchReady`] events for the active policy?
     record_events: bool,
     events: Vec<BatchReady>,
@@ -90,8 +114,8 @@ impl<'a> Engine<'a> {
         costs: &'a mut dyn CostProvider,
     ) -> Self {
         let n_accel = cfg.n_accel as usize;
-        let shards: Vec<Vec<BatchId>> = (0..n_accel as u32)
-            .map(|r| shard_batches(spec.n_batches, r, cfg.n_accel))
+        let shards: Vec<ShardView> = (0..n_accel as u32)
+            .map(|r| ShardView::new(spec.n_batches, r, cfg.n_accel))
             .collect();
         // DDP: `num_workers` is the host-wide worker budget, split across
         // per-accelerator DataLoaders (paper: 16 threads = 8 per GPU).
@@ -111,7 +135,7 @@ impl<'a> Engine<'a> {
             }
             _ => cfg.profile.collate_overhead_s,
         };
-        Engine {
+        let mut eng = Engine {
             cfg,
             costs,
             trace: if cfg.record_trace {
@@ -139,7 +163,10 @@ impl<'a> Engine<'a> {
                 csd
             },
             accels: (0..n_accel).map(|i| AccelEngine::new(i as u16)).collect(),
-            cursors: shards.iter().map(|s| HeadTailCursor::new(s.len() as u32)).collect(),
+            ready_accels: IdxMinHeap::new(n_accel),
+            first_unfinished_idx: 0,
+            max_free: 0.0,
+            cursors: shards.iter().map(|s| HeadTailCursor::new(s.len())).collect(),
             queues: vec![VecDeque::new(); n_accel],
             consumed: vec![0; n_accel],
             from_csd: vec![0; n_accel],
@@ -149,20 +176,44 @@ impl<'a> Engine<'a> {
             wasted: 0,
             record_events: false,
             events: Vec::new(),
+        };
+        eng.rebuild_selection();
+        eng
+    }
+
+    /// Rebuild the incremental selection structures from the ground
+    /// truth (`consumed` vs shard length, accelerator lanes). Runs at
+    /// construction and every epoch boundary — O(n); all intra-epoch
+    /// maintenance is incremental.
+    fn rebuild_selection(&mut self) {
+        let n = self.accels.len();
+        self.ready_accels.clear();
+        self.max_free = 0.0;
+        for a in 0..n {
+            let free = self.accels[a].free_at();
+            self.max_free = self.max_free.max(free);
+            if self.consumed[a] < self.shards[a].len() {
+                self.ready_accels.upsert(a, free);
+            }
         }
+        self.first_unfinished_idx = (0..n)
+            .find(|&a| self.consumed[a] < self.shards[a].len())
+            .unwrap_or(n);
     }
 
     /// Restart the CSD, reset cursors/queues/counters; unconsumed queue
     /// entries are billed as waste.
     pub fn reset_epoch(&mut self) {
         self.csd.restart();
-        for (a, shard) in self.shards.iter().enumerate() {
-            self.cursors[a] = HeadTailCursor::new(shard.len() as u32);
-            self.wasted += self.queues[a].len() as u32;
+        for a in 0..self.shards.len() {
+            let len = self.shards[a].len();
+            self.cursors[a] = HeadTailCursor::new(len);
+            self.wasted += self.queues[a].len() as u64;
             self.queues[a].clear();
             self.consumed[a] = 0;
             self.from_csd[a] = 0;
         }
+        self.rebuild_selection();
     }
 
     // ------------------------------------------------------------------
@@ -178,7 +229,7 @@ impl<'a> Engine<'a> {
     }
 
     pub fn shard_len(&self, a: usize) -> u32 {
-        self.shards[a].len() as u32
+        self.shards[a].len()
     }
 
     /// Batches consumed by accelerator `a` this epoch.
@@ -201,23 +252,28 @@ impl<'a> Engine<'a> {
         self.accels[a].free_at()
     }
 
-    /// Latest `free_at` over all accelerators.
+    /// Latest `free_at` over all accelerators. O(1): a running max
+    /// maintained on `consume`/`poll_overhead` — exact, because
+    /// accelerator lanes are monotone, so the max over history equals
+    /// the max over current clocks.
     pub fn max_accel_free(&self) -> Secs {
-        self.accels.iter().map(|x| x.free_at()).fold(0.0, f64::max)
+        self.max_free
     }
 
     /// The unfinished accelerator with the smallest clock (the default
-    /// fairness rule of the dual-pronged strategies).
+    /// fairness rule of the dual-pronged strategies). O(1) peek of the
+    /// `(free_at, index)` index-min heap — same element, bit-exactly,
+    /// as the old linear `min_by(total_cmp)` scan (first minimal index
+    /// wins on exact ties).
     pub fn least_loaded_unfinished(&self) -> Option<usize> {
-        (0..self.accels.len())
-            .filter(|&a| self.consumed[a] < self.shard_len(a))
-            .min_by(|&x, &y| self.accels[x].free_at().total_cmp(&self.accels[y].free_at()))
+        self.ready_accels.peek()
     }
 
     /// The lowest-index unfinished accelerator (sequential drain order
-    /// of the single-prong baselines).
+    /// of the single-prong baselines). O(1): a monotone cursor advanced
+    /// as accelerators finish.
     pub fn first_unfinished(&self) -> Option<usize> {
-        (0..self.accels.len()).find(|&a| self.consumed[a] < self.shard_len(a))
+        (self.first_unfinished_idx < self.accels.len()).then_some(self.first_unfinished_idx)
     }
 
     // ------------------------------------------------------------------
@@ -246,9 +302,11 @@ impl<'a> Engine<'a> {
         self.csd.started_at()
     }
 
-    /// Batches the CSD produced so far (all epochs).
-    pub fn csd_produced_count(&self) -> usize {
-        self.csd.produced_ids().len()
+    /// Batches the CSD produced so far (all epochs). O(1) counter read
+    /// — the old implementation materialized a full `Vec<BatchId>` via
+    /// `produced_ids().len()` on every MTE calibration.
+    pub fn csd_produced_count(&self) -> u64 {
+        self.csd.produced_len()
     }
 
     /// Host stop signal: no CSD production may start at/after `t`.
@@ -261,6 +319,11 @@ impl<'a> Engine<'a> {
     pub fn poll_overhead(&mut self, a: usize) {
         if self.cfg.profile.poll_cost_s > 0.0 {
             self.accels[a].overhead(self.cfg.profile.poll_cost_s);
+            let free = self.accels[a].free_at();
+            self.max_free = self.max_free.max(free);
+            if self.ready_accels.contains(a) {
+                self.ready_accels.upsert(a, free);
+            }
         }
     }
 
@@ -269,9 +332,9 @@ impl<'a> Engine<'a> {
     // ------------------------------------------------------------------
 
     /// Map a shard-local index that a cursor just claimed (head or
-    /// tail) to the global batch id.
+    /// tail) to the global batch id — `rank + local × world`, O(1).
     fn global_id(&self, a: usize, local: BatchId) -> BatchId {
-        self.shards[a][local as usize]
+        self.shards[a].get(local)
     }
 
     /// Prefetch depth of the CPU path.
@@ -356,7 +419,8 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Consume one batch on accelerator `a`.
+    /// Consume one batch on accelerator `a`, keeping the incremental
+    /// selection structures in sync with the advanced lane clock.
     pub fn consume(&mut self, a: usize, gid: BatchId, source: BatchSource, data_ready: Secs) {
         let cost = self.costs.train(gid, source == BatchSource::Csd);
         self.accels[a].consume(gid, source, data_ready, &cost, &mut self.trace);
@@ -366,6 +430,21 @@ impl<'a> Engine<'a> {
             self.from_csd[a] += 1;
             self.total_from_csd += 1;
         }
+        let free = self.accels[a].free_at();
+        self.max_free = self.max_free.max(free);
+        if self.consumed[a] < self.shards[a].len() {
+            self.ready_accels.upsert(a, free);
+        } else {
+            self.ready_accels.remove(a);
+            if a == self.first_unfinished_idx {
+                let n = self.accels.len();
+                let mut i = self.first_unfinished_idx;
+                while i < n && self.consumed[i] >= self.shards[i].len() {
+                    i += 1;
+                }
+                self.first_unfinished_idx = i;
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -373,7 +452,14 @@ impl<'a> Engine<'a> {
     // ------------------------------------------------------------------
 
     fn iter_budget(&self) -> u64 {
-        (self.shards.iter().map(|s| s.len() as u64).sum::<u64>() + 16) * MAX_ITERS_FACTOR
+        // Saturating: huge synthetic configs (u32-scale shards × many
+        // accelerators) must clamp to "effectively unbounded", not wrap.
+        self.shards
+            .iter()
+            .map(|s| s.len() as u64)
+            .sum::<u64>()
+            .saturating_add(16)
+            .saturating_mul(MAX_ITERS_FACTOR)
     }
 
     /// Move pending [`BatchReady`] events into `out` (cleared first).
@@ -398,7 +484,7 @@ impl<'a> Engine<'a> {
     fn build_report(&mut self) -> RunReport {
         self.wasted += self.csd.wasted();
         for q in &self.queues {
-            self.wasted += q.len() as u32;
+            self.wasted += q.len() as u64;
         }
         let st = self.trace.stats();
         let makespan = self

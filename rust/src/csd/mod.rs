@@ -26,16 +26,30 @@ pub struct CsdProduct {
 }
 
 /// The CSD device.
+///
+/// The product log is **bounded by outstanding batches, not produced
+/// batches**: each epoch restart compacts the consumed prefix of every
+/// directory out of `produced`/`per_dir`, so multi-epoch runs no longer
+/// grow the log without bound. Cumulative accounting ([`CsdEngine::wasted`],
+/// [`CsdEngine::produced_len`] — MTE calibration) lives in stable `u64`
+/// counters that compaction never touches.
 #[derive(Debug)]
 pub struct CsdEngine {
     lane: Lane,
-    /// Production log in completion order (monotone `ready`).
+    /// Production log in completion order (monotone `ready`). Holds the
+    /// outstanding window: batches produced since the last compaction
+    /// that includes every still-unconsumed product.
     produced: Vec<CsdProduct>,
     /// Per-directory index into `produced` (completion order preserved,
     /// so `ready` is monotone within a directory — O(1) probes).
     per_dir: Vec<Vec<u32>>,
-    /// Per-directory consumed counters (the WRR host's read cursor).
+    /// Per-directory consumed counters (the WRR host's read cursor),
+    /// relative to the current `per_dir` window.
     consumed: Vec<usize>,
+    /// Batches produced across all epochs (compaction-stable).
+    total_produced: u64,
+    /// Batches consumed across all epochs (compaction-stable).
+    total_consumed: u64,
     /// Set when the host's stop signal lands (virtual time).
     stopped_at: Option<Secs>,
     /// Injected hardware failure: no production may start at/after this
@@ -55,6 +69,8 @@ impl CsdEngine {
             produced: Vec::new(),
             per_dir: vec![Vec::new(); n_dirs as usize],
             consumed: vec![0; n_dirs as usize],
+            total_produced: 0,
+            total_consumed: 0,
             stopped_at: None,
             fail_at: None,
             started_at: signal_latency,
@@ -102,6 +118,7 @@ impl CsdEngine {
             ready: e,
             dir,
         });
+        self.total_produced += 1;
         Some(e)
     }
 
@@ -113,9 +130,47 @@ impl CsdEngine {
 
     /// Next epoch's start signal: clears a previous stop (the host sends
     /// one control signal per epoch, §V Hardware). An injected failure
-    /// is *not* cleared — dead hardware stays dead.
+    /// is *not* cleared — dead hardware stays dead. Also compacts the
+    /// consumed prefix out of the product log, so the log stays bounded
+    /// by *outstanding* products across arbitrarily many epochs.
     pub fn restart(&mut self) {
         self.stopped_at = None;
+        self.compact();
+    }
+
+    /// Drop every already-consumed product from `produced`/`per_dir`
+    /// and rebase the per-directory cursors. Unconsumed products keep
+    /// their relative (completion) order and `ready` times, so every
+    /// observable probe/pop is unchanged; cumulative accounting lives in
+    /// `total_produced`/`total_consumed`, which this never touches.
+    fn compact(&mut self) {
+        if self.consumed.iter().all(|&c| c == 0) {
+            return;
+        }
+        let mut keep = vec![false; self.produced.len()];
+        for (d, ids) in self.per_dir.iter().enumerate() {
+            for &i in &ids[self.consumed[d]..] {
+                keep[i as usize] = true;
+            }
+        }
+        // Remap old `produced` indices to their post-retain positions.
+        let mut remap = vec![0u32; self.produced.len()];
+        let mut next = 0u32;
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                remap[i] = next;
+                next += 1;
+            }
+        }
+        let mut it = keep.iter();
+        self.produced.retain(|_| *it.next().unwrap());
+        for (d, ids) in self.per_dir.iter_mut().enumerate() {
+            ids.drain(..self.consumed[d]);
+            for i in ids.iter_mut() {
+                *i = remap[*i as usize];
+            }
+            self.consumed[d] = 0;
+        }
     }
 
     /// Inject a permanent device failure at virtual time `t` (failure-
@@ -145,6 +200,7 @@ impl CsdEngine {
         let prod = self.nth_unconsumed(dir)?;
         if prod.ready <= t {
             self.consumed[dir as usize] += 1;
+            self.total_consumed += 1;
             Some(prod)
         } else {
             None
@@ -157,6 +213,7 @@ impl CsdEngine {
     pub fn take_next(&mut self, dir: u16) -> Option<CsdProduct> {
         let prod = self.nth_unconsumed(dir)?;
         self.consumed[dir as usize] += 1;
+        self.total_consumed += 1;
         Some(prod)
     }
 
@@ -170,13 +227,23 @@ impl CsdEngine {
         self.lane.busy_total()
     }
 
-    /// Batches produced but never consumed (WRR overshoot waste).
-    pub fn wasted(&self) -> u32 {
-        let consumed: usize = self.consumed.iter().sum();
-        (self.produced.len() - consumed) as u32
+    /// Batches produced but never consumed (WRR overshoot waste),
+    /// cumulative across epochs. `u64`: long multi-epoch runs must not
+    /// silently truncate the way the old
+    /// `(produced.len() - consumed) as u32` did.
+    pub fn wasted(&self) -> u64 {
+        self.total_produced - self.total_consumed
     }
 
-    /// All produced batch ids (tests/invariants).
+    /// Batches produced so far, cumulative across epochs (stable under
+    /// product-log compaction). Feeds MTE's calibration without
+    /// materializing ids the way `produced_ids().len()` does.
+    pub fn produced_len(&self) -> u64 {
+        self.total_produced
+    }
+
+    /// Batch ids currently in the product log: everything produced since
+    /// the last compaction ([`CsdEngine::restart`]) — tests/invariants.
     pub fn produced_ids(&self) -> Vec<BatchId> {
         self.produced.iter().map(|p| p.batch).collect()
     }
@@ -267,6 +334,60 @@ mod tests {
         c.produce(8, 0, &cost(), &mut t);
         c.take_next(0);
         assert_eq!(c.wasted(), 1);
+    }
+
+    #[test]
+    fn restart_compacts_consumed_keeps_outstanding() {
+        let mut c = CsdEngine::new(2, 0.0);
+        let mut t = Trace::new();
+        c.produce(9, 0, &cost(), &mut t); // ready 1.0
+        c.produce(8, 1, &cost(), &mut t); // ready 2.0
+        c.produce(7, 0, &cost(), &mut t); // ready 3.0
+        c.take_next(0); // consumes 9
+        c.restart();
+        // Consumed prefix gone from the log; outstanding products intact.
+        assert_eq!(c.produced_ids(), vec![8, 7]);
+        let p = c.take_next(0).unwrap();
+        assert_eq!(p.batch, 7);
+        assert!((p.ready - 3.0).abs() < 1e-9);
+        assert_eq!(c.take_ready(1, 10.0).unwrap().batch, 8);
+        // Cumulative accounting unaffected by compaction.
+        assert_eq!(c.produced_len(), 3);
+        assert_eq!(c.wasted(), 0);
+    }
+
+    #[test]
+    fn compaction_bounds_log_across_epochs() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        for epoch in 0..50u32 {
+            c.restart();
+            for b in 0..4 {
+                c.produce(epoch * 4 + b, 0, &cost(), &mut t);
+            }
+            for _ in 0..4 {
+                c.take_next(0).unwrap();
+            }
+            // Log holds at most this epoch's products, never the
+            // cumulative history.
+            assert!(c.produced_ids().len() <= 4);
+        }
+        assert_eq!(c.produced_len(), 200);
+        assert_eq!(c.wasted(), 0);
+    }
+
+    #[test]
+    fn wasted_cumulative_across_restarts() {
+        let mut c = CsdEngine::new(1, 0.0);
+        let mut t = Trace::new();
+        c.produce(0, 0, &cost(), &mut t);
+        c.produce(1, 0, &cost(), &mut t);
+        c.take_next(0);
+        assert_eq!(c.wasted(), 1);
+        c.restart();
+        assert_eq!(c.wasted(), 1); // unconsumed leftover still counts
+        c.take_next(0).unwrap(); // leftover survives the restart
+        assert_eq!(c.wasted(), 0);
     }
 
     #[test]

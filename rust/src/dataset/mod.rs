@@ -111,9 +111,60 @@ impl HeadTailCursor {
 /// sees a disjoint, near-equal slice (§IV-E: "each process reads a
 /// unique partition of the dataset"). Uses the interleaved assignment
 /// PyTorch's sampler uses (`rank, rank + world, rank + 2·world, …`).
+///
+/// This materialized form is the **test oracle**; the engine holds
+/// O(1)-memory [`ShardView`]s instead, so peak heap no longer scales
+/// with `n_batches`.
 pub fn shard_batches(n_batches: u32, rank: u32, world: u32) -> Vec<BatchId> {
     assert!(world >= 1 && rank < world);
     (rank..n_batches).step_by(world as usize).collect()
+}
+
+/// O(1)-memory arithmetic view of one rank's DistributedSampler shard:
+/// shard-local index `local` maps to global id `rank + local × world`,
+/// bit-identical to indexing the materialized [`shard_batches`] vector
+/// (asserted by `prop_shard_view_matches_materialized`). Replaces the
+/// engine's per-rank `Vec<BatchId>` so a fleet-scale run's coordinator
+/// memory is O(n_accel), independent of dataset size.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardView {
+    n_batches: u32,
+    rank: u32,
+    world: u32,
+}
+
+impl ShardView {
+    pub fn new(n_batches: u32, rank: u32, world: u32) -> Self {
+        assert!(world >= 1 && rank < world);
+        ShardView {
+            n_batches,
+            rank,
+            world,
+        }
+    }
+
+    /// Number of batches in this rank's shard
+    /// (`|{rank, rank + world, …} ∩ [0, n_batches)|`).
+    pub fn len(&self) -> u32 {
+        if self.n_batches > self.rank {
+            (self.n_batches - self.rank).div_ceil(self.world)
+        } else {
+            0
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Global batch id of shard-local index `local`.
+    pub fn get(&self, local: u32) -> BatchId {
+        // Hard assert (like the Vec indexing it replaced): an
+        // out-of-range local index must crash at the fault site, not
+        // silently map to another rank's batch.
+        assert!(local < self.len(), "local {local} out of shard");
+        self.rank + local * self.world
+    }
 }
 
 /// Generate the raw bytes of sample `idx` (decoded u8 HWC image) with
@@ -202,6 +253,32 @@ mod tests {
         let mut all: Vec<BatchId> = (0..world).flat_map(|r| shard_batches(n, r, world)).collect();
         all.sort_unstable();
         assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_shard_view_matches_materialized() {
+        // The arithmetic view must agree with the materialized oracle
+        // element-for-element, including empty shards (rank >= n).
+        run_prop("ShardView == shard_batches", 100, |g| {
+            let world = g.size(1, 12) as u32;
+            let n = g.size(0, 600) as u32;
+            for rank in 0..world {
+                let oracle = shard_batches(n, rank, world);
+                let view = ShardView::new(n, rank, world);
+                assert_eq!(view.len() as usize, oracle.len());
+                assert_eq!(view.is_empty(), oracle.is_empty());
+                for (local, &gid) in oracle.iter().enumerate() {
+                    assert_eq!(view.get(local as u32), gid);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn shard_view_empty_when_rank_past_dataset() {
+        let v = ShardView::new(2, 3, 8);
+        assert_eq!(v.len(), 0);
+        assert!(v.is_empty());
     }
 
     #[test]

@@ -41,7 +41,9 @@ pub struct RunReport {
     /// Batches whose data came from the CSD side.
     pub batches_from_csd: u32,
     /// Batches preprocessed but never consumed (WRR overshoot waste).
-    pub wasted_batches: u32,
+    /// `u64`: accumulated across epochs, so long multi-epoch runs must
+    /// not truncate (the old `u32` silently wrapped).
+    pub wasted_batches: u64,
     /// Energy accounting (Table VIII).
     pub energy: EnergyReport,
 }

@@ -1,10 +1,12 @@
 //! Small self-contained utilities: PRNG, JSON parsing, DTNS tensor files,
-//! a miniature property-testing harness and a scoped-thread parallel map.
+//! a miniature property-testing harness, a scoped-thread parallel map
+//! and the scheduler's index-min priority structure.
 //!
 //! These exist in-repo because the build is fully offline (no crates.io
 //! access beyond the vendored set); `DESIGN.md` records the substitutions
 //! (`prop` ≈ proptest, [`json`] ≈ serde_json for the manifest subset).
 
+pub mod idxheap;
 pub mod json;
 pub mod par;
 pub mod prng;

@@ -1,0 +1,159 @@
+//! Fleet-scale scheduling: the O(log n) selection structure must be
+//! observationally identical to the old per-iteration linear scans, and
+//! the full scheduler must keep its exactly-once invariants at
+//! accelerator counts far beyond the paper's testbed (ISSUE 3 /
+//! DESIGN.md §Performance weak-scaling model).
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::schedule::run_schedule;
+use ddlp::coordinator::Strategy;
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+use ddlp::trace::{Phase, Trace};
+use ddlp::util::idxheap::IdxMinHeap;
+use ddlp::util::prop::run_prop;
+
+/// The engine's pre-heap selection rule, verbatim: linear scan over the
+/// member set, `Iterator::min_by` on `total_cmp` keys (first minimal
+/// element wins on exact ties).
+fn linear_min(keys: &[f64], member: &[bool]) -> Option<usize> {
+    (0..keys.len())
+        .filter(|&a| member[a])
+        .min_by(|&x, &y| keys[x].total_cmp(&keys[y]))
+}
+
+/// Bit-exact heap/scan agreement on random monotone `free_at`
+/// sequences — the engine's actual update pattern: keys only ever grow
+/// (lane clocks are monotone), members leave when their shard
+/// finishes. Keys are drawn from a coarse grid so **exact f64 ties**
+/// are common, and zero-sized bumps re-key members with equal keys.
+#[test]
+fn prop_idxheap_pop_order_matches_linear_scan() {
+    run_prop("idxheap == min_by scan on monotone free_at", 200, |g| {
+        let n = g.size(1, 64);
+        let mut heap = IdxMinHeap::new(n);
+        let mut keys = vec![0.0f64; n];
+        let mut member = vec![true; n];
+        for a in 0..n {
+            // Mixed starting clocks, grid-aligned for ties.
+            keys[a] = g.int(0, 6) as f64 * 0.5;
+            heap.upsert(a, keys[a]);
+        }
+        for _ in 0..g.size(0, 200) {
+            let selected = heap.peek();
+            assert_eq!(selected, linear_min(&keys, &member));
+            let Some(a) = selected else { break };
+            // Advance the selected accelerator's clock like `consume`
+            // does (possibly by exactly 0 — a pure re-key on a tie), or
+            // finish it like shard exhaustion does.
+            if g.int(0, 5) == 0 {
+                member[a] = false;
+                heap.remove(a);
+            } else {
+                keys[a] += g.int(0, 4) as f64 * 0.5;
+                heap.upsert(a, keys[a]);
+            }
+            // Occasionally revive a departed slot (epoch-boundary
+            // re-insertion) — upsert-on-absent churn.
+            if g.int(0, 7) == 0 {
+                let b = g.size(0, n - 1);
+                if !member[b] {
+                    keys[b] += g.int(0, 4) as f64 * 0.5;
+                    member[b] = true;
+                    heap.upsert(b, keys[b]);
+                }
+            }
+        }
+        // Drain what is left: pop order must equal repeated scans.
+        while let Some(a) = heap.peek() {
+            assert_eq!(Some(a), linear_min(&keys, &member));
+            member[a] = false;
+            heap.remove(a);
+        }
+        assert_eq!(linear_min(&keys, &member), None);
+    });
+}
+
+fn spec(n: u32) -> DatasetSpec {
+    DatasetSpec {
+        n_batches: n,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    }
+}
+
+/// Every batch id 0..n is trained exactly once per epoch.
+fn assert_exact_coverage(trace: &Trace, n: u32, epochs: u32, label: &str) {
+    let mut counts = vec![0u32; n as usize];
+    for s in &trace.spans {
+        if s.phase == Phase::Train {
+            counts[s.batch.unwrap() as usize] += 1;
+        }
+    }
+    for (b, &c) in counts.iter().enumerate() {
+        assert_eq!(c, epochs, "{label}: batch {b} trained {c}×, want {epochs}");
+    }
+}
+
+/// Large-fleet smoke: all five strategies at n_accel = 64 (16× the
+/// paper's testbed) keep every-batch-exactly-once across epochs, with
+/// and without DataLoader workers.
+#[test]
+fn fleet64_every_strategy_exactly_once() {
+    const N_ACCEL: u32 = 64;
+    const N_BATCHES: u32 = N_ACCEL * 10;
+    const EPOCHS: u32 = 2;
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    for strategy in Strategy::ALL {
+        for workers in [0u32, N_ACCEL] {
+            let label = format!("{strategy} workers={workers}");
+            let c = ExperimentConfig::builder()
+                .model("wrn")
+                .pipeline_kind(PipelineKind::ImageNet1)
+                .strategy(strategy)
+                .num_workers(workers)
+                .n_accel(N_ACCEL)
+                .n_batches(N_BATCHES)
+                .epochs(EPOCHS)
+                .profile(profile.clone())
+                .build()
+                .unwrap();
+            let mut costs = FixedCosts::toy_fig6();
+            let (report, trace) = run_schedule(&c, &spec(N_BATCHES), &mut costs).unwrap();
+            assert_eq!(report.n_batches, N_BATCHES * EPOCHS, "{label}");
+            assert_exact_coverage(&trace, N_BATCHES, EPOCHS, &label);
+        }
+    }
+}
+
+/// Ragged fleet: n_batches not divisible by n_accel (some shards one
+/// batch longer), plus an n_accel > n_batches config where trailing
+/// shards are empty — the first-unfinished cursor and the heap must
+/// both cope with never-members.
+#[test]
+fn fleet_ragged_and_empty_shards() {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    for (n_accel, n_batches) in [(48u32, 500u32), (64, 40)] {
+        for strategy in Strategy::ALL {
+            let label = format!("{strategy} n_accel={n_accel} n={n_batches}");
+            let c = ExperimentConfig::builder()
+                .model("wrn")
+                .pipeline_kind(PipelineKind::ImageNet1)
+                .strategy(strategy)
+                .num_workers(0)
+                .n_accel(n_accel)
+                .n_batches(n_batches)
+                .profile(profile.clone())
+                .build()
+                .unwrap();
+            let mut costs = FixedCosts::toy_fig6();
+            let (report, trace) = run_schedule(&c, &spec(n_batches), &mut costs).unwrap();
+            assert_eq!(report.n_batches, n_batches, "{label}");
+            assert_exact_coverage(&trace, n_batches, 1, &label);
+        }
+    }
+}

@@ -5,7 +5,13 @@
 //!
 //! The reference implementation below (`legacy` module) is the old
 //! `coordinator/schedule.rs` event loop, preserved verbatim (only
-//! `crate::` paths renamed) against the crate's public device engines.
+//! `crate::` paths renamed, the `wasted` accumulator widened u32 → u64
+//! to follow `RunReport.wasted_batches`, and the MTE calibration's
+//! `produced_ids().len()` replaced by `produced_len()` — both keep the
+//! original values: the cumulative production count, which
+//! `produced_ids().len()` stopped being once the product log began
+//! compacting at epoch restarts) against the crate's public device
+//! engines.
 //! Configs keep `num_workers == 0` or `num_workers >= n_accel` so the
 //! legacy integer-division worker split matches the fixed, clamped one.
 
@@ -52,7 +58,7 @@ mod legacy {
         mte_ratio: Option<(f64, f64)>,
         total_consumed: u64,
         total_from_csd: u64,
-        wasted: u32,
+        wasted: u64,
     }
 
     impl<'a> Sched<'a> {
@@ -108,7 +114,7 @@ mod legacy {
             self.csd.restart();
             for (a, shard) in self.shards.iter().enumerate() {
                 self.cursors[a] = HeadTailCursor::new(shard.len() as u32);
-                self.wasted += self.queues[a].len() as u32;
+                self.wasted += self.queues[a].len() as u64;
                 self.queues[a].clear();
                 self.consumed[a] = 0;
                 self.from_csd[a] = 0;
@@ -260,7 +266,10 @@ mod legacy {
                     if let (Some(cpu_end), true) = (cpu_cal_end, csd_done[0] >= cal) {
                         let cal_base = cpu_cal_start.unwrap_or(epoch_start);
                         let t_cpu = (cpu_end - cal_base) / cal as f64;
-                        let csd_products = self.csd.produced_ids().len() as f64;
+                        // produced_len(): the cumulative count, which is
+                        // what produced_ids().len() meant before the
+                        // product log compacted at epoch restarts.
+                        let csd_products = self.csd.produced_len() as f64;
                         let t_csd =
                             (self.csd.drain_time() - self.csd.started_at()) / csd_products;
                         self.mte_ratio = Some((t_cpu, t_csd));
@@ -427,7 +436,7 @@ mod legacy {
         fn build_report(&mut self) -> RunReport {
             self.wasted += self.csd.wasted();
             for q in &self.queues {
-                self.wasted += q.len() as u32;
+                self.wasted += q.len() as u64;
             }
             let makespan = self
                 .accels
