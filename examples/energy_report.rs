@@ -7,7 +7,7 @@
 //! ```
 
 use ddlp::config::{table_models, ExperimentConfig};
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::{fmt_s, Table};
 
 const PRICE_PER_KWH: f64 = 0.095; // Vancouver basic rate (paper)
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
                     .n_batches(300)
                     .epochs(3)
                     .build()?;
-                let report = run_experiment(&cfg)?.report;
+                let report = Session::from_config(&cfg)?.run()?.report;
                 let cost = report.energy.cost_usd(100, PRICE_PER_KWH, batches);
                 let base = *cpu_cost.get_or_insert(cost);
                 table.row(vec![

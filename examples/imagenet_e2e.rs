@@ -14,7 +14,7 @@
 //! ```
 
 use ddlp::config::{DeviceProfile, ExecMode, ExperimentConfig};
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::{fmt_s, pct_faster, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                 artifacts_dir: artifacts.clone(),
             })
             .build()?;
-        let result = run_experiment(&cfg)?;
+        let result = Session::from_config(&cfg)?.run()?;
         let r = &result.report;
         let losses = &result.losses;
         assert_eq!(losses.len() as u32, r.n_batches);

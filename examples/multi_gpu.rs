@@ -6,7 +6,7 @@
 //! ```
 
 use ddlp::config::ExperimentConfig;
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::{fmt_s, pct_faster, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
                     .n_batches(400)
                     .epochs(3)
                     .build()?;
-                Ok(run_experiment(&cfg)?.report.learn_time_per_batch)
+                Ok(Session::from_config(&cfg)?.run()?.report.learn_time_per_batch)
             };
             let one = run(1)?;
             let two = run(2)?;

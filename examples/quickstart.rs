@@ -8,7 +8,7 @@
 //! see `imagenet_e2e` for the real-execution path.
 
 use ddlp::config::ExperimentConfig;
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::{fmt_s, pct_faster, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
             .n_batches(300)
             .epochs(3)
             .build()?;
-        let report = run_experiment(&cfg)?.report;
+        let report = Session::from_config(&cfg)?.run()?.report;
         let base = *baseline.get_or_insert(report.learn_time_per_batch);
         table.row(vec![
             strategy.name().to_string(),

@@ -11,7 +11,7 @@
 //!    batches mis-split; more buys little.
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::{fmt_s, pct_faster, Table};
 
 fn run(strategy: Strategy, profile: DeviceProfile, workers: u32) -> f64 {
@@ -25,7 +25,7 @@ fn run(strategy: Strategy, profile: DeviceProfile, workers: u32) -> f64 {
         .profile(profile)
         .build()
         .unwrap();
-    run_experiment(&cfg).unwrap().report.learn_time_per_batch
+    Session::from_config(&cfg).unwrap().run().unwrap().report.learn_time_per_batch
 }
 
 fn main() {
@@ -92,7 +92,7 @@ fn main() {
                 .epochs(epochs)
                 .build()
                 .unwrap();
-            run_experiment(&cfg).unwrap().report.learn_time_per_batch
+            Session::from_config(&cfg).unwrap().run().unwrap().report.learn_time_per_batch
         };
         let cpu = mk(Strategy::CpuOnly);
         let mte = mk(Strategy::Mte);

@@ -20,10 +20,10 @@ use std::time::Instant;
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::FixedCosts;
-use ddlp::coordinator::schedule::run_schedule;
-use ddlp::coordinator::Strategy;
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
+use ddlp::topology::Topology;
 
 struct Row {
     label: &'static str,
@@ -72,8 +72,13 @@ fn main() {
             seed: 0,
         };
         let mut costs = FixedCosts::toy_fig6();
+        let topo = Topology::single_node(cfg.n_accel);
         let t0 = Instant::now();
-        let (report, _) = run_schedule(&cfg, &spec, &mut costs).unwrap();
+        let report = Session::with_costs(&cfg, topo, &spec, &mut costs)
+            .unwrap()
+            .run()
+            .unwrap()
+            .report;
         let dt = t0.elapsed().as_secs_f64();
         let batches_per_s = n as f64 / dt;
         println!(

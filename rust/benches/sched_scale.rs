@@ -14,7 +14,10 @@
 //! Besides the stdout report, results are written to
 //! `BENCH_sched_scale.json` (per fleet size: total batches/s, per-accel
 //! batches/s, virtual makespan, plus the 4→256 weak-scaling ratio) so
-//! the scaling trajectory is machine-checkable across PRs.
+//! the scaling trajectory is machine-checkable across PRs. A second
+//! sweep scales the **CSD fleet** (`n_csd ∈ {1, 4, 16}` at
+//! n_accel = 64, stripe assignment, via the topology-first `Session`
+//! API) — its rows land in the same JSON under `csd_results`.
 //!
 //! Env knobs (CI perf smoke):
 //!   SCHED_SCALE_BPA        batches per accelerator        (default 500)
@@ -23,17 +26,24 @@
 //!   SCHED_SCALE_MAX_RATIO  max allowed total-throughput degradation
 //!                          ratio bps(n=4)/bps(n=256); above it the
 //!                          bench exits non-zero.
+//!   SCHED_SCALE_MCSD_MIN_WRR  min total batches/s over the multi-CSD
+//!                          sweep rows; below it the bench exits
+//!                          non-zero.
 use std::time::Instant;
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::FixedCosts;
-use ddlp::coordinator::schedule::run_schedule;
-use ddlp::coordinator::Strategy;
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
+use ddlp::topology::{CsdAssign, Topology};
 
 /// Weak-scaling sweep: fleet sizes at fixed batches-per-accelerator.
 const FLEETS: [u32; 4] = [4, 16, 64, 256];
+
+/// CSD-fleet sweep (fixed accelerator fleet, growing CSD count).
+const CSD_FLEETS: [u32; 3] = [1, 4, 16];
+const CSD_SWEEP_N_ACCEL: u32 = 64;
 
 /// Minimum batches timed per row (small-fleet runs are repeated up to
 /// this volume so the ratio isn't noise on a millisecond measurement).
@@ -102,11 +112,16 @@ fn main() {
         // every row measures a comparable batch volume, so the
         // weak-scaling ratio is not timer noise on a millisecond run.
         let reps = (MIN_MEASURED_BATCHES / n).max(1);
+        let topo = Topology::single_node(n_accel);
         let mut makespan = 0.0f64;
         let t0 = Instant::now();
         for _ in 0..reps {
             let mut costs = FixedCosts::toy_fig6();
-            let (report, _) = run_schedule(&cfg, &spec, &mut costs).unwrap();
+            let report = Session::with_costs(&cfg, topo.clone(), &spec, &mut costs)
+                .unwrap()
+                .run()
+                .unwrap()
+                .report;
             makespan = report.makespan;
         }
         let dt = t0.elapsed().as_secs_f64();
@@ -118,6 +133,60 @@ fn main() {
         );
         rows.push(Row {
             n_accel,
+            batches_per_s,
+            per_accel_batches_per_s: per_accel,
+            makespan_s: makespan,
+        });
+    }
+
+    // ---- multi-CSD sweep -------------------------------------------
+    // Fixed accelerator fleet, growing CSD fleet (stripe assignment):
+    // per-CSD routing through the topology's assignment map must not
+    // regress the event loop's total scheduling throughput.
+    let mut csd_rows: Vec<Row> = Vec::new();
+    for n_csd in CSD_FLEETS {
+        let n = bpa * CSD_SWEEP_N_ACCEL;
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            .num_workers(CSD_SWEEP_N_ACCEL)
+            .n_accel(CSD_SWEEP_N_ACCEL)
+            .n_csd(n_csd)
+            .csd_assign(CsdAssign::Stripe)
+            .n_batches(n)
+            .record_trace(false)
+            .profile(profile.clone())
+            .build()
+            .unwrap();
+        let spec = DatasetSpec {
+            n_batches: n,
+            batch_size: 1,
+            pipeline: PipelineKind::ImageNet1,
+            seed: 0,
+        };
+        let topo = Topology::from_config(&cfg).unwrap();
+        let reps = (MIN_MEASURED_BATCHES / n).max(1);
+        let mut makespan = 0.0f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut costs = FixedCosts::toy_fig6();
+            let report = Session::with_costs(&cfg, topo.clone(), &spec, &mut costs)
+                .unwrap()
+                .run()
+                .unwrap()
+                .report;
+            makespan = report.makespan;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let batches_per_s = (n as f64 * reps as f64) / dt;
+        let per_accel = batches_per_s / CSD_SWEEP_N_ACCEL as f64;
+        println!(
+            "[sched_scale] wrr n_accel={CSD_SWEEP_N_ACCEL} n_csd={n_csd:<3} {n:>7} batches \
+             x{reps} in {dt:.3}s = {batches_per_s:>10.0} batches/s ({per_accel:.0}/accel, \
+             makespan {makespan:.0}s virtual)"
+        );
+        csd_rows.push(Row {
+            n_accel: n_csd, // reused column: CSD fleet size for this sweep
             batches_per_s,
             per_accel_batches_per_s: per_accel,
             makespan_s: makespan,
@@ -160,6 +229,18 @@ fn main() {
             r.n_accel, r.batches_per_s, r.per_accel_batches_per_s, r.makespan_s
         ));
     }
+    json.push_str("  },\n");
+    json.push_str(&format!(
+        "  \"csd_sweep_n_accel\": {CSD_SWEEP_N_ACCEL},\n  \"csd_results\": {{\n"
+    ));
+    for (i, r) in csd_rows.iter().enumerate() {
+        let comma = if i + 1 < csd_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"wrr_a{}_csd{}\": {{\"batches_per_s\": {:.1}, \
+             \"per_accel_batches_per_s\": {:.1}, \"makespan_s\": {:.6}}}{comma}\n",
+            CSD_SWEEP_N_ACCEL, r.n_accel, r.batches_per_s, r.per_accel_batches_per_s, r.makespan_s
+        ));
+    }
     json.push_str("  }\n}\n");
     let path = "BENCH_sched_scale.json";
     match std::fs::write(path, &json) {
@@ -191,5 +272,25 @@ fn main() {
             std::process::exit(1);
         }
         println!("[sched_scale] weak scaling OK: ratio {ratio:.2} <= {max_ratio:.2}");
+    }
+    // Multi-CSD smoke: the slowest CSD-fleet row must clear the floor —
+    // per-device routing is O(1) per operation, so growing the CSD
+    // fleet must not sink total scheduling throughput.
+    if let Some(floor) = env_f64("SCHED_SCALE_MCSD_MIN_WRR") {
+        let worst = csd_rows
+            .iter()
+            .min_by(|a, b| a.batches_per_s.total_cmp(&b.batches_per_s))
+            .expect("csd sweep has rows");
+        if worst.batches_per_s < floor {
+            eprintln!(
+                "[sched_scale] FAIL: multi-CSD sweep (n_csd={}) {:.0} batches/s < floor {floor:.0}",
+                worst.n_accel, worst.batches_per_s
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "[sched_scale] multi-CSD smoke OK: worst row (n_csd={}) {:.0} >= {floor:.0} batches/s",
+            worst.n_accel, worst.batches_per_s
+        );
     }
 }

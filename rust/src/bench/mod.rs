@@ -16,11 +16,11 @@ use anyhow::Result;
 
 use crate::config::{fig1_models, table_models, ExperimentConfig, Loader};
 use crate::coordinator::cost::FixedCosts;
-use crate::coordinator::schedule::run_schedule;
-use crate::coordinator::{run_experiment, Strategy};
+use crate::coordinator::{Session, Strategy};
 use crate::dataset::DatasetSpec;
 use crate::metrics::{fmt_s, RunReport, Table};
 use crate::pipeline::PipelineKind;
+use crate::topology::Topology;
 use crate::util::par_map;
 
 /// Batches per epoch for the table benches (enough for calibration and
@@ -49,7 +49,7 @@ fn run_one(
         // exact — no need to store ~6·n_batches·epochs spans per cell.
         .record_trace(false)
         .build()?;
-    Ok(run_experiment(&cfg)?.report)
+    Ok(Session::from_config(&cfg)?.run()?.report)
 }
 
 /// The seven Table VI / Table VIII column variants.
@@ -280,7 +280,7 @@ pub fn fig8() -> Result<Table> {
             .profile(profile)
             .record_trace(false)
             .build()?;
-        Ok(run_experiment(&cfg)?.report.learn_time_per_batch)
+        Ok(Session::from_config(&cfg)?.run()?.report.learn_time_per_batch)
     };
     // One flat job list over both targets, fanned out together:
     // (is_dsa, strategy, workers) — GPU row first, then the DSA row.
@@ -350,7 +350,8 @@ pub fn fig6() -> Result<Table> {
             .record_trace(false)
             .build()?;
         let mut costs = FixedCosts::toy_fig6();
-        let (report, _) = run_schedule(&cfg, &spec, &mut costs)?;
+        let topo = Topology::single_node(cfg.n_accel);
+        let report = Session::with_costs(&cfg, topo, &spec, &mut costs)?.run()?.report;
         t.row(vec![
             strategy.name().to_string(),
             fmt_s(report.makespan),

@@ -12,6 +12,8 @@
 //! n_batches = 500
 //! epochs = 1
 //! n_accel = 1
+//! n_csd = 1             # CSD fleet size (0 valid for cpu strategy)
+//! csd_assign = block    # block | stripe shard→CSD assignment
 //! loader = torchvision  # torchvision | dali_cpu | dali_gpu
 //! seed = 0
 //! trace_mode = full     # full | stats_only (streaming stats, O(1) mem)
@@ -35,6 +37,7 @@ use anyhow::{bail, Context, Result};
 use super::{ExperimentBuilder, ExperimentConfig, Loader};
 use crate::coordinator::Strategy;
 use crate::pipeline::PipelineKind;
+use crate::topology::CsdAssign;
 
 /// Parse file contents into a key→value map (comments `#`, blank lines).
 pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
@@ -84,6 +87,12 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
             }
             "num_workers" => b.num_workers(v.parse().context("num_workers")?),
             "n_accel" => b.n_accel(v.parse().context("n_accel")?),
+            "n_csd" => b.n_csd(v.parse().context("n_csd")?),
+            "csd_assign" => {
+                let a = CsdAssign::parse(v)
+                    .with_context(|| format!("bad csd_assign {v:?} (expected block | stripe)"))?;
+                b.csd_assign(a)
+            }
             "n_batches" => b.n_batches(v.parse().context("n_batches")?),
             "epochs" => b.epochs(v.parse().context("epochs")?),
             "seed" => b.seed(v.parse().context("seed")?),
@@ -211,6 +220,19 @@ mod tests {
         assert!(load("trace_mode = off\n", &[]).is_err());
         // the boolean key keeps working
         assert!(!load("record_trace = false\n", &[]).unwrap().record_trace);
+    }
+
+    #[test]
+    fn topology_keys_parse() {
+        let cfg = load("n_csd = 4\ncsd_assign = stripe\nn_accel = 4\n", &[]).unwrap();
+        assert_eq!(cfg.n_csd, 4);
+        assert_eq!(cfg.csd_assign, CsdAssign::Stripe);
+        assert!(load("csd_assign = diagonal\n", &[]).is_err());
+        // n_csd = 0 flows through builder validation: rejected for the
+        // default (CSD-using) strategy, accepted for the cpu path.
+        assert!(load("n_csd = 0\n", &[]).is_err());
+        let cfg = load("n_csd = 0\nstrategy = cpu\n", &[]).unwrap();
+        assert_eq!(cfg.n_csd, 0);
     }
 
     #[test]

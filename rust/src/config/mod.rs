@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::Strategy;
 use crate::pipeline::{OpCosts, PipelineKind};
+use crate::topology::CsdAssign;
 
 /// Electrical power model (paper §VI-B6: 5 W per CPU process, 0.25 W
 /// CSD, Vancouver $0.095/kWh).
@@ -207,6 +208,12 @@ pub struct ExperimentConfig {
     pub num_workers: u32,
     /// Accelerators (1 = single GPU; 2 reproduces Table VI rows 6–7).
     pub n_accel: u32,
+    /// CSD devices in the fleet (1 = the paper's testbed; 0 = no CSD —
+    /// valid only for strategies that never touch it). Feeds the
+    /// default [`crate::topology::Topology`] a session runs on.
+    pub n_csd: u32,
+    /// Shard→CSD assignment mode (`csd_assign = block|stripe`).
+    pub csd_assign: CsdAssign,
     /// Batches per epoch (dataset_size / batch_size).
     pub n_batches: u32,
     /// Training epochs to simulate.
@@ -255,6 +262,8 @@ pub struct ExperimentBuilder {
     strategy: Strategy,
     num_workers: u32,
     n_accel: u32,
+    n_csd: u32,
+    csd_assign: CsdAssign,
     n_batches: u32,
     epochs: u32,
     loader: Loader,
@@ -273,6 +282,8 @@ impl Default for ExperimentBuilder {
             strategy: Strategy::Wrr,
             num_workers: 0,
             n_accel: 1,
+            n_csd: 1,
+            csd_assign: CsdAssign::Block,
             n_batches: 500,
             epochs: 1,
             loader: Loader::Torchvision,
@@ -315,6 +326,16 @@ impl ExperimentBuilder {
 
     pub fn n_accel(mut self, n: u32) -> Self {
         self.n_accel = n;
+        self
+    }
+
+    pub fn n_csd(mut self, n: u32) -> Self {
+        self.n_csd = n;
+        self
+    }
+
+    pub fn csd_assign(mut self, a: CsdAssign) -> Self {
+        self.csd_assign = a;
         self
     }
 
@@ -380,6 +401,16 @@ impl ExperimentBuilder {
                 self.n_accel
             );
         }
+        // A CSD-using strategy on a CSD-less fleet cannot run (and must
+        // not silently fall back or charge idle CSD power): reject with
+        // a clear error instead of panicking deep in the engine.
+        if self.strategy.uses_csd() && self.n_csd == 0 {
+            bail!(
+                "strategy {:?} preprocesses on the CSD, but n_csd = 0 — the fleet has no \
+                 CSD device; use the cpu strategy or set n_csd >= 1",
+                self.strategy.name()
+            );
+        }
         if !self.adaptive.cv_threshold.is_finite() || self.adaptive.cv_threshold <= 0.0 {
             bail!("adaptive_cv_threshold must be a finite value > 0");
         }
@@ -392,6 +423,8 @@ impl ExperimentBuilder {
             strategy: self.strategy,
             num_workers: self.num_workers,
             n_accel: self.n_accel,
+            n_csd: self.n_csd,
+            csd_assign: self.csd_assign,
             n_batches: self.n_batches,
             epochs: self.epochs,
             loader: self.loader,
@@ -415,7 +448,37 @@ mod tests {
         let cfg = ExperimentConfig::builder().build().unwrap();
         assert_eq!(cfg.model, "wrn");
         assert_eq!(cfg.n_accel, 1);
+        assert_eq!(cfg.n_csd, 1);
+        assert_eq!(cfg.csd_assign, CsdAssign::Block);
         assert!(cfg.record_trace);
+    }
+
+    #[test]
+    fn builder_rejects_csd_strategy_without_csd() {
+        // CSD-using strategies cannot run on a CSD-less fleet.
+        for s in [Strategy::CsdOnly, Strategy::Mte, Strategy::Wrr, Strategy::Adaptive] {
+            let err = ExperimentConfig::builder()
+                .strategy(s)
+                .n_csd(0)
+                .build()
+                .unwrap_err();
+            assert!(err.to_string().contains("n_csd"), "{s}: {err}");
+        }
+        // The classical path never touches the CSD: n_csd = 0 is fine.
+        let cfg = ExperimentConfig::builder()
+            .strategy(Strategy::CpuOnly)
+            .n_csd(0)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.n_csd, 0);
+        // Multi-CSD fleets build too.
+        let cfg = ExperimentConfig::builder()
+            .n_csd(4)
+            .csd_assign(CsdAssign::Stripe)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.n_csd, 4);
+        assert_eq!(cfg.csd_assign, CsdAssign::Stripe);
     }
 
     #[test]

@@ -56,6 +56,43 @@ pub trait CostProvider {
     fn host_batch(&mut self, b: BatchId) -> HostBatchCost;
     fn csd_batch(&mut self, b: BatchId) -> CsdBatchCost;
     fn train(&mut self, b: BatchId, from_csd: bool) -> TrainCost;
+
+    /// Real-mode loss curve observed so far. Analytic providers execute
+    /// no training steps, so the default is empty; the PJRT-backed
+    /// [`crate::runtime::RealSession`] overrides it, which is how
+    /// `coordinator::Session` surfaces losses without knowing the
+    /// concrete provider type.
+    fn losses(&self) -> &[f32] {
+        &[]
+    }
+}
+
+/// Where the engine's cost provider lives.
+///
+/// The legacy `run_schedule` path borrows the caller's provider (tests
+/// and benches hand in `FixedCosts` they keep owning); the
+/// `coordinator::Session` path builds the provider from the config and
+/// hands the engine ownership. One enum instead of a generic keeps
+/// `Engine` object-safe for both.
+pub enum CostSource<'a> {
+    Owned(Box<dyn CostProvider + 'a>),
+    Borrowed(&'a mut dyn CostProvider),
+}
+
+impl CostSource<'_> {
+    pub fn provider_mut(&mut self) -> &mut dyn CostProvider {
+        match self {
+            CostSource::Owned(b) => b.as_mut(),
+            CostSource::Borrowed(r) => &mut **r,
+        }
+    }
+
+    pub fn provider(&self) -> &dyn CostProvider {
+        match self {
+            CostSource::Owned(b) => b.as_ref(),
+            CostSource::Borrowed(r) => &**r,
+        }
+    }
 }
 
 /// Calibrated analytic model (no tensor execution).

@@ -1,13 +1,23 @@
 //! The strategy-agnostic scheduling engine.
 //!
 //! [`Engine`] owns every mechanism the five strategies share: the
-//! virtual-time device engines (host DataLoaders, the CSD, the
+//! virtual-time device engines (host DataLoaders, the CSD fleet, the
 //! accelerators), per-shard head/tail cursors and CPU prefetch queues,
 //! trace + energy accounting, and the epoch lifecycle. Policy decisions
 //! — which accelerator advances next and where its next batch comes
 //! from — live behind the [`SchedPolicy`] trait in
 //! [`crate::coordinator::policies`]; [`run`] drives one policy through
-//! all epochs of an experiment (DESIGN.md §Engine/policy split).
+//! all epochs of an experiment (DESIGN.md §Engine/policy split), and
+//! [`crate::coordinator::Session`] drives the same per-epoch protocol
+//! step-wise over an explicit [`Topology`].
+//!
+//! Topology (DESIGN.md §Topology): the engine holds one [`CsdEngine`]
+//! per topology CSD device — per-device lanes, product logs, stop
+//! signals and failure injection — and routes every directory-keyed
+//! operation (`take_*_csd`, `csd_produce_one`) through the topology's
+//! shard→CSD assignment map. `Topology::single_node` collapses the
+//! fleet to the paper's one-CSD layout, bit-identical to the
+//! pre-topology engine (`rust/tests/golden_parity.rs`).
 //!
 //! Invariants (tested in `rust/tests/`): every batch of every shard is
 //! consumed exactly once per epoch; MTE's consumption order is
@@ -30,15 +40,16 @@ use anyhow::{bail, Result};
 
 use crate::accel::{AccelEngine, BatchSource};
 use crate::config::ExperimentConfig;
-use crate::coordinator::cost::{CostProvider, HostBatchCost};
+use crate::coordinator::cost::{CostProvider, CostSource, HostBatchCost};
 use crate::coordinator::policies::SchedPolicy;
-use crate::coordinator::Strategy;
+use crate::coordinator::{CsdDeviceReport, Strategy};
 use crate::csd::{CsdEngine, CsdProduct};
 use crate::dataset::{BatchId, DatasetSpec, HeadTailCursor, ShardView};
 use crate::energy::compute_energy;
 use crate::host::{HostEngine, HostReady};
 use crate::metrics::RunReport;
 use crate::sim::Secs;
+use crate::topology::Topology;
 use crate::trace::Trace;
 use crate::util::idxheap::IdxMinHeap;
 
@@ -69,10 +80,14 @@ pub struct BatchReady {
 /// run; per-epoch state is reset by [`Engine::reset_epoch`].
 pub struct Engine<'a> {
     cfg: &'a ExperimentConfig,
-    costs: &'a mut dyn CostProvider,
+    topology: Topology,
+    costs: CostSource<'a>,
     trace: Trace,
     hosts: Vec<HostEngine>,
-    csd: CsdEngine,
+    /// One device engine per topology CSD (per-device lane, product
+    /// log, stop signal, failure injection). Directory-keyed access
+    /// routes through the topology's shard→CSD assignment map.
+    csds: Vec<CsdEngine>,
     accels: Vec<AccelEngine>,
     /// Arithmetic shard views (O(1) memory each — the materialized
     /// per-rank id vectors are gone; `dataset::shard_batches` remains
@@ -108,11 +123,54 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
+    /// Legacy constructor: the paper's implicit single-host/single-CSD
+    /// topology over a borrowed cost provider (the `run_schedule` path).
+    ///
+    /// # Panics
+    ///
+    /// If the config cannot form a single-node topology — `n_accel`
+    /// past the `u16` device-index width (hand-built configs only; the
+    /// `Result`-returning [`run`]/[`Engine::with_topology`] paths
+    /// propagate the error instead).
     pub fn new(
         cfg: &'a ExperimentConfig,
         spec: &DatasetSpec,
         costs: &'a mut dyn CostProvider,
     ) -> Self {
+        Engine::with_topology(
+            cfg,
+            spec,
+            CostSource::Borrowed(costs),
+            Topology::single_node(cfg.n_accel),
+        )
+        .expect("single-node topology (n_accel must fit the u16 device-index width)")
+    }
+
+    /// Topology-first constructor (the `coordinator::Session` path):
+    /// one [`CsdEngine`] per topology CSD, shard→CSD routing from the
+    /// assignment map. Rejects a topology that does not match the
+    /// config (`n_accel` mismatch) or cannot run it (a CSD-using
+    /// strategy over a fleet with no CSD).
+    pub fn with_topology(
+        cfg: &'a ExperimentConfig,
+        spec: &DatasetSpec,
+        costs: CostSource<'a>,
+        topology: Topology,
+    ) -> Result<Self> {
+        if topology.n_accel() != cfg.n_accel {
+            bail!(
+                "topology has {} accelerators but the config says n_accel = {}",
+                topology.n_accel(),
+                cfg.n_accel
+            );
+        }
+        if cfg.strategy.uses_csd() && topology.n_csd() == 0 {
+            bail!(
+                "strategy {:?} preprocesses on the CSD, but the topology has no CSD \
+                 device (n_csd = 0); use the cpu strategy or give the fleet a CSD",
+                cfg.strategy.name()
+            );
+        }
         let n_accel = cfg.n_accel as usize;
         let shards: Vec<ShardView> = (0..n_accel as u32)
             .map(|r| ShardView::new(spec.n_batches, r, cfg.n_accel))
@@ -135,8 +193,30 @@ impl<'a> Engine<'a> {
             }
             _ => cfg.profile.collate_overhead_s,
         };
+        // Built before the struct literal: the closure reads `topology`,
+        // which the literal then moves into the engine.
+        let csds: Vec<CsdEngine> = (0..topology.n_csd() as usize)
+            .map(|c| {
+                let mut csd =
+                    CsdEngine::new(cfg.n_accel as u16, cfg.profile.csd_signal_latency_s);
+                // Profile-wide failure (the paper's single-device knob)
+                // kills every CSD; topology-level injection kills one
+                // device. Earliest time wins.
+                let profile_fail =
+                    (cfg.profile.csd_fail_at_s >= 0.0).then_some(cfg.profile.csd_fail_at_s);
+                let fail = match (profile_fail, topology.csd_fail_at(c)) {
+                    (Some(p), Some(t)) => Some(p.min(t)),
+                    (p, t) => p.or(t),
+                };
+                if let Some(t) = fail {
+                    csd.fail_at(t);
+                }
+                csd
+            })
+            .collect();
         let mut eng = Engine {
             cfg,
+            topology,
             costs,
             trace: if cfg.record_trace {
                 // ~6 spans per batch (read/pp/h2d + csd triple or train);
@@ -155,13 +235,7 @@ impl<'a> Engine<'a> {
             hosts: (0..n_accel)
                 .map(|_| HostEngine::new(w_per, cfg.profile.worker_scaling_exp, collate))
                 .collect(),
-            csd: {
-                let mut csd = CsdEngine::new(cfg.n_accel as u16, cfg.profile.csd_signal_latency_s);
-                if cfg.profile.csd_fail_at_s >= 0.0 {
-                    csd.fail_at(cfg.profile.csd_fail_at_s);
-                }
-                csd
-            },
+            csds,
             accels: (0..n_accel).map(|i| AccelEngine::new(i as u16)).collect(),
             ready_accels: IdxMinHeap::new(n_accel),
             first_unfinished_idx: 0,
@@ -178,7 +252,7 @@ impl<'a> Engine<'a> {
             events: Vec::new(),
         };
         eng.rebuild_selection();
-        eng
+        Ok(eng)
     }
 
     /// Rebuild the incremental selection structures from the ground
@@ -201,10 +275,12 @@ impl<'a> Engine<'a> {
             .unwrap_or(n);
     }
 
-    /// Restart the CSD, reset cursors/queues/counters; unconsumed queue
-    /// entries are billed as waste.
+    /// Restart every CSD, reset cursors/queues/counters; unconsumed
+    /// queue entries are billed as waste.
     pub fn reset_epoch(&mut self) {
-        self.csd.restart();
+        for csd in &mut self.csds {
+            csd.restart();
+        }
         for a in 0..self.shards.len() {
             let len = self.shards[a].len();
             self.cursors[a] = HeadTailCursor::new(len);
@@ -224,8 +300,38 @@ impl<'a> Engine<'a> {
         self.cfg
     }
 
+    /// The device fleet this engine schedules on.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
     pub fn n_accel(&self) -> usize {
         self.accels.len()
+    }
+
+    /// CSD devices in the fleet.
+    pub fn n_csd(&self) -> usize {
+        self.csds.len()
+    }
+
+    /// The CSD device serving accelerator/shard/directory `a`. Panics
+    /// when the fleet has no CSD — callers are CSD-using policies,
+    /// which the constructor rejects against a CSD-less topology.
+    pub fn csd_of(&self, a: usize) -> usize {
+        self.topology
+            .csd_of(a)
+            .expect("no CSD device serves this accelerator")
+    }
+
+    /// Number of directories CSD `c` serves (0 when `n_csd > n_accel`
+    /// leaves the device unassigned).
+    pub fn dirs_of_csd_len(&self, c: usize) -> usize {
+        self.topology.dirs_of(c).len()
+    }
+
+    /// The `i`-th directory served by CSD `c` (ascending order).
+    pub fn dir_of_csd(&self, c: usize, i: usize) -> usize {
+        self.topology.dirs_of(c)[i] as usize
     }
 
     pub fn shard_len(&self, a: usize) -> u32 {
@@ -277,41 +383,69 @@ impl<'a> Engine<'a> {
     }
 
     // ------------------------------------------------------------------
-    // CSD access
+    // CSD access (directory-keyed calls route through the topology's
+    // shard→CSD assignment map; device-keyed calls name the CSD)
     // ------------------------------------------------------------------
 
     /// Pop the oldest unconsumed batch from directory `dir` regardless
-    /// of current time (the caller waits until `ready`).
+    /// of current time (the caller waits until `ready`). `None` when no
+    /// CSD serves `dir`.
     pub fn take_next_csd(&mut self, dir: u16) -> Option<CsdProduct> {
-        self.csd.take_next(dir)
+        let c = self.topology.csd_of(dir as usize)?;
+        self.csds[c].take_next(dir)
     }
 
     /// Pop the oldest unconsumed batch from `dir` whose write-back
     /// completed by `t` (the WRR readiness probe's consume path).
     pub fn take_ready_csd(&mut self, dir: u16, t: Secs) -> Option<CsdProduct> {
-        self.csd.take_ready(dir, t)
+        let c = self.topology.csd_of(dir as usize)?;
+        self.csds[c].take_ready(dir, t)
     }
 
-    /// Time the CSD becomes idle.
-    pub fn csd_drain_time(&self) -> Secs {
-        self.csd.drain_time()
+    /// Time CSD device `c` becomes idle.
+    pub fn csd_drain_time_of(&self, c: usize) -> Secs {
+        self.csds[c].drain_time()
     }
 
-    /// When the CSD received its start signal this epoch.
-    pub fn csd_started_at(&self) -> Secs {
-        self.csd.started_at()
+    /// When CSD device `c` received its start signal this epoch.
+    pub fn csd_started_at_of(&self, c: usize) -> Secs {
+        self.csds[c].started_at()
     }
 
-    /// Batches the CSD produced so far (all epochs). O(1) counter read
-    /// — the old implementation materialized a full `Vec<BatchId>` via
-    /// `produced_ids().len()` on every MTE calibration.
-    pub fn csd_produced_count(&self) -> u64 {
-        self.csd.produced_len()
+    /// Batches CSD device `c` produced so far (all epochs). O(1)
+    /// counter read — the old implementation materialized a full
+    /// `Vec<BatchId>` via `produced_ids().len()` on every MTE
+    /// calibration.
+    pub fn csd_produced_count_of(&self, c: usize) -> u64 {
+        self.csds[c].produced_len()
     }
 
-    /// Host stop signal: no CSD production may start at/after `t`.
+    /// Batches CSD device `c` produced but never consumed, cumulative
+    /// across epochs (per-device waste attribution; the fleet total
+    /// flows into `RunReport.wasted_batches`).
+    pub fn csd_wasted_of(&self, c: usize) -> u64 {
+        self.csds[c].wasted()
+    }
+
+    /// Host stop signal to the whole fleet: no CSD production may start
+    /// at/after `t`.
     pub fn csd_stop(&mut self, t: Secs) {
-        self.csd.stop(t);
+        for csd in &mut self.csds {
+            csd.stop(t);
+        }
+    }
+
+    /// Per-device production/waste/busy attribution for the run so far
+    /// (summed into the existing `RunReport` fields at `finish`).
+    pub fn csd_device_reports(&self) -> Vec<CsdDeviceReport> {
+        self.csds
+            .iter()
+            .map(|c| CsdDeviceReport {
+                produced: c.produced_len(),
+                wasted: c.wasted(),
+                busy_s: c.busy(),
+            })
+            .collect()
     }
 
     /// Charge the WRR readiness probe (`len(os.listdir)`) to `a`'s
@@ -366,7 +500,7 @@ impl<'a> Engine<'a> {
         while self.queues[a].len() < depth {
             let Some(local) = self.cursors[a].claim_head() else { break };
             let gid = self.global_id(a, local);
-            let cost = self.costs.host_batch(gid);
+            let cost = self.costs.provider_mut().host_batch(gid);
             let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
             self.note_host_ready(a, &cost, &ready);
             self.queues[a].push_back(ready);
@@ -379,7 +513,7 @@ impl<'a> Engine<'a> {
         if self.depth(a) == 0 {
             let local = self.cursors[a].claim_head()?;
             let gid = self.global_id(a, local);
-            let cost = self.costs.host_batch(gid);
+            let cost = self.costs.provider_mut().host_batch(gid);
             let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
             self.note_host_ready(a, &cost, &ready);
             Some(ready)
@@ -389,15 +523,20 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Produce one CSD batch into `dir` from shard `shard_of`; returns
-    /// false when that shard's cursor is exhausted or the CSD stopped.
+    /// Produce one CSD batch into `dir` from shard `shard_of` on the
+    /// CSD device the topology assigns to `dir`; returns false when no
+    /// CSD serves the directory, that shard's cursor is exhausted, or
+    /// the device stopped.
     pub fn csd_produce_one(&mut self, dir: u16, shard_of: usize) -> bool {
+        let Some(c) = self.topology.csd_of(dir as usize) else {
+            return false;
+        };
         let Some(local) = self.cursors[shard_of].claim_tail() else {
             return false;
         };
         let gid = self.global_id(shard_of, local);
-        let cost = self.costs.csd_batch(gid);
-        match self.csd.produce(gid, dir, &cost, &mut self.trace) {
+        let cost = self.costs.provider_mut().csd_batch(gid);
+        match self.csds[c].produce(gid, dir, &cost, &mut self.trace) {
             Some(ready) => {
                 if self.record_events {
                     self.events.push(BatchReady {
@@ -422,7 +561,7 @@ impl<'a> Engine<'a> {
     /// Consume one batch on accelerator `a`, keeping the incremental
     /// selection structures in sync with the advanced lane clock.
     pub fn consume(&mut self, a: usize, gid: BatchId, source: BatchSource, data_ready: Secs) {
-        let cost = self.costs.train(gid, source == BatchSource::Csd);
+        let cost = self.costs.provider_mut().train(gid, source == BatchSource::Csd);
         self.accels[a].consume(gid, source, data_ready, &cost, &mut self.trace);
         self.consumed[a] += 1;
         self.total_consumed += 1;
@@ -472,7 +611,14 @@ impl<'a> Engine<'a> {
         std::mem::swap(&mut self.events, out);
     }
 
-    fn finish(mut self) -> (RunReport, Trace) {
+    /// Real-mode loss curve observed so far (empty for analytic cost
+    /// providers) — how `Session` surfaces losses without knowing the
+    /// concrete provider type.
+    pub(crate) fn losses(&self) -> &[f32] {
+        self.costs.provider().losses()
+    }
+
+    pub(crate) fn finish(mut self) -> (RunReport, Trace) {
         let report = self.build_report();
         (report, self.trace)
     }
@@ -482,7 +628,7 @@ impl<'a> Engine<'a> {
     /// bit-identical to the old 6-pass `busy_where` synthesis because
     /// the stats accumulate in span-insertion order.
     fn build_report(&mut self) -> RunReport {
-        self.wasted += self.csd.wasted();
+        self.wasted += self.csds.iter().map(|c| c.wasted()).sum::<u64>();
         for q in &self.queues {
             self.wasted += q.len() as u64;
         }
@@ -498,11 +644,18 @@ impl<'a> Engine<'a> {
             Strategy::CsdOnly => 0, // paper bills the CSD column CSD-only
             _ => self.cfg.n_accel + self.cfg.num_workers,
         };
+        // Each powered fleet CSD bills idle+busy for the makespan; a
+        // CSD-less topology (or the CPU-only path) charges nothing.
+        let n_active_csd = if self.cfg.strategy.uses_csd() {
+            self.topology.n_csd()
+        } else {
+            0
+        };
         let energy = compute_energy(
             &self.cfg.profile.power,
             makespan,
             n_processes,
-            self.cfg.strategy.uses_csd(),
+            n_active_csd,
             n as u32,
         );
         RunReport {
@@ -534,35 +687,52 @@ pub fn run(
     costs: &mut dyn CostProvider,
     policy: &mut dyn SchedPolicy,
 ) -> Result<(RunReport, Trace)> {
-    let mut eng = Engine::new(cfg, spec, costs);
+    // Built through the fallible path so an oversized hand-built config
+    // (n_accel past the u16 device-index width) errors instead of
+    // panicking out of a Result-returning API.
+    let topology = Topology::builder().accels(cfg.n_accel).csds(1).build()?;
+    let mut eng = Engine::with_topology(cfg, spec, CostSource::Borrowed(costs), topology)?;
     // Reusable event scratch buffer: swapped with the engine's event
     // vector each delivery round, so steady state allocates nothing.
     let mut ready_buf: Vec<BatchReady> = Vec::new();
     for _epoch in 0..cfg.epochs {
-        eng.reset_epoch();
-        eng.record_events = policy.wants_ready_events();
-        policy.on_epoch_start(&mut eng)?;
-        eng.drain_events_into(&mut ready_buf);
-        for ev in &ready_buf {
-            policy.on_batch_ready(ev);
-        }
-        let budget = eng.iter_budget();
-        let mut iters: u64 = 0;
-        while let Some(a) = policy.select_accel(&eng) {
-            iters += 1;
-            if iters > budget {
-                bail!("{}: event loop did not converge", policy.name());
-            }
-            policy.claim_next(&mut eng, a)?;
-            if !eng.events.is_empty() {
-                eng.drain_events_into(&mut ready_buf);
-                for ev in &ready_buf {
-                    policy.on_batch_ready(ev);
-                }
-            }
-        }
-        policy.on_epoch_end(&mut eng)?;
-        policy.calibrate(&eng);
+        run_one_epoch(&mut eng, policy, &mut ready_buf)?;
     }
     Ok(eng.finish())
+}
+
+/// One full epoch of the per-epoch protocol — the shared loop body of
+/// [`run`] and `Session::run_epoch` (a step-wise session must advance
+/// epoch by epoch so future sharded/work-stealing coordinators can
+/// interleave work between them).
+pub(crate) fn run_one_epoch(
+    eng: &mut Engine<'_>,
+    policy: &mut dyn SchedPolicy,
+    ready_buf: &mut Vec<BatchReady>,
+) -> Result<()> {
+    eng.reset_epoch();
+    eng.record_events = policy.wants_ready_events();
+    policy.on_epoch_start(eng)?;
+    eng.drain_events_into(ready_buf);
+    for ev in ready_buf.iter() {
+        policy.on_batch_ready(ev);
+    }
+    let budget = eng.iter_budget();
+    let mut iters: u64 = 0;
+    while let Some(a) = policy.select_accel(eng) {
+        iters += 1;
+        if iters > budget {
+            bail!("{}: event loop did not converge", policy.name());
+        }
+        policy.claim_next(eng, a)?;
+        if !eng.events.is_empty() {
+            eng.drain_events_into(ready_buf);
+            for ev in ready_buf.iter() {
+                policy.on_batch_ready(ev);
+            }
+        }
+    }
+    policy.on_epoch_end(eng)?;
+    policy.calibrate(eng);
+    Ok(())
 }

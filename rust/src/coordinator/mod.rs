@@ -23,17 +23,26 @@
 //! engines ([`crate::host`], [`crate::csd`], [`crate::accel`]) with
 //! durations from a [`cost::CostProvider`] — calibrated models
 //! (benches) or real PJRT executions (the end-to-end examples).
-//! [`schedule::run_schedule`] is the stable entry point.
+//!
+//! **[`Session`] is the stable run surface**: it binds a config to an
+//! explicit [`crate::topology::Topology`] (multi-CSD fleets,
+//! block/stripe shard assignment, per-device failure injection) and
+//! runs one-shot ([`Session::run`]) or epoch-by-epoch
+//! ([`Session::run_epoch`]). The old free functions
+//! ([`schedule::run_schedule`], [`run_experiment`]) remain as
+//! deprecated shims over the implicit single-node topology.
 
 pub mod cost;
 pub mod engine;
 pub mod policies;
 pub mod schedule;
+pub mod session;
+
+pub use session::Session;
 
 use anyhow::Result;
 
-use crate::config::{ExecMode, ExperimentConfig};
-use crate::dataset::DatasetSpec;
+use crate::config::ExperimentConfig;
 use crate::metrics::RunReport;
 use crate::trace::Trace;
 
@@ -92,51 +101,38 @@ impl std::fmt::Display for Strategy {
     }
 }
 
-/// Outcome of [`run_experiment`].
+/// Per-CSD-device attribution of one run (fleet accounting: the sums
+/// flow into the existing [`RunReport`] fields — the `wasted` sum is
+/// the CSD-side component of `wasted_batches`, equal to it when no CPU
+/// prefetch-queue entries were dropped (e.g. `num_workers = 0`) and a
+/// lower bound otherwise; `busy_s` sums into `t_csd`/energy).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsdDeviceReport {
+    /// Batches this device produced, cumulative across epochs.
+    pub produced: u64,
+    /// Batches produced but never consumed (overshoot waste).
+    pub wasted: u64,
+    /// Device busy seconds (read + preprocess + write-back).
+    pub busy_s: f64,
+}
+
+/// Outcome of a [`Session`] run.
 #[derive(Debug)]
 pub struct RunResult {
     pub report: RunReport,
     pub trace: Trace,
     /// Real-mode loss curve (empty in analytic mode).
     pub losses: Vec<f32>,
+    /// Per-CSD-device attribution, indexed by topology CSD id (empty
+    /// for a CSD-less topology).
+    pub csd_devices: Vec<CsdDeviceReport>,
 }
 
-/// Run one experiment end-to-end (all epochs).
+/// Run one experiment end-to-end (all epochs) on the topology the
+/// config describes.
+#[deprecated(note = "use coordinator::Session")]
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
-    let model = cfg.model_profile()?;
-    let spec = DatasetSpec {
-        n_batches: cfg.n_batches,
-        batch_size: model.batch_size,
-        pipeline: cfg.pipeline,
-        seed: cfg.seed,
-    };
-    match &cfg.exec {
-        ExecMode::Analytic => {
-            let mut costs = cost::AnalyticCosts::new(cfg, &spec)?;
-            let (report, trace) = schedule::run_schedule(cfg, &spec, &mut costs)?;
-            Ok(RunResult {
-                report,
-                trace,
-                losses: Vec::new(),
-            })
-        }
-        ExecMode::Real { artifacts_dir } => {
-            let mut session = crate::runtime::RealSession::new(
-                std::path::Path::new(artifacts_dir),
-                &cfg.pipeline.artifact(),
-                &format!("train_{}", cfg.model),
-                cfg.seed,
-                &cfg.profile,
-            )?;
-            let (report, trace) = schedule::run_schedule(cfg, &spec, &mut session)?;
-            let losses = session.losses().to_vec();
-            Ok(RunResult {
-                report,
-                trace,
-                losses,
-            })
-        }
-    }
+    Session::from_config(cfg)?.run()
 }
 
 #[cfg(test)]

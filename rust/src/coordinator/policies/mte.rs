@@ -51,25 +51,33 @@ impl MtePolicy {
         self.ratio = Some((t_cpu, t_csd));
     }
 
-    /// One CSD serves all shards: its per-shard effective batch time is
-    /// `n_accel` × the raw batch time.
-    fn csd_share_factor(eng: &Engine<'_>) -> f64 {
-        eng.n_accel() as f64
+    /// How many shards accelerator `a`'s CSD serves: its per-shard
+    /// effective batch time is that share × the raw device batch time.
+    /// Single-CSD topologies reproduce the old `n_accel` factor; a
+    /// fleet divides the load by the assignment map, so each shard's
+    /// CSD side looks proportionally faster.
+    fn csd_share_factor(eng: &Engine<'_>, a: usize) -> f64 {
+        eng.dirs_of_csd_len(eng.csd_of(a)) as f64
     }
 
     /// Resolve the split as soon as both measurements exist, then keep
-    /// the CSD filling its allocations. Runs at the top of every
+    /// the CSDs filling their allocations. Runs at the top of every
     /// scheduling step and once more at epoch end, exactly like the
     /// pre-refactor loop head.
+    ///
+    /// Calibration measures the device serving shard 0 (both assignment
+    /// modes map shard 0 to CSD 0) and assumes a homogeneous fleet —
+    /// per-device profiles are a later step.
     fn resolve_and_fill(&mut self, eng: &mut Engine<'_>) {
         let n_accel = eng.n_accel();
-        let csd_share_factor = Self::csd_share_factor(eng);
         if self.n_cpu.iter().any(|x| x.is_none()) {
             if let (Some(cpu_end), true) = (self.cpu_cal_end, self.csd_done[0] >= self.cal) {
                 let cal_base = self.cpu_cal_start.unwrap_or(self.epoch_start);
                 let t_cpu = (cpu_end - cal_base) / self.cal as f64;
-                let csd_products = eng.csd_produced_count() as f64;
-                let t_csd = (eng.csd_drain_time() - eng.csd_started_at()) / csd_products;
+                let cal_csd = eng.csd_of(0);
+                let csd_products = eng.csd_produced_count_of(cal_csd) as f64;
+                let t_csd = (eng.csd_drain_time_of(cal_csd) - eng.csd_started_at_of(cal_csd))
+                    / csd_products;
                 if std::env::var_os("DDLP_DEBUG").is_some() {
                     let cal = self.cal;
                     eprintln!(
@@ -78,13 +86,17 @@ impl MtePolicy {
                 }
                 self.ratio = Some((t_cpu, t_csd));
                 for a in 0..n_accel {
-                    let split = mte_split(eng.shard_len(a), t_cpu, t_csd * csd_share_factor);
+                    let split = mte_split(
+                        eng.shard_len(a),
+                        t_cpu,
+                        t_csd * Self::csd_share_factor(eng, a),
+                    );
                     // never below what's already consumed/claimed
                     self.n_cpu[a] = Some(split.max(eng.consumed(a) - eng.from_csd(a)));
                 }
             }
         }
-        // Keep the CSD filling its allocations once they are known.
+        // Keep the CSDs filling their allocations once they are known.
         if let Some(ratio) = self.ratio {
             while self.csd_dir < n_accel {
                 let quota = eng.shard_len(self.csd_dir)
@@ -92,7 +104,7 @@ impl MtePolicy {
                         mte_split(
                             eng.shard_len(self.csd_dir),
                             ratio.0,
-                            ratio.1 * csd_share_factor,
+                            ratio.1 * Self::csd_share_factor(eng, self.csd_dir),
                         )
                     });
                 if self.csd_done[self.csd_dir] >= quota {
@@ -116,12 +128,14 @@ impl SchedPolicy for MtePolicy {
 
     fn on_epoch_start(&mut self, eng: &mut Engine<'_>) -> Result<()> {
         let n_accel = eng.n_accel();
-        let csd_share_factor = Self::csd_share_factor(eng);
         self.n_cpu = vec![None; n_accel];
         if let Some((t_cpu, t_csd)) = self.ratio {
             for a in 0..n_accel {
-                self.n_cpu[a] =
-                    Some(mte_split(eng.shard_len(a), t_cpu, t_csd * csd_share_factor));
+                self.n_cpu[a] = Some(mte_split(
+                    eng.shard_len(a),
+                    t_cpu,
+                    t_csd * Self::csd_share_factor(eng, a),
+                ));
             }
         }
         self.csd_dir = 0;

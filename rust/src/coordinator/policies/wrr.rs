@@ -15,10 +15,12 @@ use crate::coordinator::policies::SchedPolicy;
 /// directory before every iteration.
 #[derive(Debug, Default)]
 pub struct WrrPolicy {
-    /// Round-robin production pointer across directories (§IV-E: "CSD
-    /// alternately writes each preprocessed batch across all
-    /// directories to smooth load distribution").
-    rr: usize,
+    /// Per-CSD round-robin production pointer across the directories
+    /// that device serves (§IV-E: "CSD alternately writes each
+    /// preprocessed batch across all directories to smooth load
+    /// distribution" — per device, routed by the topology's shard→CSD
+    /// assignment map).
+    rr: Vec<usize>,
 }
 
 impl SchedPolicy for WrrPolicy {
@@ -26,24 +28,31 @@ impl SchedPolicy for WrrPolicy {
         "wrr"
     }
 
-    fn on_epoch_start(&mut self, _eng: &mut Engine<'_>) -> Result<()> {
-        self.rr = 0;
+    fn on_epoch_start(&mut self, eng: &mut Engine<'_>) -> Result<()> {
+        self.rr.clear();
+        self.rr.resize(eng.n_csd(), 0);
         Ok(())
     }
 
     fn claim_next(&mut self, eng: &mut Engine<'_>, a: usize) -> Result<()> {
-        let n_accel = eng.n_accel();
         let now = eng.accel_free_at(a);
 
-        // Lazy CSD production up to `now`, round-robin over dirs.
-        let mut guard = 0;
-        while eng.csd_drain_time() <= now && guard < 4 * n_accel {
-            let dir = self.rr % n_accel;
-            self.rr += 1;
-            if eng.consumed(dir) < eng.shard_len(dir) && eng.csd_produce_one(dir as u16, dir) {
-                guard = 0;
-            } else {
-                guard += 1;
+        // Lazy production up to `now` on every idle CSD, round-robin
+        // over the directories each device serves. With a single CSD
+        // this is the legacy loop bit-exactly (its dirs are 0..n_accel
+        // in order); with a fleet, each device fills independently.
+        for c in 0..eng.n_csd() {
+            let n_dirs = eng.dirs_of_csd_len(c);
+            let mut guard = 0;
+            while n_dirs > 0 && eng.csd_drain_time_of(c) <= now && guard < 4 * n_dirs {
+                let dir = eng.dir_of_csd(c, self.rr[c] % n_dirs);
+                self.rr[c] += 1;
+                if eng.consumed(dir) < eng.shard_len(dir) && eng.csd_produce_one(dir as u16, dir)
+                {
+                    guard = 0;
+                } else {
+                    guard += 1;
+                }
             }
         }
 

@@ -1,14 +1,15 @@
-//! Compatibility entry point for the scheduler.
+//! Deprecated compatibility entry point for the scheduler.
 //!
 //! The 550-line monolithic event loop that used to live here was split
 //! into the strategy-agnostic engine ([`crate::coordinator::engine`])
 //! and one policy per strategy ([`crate::coordinator::policies`]);
-//! see DESIGN.md §Engine/policy split. `run_schedule` remains the
-//! stable entry point so existing callers (benches, tests, examples,
-//! the real-execution session) don't churn: it builds the policy for
-//! `cfg.strategy` and drives it through the engine. The split is
-//! asserted byte-identical to the pre-refactor scheduler by
-//! `rust/tests/golden_parity.rs`.
+//! see DESIGN.md §Engine/policy split. The run surface has since been
+//! redesigned around [`crate::coordinator::Session`] +
+//! [`crate::topology::Topology`] (multi-CSD fleets, step-wise epochs);
+//! `run_schedule` survives as a deprecated shim over the implicit
+//! single-host/single-CSD topology, asserted byte-identical to both
+//! the pre-refactor scheduler and a `Session` over
+//! `Topology::single_node` by `rust/tests/golden_parity.rs`.
 
 use anyhow::Result;
 
@@ -20,7 +21,9 @@ use crate::dataset::DatasetSpec;
 use crate::metrics::RunReport;
 use crate::trace::Trace;
 
-/// Run all epochs of `cfg` against `costs`.
+/// Run all epochs of `cfg` against `costs` on the implicit
+/// single-host/single-CSD topology.
+#[deprecated(note = "use coordinator::Session")]
 pub fn run_schedule(
     cfg: &ExperimentConfig,
     spec: &DatasetSpec,
@@ -31,6 +34,7 @@ pub fn run_schedule(
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::cost::FixedCosts;

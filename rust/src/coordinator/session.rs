@@ -1,0 +1,280 @@
+//! The topology-first run surface.
+//!
+//! [`Session`] replaces the one-shot `run_schedule(cfg, spec, costs)`
+//! tuple-returning free function: a session binds an
+//! [`ExperimentConfig`] to an explicit [`Topology`] (which hosts, CSDs,
+//! accelerators and storage channels exist, and who serves whom), owns
+//! the engine + policy for the whole run, and exposes both the one-shot
+//! [`Session::run`] and the step-wise [`Session::run_epoch`] —
+//! the seam future sharded/work-stealing coordinators advance
+//! epoch-by-epoch while interleaving cross-host work.
+//!
+//! ```no_run
+//! use ddlp::config::ExperimentConfig;
+//! use ddlp::coordinator::Session;
+//! use ddlp::topology::Topology;
+//!
+//! let cfg = ExperimentConfig::builder().model("wrn").build().unwrap();
+//! let topology = Topology::from_config(&cfg).unwrap(); // or hand-built
+//! let result = Session::new(&cfg, topology).unwrap().run().unwrap();
+//! println!("makespan {:.3}s", result.report.makespan);
+//! ```
+//!
+//! A session over [`Topology::single_node`] is bit-identical to the
+//! legacy `run_schedule` path (`rust/tests/golden_parity.rs`); richer
+//! topologies (multi-CSD fleets, block/stripe shard assignment,
+//! per-device failure injection) run through exactly the same engine.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ExecMode, ExperimentConfig};
+use crate::coordinator::cost::{AnalyticCosts, CostProvider, CostSource};
+use crate::coordinator::engine::{self, BatchReady, Engine};
+use crate::coordinator::policies::{self, SchedPolicy};
+use crate::coordinator::RunResult;
+use crate::dataset::DatasetSpec;
+use crate::topology::Topology;
+
+/// One experiment bound to one device topology: the stable run surface.
+pub struct Session<'a> {
+    engine: Engine<'a>,
+    policy: Box<dyn SchedPolicy>,
+    epochs_run: u32,
+    /// Reusable event scratch buffer: swapped with the engine's event
+    /// vector each delivery round, so steady state allocates nothing.
+    ready_buf: Vec<BatchReady>,
+}
+
+impl<'a> Session<'a> {
+    /// Build a session over an explicit topology, constructing the cost
+    /// provider the config's [`ExecMode`] asks for (calibrated analytic
+    /// models, or a PJRT-backed real session whose measured wall times
+    /// drive virtual durations).
+    pub fn new(cfg: &'a ExperimentConfig, topology: Topology) -> Result<Session<'a>> {
+        let spec = Self::spec_of(cfg)?;
+        let costs: Box<dyn CostProvider + 'a> = match &cfg.exec {
+            ExecMode::Analytic => Box::new(AnalyticCosts::new(cfg, &spec)?),
+            ExecMode::Real { artifacts_dir } => Box::new(crate::runtime::RealSession::new(
+                std::path::Path::new(artifacts_dir),
+                &cfg.pipeline.artifact(),
+                &format!("train_{}", cfg.model),
+                cfg.seed,
+                &cfg.profile,
+            )?),
+        };
+        Self::assemble(cfg, &spec, CostSource::Owned(costs), topology)
+    }
+
+    /// Convenience: the topology the config itself describes
+    /// (`n_accel`, `n_csd`, `csd_assign`) — what the CLI and config
+    /// files run.
+    pub fn from_config(cfg: &'a ExperimentConfig) -> Result<Session<'a>> {
+        let topology = Topology::from_config(cfg)?;
+        Session::new(cfg, topology)
+    }
+
+    /// Build a session over a caller-owned cost provider and dataset
+    /// spec (tests/benches injecting `FixedCosts` or custom providers).
+    pub fn with_costs(
+        cfg: &'a ExperimentConfig,
+        topology: Topology,
+        spec: &DatasetSpec,
+        costs: &'a mut dyn CostProvider,
+    ) -> Result<Session<'a>> {
+        Self::assemble(cfg, spec, CostSource::Borrowed(costs), topology)
+    }
+
+    fn spec_of(cfg: &ExperimentConfig) -> Result<DatasetSpec> {
+        let model = cfg.model_profile()?;
+        Ok(DatasetSpec {
+            n_batches: cfg.n_batches,
+            batch_size: model.batch_size,
+            pipeline: cfg.pipeline,
+            seed: cfg.seed,
+        })
+    }
+
+    fn assemble(
+        cfg: &'a ExperimentConfig,
+        spec: &DatasetSpec,
+        costs: CostSource<'a>,
+        topology: Topology,
+    ) -> Result<Session<'a>> {
+        let policy = policies::for_config(cfg);
+        let engine = Engine::with_topology(cfg, spec, costs, topology)?;
+        Ok(Session {
+            engine,
+            policy,
+            epochs_run: 0,
+            ready_buf: Vec::new(),
+        })
+    }
+
+    /// The device fleet this session runs on.
+    pub fn topology(&self) -> &Topology {
+        self.engine.topology()
+    }
+
+    /// Epochs completed so far.
+    pub fn epochs_run(&self) -> u32 {
+        self.epochs_run
+    }
+
+    /// Epochs still to run before [`Session::finish`] has the full run.
+    pub fn epochs_remaining(&self) -> u32 {
+        self.engine.cfg().epochs - self.epochs_run
+    }
+
+    /// Advance the session by exactly one epoch (the step-wise surface
+    /// for coordinators that interleave other work between epochs).
+    /// Returns the number of epochs completed so far.
+    pub fn run_epoch(&mut self) -> Result<u32> {
+        if self.epochs_remaining() == 0 {
+            bail!(
+                "session already ran all {} epochs",
+                self.engine.cfg().epochs
+            );
+        }
+        engine::run_one_epoch(&mut self.engine, self.policy.as_mut(), &mut self.ready_buf)?;
+        self.epochs_run += 1;
+        Ok(self.epochs_run)
+    }
+
+    /// Run every remaining epoch and finish.
+    pub fn run(mut self) -> Result<RunResult> {
+        while self.epochs_remaining() > 0 {
+            self.run_epoch()?;
+        }
+        self.finish()
+    }
+
+    /// Synthesize the [`RunResult`] from whatever has run so far
+    /// (normally after all epochs; callable earlier for partial runs of
+    /// at least one epoch — a zero-epoch report would claim a phantom
+    /// batch through the legacy `max(1)` division guard, so it is
+    /// rejected instead).
+    pub fn finish(self) -> Result<RunResult> {
+        if self.epochs_run == 0 {
+            bail!("session finished before any epoch ran (call run_epoch()/run() first)");
+        }
+        let losses = self.engine.losses().to_vec();
+        let csd_devices = self.engine.csd_device_reports();
+        let (report, trace) = self.engine.finish();
+        Ok(RunResult {
+            report,
+            trace,
+            losses,
+            csd_devices,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cost::FixedCosts;
+    use crate::coordinator::Strategy;
+    use crate::pipeline::PipelineKind;
+
+    fn spec(n: u32) -> DatasetSpec {
+        DatasetSpec {
+            n_batches: n,
+            batch_size: 1,
+            pipeline: PipelineKind::ImageNet1,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn session_runs_every_strategy_single_node() {
+        for s in Strategy::ALL {
+            let cfg = ExperimentConfig::builder()
+                .model("wrn")
+                .strategy(s)
+                .n_batches(40)
+                .build()
+                .unwrap();
+            let mut costs = FixedCosts::toy_fig6();
+            let r = Session::with_costs(&cfg, Topology::single_node(1), &spec(40), &mut costs)
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_eq!(r.report.n_batches, 40, "{s}");
+            assert_eq!(r.csd_devices.len(), 1, "{s}");
+        }
+    }
+
+    #[test]
+    fn stepwise_epochs_match_one_shot() {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            .n_batches(50)
+            .epochs(3)
+            .build()
+            .unwrap();
+        let mut c1 = FixedCosts::toy_fig6();
+        let one_shot = Session::with_costs(&cfg, Topology::single_node(1), &spec(50), &mut c1)
+            .unwrap()
+            .run()
+            .unwrap();
+
+        let mut c2 = FixedCosts::toy_fig6();
+        let mut s = Session::with_costs(&cfg, Topology::single_node(1), &spec(50), &mut c2)
+            .unwrap();
+        assert_eq!(s.epochs_remaining(), 3);
+        assert_eq!(s.run_epoch().unwrap(), 1);
+        assert_eq!(s.run_epoch().unwrap(), 2);
+        assert_eq!(s.run_epoch().unwrap(), 3);
+        assert!(s.run_epoch().is_err(), "4th epoch must refuse");
+        let stepped = s.finish().unwrap();
+        assert_eq!(stepped.report, one_shot.report);
+        assert_eq!(stepped.trace.spans, one_shot.trace.spans);
+    }
+
+    #[test]
+    fn finish_before_any_epoch_is_rejected() {
+        // A zero-epoch report would claim n_batches = 1 (the legacy
+        // max(1) division guard); refuse instead of lying.
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .n_batches(10)
+            .build()
+            .unwrap();
+        let mut costs = FixedCosts::toy_fig6();
+        let s = Session::with_costs(&cfg, Topology::single_node(1), &spec(10), &mut costs)
+            .unwrap();
+        let err = s.finish().err().expect("zero-epoch finish must fail");
+        assert!(err.to_string().contains("epoch"), "{err}");
+    }
+
+    #[test]
+    fn session_rejects_mismatched_topology() {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .n_accel(2)
+            .num_workers(0)
+            .build()
+            .unwrap();
+        let mut costs = FixedCosts::toy_fig6();
+        let err = Session::with_costs(&cfg, Topology::single_node(4), &spec(40), &mut costs)
+            .err()
+            .expect("n_accel mismatch must be rejected");
+        assert!(err.to_string().contains("n_accel"), "{err}");
+    }
+
+    #[test]
+    fn session_rejects_csd_strategy_on_csdless_fleet() {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            .build()
+            .unwrap();
+        let topo = Topology::builder().accels(1).csds(0).build().unwrap();
+        let mut costs = FixedCosts::toy_fig6();
+        let err = Session::with_costs(&cfg, topo, &spec(40), &mut costs)
+            .err()
+            .expect("CSD strategy over a CSD-less fleet must be rejected");
+        assert!(err.to_string().contains("CSD"), "{err}");
+    }
+}

@@ -38,18 +38,20 @@ impl EnergyReport {
 ///
 /// Matching the paper's method, CPU processes are billed for the whole
 /// learning makespan (a DataLoader process is resident and polling even
-/// when between batches); the CSD is billed only while powered for
-/// DDLP duty (i.e. the whole run under MTE/WRR/CSD-only, zero under
-/// CPU-only).
+/// when between batches); each powered CSD device is billed for the
+/// whole run (MTE/WRR/CSD-only keep every fleet CSD powered for DDLP
+/// duty), and `n_active_csd = 0` — the CPU-only path, or a topology
+/// with no CSD at all — charges nothing: idle power must never be
+/// billed for hardware that does not exist.
 pub fn compute_energy(
     power: &PowerModel,
     makespan: Secs,
     n_cpu_processes: u32,
-    csd_active: bool,
+    n_active_csd: u32,
     n_batches: u32,
 ) -> EnergyReport {
     let cpu_j = power.cpu_process_w * n_cpu_processes as f64 * makespan;
-    let csd_j = if csd_active { power.csd_w * makespan } else { 0.0 };
+    let csd_j = power.csd_w * n_active_csd as f64 * makespan;
     let total = cpu_j + csd_j;
     EnergyReport {
         joules_per_batch: total / n_batches.max(1) as f64,
@@ -68,7 +70,7 @@ mod tests {
     fn reproduces_paper_cpu0_wrn() {
         // Table VIII: CPU0 WRN = 17.63 J/batch at 3.527 s/batch × 5 W.
         let p = PowerModel::default();
-        let r = compute_energy(&p, 3.527, 1, false, 1);
+        let r = compute_energy(&p, 3.527, 1, 0, 1);
         assert!((r.joules_per_batch - 17.635).abs() < 1e-3);
     }
 
@@ -76,7 +78,7 @@ mod tests {
     fn reproduces_paper_mte0_wrn() {
         // Table VIII: MTE0 WRN = 14.49 J/batch at 2.761 s × (5 + 0.25) W.
         let p = PowerModel::default();
-        let r = compute_energy(&p, 2.761, 1, true, 1);
+        let r = compute_energy(&p, 2.761, 1, 1, 1);
         assert!((r.joules_per_batch - 14.495).abs() < 1e-2);
     }
 
@@ -84,7 +86,7 @@ mod tests {
     fn reproduces_paper_cpu16() {
         // 17 processes × 5 W = 85 W: WRN CPU16 = 151.2 J at 1.779 s.
         let p = PowerModel::default();
-        let r = compute_energy(&p, 1.779, 17, false, 1);
+        let r = compute_energy(&p, 1.779, 17, 0, 1);
         assert!((r.joules_per_batch - 151.2).abs() < 0.1);
     }
 
@@ -94,14 +96,26 @@ mod tests {
         let p = PowerModel::default();
         // CSD-only still has the main process coordinating? The paper
         // bills only the CSD: n_cpu_processes = 0.
-        let r = compute_energy(&p, 10.014, 0, true, 1);
+        let r = compute_energy(&p, 10.014, 0, 1, 1);
         assert!((r.joules_per_batch - 2.5035).abs() < 1e-3);
+    }
+
+    #[test]
+    fn csd_power_scales_with_fleet_size_and_zero_is_free() {
+        let p = PowerModel::default();
+        let one = compute_energy(&p, 2.0, 1, 1, 1);
+        let four = compute_energy(&p, 2.0, 1, 4, 1);
+        assert!((four.csd_joules - 4.0 * one.csd_joules).abs() < 1e-12);
+        // No CSD in the topology → no idle power charged, ever.
+        let none = compute_energy(&p, 2.0, 1, 0, 1);
+        assert_eq!(none.csd_joules, 0.0);
+        assert_eq!(none.total_joules, none.cpu_joules);
     }
 
     #[test]
     fn cost_scales_with_epochs() {
         let p = PowerModel::default();
-        let r = compute_energy(&p, 1.0, 1, false, 1);
+        let r = compute_energy(&p, 1.0, 1, 0, 1);
         let c1 = r.cost_usd(100, p.price_per_kwh, 5004);
         let c2 = r.cost_usd(200, p.price_per_kwh, 5004);
         assert!((c2 / c1 - 2.0).abs() < 1e-9);

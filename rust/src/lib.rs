@@ -25,9 +25,13 @@
 //!
 //! ## Quick start
 //!
+//! An experiment is a config bound to a device [`topology`] through a
+//! [`coordinator::Session`]:
+//!
 //! ```no_run
 //! use ddlp::config::ExperimentConfig;
-//! use ddlp::coordinator::{run_experiment, Strategy};
+//! use ddlp::coordinator::{Session, Strategy};
+//! use ddlp::topology::Topology;
 //!
 //! let cfg = ExperimentConfig::builder()
 //!     .model("wrn")
@@ -36,8 +40,27 @@
 //!     .num_workers(16)
 //!     .build()
 //!     .unwrap();
-//! let result = run_experiment(&cfg).unwrap();
+//! // The topology the config describes (n_accel / n_csd / csd_assign)…
+//! let result = Session::from_config(&cfg).unwrap().run().unwrap();
 //! println!("avg learning time/batch: {:.3}s", result.report.learn_time_per_batch);
+//!
+//! // …or an explicit fleet: 4 accelerators fed by 2 CSDs, striped.
+//! let cfg = ExperimentConfig::builder()
+//!     .model("wrn")
+//!     .strategy(Strategy::Wrr)
+//!     .n_accel(4)
+//!     .build()
+//!     .unwrap();
+//! let topology = Topology::builder()
+//!     .accels(4)
+//!     .csds(2)
+//!     .assign(ddlp::topology::CsdAssign::Stripe)
+//!     .build()
+//!     .unwrap();
+//! let mut session = Session::new(&cfg, topology).unwrap();
+//! session.run_epoch().unwrap(); // step-wise, or session.run() for all epochs
+//! let result = session.finish().unwrap();
+//! println!("per-CSD waste: {:?}", result.csd_devices);
 //! ```
 
 pub mod accel;
@@ -53,6 +76,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod storage;
+pub mod topology;
 pub mod trace;
 pub mod util;
 

@@ -13,7 +13,7 @@
 use anyhow::{bail, Context, Result};
 
 use ddlp::config::{file as cfgfile, ExperimentConfig};
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::{fmt_s, Table};
 
 fn main() {
@@ -78,8 +78,8 @@ fn real_main() -> Result<()> {
                  ddlp sweep [--config FILE] [--set k=v]...\n  \
                  ddlp e2e   [--artifacts DIR] [--set k=v]...\n  \
                  ddlp version\n\nconfig keys: model, pipeline, strategy (cpu|csd|mte|wrr|adaptive), \
-                 num_workers, n_accel, n_batches, epochs, loader, seed, csd_slowdown, \
-                 adaptive_cv_threshold, adaptive_min_samples, ...\n\
+                 num_workers, n_accel, n_csd, csd_assign (block|stripe), n_batches, epochs, \
+                 loader, seed, csd_slowdown, adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()
             );
@@ -91,11 +91,18 @@ fn real_main() -> Result<()> {
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let cfg = load_config(args)?;
-    let result = run_experiment(&cfg)?;
+    let result = Session::from_config(&cfg)?.run()?;
     let r = &result.report;
     println!(
-        "model={} pipeline={} strategy={} workers={} accel={} batches={}",
-        cfg.model, cfg.pipeline, cfg.strategy, cfg.num_workers, cfg.n_accel, r.n_batches
+        "model={} pipeline={} strategy={} workers={} accel={} csd={} ({}) batches={}",
+        cfg.model,
+        cfg.pipeline,
+        cfg.strategy,
+        cfg.num_workers,
+        cfg.n_accel,
+        cfg.n_csd,
+        cfg.csd_assign,
+        r.n_batches
     );
     println!(
         "learn time/batch: {} s   makespan: {} s",
@@ -122,6 +129,16 @@ fn cmd_run(args: &[String]) -> Result<()> {
         fmt_s(r.energy.cpu_joules),
         fmt_s(r.energy.csd_joules)
     );
+    if result.csd_devices.len() > 1 {
+        for (i, d) in result.csd_devices.iter().enumerate() {
+            println!(
+                "csd[{i}]: produced {} wasted {} busy {}s",
+                d.produced,
+                d.wasted,
+                fmt_s(d.busy_s)
+            );
+        }
+    }
     if !result.losses.is_empty() {
         let l = &result.losses;
         println!(
@@ -146,9 +163,13 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     ]);
     let mut cpu_base = None;
     for strat in Strategy::ALL {
+        // A CSD-less fleet can only run the classical path.
+        if strat.uses_csd() && base.n_csd == 0 {
+            continue;
+        }
         let mut cfg = base.clone();
         cfg.strategy = strat;
-        let r = run_experiment(&cfg)?.report;
+        let r = Session::from_config(&cfg)?.run()?.report;
         let base_t = *cpu_base.get_or_insert(r.learn_time_per_batch);
         table.row(vec![
             strat.name().to_string(),
@@ -178,7 +199,7 @@ fn cmd_e2e(args: &[String]) -> Result<()> {
     if cfg.n_batches > 200 {
         cfg.n_batches = 60; // real execution: keep the default run short
     }
-    let result = run_experiment(&cfg)?;
+    let result = Session::from_config(&cfg)?.run()?;
     let r = &result.report;
     println!(
         "REAL e2e: model={} pipeline={} strategy={} → {} batches trained",

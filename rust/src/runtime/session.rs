@@ -243,4 +243,8 @@ impl CostProvider for RealSession {
             train_s: dt / self.accel_speedup,
         }
     }
+
+    fn losses(&self) -> &[f32] {
+        &self.losses
+    }
 }

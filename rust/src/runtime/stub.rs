@@ -60,4 +60,8 @@ impl CostProvider for RealSession {
     fn train(&mut self, _b: BatchId, _from_csd: bool) -> TrainCost {
         match self._unconstructable {}
     }
+
+    fn losses(&self) -> &[f32] {
+        match self._unconstructable {}
+    }
 }

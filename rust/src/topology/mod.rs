@@ -1,0 +1,387 @@
+//! Fleet topology: the first-class description of *which devices
+//! exist* and *who serves whom* — the axis the paper's evaluation fixes
+//! at "one host, one Newport CSD" and the ROADMAP's fleet-scale
+//! coordinator must vary.
+//!
+//! A [`Topology`] names the hosts, accelerators, CSD devices and
+//! storage channels of an experiment, plus the **assignment map**
+//! routing each accelerator's shard (and its CSD output directory) to
+//! the CSD device that preprocesses its tail:
+//!
+//! ```text
+//!   shard/dir:   0    1    2    3          0    1    2    3
+//!                │    │    │    │          │    │    │    │
+//!   block        ▼    ▼    ▼    ▼   stripe ▼    ▼    ▼    ▼
+//!               CSD0 CSD0 CSD1 CSD1       CSD0 CSD1 CSD0 CSD1
+//! ```
+//!
+//! * [`CsdAssign::Block`] — contiguous shard ranges per CSD (one
+//!   device per storage shard group; minimizes cross-device churn);
+//! * [`CsdAssign::Stripe`] — round-robin interleaving (smooths load
+//!   when shard lengths are ragged, §IV-E style).
+//!
+//! Each CSD owns one flash **storage channel**; the host SSD path is
+//! its own channel (`Topology::n_storage_channels` = `n_csd + 1`).
+//! `n_csd = 0` is a valid topology for the classical CPU-only path —
+//! CSD-using strategies are rejected against it with a clear error
+//! instead of charging idle power for hardware that does not exist.
+//!
+//! [`Topology::single_node`] reproduces the paper's implicit
+//! single-host/single-CSD layout; a `coordinator::Session` over it is
+//! bit-identical to the legacy `run_schedule` path
+//! (`rust/tests/golden_parity.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::sim::Secs;
+
+/// Shard→CSD assignment mode (config key `csd_assign = block|stripe`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CsdAssign {
+    /// Contiguous shard ranges per CSD: shard `s` → CSD
+    /// `s · n_csd / n_accel` (balanced blocks).
+    #[default]
+    Block,
+    /// Round-robin interleaving: shard `s` → CSD `s mod n_csd`.
+    Stripe,
+}
+
+impl CsdAssign {
+    pub fn parse(s: &str) -> Option<CsdAssign> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "block" => CsdAssign::Block,
+            "stripe" => CsdAssign::Stripe,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CsdAssign::Block => "block",
+            CsdAssign::Stripe => "stripe",
+        }
+    }
+}
+
+impl std::fmt::Display for CsdAssign {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The device fleet one experiment runs on. Immutable once built; the
+/// engine owns a copy for the lifetime of a session.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    n_hosts: u32,
+    n_accel: u32,
+    n_csd: u32,
+    assign: CsdAssign,
+    /// Accelerator (= shard = output directory) → CSD device index.
+    /// Empty iff `n_csd == 0`.
+    accel_csd: Vec<u16>,
+    /// CSD device → the directories it serves, ascending. A CSD may
+    /// serve zero directories when `n_csd > n_accel`.
+    csd_dirs: Vec<Vec<u16>>,
+    /// Per-CSD injected failure time (fleet health, not a device-model
+    /// profile knob: one device dying must not kill its peers).
+    csd_fail_at: Vec<Option<Secs>>,
+}
+
+impl Topology {
+    pub fn builder() -> TopologyBuilder {
+        TopologyBuilder::default()
+    }
+
+    /// The paper's implicit layout: one host, one CSD serving every
+    /// accelerator directory. `coordinator::Session` over this topology
+    /// is bit-identical to the legacy single-CSD scheduler.
+    ///
+    /// # Panics
+    ///
+    /// If `n_accel` is 0 or past the `u16` device-index width; use
+    /// [`Topology::builder`] to get the error as a `Result`.
+    pub fn single_node(n_accel: u32) -> Topology {
+        Topology::builder()
+            .accels(n_accel)
+            .csds(1)
+            .build()
+            .expect("single-node topology (n_accel must be 1..=u16::MAX)")
+    }
+
+    /// The topology an [`ExperimentConfig`] describes (`n_accel`,
+    /// `n_csd`, `csd_assign` keys) — what the CLI and config files run.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Topology> {
+        Topology::builder()
+            .accels(cfg.n_accel)
+            .csds(cfg.n_csd)
+            .assign(cfg.csd_assign)
+            .build()
+    }
+
+    pub fn n_hosts(&self) -> u32 {
+        self.n_hosts
+    }
+
+    pub fn n_accel(&self) -> u32 {
+        self.n_accel
+    }
+
+    pub fn n_csd(&self) -> u32 {
+        self.n_csd
+    }
+
+    pub fn assign(&self) -> CsdAssign {
+        self.assign
+    }
+
+    /// Storage channels: one per CSD flash shard plus the host SSD path.
+    pub fn n_storage_channels(&self) -> u32 {
+        self.n_csd + 1
+    }
+
+    /// The CSD device serving accelerator/shard/directory `a`, or
+    /// `None` when the fleet has no CSD.
+    pub fn csd_of(&self, a: usize) -> Option<usize> {
+        self.accel_csd.get(a).map(|&c| c as usize)
+    }
+
+    /// Directories served by CSD `c`, ascending.
+    pub fn dirs_of(&self, c: usize) -> &[u16] {
+        &self.csd_dirs[c]
+    }
+
+    /// Injected failure time of CSD `c` (fleet health), if any.
+    pub fn csd_fail_at(&self, c: usize) -> Option<Secs> {
+        self.csd_fail_at[c]
+    }
+}
+
+/// Builder for [`Topology`]. Defaults reproduce the paper's testbed:
+/// one host, one accelerator, one CSD, block assignment.
+#[derive(Debug, Clone)]
+pub struct TopologyBuilder {
+    hosts: u32,
+    accels: u32,
+    csds: u32,
+    assign: CsdAssign,
+    fail: Vec<(u32, Secs)>,
+}
+
+impl Default for TopologyBuilder {
+    fn default() -> Self {
+        TopologyBuilder {
+            hosts: 1,
+            accels: 1,
+            csds: 1,
+            assign: CsdAssign::Block,
+            fail: Vec::new(),
+        }
+    }
+}
+
+impl TopologyBuilder {
+    pub fn hosts(mut self, n: u32) -> Self {
+        self.hosts = n;
+        self
+    }
+
+    pub fn accels(mut self, n: u32) -> Self {
+        self.accels = n;
+        self
+    }
+
+    pub fn csds(mut self, n: u32) -> Self {
+        self.csds = n;
+        self
+    }
+
+    pub fn assign(mut self, a: CsdAssign) -> Self {
+        self.assign = a;
+        self
+    }
+
+    /// Inject a permanent failure of CSD `idx` at virtual time `t` —
+    /// per-device fleet health (the profile-wide `csd_fail_at_s` knob
+    /// kills every CSD; this kills one).
+    pub fn fail_csd(mut self, idx: u32, t: Secs) -> Self {
+        self.fail.push((idx, t));
+        self
+    }
+
+    pub fn build(self) -> Result<Topology> {
+        if self.hosts != 1 {
+            bail!(
+                "n_hosts = {} is not supported yet: the coordinator is single-host \
+                 (sharded multi-host coordinators are the next ROADMAP step)",
+                self.hosts
+            );
+        }
+        if self.accels == 0 {
+            bail!("topology needs at least one accelerator");
+        }
+        // Device indices are u16 end-to-end (CSD output directories,
+        // assignment maps): an oversized fleet must be rejected here,
+        // not silently truncated into colliding directory ids.
+        if self.accels > u16::MAX as u32 {
+            bail!(
+                "n_accel = {} exceeds the device-index width (u16)",
+                self.accels
+            );
+        }
+        if self.csds > u16::MAX as u32 {
+            bail!("n_csd = {} exceeds the device-index width (u16)", self.csds);
+        }
+        for &(idx, t) in &self.fail {
+            if idx >= self.csds {
+                bail!(
+                    "fail_csd({idx}, …): no such CSD device (fleet has {})",
+                    self.csds
+                );
+            }
+            if !t.is_finite() || t < 0.0 {
+                bail!("fail_csd({idx}, {t}): failure time must be finite and >= 0");
+            }
+        }
+        let accel_csd: Vec<u16> = if self.csds == 0 {
+            Vec::new()
+        } else {
+            (0..self.accels)
+                .map(|a| match self.assign {
+                    CsdAssign::Block => {
+                        (a as u64 * self.csds as u64 / self.accels as u64) as u16
+                    }
+                    CsdAssign::Stripe => (a % self.csds) as u16,
+                })
+                .collect()
+        };
+        let mut csd_dirs: Vec<Vec<u16>> = vec![Vec::new(); self.csds as usize];
+        for (a, &c) in accel_csd.iter().enumerate() {
+            csd_dirs[c as usize].push(a as u16);
+        }
+        let mut csd_fail_at: Vec<Option<Secs>> = vec![None; self.csds as usize];
+        for &(idx, t) in &self.fail {
+            let slot = &mut csd_fail_at[idx as usize];
+            *slot = Some(slot.map_or(t, |old: f64| old.min(t)));
+        }
+        Ok(Topology {
+            n_hosts: self.hosts,
+            n_accel: self.accels,
+            n_csd: self.csds,
+            assign: self.assign,
+            accel_csd,
+            csd_dirs,
+            csd_fail_at,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_maps_everything_to_csd0() {
+        let t = Topology::single_node(4);
+        assert_eq!(t.n_hosts(), 1);
+        assert_eq!(t.n_csd(), 1);
+        assert_eq!(t.n_storage_channels(), 2);
+        for a in 0..4 {
+            assert_eq!(t.csd_of(a), Some(0));
+        }
+        assert_eq!(t.dirs_of(0), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn block_assignment_is_contiguous_and_balanced() {
+        let t = Topology::builder().accels(8).csds(4).build().unwrap();
+        let map: Vec<usize> = (0..8).map(|a| t.csd_of(a).unwrap()).collect();
+        assert_eq!(map, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        for c in 0..4 {
+            assert_eq!(t.dirs_of(c).len(), 2);
+        }
+    }
+
+    #[test]
+    fn stripe_assignment_interleaves() {
+        let t = Topology::builder()
+            .accels(5)
+            .csds(2)
+            .assign(CsdAssign::Stripe)
+            .build()
+            .unwrap();
+        let map: Vec<usize> = (0..5).map(|a| t.csd_of(a).unwrap()).collect();
+        assert_eq!(map, vec![0, 1, 0, 1, 0]);
+        assert_eq!(t.dirs_of(0), &[0, 2, 4]);
+        assert_eq!(t.dirs_of(1), &[1, 3]);
+    }
+
+    #[test]
+    fn assignments_are_balanced_within_one() {
+        for assign in [CsdAssign::Block, CsdAssign::Stripe] {
+            for (n_accel, n_csd) in [(7u32, 3u32), (16, 4), (5, 5), (3, 8)] {
+                let t = Topology::builder()
+                    .accels(n_accel)
+                    .csds(n_csd)
+                    .assign(assign)
+                    .build()
+                    .unwrap();
+                let sizes: Vec<usize> =
+                    (0..n_csd as usize).map(|c| t.dirs_of(c).len()).collect();
+                let min = *sizes.iter().min().unwrap();
+                let max = *sizes.iter().max().unwrap();
+                assert!(max - min <= 1, "{assign} {n_accel}/{n_csd}: {sizes:?}");
+                assert_eq!(sizes.iter().sum::<usize>(), n_accel as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_csd_topology_is_valid_but_unmapped() {
+        let t = Topology::builder().accels(2).csds(0).build().unwrap();
+        assert_eq!(t.n_csd(), 0);
+        assert_eq!(t.csd_of(0), None);
+        assert_eq!(t.n_storage_channels(), 1); // host SSD path only
+    }
+
+    #[test]
+    fn builder_rejections() {
+        assert!(Topology::builder().hosts(2).build().is_err());
+        assert!(Topology::builder().accels(0).build().is_err());
+        assert!(Topology::builder().csds(2).fail_csd(2, 1.0).build().is_err());
+        assert!(Topology::builder().fail_csd(0, -1.0).build().is_err());
+        assert!(Topology::builder().fail_csd(0, f64::NAN).build().is_err());
+        // Device indices are u16 end-to-end: oversized fleets must be
+        // rejected, not truncated into colliding directory ids.
+        assert!(Topology::builder().accels(70_000).csds(2).build().is_err());
+        assert!(Topology::builder().accels(2).csds(70_000).build().is_err());
+        assert!(Topology::builder()
+            .accels(u16::MAX as u32)
+            .csds(2)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn fail_csd_keeps_earliest_time() {
+        let t = Topology::builder()
+            .csds(2)
+            .accels(2)
+            .fail_csd(1, 9.0)
+            .fail_csd(1, 4.0)
+            .build()
+            .unwrap();
+        assert_eq!(t.csd_fail_at(0), None);
+        assert_eq!(t.csd_fail_at(1), Some(4.0));
+    }
+
+    #[test]
+    fn assign_parse_roundtrip() {
+        for a in [CsdAssign::Block, CsdAssign::Stripe] {
+            assert_eq!(CsdAssign::parse(a.name()), Some(a));
+        }
+        assert_eq!(CsdAssign::parse("BLOCK"), Some(CsdAssign::Block));
+        assert_eq!(CsdAssign::parse("x"), None);
+    }
+}

@@ -8,12 +8,14 @@
 
 use ddlp::config::{AdaptiveParams, DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::{CostProvider, CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
-use ddlp::coordinator::schedule::run_schedule;
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::{BatchId, DatasetSpec};
 use ddlp::pipeline::PipelineKind;
 use ddlp::trace::{Device, Phase, Trace};
 use ddlp::util::prop::{run_prop, Gen};
+
+mod common;
+use common::run_session;
 
 fn cfg(strategy: Strategy, n: u32, workers: u32, n_accel: u32, epochs: u32) -> ExperimentConfig {
     let mut profile = DeviceProfile::default();
@@ -92,7 +94,7 @@ fn train_sources(trace: &Trace, dev: Device) -> Vec<(u32, bool)> {
 fn adaptive_runs_in_analytic_mode_under_1_2_4_accels() {
     for n_accel in [1u32, 2, 4] {
         let c = cfg(Strategy::Adaptive, 64, 0, n_accel, 2);
-        let report = run_experiment(&c).unwrap().report;
+        let report = Session::from_config(&c).unwrap().run().unwrap().report;
         assert_eq!(report.n_batches, 128, "n_accel={n_accel}");
         assert!(report.batches_from_csd > 0, "n_accel={n_accel}: csd idle");
         assert!(report.makespan > 0.0);
@@ -106,13 +108,13 @@ fn adaptive_first_epoch_is_byte_identical_to_wrr() {
     for n_accel in [1u32, 2, 4] {
         let mut ca = FixedCosts::toy_fig6();
         let mut cw = FixedCosts::toy_fig6();
-        let (ra, ta) = run_schedule(
+        let (ra, ta) = run_session(
             &cfg(Strategy::Adaptive, 120, 0, n_accel, 1),
             &spec(120),
             &mut ca,
         )
         .unwrap();
-        let (rw, tw) = run_schedule(
+        let (rw, tw) = run_session(
             &cfg(Strategy::Wrr, 120, 0, n_accel, 1),
             &spec(120),
             &mut cw,
@@ -135,7 +137,7 @@ fn prop_adaptive_exactly_once_consumption() {
         let epochs = *g.choose(&[1u32, 2, 3]);
         let mut costs = rand_costs(g);
         let c = cfg(Strategy::Adaptive, n, workers, n_accel, epochs);
-        let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let (report, trace) = run_session(&c, &spec(n), &mut costs).unwrap();
         assert_eq!(report.n_batches, n * epochs);
         let mut counts = vec![0u32; n as usize];
         for s in &trace.spans {
@@ -159,7 +161,7 @@ fn adaptive_switches_to_prealloc_after_variance_settles() {
     let epochs = 3u32;
     let mut costs = FixedCosts::toy_fig6();
     let c = cfg(Strategy::Adaptive, n, 0, 1, epochs);
-    let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+    let (report, trace) = run_session(&c, &spec(n), &mut costs).unwrap();
     assert_eq!(report.n_batches, n * epochs);
 
     let srcs = train_sources(&trace, Device::Accel(0));
@@ -226,9 +228,9 @@ fn adaptive_keeps_polling_under_noisy_service_times() {
     };
     let mut ca = mk();
     let mut cw = mk();
-    let (ra, ta) = run_schedule(&cfg(Strategy::Adaptive, 150, 0, 2, 3), &spec(150), &mut ca)
+    let (ra, ta) = run_session(&cfg(Strategy::Adaptive, 150, 0, 2, 3), &spec(150), &mut ca)
         .unwrap();
-    let (rw, tw) = run_schedule(&cfg(Strategy::Wrr, 150, 0, 2, 3), &spec(150), &mut cw).unwrap();
+    let (rw, tw) = run_session(&cfg(Strategy::Wrr, 150, 0, 2, 3), &spec(150), &mut cw).unwrap();
     assert_eq!(ra.makespan, rw.makespan);
     assert_eq!(ta.spans, tw.spans, "noisy adaptive diverged from wrr");
 }
@@ -259,6 +261,6 @@ fn adaptive_exposed_through_config_and_cli_keys() {
         min_samples: 4,
     };
     let mut costs = FixedCosts::toy_fig6();
-    let (report, _) = run_schedule(&full, &spec(60), &mut costs).unwrap();
+    let (report, _) = run_session(&full, &spec(60), &mut costs).unwrap();
     assert_eq!(report.n_batches, 120);
 }

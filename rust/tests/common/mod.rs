@@ -1,0 +1,20 @@
+//! Shared integration-test plumbing.
+
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::cost::CostProvider;
+use ddlp::coordinator::Session;
+use ddlp::dataset::DatasetSpec;
+use ddlp::metrics::RunReport;
+use ddlp::topology::Topology;
+use ddlp::trace::Trace;
+
+/// The old `run_schedule(cfg, spec, costs)` call shape, expressed
+/// through the Session API over the topology the config describes.
+pub fn run_session(
+    cfg: &ExperimentConfig,
+    spec: &DatasetSpec,
+    costs: &mut dyn CostProvider,
+) -> anyhow::Result<(RunReport, Trace)> {
+    let r = Session::with_costs(cfg, Topology::from_config(cfg)?, spec, costs)?.run()?;
+    Ok((r.report, r.trace))
+}

@@ -6,13 +6,15 @@
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::FixedCosts;
-use ddlp::coordinator::schedule::run_schedule;
 use ddlp::coordinator::Strategy;
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
 use ddlp::trace::{Phase, Trace};
 use ddlp::util::idxheap::IdxMinHeap;
 use ddlp::util::prop::run_prop;
+
+mod common;
+use common::run_session;
 
 /// The engine's pre-heap selection rule, verbatim: linear scan over the
 /// member set, `Iterator::min_by` on `total_cmp` keys (first minimal
@@ -122,7 +124,7 @@ fn fleet64_every_strategy_exactly_once() {
                 .build()
                 .unwrap();
             let mut costs = FixedCosts::toy_fig6();
-            let (report, trace) = run_schedule(&c, &spec(N_BATCHES), &mut costs).unwrap();
+            let (report, trace) = run_session(&c, &spec(N_BATCHES), &mut costs).unwrap();
             assert_eq!(report.n_batches, N_BATCHES * EPOCHS, "{label}");
             assert_exact_coverage(&trace, N_BATCHES, EPOCHS, &label);
         }
@@ -151,7 +153,7 @@ fn fleet_ragged_and_empty_shards() {
                 .build()
                 .unwrap();
             let mut costs = FixedCosts::toy_fig6();
-            let (report, trace) = run_schedule(&c, &spec(n_batches), &mut costs).unwrap();
+            let (report, trace) = run_session(&c, &spec(n_batches), &mut costs).unwrap();
             assert_eq!(report.n_batches, n_batches, "{label}");
             assert_exact_coverage(&trace, n_batches, 1, &label);
         }

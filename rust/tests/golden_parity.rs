@@ -6,21 +6,30 @@
 //! The reference implementation below (`legacy` module) is the old
 //! `coordinator/schedule.rs` event loop, preserved verbatim (only
 //! `crate::` paths renamed, the `wasted` accumulator widened u32 → u64
-//! to follow `RunReport.wasted_batches`, and the MTE calibration's
+//! to follow `RunReport.wasted_batches`, the MTE calibration's
 //! `produced_ids().len()` replaced by `produced_len()` — both keep the
 //! original values: the cumulative production count, which
 //! `produced_ids().len()` stopped being once the product log began
-//! compacting at epoch restarts) against the crate's public device
-//! engines.
+//! compacting at epoch restarts — and `compute_energy`'s CSD flag
+//! following the bool → device-count signature change, `true` ≡ `1`)
+//! against the crate's public device engines.
 //! Configs keep `num_workers == 0` or `num_workers >= n_accel` so the
 //! legacy integer-division worker split matches the fixed, clamped one.
+//!
+//! The topology-first redesign adds a third party to the parity
+//! triangle: a `coordinator::Session` over `Topology::single_node`
+//! must match the deprecated `run_schedule` shim — and therefore the
+//! legacy monolith — bit for bit (reports and span sequences), for
+//! every strategy × n_accel ∈ {1, 2, 4}.
+#![allow(deprecated)] // run_schedule is the parity reference under test
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::{AnalyticCosts, CostProvider, FixedCosts};
 use ddlp::coordinator::schedule::run_schedule;
-use ddlp::coordinator::Strategy;
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
+use ddlp::topology::Topology;
 
 /// The pre-refactor scheduler, verbatim.
 mod legacy {
@@ -454,7 +463,7 @@ mod legacy {
                 &self.cfg.profile.power,
                 makespan,
                 n_processes,
-                self.cfg.strategy.uses_csd(),
+                self.cfg.strategy.uses_csd() as u32,
                 n as u32,
             );
             RunReport {
@@ -604,5 +613,68 @@ fn parity_under_csd_failure() {
         let mut a = FixedCosts::toy_fig6();
         let mut b = FixedCosts::toy_fig6();
         assert_parity(&c, &mut a, &mut b);
+    }
+}
+
+/// `Session` over `Topology::single_node` vs the deprecated
+/// `run_schedule` shim: reports and span sequences bit-identical for
+/// every strategy (Adaptive included) × n_accel ∈ {1, 2, 4} × worker
+/// budget × epochs.
+fn assert_session_parity(c: &ExperimentConfig) {
+    let label = format!(
+        "{} n_accel={} workers={} epochs={}",
+        c.strategy, c.n_accel, c.num_workers, c.epochs
+    );
+    let mut costs_new = FixedCosts::toy_fig6();
+    let mut costs_old = FixedCosts::toy_fig6();
+    let r_new = Session::with_costs(c, Topology::single_node(c.n_accel), &spec(), &mut costs_new)
+        .unwrap()
+        .run()
+        .unwrap();
+    let (r_old, t_old) = run_schedule(c, &spec(), &mut costs_old).unwrap();
+    assert_eq!(r_new.report, r_old, "Session RunReport diverged: {label}");
+    assert_eq!(
+        r_new.trace.spans, t_old.spans,
+        "Session trace diverged: {label}"
+    );
+    // Single-node fleet accounting is the whole-run accounting.
+    assert_eq!(r_new.csd_devices.len(), 1, "{label}");
+    assert!(
+        r_new.csd_devices[0].wasted <= r_old.wasted_batches,
+        "{label}: per-device waste exceeds the report total"
+    );
+}
+
+#[test]
+fn parity_session_single_node_all_strategies() {
+    for strategy in Strategy::ALL {
+        for n_accel in [1u32, 2, 4] {
+            for workers in [0u32, 16] {
+                for epochs in [1u32, 3] {
+                    assert_session_parity(&cfg(strategy, n_accel, workers, epochs));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_session_vs_legacy_monolith() {
+    // Close the triangle: Session(single_node) against the pre-refactor
+    // scheduler itself, not just the shim.
+    for strategy in LEGACY_STRATEGIES {
+        for n_accel in [1u32, 2, 4] {
+            let c = cfg(strategy, n_accel, 0, 2);
+            let mut costs_new = FixedCosts::toy_fig6();
+            let mut costs_old = FixedCosts::toy_fig6();
+            let r_new =
+                Session::with_costs(&c, Topology::single_node(n_accel), &spec(), &mut costs_new)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+            let (r_old, t_old) = legacy::run_schedule_legacy(&c, &spec(), &mut costs_old).unwrap();
+            assert_eq!(r_new.report, r_old, "{strategy} n_accel={n_accel}");
+            assert_eq!(r_new.trace.spans, t_old.spans, "{strategy} n_accel={n_accel}");
+        }
     }
 }

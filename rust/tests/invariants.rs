@@ -1,15 +1,21 @@
 //! Coordinator invariants (DESIGN.md §Key invariants), property-tested
-//! across strategies, worker counts, rates and dataset sizes.
+//! across strategies, worker counts, rates and dataset sizes — and,
+//! since the topology-first redesign, across multi-CSD fleets (both
+//! shard→CSD assignment modes, per-device failure injection, per-device
+//! waste attribution).
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::{CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
-use ddlp::coordinator::schedule::run_schedule;
-use ddlp::coordinator::Strategy;
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::DatasetSpec;
 use ddlp::metrics::RunReport;
 use ddlp::pipeline::PipelineKind;
+use ddlp::topology::{CsdAssign, Topology};
 use ddlp::trace::{Device, Phase, Trace};
 use ddlp::util::prop::{run_prop, Gen};
+
+mod common;
+use common::run_session;
 
 fn cfg(strategy: Strategy, n: u32, workers: u32, n_accel: u32) -> ExperimentConfig {
     let mut profile = DeviceProfile::default();
@@ -21,6 +27,29 @@ fn cfg(strategy: Strategy, n: u32, workers: u32, n_accel: u32) -> ExperimentConf
         .strategy(strategy)
         .num_workers(workers)
         .n_accel(n_accel)
+        .n_batches(n)
+        .profile(profile)
+        .build()
+        .unwrap()
+}
+
+fn cfg_fleet(
+    strategy: Strategy,
+    n: u32,
+    n_accel: u32,
+    n_csd: u32,
+    assign: CsdAssign,
+) -> ExperimentConfig {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .n_accel(n_accel)
+        .n_csd(n_csd)
+        .csd_assign(assign)
         .n_batches(n)
         .profile(profile)
         .build()
@@ -85,7 +114,7 @@ fn prop_every_strategy_exact_coverage() {
         let strategy = *g.choose(&Strategy::ALL);
         let mut costs = rand_costs(g);
         let c = cfg(strategy, n, workers, n_accel);
-        let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let (report, trace) = run_session(&c, &spec(n), &mut costs).unwrap();
         assert_eq!(report.n_batches, n);
         assert_exact_coverage(&trace, n, 1);
     });
@@ -100,7 +129,7 @@ fn prop_mte_deterministic_order() {
         let workers = *g.choose(&[0u32, 4]);
         let mut costs = rand_costs(g);
         let c = cfg(Strategy::Mte, n, workers, 1);
-        let (_, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let (_, trace) = run_session(&c, &spec(n), &mut costs).unwrap();
         let order = trace.consumption_order();
         // find the first tail-sourced batch (GdsRead precedes its Train)
         let csd_batches: std::collections::HashSet<u32> = trace
@@ -135,7 +164,7 @@ fn prop_wrr_never_consumes_before_ready() {
         let n = g.size(40, 300) as u32;
         let mut costs = rand_costs(g);
         let c = cfg(Strategy::Wrr, n, *g.choose(&[0u32, 4]), 1);
-        let (_, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let (_, trace) = run_session(&c, &spec(n), &mut costs).unwrap();
         for gds in trace.spans.iter().filter(|s| s.phase == Phase::GdsRead) {
             let b = gds.batch.unwrap();
             let write_end = trace
@@ -186,7 +215,7 @@ fn prop_strategy_dominance_preprocessing_bound() {
             },
         };
         let run = |s: Strategy| -> RunReport {
-            run_schedule(&cfg(s, n, 0, 1), &spec(n), &mut mk()).unwrap().0
+            run_session(&cfg(s, n, 0, 1), &spec(n), &mut mk()).unwrap().0
         };
         let cpu = run(Strategy::CpuOnly).makespan;
         let mte = run(Strategy::Mte).makespan;
@@ -232,7 +261,7 @@ fn prop_ddlp_never_catastrophic_when_train_bound() {
             },
         };
         let run = |s: Strategy| -> RunReport {
-            run_schedule(&cfg(s, n, 4, 1), &spec(n), &mut mk()).unwrap().0
+            run_session(&cfg(s, n, 4, 1), &spec(n), &mut mk()).unwrap().0
         };
         let cpu = run(Strategy::CpuOnly).makespan;
         let mte = run(Strategy::Mte).makespan;
@@ -250,7 +279,7 @@ fn prop_energy_accounting_consistent() {
         let strategy = *g.choose(&Strategy::ALL);
         let mut costs = rand_costs(g);
         let c = cfg(strategy, n, workers, 1);
-        let (report, _) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let (report, _) = run_session(&c, &spec(n), &mut costs).unwrap();
         let e = &report.energy;
         assert!((e.cpu_joules + e.csd_joules - e.total_joules).abs() < 1e-6);
         let procs = match strategy {
@@ -277,7 +306,7 @@ fn epochs_repeat_consumption() {
     let mut costs = FixedCosts::toy_fig6();
     let mut c = cfg(Strategy::Wrr, 50, 0, 1);
     c.epochs = 3;
-    let (report, trace) = run_schedule(&c, &spec(50), &mut costs).unwrap();
+    let (report, trace) = run_session(&c, &spec(50), &mut costs).unwrap();
     assert_eq!(report.n_batches, 150);
     assert_exact_coverage(&trace, 50, 3);
 }
@@ -286,7 +315,7 @@ fn epochs_repeat_consumption() {
 fn csd_only_uses_no_host_cpu() {
     let mut costs = FixedCosts::toy_fig6();
     let c = cfg(Strategy::CsdOnly, 50, 0, 1);
-    let (report, trace) = run_schedule(&c, &spec(50), &mut costs).unwrap();
+    let (report, trace) = run_session(&c, &spec(50), &mut costs).unwrap();
     assert_eq!(trace.busy_where(|s| s.device.is_host_cpu()), 0.0);
     assert_eq!(report.cpu_dram_time_per_batch, 0.0);
     assert_eq!(trace.busy_where(|s| s.device == Device::Csd), 50.0);
@@ -305,7 +334,7 @@ fn prop_csd_failure_degrades_gracefully() {
         let mut costs = rand_costs(g);
         let mut c = cfg(strategy, n, *g.choose(&[0u32, 4]), 1);
         c.profile.csd_fail_at_s = fail_at;
-        let (report, trace) = run_schedule(&c, &spec(n), &mut costs).unwrap();
+        let (report, trace) = run_session(&c, &spec(n), &mut costs).unwrap();
         assert_eq!(report.n_batches, n);
         assert_exact_coverage(&trace, n, 1);
         // no CSD *batch* may start at/after the failure time (in-flight
@@ -330,12 +359,12 @@ fn csd_failure_at_time_zero_equals_cpu_only() {
     // makespan (modulo the poll probes, which are zeroed here).
     let mut costs_a = FixedCosts::toy_fig6();
     let mut costs_b = FixedCosts::toy_fig6();
-    let cpu = run_schedule(&cfg(Strategy::CpuOnly, 200, 0, 1), &spec(200), &mut costs_a)
+    let cpu = run_session(&cfg(Strategy::CpuOnly, 200, 0, 1), &spec(200), &mut costs_a)
         .unwrap()
         .0;
     let mut c = cfg(Strategy::Wrr, 200, 0, 1);
     c.profile.csd_fail_at_s = 0.0;
-    let wrr = run_schedule(&c, &spec(200), &mut costs_b).unwrap().0;
+    let wrr = run_session(&c, &spec(200), &mut costs_b).unwrap().0;
     assert_eq!(wrr.batches_from_csd, 0);
     assert!(
         (wrr.makespan - cpu.makespan).abs() < 1e-6,
@@ -352,7 +381,7 @@ fn csd_failure_survives_epoch_restart() {
     let mut c = cfg(Strategy::Wrr, 100, 0, 1);
     c.epochs = 3;
     c.profile.csd_fail_at_s = 5.0;
-    let (report, trace) = run_schedule(&c, &spec(100), &mut costs).unwrap();
+    let (report, trace) = run_session(&c, &spec(100), &mut costs).unwrap();
     assert_eq!(report.n_batches, 300);
     assert_exact_coverage(&trace, 100, 3);
     for s in trace
@@ -370,10 +399,127 @@ fn wrr_stop_signal_bounds_waste() {
     // in flight, not the whole remaining tail.
     let mut costs = FixedCosts::toy_fig6();
     let c = cfg(Strategy::Wrr, 500, 0, 1);
-    let (report, _) = run_schedule(&c, &spec(500), &mut costs).unwrap();
+    let (report, _) = run_session(&c, &spec(500), &mut costs).unwrap();
     assert!(
         report.wasted_batches <= 3,
         "wasted {} batches",
         report.wasted_batches
     );
+}
+
+// ---------------------------------------------------------------------
+// Multi-CSD fleets (topology-first Session API)
+// ---------------------------------------------------------------------
+
+#[test]
+fn multi_csd_exactly_once_both_assignments() {
+    // Exactly-once consumption over 2- and 4-CSD fleets, both shard→CSD
+    // assignment modes, every CSD-using strategy.
+    const N: u32 = 200;
+    const N_ACCEL: u32 = 4;
+    for n_csd in [2u32, 4] {
+        for assign in [CsdAssign::Block, CsdAssign::Stripe] {
+            for strategy in [Strategy::CsdOnly, Strategy::Mte, Strategy::Wrr, Strategy::Adaptive] {
+                let label = format!("{strategy} n_csd={n_csd} assign={assign}");
+                let c = cfg_fleet(strategy, N, N_ACCEL, n_csd, assign);
+                let topo = Topology::from_config(&c).unwrap();
+                let mut costs = FixedCosts::toy_fig6();
+                let r = Session::with_costs(&c, topo, &spec(N), &mut costs)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                assert_eq!(r.report.n_batches, N, "{label}");
+                assert_exact_coverage(&r.trace, N, 1);
+                assert!(r.report.batches_from_csd > 0, "{label}: fleet idle");
+                assert_eq!(r.csd_devices.len(), n_csd as usize, "{label}");
+                // Every assigned device actually produced work (each CSD
+                // serves >= 1 directory at these fleet shapes).
+                for (i, d) in r.csd_devices.iter().enumerate() {
+                    assert!(d.produced > 0, "{label}: csd[{i}] produced nothing");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_csd_mid_run_single_device_failure_degrades_gracefully() {
+    // One device of a 2-CSD fleet dies mid-run: its shards fall back to
+    // the CPU head, the surviving device keeps producing, and coverage
+    // stays exactly-once.
+    const N: u32 = 200;
+    for strategy in [Strategy::Mte, Strategy::Wrr] {
+        for assign in [CsdAssign::Block, CsdAssign::Stripe] {
+            let label = format!("{strategy} assign={assign}");
+            let c = cfg_fleet(strategy, N, 4, 2, assign);
+            let topo = Topology::builder()
+                .accels(4)
+                .csds(2)
+                .assign(assign)
+                .fail_csd(1, 10.0)
+                .build()
+                .unwrap();
+            let mut costs = FixedCosts::toy_fig6();
+            let r = Session::with_costs(&c, topo, &spec(N), &mut costs)
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_eq!(r.report.n_batches, N, "{label}");
+            assert_exact_coverage(&r.trace, N, 1);
+            assert!(
+                r.report.batches_from_csd > 0,
+                "{label}: surviving device idle"
+            );
+            // The dead device stops producing; the survivor does not.
+            assert!(r.csd_devices[0].produced > 0, "{label}");
+        }
+    }
+}
+
+#[test]
+fn multi_csd_per_device_waste_sums_to_report() {
+    // Acceptance: a 4-CSD WRR run's per-device waste counters sum to
+    // RunReport.wasted_batches (workers = 0, so no queue-drop waste).
+    const N: u32 = 400;
+    let c = cfg_fleet(Strategy::Wrr, N, 4, 4, CsdAssign::Stripe);
+    let mut costs = FixedCosts::toy_fig6();
+    let r = Session::with_costs(&c, Topology::from_config(&c).unwrap(), &spec(N), &mut costs)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_exact_coverage(&r.trace, N, 1);
+    assert_eq!(r.csd_devices.len(), 4);
+    let per_device: u64 = r.csd_devices.iter().map(|d| d.wasted).sum();
+    assert_eq!(
+        per_device, r.report.wasted_batches,
+        "per-CSD waste {per_device} != report total {}",
+        r.report.wasted_batches
+    );
+}
+
+#[test]
+fn zero_csd_fleet_runs_cpu_only_without_csd_power() {
+    // A CSD-less topology is valid for the classical path — and charges
+    // zero CSD energy (no idle power for absent hardware).
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    let c = ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(Strategy::CpuOnly)
+        .n_csd(0)
+        .n_batches(50)
+        .profile(profile)
+        .build()
+        .unwrap();
+    let mut costs = FixedCosts::toy_fig6();
+    let r = Session::with_costs(&c, Topology::from_config(&c).unwrap(), &spec(50), &mut costs)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.report.n_batches, 50);
+    assert_eq!(r.report.energy.csd_joules, 0.0);
+    assert!(r.csd_devices.is_empty());
+    assert_exact_coverage(&r.trace, 50, 1);
 }

@@ -3,11 +3,18 @@
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::FixedCosts;
-use ddlp::coordinator::schedule::run_schedule;
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
 use ddlp::trace::{Device, Phase};
+
+mod common;
+use common::run_session;
+
+/// The old `run_experiment` call shape (analytic costs from the config).
+fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ddlp::coordinator::RunResult> {
+    Session::from_config(cfg)?.run()
+}
 
 fn cfg(strategy: Strategy, n_accel: u32, n: u32, workers: u32) -> ExperimentConfig {
     let mut profile = DeviceProfile::default();
@@ -39,7 +46,7 @@ fn two_gpus_cover_dataset_disjointly() {
     for strategy in Strategy::ALL {
         let mut costs = FixedCosts::toy_fig6();
         let c = cfg(strategy, 2, 200, 0);
-        let (report, trace) = run_schedule(&c, &spec(200), &mut costs).unwrap();
+        let (report, trace) = run_session(&c, &spec(200), &mut costs).unwrap();
         assert_eq!(report.n_batches, 200, "{strategy}");
         // every batch trained exactly once, split across two devices
         let mut seen = vec![0u8; 200];
@@ -87,7 +94,7 @@ fn csd_directories_keyed_by_gpu() {
     // accelerators must consume CSD-sourced batches.
     let mut costs = FixedCosts::toy_fig6();
     let c = cfg(Strategy::Wrr, 2, 400, 0);
-    let (_, trace) = run_schedule(&c, &spec(400), &mut costs).unwrap();
+    let (_, trace) = run_session(&c, &spec(400), &mut costs).unwrap();
     let mut gds_per_dev = [0u32; 2];
     for s in trace.spans.iter().filter(|s| s.phase == Phase::GdsRead) {
         if let Device::Accel(i) = s.device {
@@ -122,7 +129,7 @@ fn worker_budget_validated_and_clamped() {
     let mut c = cfg(Strategy::Wrr, 2, 100, 2);
     c.num_workers = 1; // budget 1 across 2 accelerators
     let mut costs = FixedCosts::toy_fig6();
-    let (report, trace) = run_schedule(&c, &spec(100), &mut costs).unwrap();
+    let (report, trace) = run_session(&c, &spec(100), &mut costs).unwrap();
     assert_eq!(report.n_batches, 100);
     let worker_busy = trace.busy_where(|s| matches!(s.device, Device::CpuWorker(_)));
     assert!(worker_busy > 0.0, "clamp failed: no worker lanes used");
@@ -137,7 +144,7 @@ fn worker_budget_validated_and_clamped() {
 fn four_gpus_still_consistent() {
     let mut costs = FixedCosts::toy_fig6();
     let c = cfg(Strategy::Wrr, 4, 403, 0); // non-divisible shard sizes
-    let (report, trace) = run_schedule(&c, &spec(403), &mut costs).unwrap();
+    let (report, trace) = run_session(&c, &spec(403), &mut costs).unwrap();
     assert_eq!(report.n_batches, 403);
     let mut seen = vec![0u8; 403];
     for s in trace.spans.iter().filter(|s| s.phase == Phase::Train) {

@@ -15,11 +15,13 @@
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::FixedCosts;
-use ddlp::coordinator::schedule::run_schedule;
 use ddlp::coordinator::Strategy;
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
 use ddlp::trace::{Phase, Span, Trace};
+
+mod common;
+use common::run_session;
 
 fn run(strategy: Strategy) -> Trace {
     let mut profile = DeviceProfile::default();
@@ -40,7 +42,7 @@ fn run(strategy: Strategy) -> Trace {
         seed: 0,
     };
     let mut costs = FixedCosts::toy_fig6();
-    run_schedule(&cfg, &spec, &mut costs).unwrap().1
+    run_session(&cfg, &spec, &mut costs).unwrap().1
 }
 
 fn csd_pp(s: &Span) -> bool {

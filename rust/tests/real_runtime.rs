@@ -5,7 +5,7 @@
 use std::path::{Path, PathBuf};
 
 use ddlp::config::{ExecMode, ExperimentConfig};
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::pipeline::PipelineKind;
 use ddlp::runtime::{tensor_to_literal, Runtime};
 use ddlp::util::tensorfile::read_tensors;
@@ -110,7 +110,7 @@ fn real_mode_wrr_trains_and_loss_decreases() {
         })
         .build()
         .unwrap();
-    let result = run_experiment(&cfg).unwrap();
+    let result = Session::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(result.report.n_batches, 24);
     assert_eq!(result.losses.len(), 24);
     let first = result.losses[0];
@@ -138,7 +138,7 @@ fn real_mode_mte_matches_cpu_numerics() {
             })
             .build()
             .unwrap();
-        let result = run_experiment(&cfg).unwrap();
+        let result = Session::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(result.losses.len(), 16, "{strategy}");
         assert!(
             result.losses.iter().all(|l| l.is_finite()),

@@ -3,7 +3,7 @@
 //! (Absolute seconds are testbed-specific; DESIGN.md §Experiment index.)
 
 use ddlp::config::{ExperimentConfig, Loader};
-use ddlp::coordinator::{run_experiment, Strategy};
+use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::RunReport;
 use ddlp::pipeline::PipelineKind;
 
@@ -21,7 +21,7 @@ fn run(model: &str, pipeline: PipelineKind, strategy: Strategy, workers: u32) ->
         .epochs(EPOCHS)
         .build()
         .unwrap();
-    run_experiment(&cfg).unwrap().report
+    Session::from_config(&cfg).unwrap().run().unwrap().report
 }
 
 fn run_loader(model: &str, loader: Loader, strategy: Strategy, workers: u32) -> RunReport {
@@ -35,7 +35,7 @@ fn run_loader(model: &str, loader: Loader, strategy: Strategy, workers: u32) -> 
         .epochs(EPOCHS)
         .build()
         .unwrap();
-    run_experiment(&cfg).unwrap().report
+    Session::from_config(&cfg).unwrap().run().unwrap().report
 }
 
 /// Table VI column ordering for one (model, pipeline):

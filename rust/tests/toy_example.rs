@@ -8,10 +8,12 @@
 
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::FixedCosts;
-use ddlp::coordinator::schedule::run_schedule;
 use ddlp::coordinator::Strategy;
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
+
+mod common;
+use common::run_session;
 
 fn toy_cfg(strategy: Strategy) -> ExperimentConfig {
     let mut profile = DeviceProfile::default();
@@ -41,7 +43,7 @@ fn toy_spec() -> DatasetSpec {
 fn mte_toy_is_225s() {
     let cfg = toy_cfg(Strategy::Mte);
     let mut costs = FixedCosts::toy_fig6();
-    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    let (report, _) = run_session(&cfg, &toy_spec(), &mut costs).unwrap();
     assert!(
         (report.makespan - 225.0).abs() < 1e-6,
         "MTE toy makespan {} != 225",
@@ -56,7 +58,7 @@ fn mte_toy_is_225s() {
 fn wrr_toy_is_222_25s() {
     let cfg = toy_cfg(Strategy::Wrr);
     let mut costs = FixedCosts::toy_fig6();
-    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    let (report, _) = run_session(&cfg, &toy_spec(), &mut costs).unwrap();
     assert!(
         (report.makespan - 222.25).abs() < 0.5,
         "WRR toy makespan {} != 222.25",
@@ -70,8 +72,8 @@ fn wrr_beats_mte_on_toy() {
     // The paper's headline for Fig. 6: WRR improves on MTE by ~1.2%.
     let mut c1 = FixedCosts::toy_fig6();
     let mut c2 = FixedCosts::toy_fig6();
-    let (mte, _) = run_schedule(&toy_cfg(Strategy::Mte), &toy_spec(), &mut c1).unwrap();
-    let (wrr, _) = run_schedule(&toy_cfg(Strategy::Wrr), &toy_spec(), &mut c2).unwrap();
+    let (mte, _) = run_session(&toy_cfg(Strategy::Mte), &toy_spec(), &mut c1).unwrap();
+    let (wrr, _) = run_session(&toy_cfg(Strategy::Wrr), &toy_spec(), &mut c2).unwrap();
     assert!(wrr.makespan < mte.makespan);
     let gain = (mte.makespan - wrr.makespan) / mte.makespan * 100.0;
     assert!((0.5..2.5).contains(&gain), "gain {gain:.2}% (paper: 1.2%)");
@@ -82,7 +84,7 @@ fn cpu_only_toy_is_250s() {
     // 1000 batches at 4/s coupled = 250 s — the baseline both beat.
     let cfg = toy_cfg(Strategy::CpuOnly);
     let mut costs = FixedCosts::toy_fig6();
-    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    let (report, _) = run_session(&cfg, &toy_spec(), &mut costs).unwrap();
     assert!(
         (report.makespan - 250.0).abs() < 1e-6,
         "CPU-only toy {} != 250",
@@ -96,7 +98,7 @@ fn csd_only_toy_is_1000s_plus_drain() {
     // CSD at 1/s dominates: ~1000 s + the last batch's GDS+train.
     let cfg = toy_cfg(Strategy::CsdOnly);
     let mut costs = FixedCosts::toy_fig6();
-    let (report, _) = run_schedule(&cfg, &toy_spec(), &mut costs).unwrap();
+    let (report, _) = run_session(&cfg, &toy_spec(), &mut costs).unwrap();
     assert!(
         (report.makespan - 1000.125).abs() < 1e-6,
         "CSD-only toy {}",

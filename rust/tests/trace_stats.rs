@@ -11,12 +11,14 @@
 
 use ddlp::config::ExperimentConfig;
 use ddlp::coordinator::cost::FixedCosts;
-use ddlp::coordinator::schedule::run_schedule;
 use ddlp::coordinator::Strategy;
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
 use ddlp::trace::{Device, DeviceClass, Phase, Span, Trace};
 use ddlp::util::prop::run_prop;
+
+mod common;
+use common::run_session;
 
 const DEVICES: [Device; 7] = [
     Device::CpuMain,
@@ -118,7 +120,7 @@ fn report_pair(
         seed: 0,
     };
     let mut costs = FixedCosts::toy_fig6();
-    let (report, trace) = run_schedule(&cfg, &spec, &mut costs).unwrap();
+    let (report, trace) = run_session(&cfg, &spec, &mut costs).unwrap();
     assert_eq!(
         trace.is_enabled(),
         record_trace,
