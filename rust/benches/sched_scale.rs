@@ -19,6 +19,10 @@
 //! n_accel = 64, stripe assignment, via the topology-first `Session`
 //! API) — its rows land in the same JSON under `csd_results`.
 //!
+//! A third sweep scales the **host fleet** (`n_hosts ∈ {1, 2, 4}` at
+//! n_accel = 64, epoch stealing enabled, via `cluster::Cluster`) — its
+//! rows land in the same JSON under `host_results`.
+//!
 //! Env knobs (CI perf smoke):
 //!   SCHED_SCALE_BPA        batches per accelerator        (default 500)
 //!   SCHED_SCALE_MIN_WRR    min total batches/s at n_accel = 64; below
@@ -29,10 +33,14 @@
 //!   SCHED_SCALE_MCSD_MIN_WRR  min total batches/s over the multi-CSD
 //!                          sweep rows; below it the bench exits
 //!                          non-zero.
+//!   SCHED_SCALE_HOSTS_MIN_WRR  min total batches/s over the multi-host
+//!                          sweep rows; below it the bench exits
+//!                          non-zero.
 use std::time::Instant;
 
+use ddlp::cluster::{Cluster, StealMode};
 use ddlp::config::{DeviceProfile, ExperimentConfig};
-use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::cost::{CostProvider, FixedCosts};
 use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::DatasetSpec;
 use ddlp::pipeline::PipelineKind;
@@ -44,6 +52,10 @@ const FLEETS: [u32; 4] = [4, 16, 64, 256];
 /// CSD-fleet sweep (fixed accelerator fleet, growing CSD count).
 const CSD_FLEETS: [u32; 3] = [1, 4, 16];
 const CSD_SWEEP_N_ACCEL: u32 = 64;
+
+/// Host-fleet sweep (fixed accelerator fleet partitioned over hosts).
+const HOST_FLEETS: [u32; 3] = [1, 2, 4];
+const HOST_SWEEP_N_ACCEL: u32 = 64;
 
 /// Minimum batches timed per row (small-fleet runs are repeated up to
 /// this volume so the ratio isn't noise on a millisecond measurement).
@@ -193,6 +205,57 @@ fn main() {
         });
     }
 
+    // ---- multi-host sweep ------------------------------------------
+    // Fixed accelerator fleet partitioned over a growing host fleet
+    // (one CSD per host, epoch stealing armed): the cluster driver's
+    // per-epoch outcome/rebalance path must not sink total scheduling
+    // throughput vs the single-host run.
+    let mut host_rows: Vec<Row> = Vec::new();
+    for n_hosts in HOST_FLEETS {
+        let n = bpa * HOST_SWEEP_N_ACCEL;
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            .num_workers(HOST_SWEEP_N_ACCEL)
+            .n_hosts(n_hosts)
+            .n_accel(HOST_SWEEP_N_ACCEL)
+            .n_csd(n_hosts)
+            .steal(StealMode::Epoch)
+            .n_batches(n)
+            .record_trace(false)
+            .profile(profile.clone())
+            .build()
+            .unwrap();
+        let reps = (MIN_MEASURED_BATCHES / n).max(1);
+        let mut makespan = 0.0f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let report = Cluster::from_config(&cfg)
+                .unwrap()
+                .with_cost_factory(|_| -> Box<dyn CostProvider> {
+                    Box::new(FixedCosts::toy_fig6())
+                })
+                .run()
+                .unwrap()
+                .report;
+            makespan = report.makespan;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let batches_per_s = (n as f64 * reps as f64) / dt;
+        let per_accel = batches_per_s / HOST_SWEEP_N_ACCEL as f64;
+        println!(
+            "[sched_scale] wrr n_accel={HOST_SWEEP_N_ACCEL} n_hosts={n_hosts:<2} {n:>7} batches \
+             x{reps} in {dt:.3}s = {batches_per_s:>10.0} batches/s ({per_accel:.0}/accel, \
+             makespan {makespan:.0}s virtual)"
+        );
+        host_rows.push(Row {
+            n_accel: n_hosts, // reused column: host fleet size for this sweep
+            batches_per_s,
+            per_accel_batches_per_s: per_accel,
+            makespan_s: makespan,
+        });
+    }
+
     // Weak-scaling figure of merit: total scheduling throughput at the
     // largest fleet vs the smallest. A linear-scan engine degrades
     // ~n×; the O(log n) engine should hold this near 1.
@@ -239,6 +302,18 @@ fn main() {
             "    \"wrr_a{}_csd{}\": {{\"batches_per_s\": {:.1}, \
              \"per_accel_batches_per_s\": {:.1}, \"makespan_s\": {:.6}}}{comma}\n",
             CSD_SWEEP_N_ACCEL, r.n_accel, r.batches_per_s, r.per_accel_batches_per_s, r.makespan_s
+        ));
+    }
+    json.push_str("  },\n");
+    json.push_str(&format!(
+        "  \"host_sweep_n_accel\": {HOST_SWEEP_N_ACCEL},\n  \"host_results\": {{\n"
+    ));
+    for (i, r) in host_rows.iter().enumerate() {
+        let comma = if i + 1 < host_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"wrr_a{}_h{}\": {{\"batches_per_s\": {:.1}, \
+             \"per_accel_batches_per_s\": {:.1}, \"makespan_s\": {:.6}}}{comma}\n",
+            HOST_SWEEP_N_ACCEL, r.n_accel, r.batches_per_s, r.per_accel_batches_per_s, r.makespan_s
         ));
     }
     json.push_str("  }\n}\n");
@@ -290,6 +365,26 @@ fn main() {
         }
         println!(
             "[sched_scale] multi-CSD smoke OK: worst row (n_csd={}) {:.0} >= {floor:.0} batches/s",
+            worst.n_accel, worst.batches_per_s
+        );
+    }
+    // Multi-host smoke: partitioning the fleet over cluster hosts runs
+    // the same engine per slice plus an O(hosts) epoch-boundary driver,
+    // so the slowest host-fleet row must clear the floor too.
+    if let Some(floor) = env_f64("SCHED_SCALE_HOSTS_MIN_WRR") {
+        let worst = host_rows
+            .iter()
+            .min_by(|a, b| a.batches_per_s.total_cmp(&b.batches_per_s))
+            .expect("host sweep has rows");
+        if worst.batches_per_s < floor {
+            eprintln!(
+                "[sched_scale] FAIL: multi-host sweep (n_hosts={}) {:.0} batches/s < floor {floor:.0}",
+                worst.n_accel, worst.batches_per_s
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "[sched_scale] multi-host smoke OK: worst row (n_hosts={}) {:.0} >= {floor:.0} batches/s",
             worst.n_accel, worst.batches_per_s
         );
     }

@@ -1,0 +1,486 @@
+//! Cluster run surface: multi-host sharded coordination with
+//! cross-host work stealing (DESIGN.md §Cluster).
+//!
+//! The paper evaluates DDLP on one node, but its core idea — two
+//! prongs consuming one dataset toward the middle — generalizes to a
+//! fleet of hosts, where the bottleneck becomes a *cluster-level*
+//! imbalance problem: one straggler host starves every synchronous
+//! step (Mohan et al. on data stalls; Versaci & Busonera on network
+//! loading). [`Cluster`] is that generalization:
+//!
+//! ```text
+//!            Topology (H hosts, N accels, C CSDs)
+//!                 │ host_slice(h): balanced blocks
+//!    ┌────────────┼────────────┐
+//!    ▼            ▼            ▼
+//!  host 0       host 1       host 2          one Session each,
+//!  Session      Session      Session         global shard windows
+//!    │ run_epoch() → EpochOutcome (makespan, batches, unstarted)
+//!    ├────────── epoch barrier ──────────┤
+//!    │  steal = epoch: slowest host donate_tail(k) ──▶ fastest absorb
+//!    ▼
+//!  finish() × H → RunResult { report (sums/max), host_reports }
+//! ```
+//!
+//! * **Partitioning** — [`crate::topology::Topology::host_slice`]
+//!   gives host `h` a balanced contiguous block of accelerators and
+//!   CSDs; each slice carries its global rank window so
+//!   DistributedSampler shards stay disjoint and complete across the
+//!   cluster, and the shard→CSD assignment is recomputed within the
+//!   host (a CSD attaches to one host's PCIe fabric).
+//! * **Stealing** ([`StealMode::Epoch`]) — after every epoch but the
+//!   last, the driver estimates each host's pace (`epoch_span /
+//!   batches`), predicts next-epoch finish times (`pace × workload`),
+//!   and moves unstarted batch ranges from the slowest host's queue to
+//!   the fastest until predicted finishes level out. Transfers go
+//!   through [`crate::coordinator::Session::donate_tail`] /
+//!   [`crate::coordinator::Session::absorb`], which conserve batch ids
+//!   exactly — nothing is lost or duplicated, so the exactly-once
+//!   invariant holds under stealing (`rust/tests/cluster.rs`).
+//! * **Reduction** — a 1-host cluster, or `steal = off` with one host,
+//!   is a transparent pass-through: report, trace and losses are
+//!   bit-identical to a plain [`Session::run`] (golden parity).
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::cost::CostProvider;
+use crate::coordinator::{CsdDeviceReport, RunResult, Session};
+use crate::dataset::BatchId;
+use crate::energy::EnergyReport;
+use crate::metrics::RunReport;
+use crate::sim::Secs;
+use crate::topology::Topology;
+use crate::trace::{Device, Trace};
+
+/// Cross-host work-stealing mode (config key `steal = off|epoch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum StealMode {
+    /// No rebalancing: every host keeps its static shard block —
+    /// bit-identical to running the hosts as independent sessions.
+    #[default]
+    Off,
+    /// Epoch-boundary stealing: between epochs the cluster driver moves
+    /// unstarted batch ranges from the slowest host to idle hosts.
+    Epoch,
+}
+
+impl StealMode {
+    pub fn parse(s: &str) -> Option<StealMode> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => StealMode::Off,
+            "epoch" => StealMode::Epoch,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StealMode::Off => "off",
+            StealMode::Epoch => "epoch",
+        }
+    }
+}
+
+impl std::fmt::Display for StealMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-host attribution of one cluster run. The summable report fields
+/// (batches, busy times, waste, energy) sum into the cluster-wide
+/// [`RunReport`]; makespans max into it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostReport {
+    /// Host index in the topology's partition order.
+    pub host: u32,
+    /// The host's own run report, bit-identical to what a standalone
+    /// session over the same slice (and the same absorbed/donated
+    /// batches) would produce.
+    pub report: RunReport,
+    /// Batches stolen *into* this host's queue across the run.
+    pub steals_in: u64,
+    /// Batches donated *out of* this host's queue across the run.
+    pub steals_out: u64,
+    /// Per-CSD rollups of the host's devices (local device order —
+    /// globally these are the host's contiguous CSD block).
+    pub csd_devices: Vec<CsdDeviceReport>,
+}
+
+impl HostReport {
+    /// Batches this host consumed over the whole run.
+    pub fn batches(&self) -> u64 {
+        self.report.n_batches as u64
+    }
+
+    /// The host's virtual makespan.
+    pub fn makespan(&self) -> Secs {
+        self.report.makespan
+    }
+}
+
+/// Per-host cost-provider factory (host index → provider) — see
+/// [`Cluster::with_cost_factory`].
+pub type CostFactory = Box<dyn Fn(u32) -> Box<dyn CostProvider>>;
+
+/// A multi-host experiment: the cluster-level run surface. Owns the
+/// per-host configs and sub-topologies; [`Cluster::run`] drives one
+/// [`Session`] per host epoch-by-epoch with optional cross-host work
+/// stealing at epoch boundaries.
+pub struct Cluster {
+    cfg: ExperimentConfig,
+    host_cfgs: Vec<ExperimentConfig>,
+    host_topos: Vec<Topology>,
+    /// Injected per-host cost providers (tests/benches); `None` builds
+    /// the provider each host's config asks for (analytic or real).
+    cost_factory: Option<CostFactory>,
+}
+
+impl Cluster {
+    /// Partition `topology` into per-host slices and validate that the
+    /// config can run on every one of them. The topology's host count
+    /// drives the partition; a 1-host topology makes the cluster a
+    /// transparent pass-through to a single [`Session`].
+    pub fn new(cfg: &ExperimentConfig, topology: Topology) -> Result<Cluster> {
+        if topology.is_host_slice() {
+            bail!("topology is already a per-host slice; build the cluster from the parent");
+        }
+        if topology.n_accel() != cfg.n_accel {
+            bail!(
+                "topology has {} accelerators but the config says n_accel = {}",
+                topology.n_accel(),
+                cfg.n_accel
+            );
+        }
+        let n_hosts = topology.n_hosts();
+        // A host whose shards are all empty would still report one
+        // phantom batch (the legacy max(1) division guard), corrupting
+        // the host-report summation. One batch per accelerator keeps
+        // every host's per-epoch consumption >= 1; stealing preserves
+        // this (donations are capped at half a host's queue, so a
+        // workload never drains below one batch).
+        if n_hosts > 1 && cfg.n_batches < cfg.n_accel {
+            bail!(
+                "n_batches ({}) < n_accel ({}): a multi-host run needs at least one \
+                 batch per accelerator so no host slice is empty",
+                cfg.n_batches,
+                cfg.n_accel
+            );
+        }
+        let mut host_cfgs = Vec::with_capacity(n_hosts as usize);
+        let mut host_topos = Vec::with_capacity(n_hosts as usize);
+        for h in 0..n_hosts {
+            let slice = topology.host_slice(h)?;
+            if cfg.strategy.uses_csd() && slice.n_csd() == 0 {
+                bail!(
+                    "strategy {:?} preprocesses on the CSD, but host {h}'s slice of the \
+                     fleet has no CSD device ({} CSDs over {} hosts)",
+                    cfg.strategy.name(),
+                    topology.n_csd(),
+                    n_hosts
+                );
+            }
+            // The per-host view of the experiment: its slice of the
+            // fleet, its own (whole) per-host worker budget, one host.
+            let mut host_cfg = cfg.clone();
+            host_cfg.n_hosts = 1;
+            host_cfg.n_accel = slice.n_accel();
+            host_cfg.n_csd = slice.n_csd();
+            host_cfgs.push(host_cfg);
+            host_topos.push(slice);
+        }
+        Ok(Cluster {
+            cfg: cfg.clone(),
+            host_cfgs,
+            host_topos,
+            cost_factory: None,
+        })
+    }
+
+    /// The cluster the config itself describes (`n_hosts`, `n_accel`,
+    /// `n_csd`, `csd_assign`, `steal`) — the CLI's top-level entry.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Cluster> {
+        Cluster::new(cfg, Topology::from_config(cfg)?)
+    }
+
+    /// Inject per-host cost providers (host index → provider) instead
+    /// of building them from the config — how tests and benches run a
+    /// cluster over `FixedCosts`, including deliberately *imbalanced*
+    /// fleets (a slow host) to exercise stealing.
+    pub fn with_cost_factory(
+        mut self,
+        f: impl Fn(u32) -> Box<dyn CostProvider> + 'static,
+    ) -> Self {
+        self.cost_factory = Some(Box::new(f));
+        self
+    }
+
+    pub fn n_hosts(&self) -> u32 {
+        self.host_topos.len() as u32
+    }
+
+    /// The per-host sub-topologies this cluster drives.
+    pub fn host_topologies(&self) -> &[Topology] {
+        &self.host_topos
+    }
+
+    /// Drive every host through all epochs, stealing at epoch
+    /// boundaries when `steal = epoch`, and aggregate the per-host
+    /// results into one [`RunResult`] with per-host attribution.
+    pub fn run(&self) -> Result<RunResult> {
+        let n_hosts = self.host_cfgs.len();
+        let mut sessions: Vec<Session<'_>> = self
+            .host_cfgs
+            .iter()
+            .zip(&self.host_topos)
+            .enumerate()
+            .map(|(h, (c, t))| match &self.cost_factory {
+                Some(f) => Session::with_owned_costs(c, t.clone(), f(h as u32)),
+                None => Session::new(c, t.clone()),
+            })
+            .collect::<Result<_>>()?;
+        let mut steals_in = vec![0u64; n_hosts];
+        let mut steals_out = vec![0u64; n_hosts];
+        for epoch in 0..self.cfg.epochs {
+            let mut outcomes = Vec::with_capacity(n_hosts);
+            for s in sessions.iter_mut() {
+                outcomes.push(s.run_epoch()?);
+            }
+            let last_epoch = epoch + 1 == self.cfg.epochs;
+            if self.cfg.steal == StealMode::Epoch && !last_epoch && n_hosts > 1 {
+                rebalance(
+                    &mut sessions,
+                    &outcomes,
+                    &mut steals_in,
+                    &mut steals_out,
+                )?;
+            }
+        }
+        let mut host_results = Vec::with_capacity(n_hosts);
+        for s in sessions {
+            host_results.push(s.finish()?);
+        }
+        Ok(self.aggregate(host_results, steals_in, steals_out))
+    }
+
+    /// Fold per-host results into the cluster-wide result. For one
+    /// host this is a pass-through (report/trace/losses bit-identical
+    /// to the session's own — golden parity); for many, summable
+    /// fields sum, makespans max, and derived per-batch rates are
+    /// recomputed from the cluster totals.
+    fn aggregate(
+        &self,
+        host_results: Vec<RunResult>,
+        steals_in: Vec<u64>,
+        steals_out: Vec<u64>,
+    ) -> RunResult {
+        let mut host_reports = Vec::with_capacity(host_results.len());
+        for (h, r) in host_results.iter().enumerate() {
+            host_reports.push(HostReport {
+                host: h as u32,
+                report: r.report.clone(),
+                steals_in: steals_in[h],
+                steals_out: steals_out[h],
+                csd_devices: r.csd_devices.clone(),
+            });
+        }
+        let mut results = host_results;
+        if results.len() == 1 {
+            let mut only = results.pop().expect("one host result");
+            only.host_reports = host_reports;
+            return only;
+        }
+
+        let makespan = results
+            .iter()
+            .map(|r| r.report.makespan)
+            .fold(0.0, f64::max);
+        let n_batches: u64 = results.iter().map(|r| r.report.n_batches as u64).sum();
+        let n = n_batches.max(1);
+        // Host-busy total reconstructed from each host's per-batch rate
+        // (the inverse of how the per-host report derived it).
+        let host_busy: f64 = results
+            .iter()
+            .map(|r| r.report.cpu_dram_time_per_batch * r.report.n_batches as f64)
+            .sum();
+        let energy = EnergyReport {
+            joules_per_batch: results
+                .iter()
+                .map(|r| r.report.energy.total_joules)
+                .sum::<f64>()
+                / n as f64,
+            total_joules: results.iter().map(|r| r.report.energy.total_joules).sum(),
+            cpu_joules: results.iter().map(|r| r.report.energy.cpu_joules).sum(),
+            csd_joules: results.iter().map(|r| r.report.energy.csd_joules).sum(),
+        };
+        let report = RunReport {
+            makespan,
+            n_batches: n_batches as u32,
+            learn_time_per_batch: makespan / n as f64,
+            t_io: results.iter().map(|r| r.report.t_io).sum(),
+            t_cpu: results.iter().map(|r| r.report.t_cpu).sum(),
+            t_csd: results.iter().map(|r| r.report.t_csd).sum(),
+            t_gpu: results.iter().map(|r| r.report.t_gpu).sum(),
+            t_gds: results.iter().map(|r| r.report.t_gds).sum(),
+            cpu_dram_time_per_batch: host_busy / n as f64,
+            batches_from_csd: results
+                .iter()
+                .map(|r| r.report.batches_from_csd)
+                .sum(),
+            wasted_batches: results.iter().map(|r| r.report.wasted_batches).sum(),
+            energy,
+        };
+        // Merged timeline: spans concatenate host-major with
+        // accelerator indices remapped to global ranks (host-local CSD
+        // and worker devices stay class-level, as the reports are).
+        let mut trace = if self.cfg.record_trace {
+            Trace::new()
+        } else {
+            Trace::stats_only()
+        };
+        let mut losses = Vec::new();
+        let mut csd_devices = Vec::new();
+        for (h, r) in results.iter().enumerate() {
+            let base = self.host_topos[h].accel_base() as u16;
+            trace.merge_from(&r.trace, move |d| match d {
+                Device::Accel(i) => Device::Accel(base + i),
+                other => other,
+            });
+            losses.extend_from_slice(&r.losses);
+            csd_devices.extend(r.csd_devices.iter().cloned());
+        }
+        RunResult {
+            report,
+            trace,
+            losses,
+            csd_devices,
+            host_reports,
+        }
+    }
+}
+
+/// One epoch-boundary rebalancing pass: estimate each host's pace from
+/// the epoch it just ran, predict next-epoch finish times, and move
+/// batches from the slowest predicted host to the fastest until the
+/// prediction levels out (at most `hosts − 1` moves, each capped at
+/// half the donor's queue so no host is drained dry). Deterministic:
+/// pure arithmetic on the outcomes, ties broken by lowest host index.
+fn rebalance(
+    sessions: &mut [Session<'_>],
+    outcomes: &[crate::coordinator::EpochOutcome],
+    steals_in: &mut [u64],
+    steals_out: &mut [u64],
+) -> Result<()> {
+    let n_hosts = sessions.len();
+    // Seconds per batch each host demonstrated this epoch.
+    let pace: Vec<f64> = outcomes
+        .iter()
+        .map(|o| {
+            if o.batches > 0 {
+                o.epoch_span / o.batches as f64
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut load: Vec<u64> = sessions.iter().map(|s| s.workload()).collect();
+    for _ in 0..n_hosts.saturating_sub(1) {
+        let finish = |h: usize| pace[h] * load[h] as f64;
+        let donor = (0..n_hosts)
+            .max_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(y.cmp(&x)))
+            .expect("cluster has hosts");
+        let recipient = (0..n_hosts)
+            .min_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(x.cmp(&y)))
+            .expect("cluster has hosts");
+        if donor == recipient {
+            break;
+        }
+        let denom = pace[donor] + pace[recipient];
+        if denom <= 0.0 {
+            break;
+        }
+        // Moving k batches changes the gap by k·(p_d + p_r); close it.
+        let gap = finish(donor) - finish(recipient);
+        let k = ((gap / denom).floor() as u64).min(load[donor] / 2);
+        if k == 0 {
+            break;
+        }
+        let moved: Vec<BatchId> = sessions[donor].donate_tail(k as u32);
+        if moved.is_empty() {
+            break;
+        }
+        sessions[recipient].absorb(&moved)?;
+        steals_out[donor] += moved.len() as u64;
+        steals_in[recipient] += moved.len() as u64;
+        load[donor] -= moved.len() as u64;
+        load[recipient] += moved.len() as u64;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Strategy;
+
+    fn cfg(n_hosts: u32, n_accel: u32, n_csd: u32) -> ExperimentConfig {
+        ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            .n_hosts(n_hosts)
+            .n_accel(n_accel)
+            .n_csd(n_csd)
+            .n_batches(40)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn steal_mode_parse_roundtrip() {
+        for m in [StealMode::Off, StealMode::Epoch] {
+            assert_eq!(StealMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(StealMode::parse("EPOCH"), Some(StealMode::Epoch));
+        assert_eq!(StealMode::parse("none"), Some(StealMode::Off));
+        assert_eq!(StealMode::parse("x"), None);
+    }
+
+    #[test]
+    fn cluster_partitions_per_host_views() {
+        let c = cfg(2, 4, 2);
+        let cluster = Cluster::from_config(&c).unwrap();
+        assert_eq!(cluster.n_hosts(), 2);
+        let topos = cluster.host_topologies();
+        assert_eq!(topos[0].n_accel(), 2);
+        assert_eq!(topos[1].accel_base(), 2);
+        assert_eq!(topos[1].world_accel(), 4);
+        assert_eq!(cluster.host_cfgs[0].n_accel, 2);
+        assert_eq!(cluster.host_cfgs[0].n_hosts, 1);
+        assert_eq!(cluster.host_cfgs[1].n_csd, 1);
+    }
+
+    #[test]
+    fn cluster_rejects_unservable_shapes() {
+        // A slice topology cannot seed a cluster.
+        let c = cfg(2, 4, 2);
+        let slice = Topology::from_config(&c).unwrap().host_slice(0).unwrap();
+        assert!(Cluster::new(&c, slice).is_err());
+        // Accel-count mismatch between config and topology.
+        let other = Topology::builder().hosts(2).accels(6).csds(2).build().unwrap();
+        assert!(Cluster::new(&c, other).is_err());
+        // A CSD strategy over a partition that leaves host 1 CSD-less.
+        let topo = Topology::builder().hosts(2).accels(4).csds(1).build().unwrap();
+        assert!(Cluster::new(&c, topo).is_err());
+    }
+
+    #[test]
+    fn one_host_cluster_runs() {
+        let c = cfg(1, 2, 1);
+        let r = Cluster::from_config(&c).unwrap().run().unwrap();
+        assert_eq!(r.report.n_batches, 40);
+        assert_eq!(r.host_reports.len(), 1);
+        assert_eq!(r.host_reports[0].batches(), 40);
+        assert_eq!(r.host_reports[0].steals_in, 0);
+    }
+}

@@ -8,12 +8,14 @@
 //! model = wrn
 //! pipeline = imagenet1
 //! strategy = wrr        # cpu | csd | mte | wrr | adaptive
-//! num_workers = 16
+//! num_workers = 16      # per-host DataLoader worker budget
 //! n_batches = 500
 //! epochs = 1
+//! n_hosts = 1           # cluster hosts (> 1 runs through cluster::Cluster)
 //! n_accel = 1
 //! n_csd = 1             # CSD fleet size (0 valid for cpu strategy)
 //! csd_assign = block    # block | stripe shard→CSD assignment
+//! steal = off           # off | epoch cross-host work stealing
 //! loader = torchvision  # torchvision | dali_cpu | dali_gpu
 //! seed = 0
 //! trace_mode = full     # full | stats_only (streaming stats, O(1) mem)
@@ -35,6 +37,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use super::{ExperimentBuilder, ExperimentConfig, Loader};
+use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
 use crate::pipeline::PipelineKind;
 use crate::topology::CsdAssign;
@@ -86,12 +89,18 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
                 b.loader(l)
             }
             "num_workers" => b.num_workers(v.parse().context("num_workers")?),
+            "n_hosts" => b.n_hosts(v.parse().context("n_hosts")?),
             "n_accel" => b.n_accel(v.parse().context("n_accel")?),
             "n_csd" => b.n_csd(v.parse().context("n_csd")?),
             "csd_assign" => {
                 let a = CsdAssign::parse(v)
                     .with_context(|| format!("bad csd_assign {v:?} (expected block | stripe)"))?;
                 b.csd_assign(a)
+            }
+            "steal" => {
+                let s = StealMode::parse(v)
+                    .with_context(|| format!("bad steal {v:?} (expected off | epoch)"))?;
+                b.steal(s)
             }
             "n_batches" => b.n_batches(v.parse().context("n_batches")?),
             "epochs" => b.epochs(v.parse().context("epochs")?),
@@ -233,6 +242,18 @@ mod tests {
         assert!(load("n_csd = 0\n", &[]).is_err());
         let cfg = load("n_csd = 0\nstrategy = cpu\n", &[]).unwrap();
         assert_eq!(cfg.n_csd, 0);
+    }
+
+    #[test]
+    fn cluster_keys_parse() {
+        let cfg = load("n_hosts = 2\nn_accel = 4\nn_csd = 2\nsteal = epoch\n", &[]).unwrap();
+        assert_eq!(cfg.n_hosts, 2);
+        assert_eq!(cfg.steal, StealMode::Epoch);
+        assert!(load("steal = sometimes\n", &[]).is_err());
+        assert_eq!(load("steal = off\n", &[]).unwrap().steal, StealMode::Off);
+        // shape validation flows through the builder
+        assert!(load("n_hosts = 2\n", &[]).is_err());
+        assert!(load("n_hosts = 0\n", &[]).is_err());
     }
 
     #[test]

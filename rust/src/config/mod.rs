@@ -12,6 +12,7 @@ pub use models::{fig1_models, table_models, ModelProfile};
 
 use anyhow::{bail, Result};
 
+use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
 use crate::pipeline::{OpCosts, PipelineKind};
 use crate::topology::CsdAssign;
@@ -206,7 +207,13 @@ pub struct ExperimentConfig {
     /// Extra DataLoader worker processes (0 = main-process loading,
     /// the paper's `num_workers`).
     pub num_workers: u32,
-    /// Accelerators (1 = single GPU; 2 reproduces Table VI rows 6–7).
+    /// Hosts in the cluster (1 = the paper's single node). With more,
+    /// [`crate::cluster::Cluster`] partitions the fleet into balanced
+    /// per-host blocks and drives one session per host. `num_workers`
+    /// is a **per-host** budget — every host brings its own CPUs.
+    pub n_hosts: u32,
+    /// Accelerators across the whole cluster (1 = single GPU; 2
+    /// reproduces Table VI rows 6–7).
     pub n_accel: u32,
     /// CSD devices in the fleet (1 = the paper's testbed; 0 = no CSD —
     /// valid only for strategies that never touch it). Feeds the
@@ -214,6 +221,11 @@ pub struct ExperimentConfig {
     pub n_csd: u32,
     /// Shard→CSD assignment mode (`csd_assign = block|stripe`).
     pub csd_assign: CsdAssign,
+    /// Cross-host work stealing (`steal = off|epoch`): whether a
+    /// multi-host cluster rebalances unstarted batch ranges from the
+    /// slowest host between epochs. `off` (default) keeps every host on
+    /// its static shard — bit-identical to independent sessions.
+    pub steal: StealMode,
     /// Batches per epoch (dataset_size / batch_size).
     pub n_batches: u32,
     /// Training epochs to simulate.
@@ -261,9 +273,11 @@ pub struct ExperimentBuilder {
     pipeline: PipelineKind,
     strategy: Strategy,
     num_workers: u32,
+    n_hosts: u32,
     n_accel: u32,
     n_csd: u32,
     csd_assign: CsdAssign,
+    steal: StealMode,
     n_batches: u32,
     epochs: u32,
     loader: Loader,
@@ -281,9 +295,11 @@ impl Default for ExperimentBuilder {
             pipeline: PipelineKind::ImageNet1,
             strategy: Strategy::Wrr,
             num_workers: 0,
+            n_hosts: 1,
             n_accel: 1,
             n_csd: 1,
             csd_assign: CsdAssign::Block,
+            steal: StealMode::Off,
             n_batches: 500,
             epochs: 1,
             loader: Loader::Torchvision,
@@ -324,8 +340,18 @@ impl ExperimentBuilder {
         self
     }
 
+    pub fn n_hosts(mut self, n: u32) -> Self {
+        self.n_hosts = n;
+        self
+    }
+
     pub fn n_accel(mut self, n: u32) -> Self {
         self.n_accel = n;
+        self
+    }
+
+    pub fn steal(mut self, s: StealMode) -> Self {
+        self.steal = s;
         self
     }
 
@@ -383,6 +409,29 @@ impl ExperimentBuilder {
         if self.n_accel == 0 {
             bail!("n_accel must be >= 1");
         }
+        if self.n_hosts == 0 {
+            bail!("n_hosts must be >= 1");
+        }
+        // Cluster shape: every host must own at least one accelerator
+        // (the balanced block partition guarantees it iff N >= H), and
+        // a CSD-using strategy needs every host to own a CSD — a host
+        // whose slice has none would have no tail prong to run.
+        if self.n_accel < self.n_hosts {
+            bail!(
+                "n_accel ({}) must be >= n_hosts ({}): every host needs an accelerator",
+                self.n_accel,
+                self.n_hosts
+            );
+        }
+        if self.strategy.uses_csd() && self.n_hosts > 1 && self.n_csd < self.n_hosts {
+            bail!(
+                "strategy {:?} preprocesses on the CSD, but n_csd ({}) < n_hosts ({}): \
+                 every host's slice needs at least one CSD device",
+                self.strategy.name(),
+                self.n_csd,
+                self.n_hosts
+            );
+        }
         if self.n_batches == 0 {
             bail!("n_batches must be >= 1");
         }
@@ -422,9 +471,11 @@ impl ExperimentBuilder {
             pipeline: self.pipeline,
             strategy: self.strategy,
             num_workers: self.num_workers,
+            n_hosts: self.n_hosts,
             n_accel: self.n_accel,
             n_csd: self.n_csd,
             csd_assign: self.csd_assign,
+            steal: self.steal,
             n_batches: self.n_batches,
             epochs: self.epochs,
             loader: self.loader,
@@ -447,10 +498,42 @@ mod tests {
     fn builder_defaults_valid() {
         let cfg = ExperimentConfig::builder().build().unwrap();
         assert_eq!(cfg.model, "wrn");
+        assert_eq!(cfg.n_hosts, 1);
         assert_eq!(cfg.n_accel, 1);
         assert_eq!(cfg.n_csd, 1);
         assert_eq!(cfg.csd_assign, CsdAssign::Block);
+        assert_eq!(cfg.steal, StealMode::Off);
         assert!(cfg.record_trace);
+    }
+
+    #[test]
+    fn builder_cluster_shape_validation() {
+        // 2 hosts need >= 2 accels and (for CSD strategies) >= 2 CSDs.
+        assert!(ExperimentConfig::builder().n_hosts(0).build().is_err());
+        assert!(ExperimentConfig::builder().n_hosts(2).build().is_err());
+        assert!(ExperimentConfig::builder()
+            .n_hosts(2)
+            .n_accel(4)
+            .n_csd(1)
+            .build()
+            .is_err());
+        let cfg = ExperimentConfig::builder()
+            .n_hosts(2)
+            .n_accel(4)
+            .n_csd(2)
+            .steal(StealMode::Epoch)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.n_hosts, 2);
+        assert_eq!(cfg.steal, StealMode::Epoch);
+        // The classical path carries no per-host CSD requirement.
+        assert!(ExperimentConfig::builder()
+            .strategy(Strategy::CpuOnly)
+            .n_hosts(2)
+            .n_accel(2)
+            .n_csd(0)
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -65,6 +65,16 @@ pub trait CostProvider {
     fn losses(&self) -> &[f32] {
         &[]
     }
+
+    /// Move the loss curve out of the provider — called exactly once,
+    /// by the engine at `finish`, so a long real-mode run hands its
+    /// losses to the `RunResult` without a full-vector clone. The
+    /// default (empty/analytic providers) materializes [`losses`]
+    /// (`CostProvider::losses`), which is free when it is empty; the
+    /// PJRT session overrides it with a true move.
+    fn take_losses(&mut self) -> Vec<f32> {
+        self.losses().to_vec()
+    }
 }
 
 /// Where the engine's cost provider lives.

@@ -44,7 +44,7 @@ use crate::coordinator::cost::{CostProvider, CostSource, HostBatchCost};
 use crate::coordinator::policies::SchedPolicy;
 use crate::coordinator::{CsdDeviceReport, Strategy};
 use crate::csd::{CsdEngine, CsdProduct};
-use crate::dataset::{BatchId, DatasetSpec, HeadTailCursor, ShardView};
+use crate::dataset::{BatchId, DatasetSpec, HeadTailCursor, Shard, ShardView};
 use crate::energy::compute_energy;
 use crate::host::{HostEngine, HostReady};
 use crate::metrics::RunReport;
@@ -89,10 +89,15 @@ pub struct Engine<'a> {
     /// routes through the topology's shard→CSD assignment map.
     csds: Vec<CsdEngine>,
     accels: Vec<AccelEngine>,
-    /// Arithmetic shard views (O(1) memory each — the materialized
-    /// per-rank id vectors are gone; `dataset::shard_batches` remains
-    /// as the test oracle).
-    shards: Vec<ShardView>,
+    /// Per-accelerator workloads: arithmetic shard views (O(1) memory
+    /// each — the materialized per-rank id vectors are gone;
+    /// `dataset::shard_batches` remains as the test oracle) plus the
+    /// cross-host steal deltas (`donate_tail`/`absorb`; empty unless a
+    /// cluster driver rebalances between epochs). Views are built on
+    /// **global** ranks (`topology.global_rank`, striding
+    /// `topology.world_accel`), so per-host shards of one cluster are
+    /// globally disjoint and complete.
+    shards: Vec<Shard>,
     /// Unfinished accelerators keyed on `(free_at, index)`: `peek` is
     /// the old linear `min_by(total_cmp)` scan, bit-exactly, at
     /// O(log n) per update instead of O(n) per event-loop iteration.
@@ -157,6 +162,13 @@ impl<'a> Engine<'a> {
         costs: CostSource<'a>,
         topology: Topology,
     ) -> Result<Self> {
+        if topology.n_hosts() != 1 {
+            bail!(
+                "multi-host topology (n_hosts = {}): a Session drives one host — \
+                 partition it through cluster::Cluster instead",
+                topology.n_hosts()
+            );
+        }
         if topology.n_accel() != cfg.n_accel {
             bail!(
                 "topology has {} accelerators but the config says n_accel = {}",
@@ -172,8 +184,17 @@ impl<'a> Engine<'a> {
             );
         }
         let n_accel = cfg.n_accel as usize;
-        let shards: Vec<ShardView> = (0..n_accel as u32)
-            .map(|r| ShardView::new(spec.n_batches, r, cfg.n_accel))
+        // Shards stride the *cluster-wide* accelerator count from this
+        // host's global rank base; for a top-level topology that is
+        // (rank r, world n_accel) — the pre-cluster arithmetic exactly.
+        let shards: Vec<Shard> = (0..n_accel as u32)
+            .map(|r| {
+                Shard::new(ShardView::new(
+                    spec.n_batches,
+                    topology.global_rank(r),
+                    topology.world_accel(),
+                ))
+            })
             .collect();
         // DDP: `num_workers` is the host-wide worker budget, split across
         // per-accelerator DataLoaders (paper: 16 threads = 8 per GPU).
@@ -346,6 +367,72 @@ impl<'a> Engine<'a> {
     /// CSD-sourced batches consumed by accelerator `a` this epoch.
     pub fn from_csd(&self, a: usize) -> u32 {
         self.from_csd[a]
+    }
+
+    /// Batches consumed across all epochs so far.
+    pub fn total_consumed(&self) -> u64 {
+        self.total_consumed
+    }
+
+    /// Batches assigned to the *next* epoch (sum of shard lengths) —
+    /// the pool a cluster driver may rebalance between epochs.
+    pub fn epoch_workload(&self) -> u64 {
+        self.shards.iter().map(|s| s.len() as u64).sum()
+    }
+
+    /// Remove up to `n` batches from the next epoch's workload, always
+    /// from the currently largest shard (ties → lowest index, so the
+    /// donation is deterministic and keeps the host internally
+    /// balanced). Returns the exact ids removed. O((n_accel + n) log
+    /// n_accel) — a local heap replays "pop from the current argmax"
+    /// without rescanning every shard per batch, which matters when a
+    /// rebalance moves half a large host's queue. **Epoch-boundary
+    /// only** — `Session` gates it; calling mid-epoch would desync the
+    /// live cursors.
+    pub(crate) fn donate_tail(&mut self, n: u32) -> Vec<BatchId> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        // Max-heap on (len, Reverse(index)): the top is the largest
+        // shard, lowest index on ties — the same element a full rescan
+        // argmax would pick at every step.
+        let mut by_len: BinaryHeap<(u32, Reverse<usize>)> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(a, s)| (s.len(), Reverse(a)))
+            .collect();
+        let mut out = Vec::new();
+        for _ in 0..n {
+            let Some((len, Reverse(a))) = by_len.pop() else { break };
+            if len == 0 {
+                break;
+            }
+            out.push(self.shards[a].pop_tail().expect("non-empty shard has a tail"));
+            by_len.push((len - 1, Reverse(a)));
+        }
+        out
+    }
+
+    /// Add stolen batches to the next epoch's workload, each onto the
+    /// currently smallest shard (ties → lowest index). Epoch-boundary
+    /// only and O((n_accel + n) log n_accel), like
+    /// [`Engine::donate_tail`].
+    pub(crate) fn absorb(&mut self, batches: &[BatchId]) {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        // Min-heap via Reverse on (len, index): the top is the smallest
+        // shard, lowest index on ties.
+        let mut by_len: BinaryHeap<Reverse<(u32, usize)>> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(a, s)| Reverse((s.len(), a)))
+            .collect();
+        for &id in batches {
+            let Reverse((len, a)) = by_len.pop().expect("engine has at least one shard");
+            self.shards[a].push(id);
+            by_len.push(Reverse((len + 1, a)));
+        }
     }
 
     /// Unclaimed batches left on shard `a`'s cursor.
@@ -611,16 +698,14 @@ impl<'a> Engine<'a> {
         std::mem::swap(&mut self.events, out);
     }
 
-    /// Real-mode loss curve observed so far (empty for analytic cost
-    /// providers) — how `Session` surfaces losses without knowing the
-    /// concrete provider type.
-    pub(crate) fn losses(&self) -> &[f32] {
-        self.costs.provider().losses()
-    }
-
-    pub(crate) fn finish(mut self) -> (RunReport, Trace) {
+    /// Consume the engine into its run artifacts. The real-mode loss
+    /// curve is **moved** out of the cost provider
+    /// ([`CostProvider::take_losses`]) — not cloned — which is safe
+    /// exactly because finish happens once, at end of run.
+    pub(crate) fn finish(mut self) -> (RunReport, Trace, Vec<f32>) {
+        let losses = self.costs.provider_mut().take_losses();
         let report = self.build_report();
-        (report, self.trace)
+        (report, self.trace, losses)
     }
 
     /// Synthesize the run report from the streaming [`TraceStats`] —
@@ -698,7 +783,8 @@ pub fn run(
     for _epoch in 0..cfg.epochs {
         run_one_epoch(&mut eng, policy, &mut ready_buf)?;
     }
-    Ok(eng.finish())
+    let (report, trace, _losses) = eng.finish();
+    Ok((report, trace))
 }
 
 /// One full epoch of the per-epoch protocol — the shared loop body of

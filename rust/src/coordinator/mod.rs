@@ -38,7 +38,7 @@ pub mod policies;
 pub mod schedule;
 pub mod session;
 
-pub use session::Session;
+pub use session::{EpochOutcome, Session};
 
 use anyhow::Result;
 
@@ -116,7 +116,7 @@ pub struct CsdDeviceReport {
     pub busy_s: f64,
 }
 
-/// Outcome of a [`Session`] run.
+/// Outcome of a [`Session`] or [`crate::cluster::Cluster`] run.
 #[derive(Debug)]
 pub struct RunResult {
     pub report: RunReport,
@@ -124,8 +124,15 @@ pub struct RunResult {
     /// Real-mode loss curve (empty in analytic mode).
     pub losses: Vec<f32>,
     /// Per-CSD-device attribution, indexed by topology CSD id (empty
-    /// for a CSD-less topology).
+    /// for a CSD-less topology). For a cluster run the index space is
+    /// cluster-global (host-major, matching the balanced block CSD
+    /// partition).
     pub csd_devices: Vec<CsdDeviceReport>,
+    /// Per-host attribution of a [`crate::cluster::Cluster`] run —
+    /// makespan, batches, steals in/out, per-host CSD rollups — summing
+    /// (maxing, for makespan) into [`RunResult::report`]. Empty for a
+    /// bare single-host `Session` run, where the report *is* the host.
+    pub host_reports: Vec<crate::cluster::HostReport>,
 }
 
 /// Run one experiment end-to-end (all epochs) on the topology the

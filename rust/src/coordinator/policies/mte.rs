@@ -13,6 +13,7 @@ use crate::accel::BatchSource;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::policies::SchedPolicy;
 use crate::sim::Secs;
+use crate::util::idxheap::IdxMinHeap;
 
 /// Calibration sample size (paper: "average time … to train 10 batches").
 pub(crate) const CAL_BATCHES: u32 = 10;
@@ -32,6 +33,15 @@ pub struct MtePolicy {
     // ---- per-epoch state (rebuilt in `on_epoch_start`) ----
     /// Per-shard CPU allocation (None until the ratio is known).
     n_cpu: Vec<Option<u32>>,
+    /// Membership set of the shards whose `n_cpu` is still `None`,
+    /// kept in an index heap so the per-scheduling-step "any shard
+    /// unresolved?" probe is an O(1) `is_empty` with O(log n) updates
+    /// — the pre-heap code scanned the whole `n_cpu` vector once per
+    /// batch, an O(n_accel) tax the fleet-scale sweeps pay at every
+    /// iteration. Invariant: member ⇔ `n_cpu[a].is_none()`, so the
+    /// probe is bit-exact vs. the scan (golden parity + the
+    /// large-fleet legacy parity leg assert it).
+    unresolved: IdxMinHeap,
     /// CSD production bookkeeping: fills dir 0's allocation, then dir
     /// 1, … (§IV-E: sequential directories to minimize switching).
     csd_dir: usize,
@@ -70,7 +80,7 @@ impl MtePolicy {
     /// per-device profiles are a later step.
     fn resolve_and_fill(&mut self, eng: &mut Engine<'_>) {
         let n_accel = eng.n_accel();
-        if self.n_cpu.iter().any(|x| x.is_none()) {
+        if !self.unresolved.is_empty() {
             if let (Some(cpu_end), true) = (self.cpu_cal_end, self.csd_done[0] >= self.cal) {
                 let cal_base = self.cpu_cal_start.unwrap_or(self.epoch_start);
                 let t_cpu = (cpu_end - cal_base) / self.cal as f64;
@@ -94,6 +104,7 @@ impl MtePolicy {
                     // never below what's already consumed/claimed
                     self.n_cpu[a] = Some(split.max(eng.consumed(a) - eng.from_csd(a)));
                 }
+                self.unresolved.clear();
             }
         }
         // Keep the CSDs filling their allocations once they are known.
@@ -129,6 +140,7 @@ impl SchedPolicy for MtePolicy {
     fn on_epoch_start(&mut self, eng: &mut Engine<'_>) -> Result<()> {
         let n_accel = eng.n_accel();
         self.n_cpu = vec![None; n_accel];
+        self.unresolved = IdxMinHeap::new(n_accel);
         if let Some((t_cpu, t_csd)) = self.ratio {
             for a in 0..n_accel {
                 self.n_cpu[a] = Some(mte_split(
@@ -136,6 +148,10 @@ impl SchedPolicy for MtePolicy {
                     t_cpu,
                     t_csd * Self::csd_share_factor(eng, a),
                 ));
+            }
+        } else {
+            for a in 0..n_accel {
+                self.unresolved.upsert(a, a as Secs);
             }
         }
         self.csd_dir = 0;
@@ -186,6 +202,7 @@ impl SchedPolicy for MtePolicy {
             // fall through to the CSD phase.
             if self.n_cpu[a].is_none() {
                 self.n_cpu[a] = Some(eng.consumed(a) - eng.from_csd(a));
+                self.unresolved.remove(a);
             }
         }
         // CSD phase: deterministic drain of this accelerator's dir.

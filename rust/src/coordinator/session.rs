@@ -5,9 +5,13 @@
 //! [`ExperimentConfig`] to an explicit [`Topology`] (which hosts, CSDs,
 //! accelerators and storage channels exist, and who serves whom), owns
 //! the engine + policy for the whole run, and exposes both the one-shot
-//! [`Session::run`] and the step-wise [`Session::run_epoch`] —
-//! the seam future sharded/work-stealing coordinators advance
-//! epoch-by-epoch while interleaving cross-host work.
+//! [`Session::run`] and the step-wise [`Session::run_epoch`] — which
+//! returns an [`EpochOutcome`] (per-epoch virtual makespan, batches
+//! completed, residual unstarted work) so a cluster driver can observe
+//! per-host pace — plus the steal/donate seam
+//! ([`Session::donate_tail`] / [`Session::absorb`]) that
+//! [`crate::cluster::Cluster`] uses to rebalance unstarted batch
+//! ranges between epochs (DESIGN.md §Cluster).
 //!
 //! ```no_run
 //! use ddlp::config::ExperimentConfig;
@@ -32,8 +36,29 @@ use crate::coordinator::cost::{AnalyticCosts, CostProvider, CostSource};
 use crate::coordinator::engine::{self, BatchReady, Engine};
 use crate::coordinator::policies::{self, SchedPolicy};
 use crate::coordinator::RunResult;
-use crate::dataset::DatasetSpec;
+use crate::dataset::{BatchId, DatasetSpec};
+use crate::sim::Secs;
 use crate::topology::Topology;
+
+/// What one [`Session::run_epoch`] step observed — the signal a cluster
+/// driver reads to decide cross-host rebalancing between epochs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochOutcome {
+    /// Epochs completed so far, this one included.
+    pub epochs_run: u32,
+    /// The session's running virtual makespan after this epoch: the
+    /// latest accelerator `free_at` (trailing CSD write-backs of wasted
+    /// production may extend the final report's makespan past it).
+    pub makespan: Secs,
+    /// Virtual seconds this epoch added to the makespan — the per-epoch
+    /// pace signal (`epoch_span / batches` ≈ seconds per batch).
+    pub epoch_span: Secs,
+    /// Batches consumed during this epoch.
+    pub batches: u64,
+    /// Residual unstarted work: batches currently assigned to the
+    /// *next* epoch (0 once all epochs ran) — the donatable pool.
+    pub unstarted: u64,
+}
 
 /// One experiment bound to one device topology: the stable run surface.
 pub struct Session<'a> {
@@ -84,6 +109,19 @@ impl<'a> Session<'a> {
         Self::assemble(cfg, spec, CostSource::Borrowed(costs), topology)
     }
 
+    /// Build a session that owns an injected boxed cost provider, with
+    /// the dataset spec derived from the config — the shape
+    /// [`crate::cluster::Cluster`] cost factories hand providers
+    /// through.
+    pub fn with_owned_costs(
+        cfg: &'a ExperimentConfig,
+        topology: Topology,
+        costs: Box<dyn CostProvider + 'a>,
+    ) -> Result<Session<'a>> {
+        let spec = Self::spec_of(cfg)?;
+        Self::assemble(cfg, &spec, CostSource::Owned(costs), topology)
+    }
+
     fn spec_of(cfg: &ExperimentConfig) -> Result<DatasetSpec> {
         let model = cfg.model_profile()?;
         Ok(DatasetSpec {
@@ -127,17 +165,67 @@ impl<'a> Session<'a> {
 
     /// Advance the session by exactly one epoch (the step-wise surface
     /// for coordinators that interleave other work between epochs).
-    /// Returns the number of epochs completed so far.
-    pub fn run_epoch(&mut self) -> Result<u32> {
+    /// Returns the [`EpochOutcome`] — makespan, batches, residual work
+    /// — the cluster driver's rebalancing signal.
+    pub fn run_epoch(&mut self) -> Result<EpochOutcome> {
         if self.epochs_remaining() == 0 {
             bail!(
                 "session already ran all {} epochs",
                 self.engine.cfg().epochs
             );
         }
+        let span_start = self.engine.max_accel_free();
+        let consumed_before = self.engine.total_consumed();
         engine::run_one_epoch(&mut self.engine, self.policy.as_mut(), &mut self.ready_buf)?;
         self.epochs_run += 1;
-        Ok(self.epochs_run)
+        let makespan = self.engine.max_accel_free();
+        Ok(EpochOutcome {
+            epochs_run: self.epochs_run,
+            makespan,
+            epoch_span: makespan - span_start,
+            batches: self.engine.total_consumed() - consumed_before,
+            unstarted: if self.epochs_remaining() > 0 {
+                self.engine.epoch_workload()
+            } else {
+                0
+            },
+        })
+    }
+
+    /// Next-epoch workload (batches this session will consume if no
+    /// further stealing happens). Equals [`EpochOutcome::unstarted`]
+    /// right after an epoch, and moves with
+    /// [`Session::donate_tail`]/[`Session::absorb`].
+    pub fn workload(&self) -> u64 {
+        self.engine.epoch_workload()
+    }
+
+    /// Donate up to `n` unstarted batches from the next epoch's
+    /// workload — the donor half of a cross-host steal. Returns the
+    /// exact batch ids removed (empty when nothing can be donated, in
+    /// particular when no epochs remain: a batch must never leave the
+    /// cluster's exactly-once ledger). Call only between epochs —
+    /// `run_epoch` is atomic, so every caller is.
+    pub fn donate_tail(&mut self, n: u32) -> Vec<BatchId> {
+        if self.epochs_remaining() == 0 {
+            return Vec::new();
+        }
+        self.engine.donate_tail(n)
+    }
+
+    /// Absorb stolen batches into the next epoch's workload — the
+    /// recipient half of a steal. Fails when no epochs remain (the
+    /// batches would silently vanish from the exactly-once ledger).
+    pub fn absorb(&mut self, batches: &[BatchId]) -> Result<()> {
+        if self.epochs_remaining() == 0 {
+            bail!(
+                "cannot absorb {} batches: session already ran all {} epochs",
+                batches.len(),
+                self.engine.cfg().epochs
+            );
+        }
+        self.engine.absorb(batches);
+        Ok(())
     }
 
     /// Run every remaining epoch and finish.
@@ -157,14 +245,16 @@ impl<'a> Session<'a> {
         if self.epochs_run == 0 {
             bail!("session finished before any epoch ran (call run_epoch()/run() first)");
         }
-        let losses = self.engine.losses().to_vec();
         let csd_devices = self.engine.csd_device_reports();
-        let (report, trace) = self.engine.finish();
+        // The engine moves the loss curve out of its cost provider —
+        // finish happens once, so no clone of the full vector.
+        let (report, trace, losses) = self.engine.finish();
         Ok(RunResult {
             report,
             trace,
             losses,
             csd_devices,
+            host_reports: Vec::new(),
         })
     }
 }
@@ -223,13 +313,49 @@ mod tests {
         let mut s = Session::with_costs(&cfg, Topology::single_node(1), &spec(50), &mut c2)
             .unwrap();
         assert_eq!(s.epochs_remaining(), 3);
-        assert_eq!(s.run_epoch().unwrap(), 1);
-        assert_eq!(s.run_epoch().unwrap(), 2);
-        assert_eq!(s.run_epoch().unwrap(), 3);
+        let o1 = s.run_epoch().unwrap();
+        assert_eq!(o1.epochs_run, 1);
+        assert_eq!(o1.batches, 50);
+        assert_eq!(o1.unstarted, 50, "next epoch's workload is the dataset");
+        assert!(o1.epoch_span > 0.0 && o1.makespan == o1.epoch_span);
+        let o2 = s.run_epoch().unwrap();
+        assert_eq!(o2.epochs_run, 2);
+        assert!(o2.makespan > o1.makespan);
+        let o3 = s.run_epoch().unwrap();
+        assert_eq!(o3.epochs_run, 3);
+        assert_eq!(o3.unstarted, 0, "no epoch left to donate from");
         assert!(s.run_epoch().is_err(), "4th epoch must refuse");
         let stepped = s.finish().unwrap();
         assert_eq!(stepped.report, one_shot.report);
         assert_eq!(stepped.trace.spans, one_shot.trace.spans);
+    }
+
+    #[test]
+    fn donate_absorb_gated_at_run_end() {
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            .n_batches(40)
+            .epochs(2)
+            .build()
+            .unwrap();
+        let mut costs = FixedCosts::toy_fig6();
+        let mut s = Session::with_costs(&cfg, Topology::single_node(1), &spec(40), &mut costs)
+            .unwrap();
+        s.run_epoch().unwrap();
+        assert_eq!(s.workload(), 40);
+        let moved = s.donate_tail(5);
+        assert_eq!(moved.len(), 5);
+        assert_eq!(s.workload(), 35);
+        s.absorb(&moved).unwrap();
+        assert_eq!(s.workload(), 40);
+        s.run_epoch().unwrap();
+        // Run complete: donation yields nothing, absorption refuses —
+        // batches can neither leak out of nor vanish from the ledger.
+        assert!(s.donate_tail(5).is_empty());
+        assert!(s.absorb(&[0]).is_err());
+        let r = s.finish().unwrap();
+        assert_eq!(r.report.n_batches, 80, "all batches still exactly-once");
     }
 
     #[test]

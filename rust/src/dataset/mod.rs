@@ -167,6 +167,82 @@ impl ShardView {
     }
 }
 
+/// One accelerator's per-epoch workload: an arithmetic [`ShardView`]
+/// plus the cluster-rebalance deltas — a **donated** suffix removed
+/// from the view's tail and **absorbed** extra batch ids appended past
+/// it (cross-host work stealing, DESIGN.md §Cluster). With no stealing
+/// (`donated == 0`, no extras) every operation is exactly the view's,
+/// which is what keeps single-host runs bit-identical to the
+/// pre-cluster engine.
+///
+/// Local index space: `[0, base)` maps through the view
+/// (`base = view.len() - donated`), `[base, len)` indexes the absorbed
+/// extras in arrival order. Head/tail cursor semantics carry over
+/// unchanged — the CSD's tail claims reach absorbed batches first,
+/// then the surviving view tail.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    view: ShardView,
+    /// Batches donated away from the view's tail (next-epoch workload
+    /// moved to another host).
+    donated: u32,
+    /// Batch ids absorbed from other hosts.
+    extra: Vec<BatchId>,
+}
+
+impl Shard {
+    pub fn new(view: ShardView) -> Self {
+        Shard {
+            view,
+            donated: 0,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Batches currently assigned to this shard for the next epoch.
+    pub fn len(&self) -> u32 {
+        self.view.len() - self.donated + self.extra.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Surviving view prefix length (`view.len() - donated`).
+    fn base(&self) -> u32 {
+        self.view.len() - self.donated
+    }
+
+    /// Global batch id of shard-local index `local`.
+    pub fn get(&self, local: BatchId) -> BatchId {
+        if local < self.base() {
+            self.view.get(local)
+        } else {
+            self.extra[(local - self.base()) as usize]
+        }
+    }
+
+    /// Remove and return the highest-index batch (absorbed extras
+    /// first, then the view tail) — the donor side of a steal. `None`
+    /// when the shard is empty.
+    pub fn pop_tail(&mut self) -> Option<BatchId> {
+        if let Some(id) = self.extra.pop() {
+            return Some(id);
+        }
+        if self.base() == 0 {
+            return None;
+        }
+        let id = self.view.get(self.base() - 1);
+        self.donated += 1;
+        Some(id)
+    }
+
+    /// Append an absorbed batch id — the recipient side of a steal.
+    pub fn push(&mut self, id: BatchId) {
+        self.extra.push(id);
+    }
+}
+
 /// Generate the raw bytes of sample `idx` (decoded u8 HWC image) with
 /// geometry `hw` — deterministic in `(seed, idx)`.
 pub fn synth_image(seed: u64, idx: u64, hw: usize) -> Vec<u8> {
@@ -291,6 +367,58 @@ mod tests {
             let max = *sizes.iter().max().unwrap();
             assert!(max - min <= 1);
             assert_eq!(sizes.iter().sum::<usize>() as u32, n);
+        });
+    }
+
+    #[test]
+    fn shard_no_steal_matches_view() {
+        let v = ShardView::new(100, 1, 3);
+        let s = Shard::new(v);
+        assert_eq!(s.len(), v.len());
+        for local in 0..v.len() {
+            assert_eq!(s.get(local), v.get(local));
+        }
+    }
+
+    #[test]
+    fn shard_pop_tail_then_push_roundtrip() {
+        let v = ShardView::new(10, 0, 2); // ids 0,2,4,6,8
+        let mut s = Shard::new(v);
+        assert_eq!(s.pop_tail(), Some(8));
+        assert_eq!(s.pop_tail(), Some(6));
+        assert_eq!(s.len(), 3);
+        s.push(99);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.get(3), 99); // extras index past the surviving view
+        assert_eq!(s.get(2), 4);
+        assert_eq!(s.pop_tail(), Some(99), "extras donate first");
+        assert_eq!(s.pop_tail(), Some(4));
+    }
+
+    #[test]
+    fn prop_shard_steal_conserves_ids() {
+        // Random pop/push traffic between two shards never loses or
+        // duplicates a batch id (the engine-level steal invariant).
+        run_prop("shard steal conservation", 100, |g| {
+            let n = g.size(2, 200) as u32;
+            let mut a = Shard::new(ShardView::new(n, 0, 2));
+            let mut b = Shard::new(ShardView::new(n, 1, 2));
+            for _ in 0..g.size(0, 300) {
+                let (from, to) = if g.bool() {
+                    (&mut a, &mut b)
+                } else {
+                    (&mut b, &mut a)
+                };
+                if let Some(id) = from.pop_tail() {
+                    to.push(id);
+                }
+            }
+            let mut all: Vec<BatchId> = (0..a.len())
+                .map(|l| a.get(l))
+                .chain((0..b.len()).map(|l| b.get(l)))
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>());
         });
     }
 

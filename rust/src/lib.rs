@@ -62,9 +62,38 @@
 //! let result = session.finish().unwrap();
 //! println!("per-CSD waste: {:?}", result.csd_devices);
 //! ```
+//!
+//! Many hosts are a [`cluster::Cluster`]: the topology partitions into
+//! balanced per-host slices (each with its block of accelerators and
+//! CSDs), one session per host runs epoch-by-epoch, and `steal = epoch`
+//! rebalances unstarted batches off the slowest host between epochs:
+//!
+//! ```no_run
+//! use ddlp::cluster::{Cluster, StealMode};
+//! use ddlp::config::ExperimentConfig;
+//! use ddlp::coordinator::Strategy;
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .model("wrn")
+//!     .strategy(Strategy::Wrr)
+//!     .n_hosts(2)
+//!     .n_accel(4)
+//!     .n_csd(2)
+//!     .steal(StealMode::Epoch)
+//!     .build()
+//!     .unwrap();
+//! let result = Cluster::from_config(&cfg).unwrap().run().unwrap();
+//! for h in &result.host_reports {
+//!     println!(
+//!         "host {}: {:.3}s, {} batches, stole {} / donated {}",
+//!         h.host, h.makespan(), h.batches(), h.steals_in, h.steals_out
+//!     );
+//! }
+//! ```
 
 pub mod accel;
 pub mod bench;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod csd;

@@ -12,6 +12,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use ddlp::cluster::Cluster;
 use ddlp::config::{file as cfgfile, ExperimentConfig};
 use ddlp::coordinator::{Session, Strategy};
 use ddlp::metrics::{fmt_s, Table};
@@ -78,7 +79,8 @@ fn real_main() -> Result<()> {
                  ddlp sweep [--config FILE] [--set k=v]...\n  \
                  ddlp e2e   [--artifacts DIR] [--set k=v]...\n  \
                  ddlp version\n\nconfig keys: model, pipeline, strategy (cpu|csd|mte|wrr|adaptive), \
-                 num_workers, n_accel, n_csd, csd_assign (block|stripe), n_batches, epochs, \
+                 num_workers, n_hosts, n_accel, n_csd, csd_assign (block|stripe), \
+                 steal (off|epoch), n_batches, epochs, \
                  loader, seed, csd_slowdown, adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()
@@ -91,17 +93,22 @@ fn real_main() -> Result<()> {
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let cfg = load_config(args)?;
-    let result = Session::from_config(&cfg)?.run()?;
+    // The cluster is the top-level entry: a 1-host cluster is a
+    // transparent pass-through to a single Session.
+    let result = Cluster::from_config(&cfg)?.run()?;
     let r = &result.report;
     println!(
-        "model={} pipeline={} strategy={} workers={} accel={} csd={} ({}) batches={}",
+        "model={} pipeline={} strategy={} workers={} hosts={} accel={} csd={} ({}) \
+         steal={} batches={}",
         cfg.model,
         cfg.pipeline,
         cfg.strategy,
         cfg.num_workers,
+        cfg.n_hosts,
         cfg.n_accel,
         cfg.n_csd,
         cfg.csd_assign,
+        cfg.steal,
         r.n_batches
     );
     println!(
@@ -139,6 +146,18 @@ fn cmd_run(args: &[String]) -> Result<()> {
             );
         }
     }
+    if result.host_reports.len() > 1 {
+        for h in &result.host_reports {
+            println!(
+                "host[{}]: makespan {}s  batches {}  stolen in {} / out {}",
+                h.host,
+                fmt_s(h.makespan()),
+                h.batches(),
+                h.steals_in,
+                h.steals_out
+            );
+        }
+    }
     if !result.losses.is_empty() {
         let l = &result.losses;
         println!(
@@ -163,13 +182,17 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     ]);
     let mut cpu_base = None;
     for strat in Strategy::ALL {
-        // A CSD-less fleet can only run the classical path.
-        if strat.uses_csd() && base.n_csd == 0 {
+        // Skip strategies the fleet cannot serve: a CSD-less fleet only
+        // runs the classical path, and a multi-host fleet needs a CSD
+        // on every host slice (n_csd >= n_hosts) for the dual-pronged
+        // strategies. (cfg.strategy is mutated after build(), so the
+        // builder's own shape validation does not re-run here.)
+        if strat.uses_csd() && (base.n_csd == 0 || base.n_csd < base.n_hosts) {
             continue;
         }
         let mut cfg = base.clone();
         cfg.strategy = strat;
-        let r = Session::from_config(&cfg)?.run()?.report;
+        let r = Cluster::from_config(&cfg)?.run()?.report;
         let base_t = *cpu_base.get_or_insert(r.learn_time_per_batch);
         table.row(vec![
             strat.name().to_string(),

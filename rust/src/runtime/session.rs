@@ -247,4 +247,10 @@ impl CostProvider for RealSession {
     fn losses(&self) -> &[f32] {
         &self.losses
     }
+
+    fn take_losses(&mut self) -> Vec<f32> {
+        // True move: the engine calls this once at finish, so the run's
+        // loss curve must not be cloned on its way into the RunResult.
+        std::mem::take(&mut self.losses)
+    }
 }

@@ -30,6 +30,18 @@
 //! single-host/single-CSD layout; a `coordinator::Session` over it is
 //! bit-identical to the legacy `run_schedule` path
 //! (`rust/tests/golden_parity.rs`).
+//!
+//! **Multi-host** (DESIGN.md §Cluster): `n_hosts > 1` describes a
+//! cluster. A multi-host topology is not runnable by a single
+//! `coordinator::Session` — [`crate::cluster::Cluster`] partitions it
+//! into per-host sub-topologies via [`Topology::host_slice`] (balanced
+//! contiguous blocks of accelerators and CSDs per host; shard→CSD
+//! assignment recomputed *within* each host, because a CSD physically
+//! attaches to one host's PCIe fabric) and drives one session per
+//! slice. Each slice carries its global accelerator-rank window
+//! ([`Topology::accel_base`] / [`Topology::world_accel`]) so
+//! DistributedSampler shards stay globally disjoint and complete across
+//! the cluster.
 
 use anyhow::{bail, Result};
 
@@ -87,6 +99,14 @@ pub struct Topology {
     /// Per-CSD injected failure time (fleet health, not a device-model
     /// profile knob: one device dying must not kill its peers).
     csd_fail_at: Vec<Option<Secs>>,
+    /// Global rank of this topology's first accelerator (non-zero only
+    /// for a [`Topology::host_slice`] of a multi-host topology).
+    accel_base: u32,
+    /// Accelerators across the whole cluster (= `n_accel` for a
+    /// top-level topology; the parent's `n_accel` for a host slice).
+    /// DistributedSampler shards stride by this, so per-host shards are
+    /// globally disjoint and complete.
+    world_accel: u32,
 }
 
 impl Topology {
@@ -110,10 +130,14 @@ impl Topology {
             .expect("single-node topology (n_accel must be 1..=u16::MAX)")
     }
 
-    /// The topology an [`ExperimentConfig`] describes (`n_accel`,
-    /// `n_csd`, `csd_assign` keys) — what the CLI and config files run.
+    /// The topology an [`ExperimentConfig`] describes (`n_hosts`,
+    /// `n_accel`, `n_csd`, `csd_assign` keys) — what the CLI and config
+    /// files run. With `n_hosts > 1` the result is a cluster topology:
+    /// runnable through [`crate::cluster::Cluster`], rejected by a bare
+    /// single-host session.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Topology> {
         Topology::builder()
+            .hosts(cfg.n_hosts)
             .accels(cfg.n_accel)
             .csds(cfg.n_csd)
             .assign(cfg.csd_assign)
@@ -156,6 +180,117 @@ impl Topology {
     pub fn csd_fail_at(&self, c: usize) -> Option<Secs> {
         self.csd_fail_at[c]
     }
+
+    /// Global rank of this topology's first accelerator (0 unless this
+    /// is a [`Topology::host_slice`]).
+    pub fn accel_base(&self) -> u32 {
+        self.accel_base
+    }
+
+    /// Accelerators across the whole cluster this topology belongs to
+    /// (= [`Topology::n_accel`] for a top-level topology).
+    pub fn world_accel(&self) -> u32 {
+        self.world_accel
+    }
+
+    /// Global accelerator rank of local accelerator `local` — what the
+    /// engine shards the dataset by, so per-host shards never collide.
+    pub fn global_rank(&self, local: u32) -> u32 {
+        self.accel_base + local
+    }
+
+    /// Is this a per-host slice produced by [`Topology::host_slice`]?
+    pub fn is_host_slice(&self) -> bool {
+        self.world_accel != self.n_accel
+    }
+
+    /// Global accelerator ranks owned by host `h` under the balanced
+    /// block partition (`a → a·H/N`, the same arithmetic as
+    /// [`CsdAssign::Block`]): the contiguous range
+    /// `[⌈h·N/H⌉, ⌈(h+1)·N/H⌉)` — sizes differ by at most one.
+    pub fn host_accel_range(&self, h: u32) -> std::ops::Range<u32> {
+        balanced_range(self.n_accel, self.n_hosts, h)
+    }
+
+    /// Global CSD device indices owned by host `h` (balanced blocks,
+    /// same arithmetic as the accelerator partition).
+    pub fn host_csd_range(&self, h: u32) -> std::ops::Range<u32> {
+        balanced_range(self.n_csd, self.n_hosts, h)
+    }
+
+    /// The single-host sub-topology of host `h`: its block of
+    /// accelerators and CSDs, the shard→CSD assignment recomputed over
+    /// that block (a CSD serves directories on its own host), the
+    /// host's `fail_csd` injections remapped to local device indices,
+    /// and the global rank window (`accel_base`/`world_accel`) set so
+    /// the host's DistributedSampler shards stay globally disjoint.
+    ///
+    /// `host_slice(0)` of a 1-host topology is the identity (modulo the
+    /// now-explicit rank window) — what keeps a 1-host
+    /// [`crate::cluster::Cluster`] bit-identical to a plain session.
+    pub fn host_slice(&self, h: u32) -> Result<Topology> {
+        if self.is_host_slice() {
+            bail!("topology is already a host slice (accel ranks {}..)", self.accel_base);
+        }
+        if h >= self.n_hosts {
+            bail!("host {h} out of range: topology has {} hosts", self.n_hosts);
+        }
+        let ar = self.host_accel_range(h);
+        if ar.is_empty() {
+            bail!(
+                "host {h} has no accelerators: n_accel = {} cannot staff {} hosts",
+                self.n_accel,
+                self.n_hosts
+            );
+        }
+        let cr = self.host_csd_range(h);
+        let n_accel = ar.end - ar.start;
+        let n_csd = cr.end - cr.start;
+        let (accel_csd, csd_dirs) = assign_maps(n_accel, n_csd, self.assign);
+        let csd_fail_at: Vec<Option<Secs>> = cr
+            .clone()
+            .map(|c| self.csd_fail_at[c as usize])
+            .collect();
+        Ok(Topology {
+            n_hosts: 1,
+            n_accel,
+            n_csd,
+            assign: self.assign,
+            accel_csd,
+            csd_dirs,
+            csd_fail_at,
+            accel_base: ar.start,
+            world_accel: self.n_accel,
+        })
+    }
+}
+
+/// The balanced block partition `x → x·parts/n` inverted: the
+/// contiguous range of `0..n` owned by part `h` (sizes differ ≤ 1).
+fn balanced_range(n: u32, parts: u32, h: u32) -> std::ops::Range<u32> {
+    let lo = (h as u64 * n as u64).div_ceil(parts as u64) as u32;
+    let hi = ((h as u64 + 1) * n as u64).div_ceil(parts as u64) as u32;
+    lo..hi
+}
+
+/// The shard→CSD assignment maps for a fleet of `n_accel` directories
+/// and `n_csd` devices (shared by the builder and `host_slice`).
+fn assign_maps(n_accel: u32, n_csd: u32, assign: CsdAssign) -> (Vec<u16>, Vec<Vec<u16>>) {
+    let accel_csd: Vec<u16> = if n_csd == 0 {
+        Vec::new()
+    } else {
+        (0..n_accel)
+            .map(|a| match assign {
+                CsdAssign::Block => (a as u64 * n_csd as u64 / n_accel as u64) as u16,
+                CsdAssign::Stripe => (a % n_csd) as u16,
+            })
+            .collect()
+    };
+    let mut csd_dirs: Vec<Vec<u16>> = vec![Vec::new(); n_csd as usize];
+    for (a, &c) in accel_csd.iter().enumerate() {
+        csd_dirs[c as usize].push(a as u16);
+    }
+    (accel_csd, csd_dirs)
 }
 
 /// Builder for [`Topology`]. Defaults reproduce the paper's testbed:
@@ -211,12 +346,8 @@ impl TopologyBuilder {
     }
 
     pub fn build(self) -> Result<Topology> {
-        if self.hosts != 1 {
-            bail!(
-                "n_hosts = {} is not supported yet: the coordinator is single-host \
-                 (sharded multi-host coordinators are the next ROADMAP step)",
-                self.hosts
-            );
+        if self.hosts == 0 {
+            bail!("topology needs at least one host");
         }
         if self.accels == 0 {
             bail!("topology needs at least one accelerator");
@@ -244,22 +375,7 @@ impl TopologyBuilder {
                 bail!("fail_csd({idx}, {t}): failure time must be finite and >= 0");
             }
         }
-        let accel_csd: Vec<u16> = if self.csds == 0 {
-            Vec::new()
-        } else {
-            (0..self.accels)
-                .map(|a| match self.assign {
-                    CsdAssign::Block => {
-                        (a as u64 * self.csds as u64 / self.accels as u64) as u16
-                    }
-                    CsdAssign::Stripe => (a % self.csds) as u16,
-                })
-                .collect()
-        };
-        let mut csd_dirs: Vec<Vec<u16>> = vec![Vec::new(); self.csds as usize];
-        for (a, &c) in accel_csd.iter().enumerate() {
-            csd_dirs[c as usize].push(a as u16);
-        }
+        let (accel_csd, csd_dirs) = assign_maps(self.accels, self.csds, self.assign);
         let mut csd_fail_at: Vec<Option<Secs>> = vec![None; self.csds as usize];
         for &(idx, t) in &self.fail {
             let slot = &mut csd_fail_at[idx as usize];
@@ -273,6 +389,8 @@ impl TopologyBuilder {
             accel_csd,
             csd_dirs,
             csd_fail_at,
+            accel_base: 0,
+            world_accel: self.accels,
         })
     }
 }
@@ -347,7 +465,7 @@ mod tests {
 
     #[test]
     fn builder_rejections() {
-        assert!(Topology::builder().hosts(2).build().is_err());
+        assert!(Topology::builder().hosts(0).build().is_err());
         assert!(Topology::builder().accels(0).build().is_err());
         assert!(Topology::builder().csds(2).fail_csd(2, 1.0).build().is_err());
         assert!(Topology::builder().fail_csd(0, -1.0).build().is_err());
@@ -383,5 +501,89 @@ mod tests {
         }
         assert_eq!(CsdAssign::parse("BLOCK"), Some(CsdAssign::Block));
         assert_eq!(CsdAssign::parse("x"), None);
+    }
+
+    #[test]
+    fn multi_host_topology_builds() {
+        // Acceptance: hosts(2) no longer errors at build time.
+        let t = Topology::builder().hosts(2).build().unwrap();
+        assert_eq!(t.n_hosts(), 2);
+        let t = Topology::builder().hosts(2).accels(4).csds(2).build().unwrap();
+        assert_eq!(t.n_hosts(), 2);
+        assert_eq!(t.accel_base(), 0);
+        assert_eq!(t.world_accel(), 4);
+        assert!(!t.is_host_slice());
+    }
+
+    #[test]
+    fn host_slices_partition_accels_and_csds() {
+        let t = Topology::builder().hosts(2).accels(4).csds(2).build().unwrap();
+        let s0 = t.host_slice(0).unwrap();
+        let s1 = t.host_slice(1).unwrap();
+        for s in [&s0, &s1] {
+            assert_eq!(s.n_hosts(), 1);
+            assert_eq!(s.n_accel(), 2);
+            assert_eq!(s.n_csd(), 1);
+            assert_eq!(s.world_accel(), 4);
+            assert!(s.is_host_slice());
+        }
+        assert_eq!(s0.accel_base(), 0);
+        assert_eq!(s1.accel_base(), 2);
+        assert_eq!(s0.global_rank(1), 1);
+        assert_eq!(s1.global_rank(1), 3);
+        // local assignment: every local dir served by the host's CSD
+        assert_eq!(s1.dirs_of(0), &[0, 1]);
+        assert!(t.host_slice(2).is_err(), "host index past fleet");
+    }
+
+    #[test]
+    fn host_slices_ragged_and_underfilled() {
+        // 5 accels over 2 hosts: balanced blocks 3 + 2.
+        let t = Topology::builder().hosts(2).accels(5).csds(2).build().unwrap();
+        assert_eq!(t.host_accel_range(0), 0..3);
+        assert_eq!(t.host_accel_range(1), 3..5);
+        assert_eq!(t.host_slice(0).unwrap().n_accel(), 3);
+        assert_eq!(t.host_slice(1).unwrap().n_accel(), 2);
+        // 1 accel over 2 hosts builds, but slicing host 1 fails clearly.
+        let t = Topology::builder().hosts(2).build().unwrap();
+        assert!(t.host_slice(1).is_err());
+        // A slice cannot be sliced again.
+        let t = Topology::builder().hosts(2).accels(4).build().unwrap();
+        assert!(t.host_slice(0).unwrap().host_slice(0).is_err());
+    }
+
+    #[test]
+    fn host_slice_remaps_fail_injection() {
+        // Global CSD 1 belongs to host 1 of a 2-host / 2-CSD fleet; its
+        // failure must land on that host's local device 0.
+        let t = Topology::builder()
+            .hosts(2)
+            .accels(4)
+            .csds(2)
+            .fail_csd(1, 7.0)
+            .build()
+            .unwrap();
+        let s0 = t.host_slice(0).unwrap();
+        let s1 = t.host_slice(1).unwrap();
+        assert_eq!(s0.csd_fail_at(0), None);
+        assert_eq!(s1.csd_fail_at(0), Some(7.0));
+    }
+
+    #[test]
+    fn host_slice_of_single_host_is_identity() {
+        let t = Topology::builder()
+            .accels(4)
+            .csds(2)
+            .assign(CsdAssign::Stripe)
+            .build()
+            .unwrap();
+        let s = t.host_slice(0).unwrap();
+        assert_eq!(s.n_accel(), t.n_accel());
+        assert_eq!(s.n_csd(), t.n_csd());
+        assert_eq!(s.accel_base(), 0);
+        assert_eq!(s.world_accel(), t.n_accel());
+        for a in 0..4 {
+            assert_eq!(s.csd_of(a), t.csd_of(a));
+        }
     }
 }

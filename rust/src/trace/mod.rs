@@ -225,6 +225,28 @@ impl TraceStats {
     pub fn n_spans(&self) -> u64 {
         self.n_spans
     }
+
+    /// Fold another run's statistics into this one (cluster
+    /// aggregation): busy sums add cell-wise, the makespan takes the
+    /// max, span counts add. Exact — each accumulator is a sum or max
+    /// of the same quantities over the union of the two span streams
+    /// (the merged f64 sums are host-major ordered, not interleaved;
+    /// per-host reports keep the bit-exact single-host values).
+    pub fn merge(&mut self, other: &TraceStats) {
+        for (row, orow) in self.busy.iter_mut().zip(other.busy.iter()) {
+            for (cell, ocell) in row.iter_mut().zip(orow.iter()) {
+                *cell += ocell;
+            }
+        }
+        self.t_io += other.t_io;
+        self.t_cpu += other.t_cpu;
+        self.t_csd += other.t_csd;
+        self.t_gpu += other.t_gpu;
+        self.t_gds += other.t_gds;
+        self.host_busy += other.host_busy;
+        self.makespan = self.makespan.max(other.makespan);
+        self.n_spans += other.n_spans;
+    }
 }
 
 /// Cap on speculative span pre-reservation: a huge `n_batches × epochs`
@@ -323,6 +345,24 @@ impl Trace {
     /// streaming stats (identical to folding `f64::max` over the log).
     pub fn makespan(&self) -> Secs {
         self.stats.makespan
+    }
+
+    /// Append another trace (cluster aggregation): spans concatenate
+    /// (only when both sides store them), stats merge exactly either
+    /// way. `remap` rewrites each appended span's device — the cluster
+    /// driver offsets host-local `Device::Accel` indices to global
+    /// ranks so a merged timeline stays per-device disjoint.
+    pub fn merge_from(&mut self, other: &Trace, remap: impl Fn(Device) -> Device) {
+        self.stats.merge(&other.stats);
+        if self.store_spans {
+            self.spans.reserve(other.spans.len());
+            for s in &other.spans {
+                self.spans.push(Span {
+                    device: remap(s.device),
+                    ..*s
+                });
+            }
+        }
     }
 
     /// Total busy time of the spans selected by `pred` (sum of
@@ -542,6 +582,31 @@ mod tests {
         assert!(t.spans.capacity() <= MAX_SPAN_PREALLOC);
         let small = Trace::with_capacity(64);
         assert!(small.spans.capacity() >= 64);
+    }
+
+    #[test]
+    fn merge_concatenates_spans_and_sums_stats() {
+        let mut a = Trace::new();
+        a.record(Device::CpuMain, Phase::CpuPreprocess, Some(0), 0.0, 1.0);
+        let mut b = Trace::new();
+        b.record(Device::Accel(0), Phase::Train, Some(1), 0.0, 3.0);
+        b.record(Device::Csd, Phase::CsdPreprocess, Some(2), 1.0, 2.0);
+        a.merge_from(&b, |d| match d {
+            Device::Accel(i) => Device::Accel(i + 4),
+            other => other,
+        });
+        assert_eq!(a.spans.len(), 3);
+        assert_eq!(a.spans[1].device, Device::Accel(4), "accel rank remapped");
+        assert_eq!(a.makespan(), 3.0);
+        assert_eq!(a.stats().n_spans(), 3);
+        assert_eq!(a.stats().t_gpu(), 3.0);
+        assert_eq!(a.stats().t_cpu(), 1.0);
+        assert_eq!(a.stats().t_csd(), 1.0);
+        // Stats-only destination still aggregates exactly.
+        let mut lean = Trace::stats_only();
+        lean.merge_from(&b, |d| d);
+        assert!(lean.spans.is_empty());
+        assert_eq!(lean.stats(), b.stats());
     }
 
     #[test]

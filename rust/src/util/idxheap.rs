@@ -32,6 +32,14 @@ pub struct IdxMinHeap {
     key: Vec<Secs>,
 }
 
+impl Default for IdxMinHeap {
+    /// An empty heap over an empty slot space — the inert placeholder
+    /// policies hold until their first `on_epoch_start` sizes it.
+    fn default() -> Self {
+        IdxMinHeap::new(0)
+    }
+}
+
 impl IdxMinHeap {
     /// An empty heap addressing slots `0..n`.
     pub fn new(n: usize) -> Self {

@@ -1,0 +1,344 @@
+//! Cluster semantics (DESIGN.md §Cluster): multi-host partitioning
+//! keeps the dataset exactly-once across hosts; cross-host work
+//! stealing conserves every batch id (nothing lost, nothing
+//! duplicated); per-host reports sum (max, for makespans) into the
+//! cluster-wide report; and a 1-host cluster is bit-identical to a
+//! plain session (the pass-through leg also lives in
+//! `tests/golden_parity.rs`, chained to the legacy monolith).
+
+use ddlp::cluster::{Cluster, StealMode};
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::{CostProvider, CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
+use ddlp::coordinator::Strategy;
+use ddlp::pipeline::PipelineKind;
+use ddlp::topology::CsdAssign;
+use ddlp::trace::{Phase, Trace};
+use ddlp::util::prop::run_prop;
+
+fn cfg_cluster(
+    strategy: Strategy,
+    n: u32,
+    n_hosts: u32,
+    n_accel: u32,
+    n_csd: u32,
+    assign: CsdAssign,
+    steal: StealMode,
+    epochs: u32,
+) -> ExperimentConfig {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    ExperimentConfig::builder()
+        .model("wrn")
+        .pipeline_kind(PipelineKind::ImageNet1)
+        .strategy(strategy)
+        .n_hosts(n_hosts)
+        .n_accel(n_accel)
+        .n_csd(n_csd)
+        .csd_assign(assign)
+        .steal(steal)
+        .n_batches(n)
+        .epochs(epochs)
+        .profile(profile)
+        .build()
+        .unwrap()
+}
+
+/// Every batch id 0..n is trained exactly once per epoch, across the
+/// whole cluster (the merged trace carries global batch ids).
+fn assert_exact_coverage(trace: &Trace, n: u32, epochs: u32, label: &str) {
+    let mut counts = vec![0u32; n as usize];
+    for s in &trace.spans {
+        if s.phase == Phase::Train {
+            counts[s.batch.unwrap() as usize] += 1;
+        }
+    }
+    for (b, &c) in counts.iter().enumerate() {
+        assert_eq!(c, epochs, "{label}: batch {b} trained {c}×, want {epochs}");
+    }
+}
+
+/// Uniform toy costs for every host.
+fn uniform_factory(_h: u32) -> Box<dyn CostProvider> {
+    Box::new(FixedCosts::toy_fig6())
+}
+
+/// Toy costs where host 0 is `slow×` slower on both prongs — the
+/// deliberately imbalanced fleet that makes stealing fire.
+fn skewed_costs(h: u32, slow: f64) -> Box<dyn CostProvider> {
+    let f = if h == 0 { slow } else { 1.0 };
+    Box::new(FixedCosts {
+        host: HostBatchCost {
+            read_s: 0.0,
+            pp_s: 0.25 * f,
+            xfer_s: 0.0,
+            accel_pp_s: 0.0,
+        },
+        csd: CsdBatchCost {
+            read_s: 0.0,
+            pp_s: 1.0 * f,
+            write_s: 0.0,
+        },
+        train_cpu: TrainCost {
+            gds_s: 0.0,
+            train_s: 0.0,
+        },
+        train_csd: TrainCost {
+            gds_s: 0.0,
+            train_s: 0.125 * f,
+        },
+    })
+}
+
+#[test]
+fn multi_host_exactly_once_all_strategies_and_assignments() {
+    // Acceptance grid: n_hosts {2,4} × block|stripe × every strategy —
+    // the union of per-host shards must cover the dataset exactly once
+    // per epoch, and host batch counts must sum to the total.
+    const N: u32 = 200;
+    const N_ACCEL: u32 = 4;
+    for n_hosts in [2u32, 4] {
+        for assign in [CsdAssign::Block, CsdAssign::Stripe] {
+            for strategy in Strategy::ALL {
+                let n_csd = if strategy.uses_csd() { 4 } else { 0 };
+                let label = format!("{strategy} hosts={n_hosts} assign={assign}");
+                let c = cfg_cluster(
+                    strategy,
+                    N,
+                    n_hosts,
+                    N_ACCEL,
+                    n_csd,
+                    assign,
+                    StealMode::Off,
+                    1,
+                );
+                let r = Cluster::from_config(&c)
+                    .unwrap()
+                    .with_cost_factory(uniform_factory)
+                    .run()
+                    .unwrap();
+                assert_eq!(r.report.n_batches, N, "{label}");
+                assert_exact_coverage(&r.trace, N, 1, &label);
+                assert_eq!(r.host_reports.len(), n_hosts as usize, "{label}");
+                let host_sum: u64 = r.host_reports.iter().map(|h| h.batches()).sum();
+                assert_eq!(host_sum, N as u64, "{label}: host batches don't sum");
+                for h in &r.host_reports {
+                    assert!(h.batches() > 0, "{label}: host {} starved", h.host);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn host_reports_sum_to_cluster_report() {
+    // Acceptance: summable report fields sum across host_reports into
+    // the cluster-wide report; the makespan is the max.
+    let c = cfg_cluster(
+        Strategy::Wrr,
+        300,
+        2,
+        4,
+        2,
+        CsdAssign::Block,
+        StealMode::Off,
+        2,
+    );
+    let r = Cluster::from_config(&c)
+        .unwrap()
+        .with_cost_factory(uniform_factory)
+        .run()
+        .unwrap();
+    let hs = &r.host_reports;
+    assert_eq!(hs.len(), 2);
+    let sum = |f: &dyn Fn(&ddlp::metrics::RunReport) -> f64| -> f64 {
+        hs.iter().map(|h| f(&h.report)).sum()
+    };
+    let eps = 1e-9;
+    assert!((r.report.t_io - sum(&|x| x.t_io)).abs() < eps);
+    assert!((r.report.t_cpu - sum(&|x| x.t_cpu)).abs() < eps);
+    assert!((r.report.t_csd - sum(&|x| x.t_csd)).abs() < eps);
+    assert!((r.report.t_gpu - sum(&|x| x.t_gpu)).abs() < eps);
+    assert!((r.report.t_gds - sum(&|x| x.t_gds)).abs() < eps);
+    assert!(
+        (r.report.energy.total_joules - sum(&|x| x.energy.total_joules)).abs() < eps
+    );
+    assert_eq!(
+        r.report.n_batches as u64,
+        hs.iter().map(|h| h.batches()).sum::<u64>()
+    );
+    assert_eq!(
+        r.report.wasted_batches,
+        hs.iter().map(|h| h.report.wasted_batches).sum::<u64>()
+    );
+    let max_makespan = hs.iter().map(|h| h.makespan()).fold(0.0, f64::max);
+    assert_eq!(r.report.makespan, max_makespan, "makespan is the slowest host");
+    // Per-host CSD rollups concatenate host-major into the global list.
+    assert_eq!(r.csd_devices.len(), 2);
+    let rolled: usize = hs.iter().map(|h| h.csd_devices.len()).sum();
+    assert_eq!(rolled, r.csd_devices.len());
+}
+
+#[test]
+fn stealing_rebalances_a_slow_host() {
+    // Host 0 is 3× slower: with epoch stealing the fast host must
+    // absorb part of host 0's queue, and the cluster makespan must not
+    // be worse than leaving the imbalance alone.
+    const N: u32 = 400;
+    const EPOCHS: u32 = 4;
+    let run = |steal: StealMode| {
+        let c = cfg_cluster(
+            Strategy::Wrr,
+            N,
+            2,
+            4,
+            2,
+            CsdAssign::Block,
+            steal,
+            EPOCHS,
+        );
+        Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(|h| skewed_costs(h, 3.0))
+            .run()
+            .unwrap()
+    };
+    let balanced = run(StealMode::Epoch);
+    let static_r = run(StealMode::Off);
+    assert_exact_coverage(&balanced.trace, N, EPOCHS, "steal=epoch");
+    assert_exact_coverage(&static_r.trace, N, EPOCHS, "steal=off");
+    let stolen: u64 = balanced.host_reports.iter().map(|h| h.steals_in).sum();
+    let donated: u64 = balanced.host_reports.iter().map(|h| h.steals_out).sum();
+    assert!(stolen > 0, "imbalanced fleet must trigger steals");
+    assert_eq!(stolen, donated, "steal ledger must balance");
+    assert_eq!(
+        balanced.host_reports[0].steals_out, donated,
+        "only the slow host donates"
+    );
+    // No-steal keeps static shards: ledger empty.
+    assert!(static_r
+        .host_reports
+        .iter()
+        .all(|h| h.steals_in == 0 && h.steals_out == 0));
+    assert!(
+        balanced.report.makespan <= static_r.report.makespan + 1e-9,
+        "stealing made the cluster slower: {} vs {}",
+        balanced.report.makespan,
+        static_r.report.makespan
+    );
+}
+
+#[test]
+fn prop_steal_conservation_no_loss_no_duplication() {
+    // Property: across random fleet shapes, strategies, skews and
+    // epoch counts, stealing never loses or duplicates a batch — every
+    // id is trained exactly `epochs` times and the per-host counts sum.
+    run_prop("cluster steal conservation", 12, |g| {
+        let n_hosts = *g.choose(&[2u32, 4]);
+        let n_accel = n_hosts * *g.choose(&[1u32, 2]);
+        let n = g.size(100, 320) as u32;
+        let epochs = *g.choose(&[2u32, 3]);
+        let strategy = *g.choose(&[Strategy::Wrr, Strategy::Mte, Strategy::CpuOnly]);
+        let n_csd = if strategy.uses_csd() { n_hosts } else { 0 };
+        let assign = *g.choose(&[CsdAssign::Block, CsdAssign::Stripe]);
+        let slow = g.float(1.5, 5.0);
+        let label = format!(
+            "{strategy} hosts={n_hosts} accels={n_accel} n={n} epochs={epochs} slow={slow:.2}"
+        );
+        let c = cfg_cluster(
+            strategy,
+            n,
+            n_hosts,
+            n_accel,
+            n_csd,
+            assign,
+            StealMode::Epoch,
+            epochs,
+        );
+        let r = Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(move |h| skewed_costs(h, slow))
+            .run()
+            .unwrap();
+        assert_eq!(r.report.n_batches, n * epochs, "{label}");
+        assert_exact_coverage(&r.trace, n, epochs, &label);
+        let stolen: u64 = r.host_reports.iter().map(|h| h.steals_in).sum();
+        let donated: u64 = r.host_reports.iter().map(|h| h.steals_out).sum();
+        assert_eq!(stolen, donated, "{label}: ledger unbalanced");
+        let host_sum: u64 = r.host_reports.iter().map(|h| h.batches()).sum();
+        assert_eq!(host_sum, (n * epochs) as u64, "{label}");
+    });
+}
+
+#[test]
+fn one_host_cluster_with_steal_is_passthrough() {
+    // steal = epoch over a single host has no peer to trade with: the
+    // run must still be bit-identical to the no-steal run.
+    let run = |steal: StealMode| {
+        let c = cfg_cluster(Strategy::Wrr, 200, 1, 2, 1, CsdAssign::Block, steal, 3);
+        Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(uniform_factory)
+            .run()
+            .unwrap()
+    };
+    let on = run(StealMode::Epoch);
+    let off = run(StealMode::Off);
+    assert_eq!(on.report, off.report);
+    assert_eq!(on.trace.spans, off.trace.spans);
+    assert!(on.host_reports.iter().all(|h| h.steals_in == 0));
+}
+
+#[test]
+fn cluster_analytic_mode_runs_without_injection() {
+    // The CLI path: analytic cost providers built per host from the
+    // config itself. Coverage must hold and hosts must split the work.
+    let c = cfg_cluster(
+        Strategy::Mte,
+        120,
+        2,
+        2,
+        2,
+        CsdAssign::Block,
+        StealMode::Epoch,
+        2,
+    );
+    let r = Cluster::from_config(&c).unwrap().run().unwrap();
+    assert_eq!(r.report.n_batches, 240);
+    assert_exact_coverage(&r.trace, 120, 2, "analytic mte");
+    assert_eq!(r.host_reports.len(), 2);
+    assert!(r.host_reports.iter().all(|h| h.batches() > 0));
+}
+
+#[test]
+fn merged_trace_remaps_accel_ranks() {
+    // Host 1's accelerators must appear under their global ranks in
+    // the merged timeline, so per-device spans stay disjoint.
+    let c = cfg_cluster(
+        Strategy::CpuOnly,
+        80,
+        2,
+        4,
+        0,
+        CsdAssign::Block,
+        StealMode::Off,
+        1,
+    );
+    let r = Cluster::from_config(&c)
+        .unwrap()
+        .with_cost_factory(uniform_factory)
+        .run()
+        .unwrap();
+    let mut ranks: Vec<u16> = r
+        .trace
+        .spans
+        .iter()
+        .filter_map(|s| match (s.phase, s.device) {
+            (Phase::Train, ddlp::trace::Device::Accel(i)) => Some(i),
+            _ => None,
+        })
+        .collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    assert_eq!(ranks, vec![0, 1, 2, 3], "global accel ranks in merged trace");
+}

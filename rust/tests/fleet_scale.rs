@@ -131,6 +131,55 @@ fn fleet64_every_strategy_exactly_once() {
     }
 }
 
+/// Large-fleet cluster smoke: 64 accelerators partitioned over 4 hosts
+/// (16 CSDs, epoch stealing armed) keep exactly-once coverage across
+/// epochs — the fleet-scale invariants survive the multi-host split.
+#[test]
+fn fleet64_cluster_exactly_once_with_stealing() {
+    use ddlp::cluster::{Cluster, StealMode};
+    use ddlp::coordinator::cost::CostProvider;
+
+    const N_ACCEL: u32 = 64;
+    const N_BATCHES: u32 = N_ACCEL * 8;
+    const EPOCHS: u32 = 2;
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    for strategy in [Strategy::Wrr, Strategy::Mte] {
+        let label = format!("cluster {strategy}");
+        let c = ExperimentConfig::builder()
+            .model("wrn")
+            .pipeline_kind(PipelineKind::ImageNet1)
+            .strategy(strategy)
+            .n_hosts(4)
+            .n_accel(N_ACCEL)
+            .n_csd(16)
+            .steal(StealMode::Epoch)
+            .n_batches(N_BATCHES)
+            .epochs(EPOCHS)
+            .profile(profile.clone())
+            .build()
+            .unwrap();
+        let r = Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(|h| -> Box<dyn CostProvider> {
+                // Host 0 drags: stealing must fire and stay exact.
+                let mut costs = FixedCosts::toy_fig6();
+                if h == 0 {
+                    costs.host.pp_s *= 2.0;
+                    costs.csd.pp_s *= 2.0;
+                }
+                Box::new(costs)
+            })
+            .run()
+            .unwrap();
+        assert_eq!(r.report.n_batches, N_BATCHES * EPOCHS, "{label}");
+        assert_exact_coverage(&r.trace, N_BATCHES, EPOCHS, &label);
+        assert_eq!(r.host_reports.len(), 4, "{label}");
+        let host_sum: u64 = r.host_reports.iter().map(|h| h.batches()).sum();
+        assert_eq!(host_sum, (N_BATCHES * EPOCHS) as u64, "{label}");
+    }
+}
+
 /// Ragged fleet: n_batches not divisible by n_accel (some shards one
 /// batch longer), plus an n_accel > n_batches config where trailing
 /// shards are empty — the first-unfinished cursor and the heap must

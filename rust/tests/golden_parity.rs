@@ -659,6 +659,75 @@ fn parity_session_single_node_all_strategies() {
 }
 
 #[test]
+fn parity_mte_prealloc_heap_large_fleet() {
+    // The MTE policy's pre-allocation probe went from an O(n_accel)
+    // per-batch scan to an index-heap membership check; its decisions
+    // must stay bit-identical to the legacy monolith (which carries the
+    // scan verbatim) well past the small parity fleets, including the
+    // tiny-shard fall-through path that resolves shards one by one.
+    for n_accel in [8u32, 32] {
+        for epochs in [1u32, 2] {
+            let c = cfg(Strategy::Mte, n_accel, 0, epochs);
+            let mut costs_new = FixedCosts::toy_fig6();
+            let mut costs_old = FixedCosts::toy_fig6();
+            let r_new =
+                Session::with_costs(&c, Topology::single_node(n_accel), &spec(), &mut costs_new)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+            let (r_old, t_old) = legacy::run_schedule_legacy(&c, &spec(), &mut costs_old).unwrap();
+            assert_eq!(r_new.report, r_old, "mte n_accel={n_accel} epochs={epochs}");
+            assert_eq!(
+                r_new.trace.spans, t_old.spans,
+                "mte n_accel={n_accel} epochs={epochs}"
+            );
+        }
+    }
+}
+
+/// A 1-host `Cluster` must be a transparent pass-through: report,
+/// trace and losses bit-identical to a plain `Session::run` over the
+/// same config — which closes the parity chain
+/// `Cluster(1 host) == Session == run_schedule == legacy monolith`.
+#[test]
+fn parity_one_host_cluster_vs_session() {
+    use ddlp::cluster::Cluster;
+    for strategy in Strategy::ALL {
+        for n_accel in [1u32, 2, 4] {
+            let c = cfg(strategy, n_accel, 0, 2);
+            let cluster_r = Cluster::from_config(&c)
+                .unwrap()
+                .with_cost_factory(|_| -> Box<dyn CostProvider> {
+                    Box::new(FixedCosts::toy_fig6())
+                })
+                .run()
+                .unwrap();
+            let mut costs = FixedCosts::toy_fig6();
+            let session_r = Session::with_costs(
+                &c,
+                Topology::from_config(&c).unwrap(),
+                &ddlp::dataset::DatasetSpec {
+                    n_batches: N_BATCHES,
+                    batch_size: c.model_profile().unwrap().batch_size,
+                    pipeline: PipelineKind::ImageNet1,
+                    seed: 0,
+                },
+                &mut costs,
+            )
+            .unwrap()
+            .run()
+            .unwrap();
+            let label = format!("{strategy} n_accel={n_accel}");
+            assert_eq!(cluster_r.report, session_r.report, "{label}");
+            assert_eq!(cluster_r.trace.spans, session_r.trace.spans, "{label}");
+            assert_eq!(cluster_r.losses, session_r.losses, "{label}");
+            assert_eq!(cluster_r.host_reports.len(), 1, "{label}");
+            assert_eq!(cluster_r.host_reports[0].report, session_r.report, "{label}");
+        }
+    }
+}
+
+#[test]
 fn parity_session_vs_legacy_monolith() {
     // Close the triangle: Session(single_node) against the pre-refactor
     // scheduler itself, not just the shim.
