@@ -23,6 +23,13 @@
 //! n_accel = 64, epoch stealing enabled, via `cluster::Cluster`) — its
 //! rows land in the same JSON under `host_results`.
 //!
+//! A fourth sweep measures the **parallel cluster driver**: the same
+//! host fleet driven through `Cluster::run_parallel` (one scoped worker
+//! per host) vs `Cluster::run_sequential`, wall-clock. The two drivers
+//! are bit-identical in results (tests/cluster.rs), so this sweep is a
+//! pure speedup record — rows land under `par_results` with the
+//! seq/par wall times and the speedup factor.
+//!
 //! Env knobs (CI perf smoke):
 //!   SCHED_SCALE_BPA        batches per accelerator        (default 500)
 //!   SCHED_SCALE_MIN_WRR    min total batches/s at n_accel = 64; below
@@ -36,6 +43,12 @@
 //!   SCHED_SCALE_HOSTS_MIN_WRR  min total batches/s over the multi-host
 //!                          sweep rows; below it the bench exits
 //!                          non-zero.
+//!   SCHED_SCALE_PAR_MIN_SPEEDUP  min run_sequential/run_parallel
+//!                          wall-clock speedup at n_hosts = 4; below it
+//!                          the bench exits non-zero. Only meaningful on
+//!                          a multi-core machine — CI sets it where
+//!                          cores are guaranteed; unset, the sweep just
+//!                          records.
 use std::time::Instant;
 
 use ddlp::cluster::{Cluster, StealMode};
@@ -232,7 +245,7 @@ fn main() {
         for _ in 0..reps {
             let report = Cluster::from_config(&cfg)
                 .unwrap()
-                .with_cost_factory(|_| -> Box<dyn CostProvider> {
+                .with_cost_factory(|_| -> Box<dyn CostProvider + Send> {
                     Box::new(FixedCosts::toy_fig6())
                 })
                 .run()
@@ -253,6 +266,66 @@ fn main() {
             batches_per_s,
             per_accel_batches_per_s: per_accel,
             makespan_s: makespan,
+        });
+    }
+
+    // ---- parallel-driver sweep -------------------------------------
+    // Same host fleet, two drivers: run_sequential (hosts advance one
+    // after another on the calling thread) vs run_parallel (one scoped
+    // worker per host). Results are bit-identical (tests/cluster.rs
+    // asserts it), so wall-clock speedup is the whole story. steal=off
+    // keeps the hosts barrier-free — the upper bound the live protocol
+    // is measured against.
+    struct ParRow {
+        n_hosts: u32,
+        seq_s: f64,
+        par_s: f64,
+        speedup: f64,
+    }
+    let mut par_rows: Vec<ParRow> = Vec::new();
+    for n_hosts in HOST_FLEETS {
+        let n = bpa * HOST_SWEEP_N_ACCEL;
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .strategy(Strategy::Wrr)
+            .num_workers(HOST_SWEEP_N_ACCEL)
+            .n_hosts(n_hosts)
+            .n_accel(HOST_SWEEP_N_ACCEL)
+            .n_csd(n_hosts)
+            .steal(StealMode::Off)
+            .n_batches(n)
+            .record_trace(false)
+            .profile(profile.clone())
+            .build()
+            .unwrap();
+        let reps = (MIN_MEASURED_BATCHES / n).max(1);
+        let cluster = || {
+            Cluster::from_config(&cfg)
+                .unwrap()
+                .with_cost_factory(|_| -> Box<dyn CostProvider + Send> {
+                    Box::new(FixedCosts::toy_fig6())
+                })
+        };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            cluster().run_sequential().unwrap();
+        }
+        let seq_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            cluster().run_parallel().unwrap();
+        }
+        let par_s = t0.elapsed().as_secs_f64();
+        let speedup = if par_s > 0.0 { seq_s / par_s } else { 0.0 };
+        println!(
+            "[sched_scale] par driver n_hosts={n_hosts:<2} seq {seq_s:.3}s  par {par_s:.3}s  \
+             speedup {speedup:.2}x"
+        );
+        par_rows.push(ParRow {
+            n_hosts,
+            seq_s,
+            par_s,
+            speedup,
         });
     }
 
@@ -314,6 +387,16 @@ fn main() {
             "    \"wrr_a{}_h{}\": {{\"batches_per_s\": {:.1}, \
              \"per_accel_batches_per_s\": {:.1}, \"makespan_s\": {:.6}}}{comma}\n",
             HOST_SWEEP_N_ACCEL, r.n_accel, r.batches_per_s, r.per_accel_batches_per_s, r.makespan_s
+        ));
+    }
+    json.push_str("  },\n");
+    json.push_str("  \"par_results\": {\n");
+    for (i, r) in par_rows.iter().enumerate() {
+        let comma = if i + 1 < par_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"wrr_a{}_h{}\": {{\"seq_s\": {:.4}, \"par_s\": {:.4}, \
+             \"speedup\": {:.3}}}{comma}\n",
+            HOST_SWEEP_N_ACCEL, r.n_hosts, r.seq_s, r.par_s, r.speedup
         ));
     }
     json.push_str("  }\n}\n");
@@ -386,6 +469,26 @@ fn main() {
         println!(
             "[sched_scale] multi-host smoke OK: worst row (n_hosts={}) {:.0} >= {floor:.0} batches/s",
             worst.n_accel, worst.batches_per_s
+        );
+    }
+    // Parallel-driver smoke: on a machine with cores to spare, fanning
+    // 4 independent hosts onto 4 scoped workers must actually buy
+    // wall-clock time over driving them one after another.
+    if let Some(floor) = env_f64("SCHED_SCALE_PAR_MIN_SPEEDUP") {
+        let r4 = par_rows
+            .iter()
+            .find(|r| r.n_hosts == 4)
+            .expect("n_hosts=4 row present");
+        if r4.speedup < floor {
+            eprintln!(
+                "[sched_scale] FAIL: parallel driver at n_hosts=4 speedup {:.2}x < floor {floor:.2}x",
+                r4.speedup
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "[sched_scale] parallel-driver smoke OK: n_hosts=4 speedup {:.2}x >= {floor:.2}x",
+            r4.speedup
         );
     }
 }

@@ -53,7 +53,7 @@ use crate::sim::Secs;
 use crate::topology::Topology;
 use crate::trace::{Device, Trace};
 
-/// Cross-host work-stealing mode (config key `steal = off|epoch`).
+/// Cross-host work-stealing mode (config key `steal = off|epoch|live`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum StealMode {
     /// No rebalancing: every host keeps its static shard block —
@@ -63,6 +63,14 @@ pub enum StealMode {
     /// Epoch-boundary stealing: between epochs the cluster driver moves
     /// unstarted batch ranges from the slowest host to idle hosts.
     Epoch,
+    /// Live stealing: epoch-boundary rebalancing **plus** mid-epoch
+    /// steals at fixed consumption checkpoints — when a host's
+    /// projected finish time (running pace × remaining batches) falls
+    /// behind the fleet, unclaimed batches move to the fastest host
+    /// *within* the epoch, so even a single-epoch run (which `epoch`
+    /// cannot help) gets rescued. Deterministic: checkpoints are
+    /// consumption counts in virtual time, not wall-clock.
+    Live,
 }
 
 impl StealMode {
@@ -70,6 +78,7 @@ impl StealMode {
         Some(match s.to_ascii_lowercase().as_str() {
             "off" | "none" => StealMode::Off,
             "epoch" => StealMode::Epoch,
+            "live" => StealMode::Live,
             _ => return None,
         })
     }
@@ -78,6 +87,7 @@ impl StealMode {
         match self {
             StealMode::Off => "off",
             StealMode::Epoch => "epoch",
+            StealMode::Live => "live",
         }
     }
 }
@@ -121,8 +131,9 @@ impl HostReport {
 }
 
 /// Per-host cost-provider factory (host index → provider) — see
-/// [`Cluster::with_cost_factory`].
-pub type CostFactory = Box<dyn Fn(u32) -> Box<dyn CostProvider>>;
+/// [`Cluster::with_cost_factory`]. Providers are `Send` because the
+/// parallel driver moves each host's session onto a worker thread.
+pub type CostFactory = Box<dyn Fn(u32) -> Box<dyn CostProvider + Send>>;
 
 /// A multi-host experiment: the cluster-level run surface. Owns the
 /// per-host configs and sub-topologies; [`Cluster::run`] drives one
@@ -210,7 +221,7 @@ impl Cluster {
     /// fleets (a slow host) to exercise stealing.
     pub fn with_cost_factory(
         mut self,
-        f: impl Fn(u32) -> Box<dyn CostProvider> + 'static,
+        f: impl Fn(u32) -> Box<dyn CostProvider + Send> + 'static,
     ) -> Self {
         self.cost_factory = Some(Box::new(f));
         self
@@ -225,13 +236,25 @@ impl Cluster {
         &self.host_topos
     }
 
-    /// Drive every host through all epochs, stealing at epoch
-    /// boundaries when `steal = epoch`, and aggregate the per-host
-    /// results into one [`RunResult`] with per-host attribution.
+    /// Drive every host through all epochs — in parallel (one scoped
+    /// worker per host) whenever the machine and `PALLAS_THREADS` allow
+    /// more than one thread — stealing at epoch boundaries when `steal
+    /// = epoch|live` and mid-epoch when `steal = live`, and aggregate
+    /// the per-host results into one [`RunResult`] with per-host
+    /// attribution. The parallel and sequential drivers are
+    /// bit-identical (all scheduling time is virtual, so thread
+    /// interleaving cannot reach any result bit — `rust/tests/cluster.rs`
+    /// asserts it), so this dispatch is a pure wall-clock choice.
     pub fn run(&self) -> Result<RunResult> {
-        let n_hosts = self.host_cfgs.len();
-        let mut sessions: Vec<Session<'_>> = self
-            .host_cfgs
+        if self.host_cfgs.len() > 1 && crate::util::par::max_threads() > 1 {
+            self.run_parallel()
+        } else {
+            self.run_sequential()
+        }
+    }
+
+    fn build_sessions(&self) -> Result<Vec<Session<'_>>> {
+        self.host_cfgs
             .iter()
             .zip(&self.host_topos)
             .enumerate()
@@ -239,23 +262,93 @@ impl Cluster {
                 Some(f) => Session::with_owned_costs(c, t.clone(), f(h as u32)),
                 None => Session::new(c, t.clone()),
             })
-            .collect::<Result<_>>()?;
+            .collect()
+    }
+
+    /// Epoch-boundary steal pass shared by both drivers.
+    fn boundary_steal(
+        &self,
+        sessions: &mut [Session<'_>],
+        outcomes: &[crate::coordinator::EpochOutcome],
+        epoch: u32,
+        steals_in: &mut [u64],
+        steals_out: &mut [u64],
+    ) -> Result<()> {
+        let last_epoch = epoch + 1 == self.cfg.epochs;
+        let steal_boundary = matches!(self.cfg.steal, StealMode::Epoch | StealMode::Live);
+        if steal_boundary && !last_epoch && sessions.len() > 1 {
+            rebalance(sessions, outcomes, steals_in, steals_out)?;
+        }
+        Ok(())
+    }
+
+    /// The single-threaded driver: hosts advance one after another.
+    /// Reference semantics — the parallel driver must match it
+    /// bit-for-bit.
+    pub fn run_sequential(&self) -> Result<RunResult> {
+        let n_hosts = self.host_cfgs.len();
+        let mut sessions = self.build_sessions()?;
         let mut steals_in = vec![0u64; n_hosts];
         let mut steals_out = vec![0u64; n_hosts];
+        // Hoisted per-epoch outcome buffer (reused across epochs).
+        let mut outcomes = Vec::with_capacity(n_hosts);
         for epoch in 0..self.cfg.epochs {
-            let mut outcomes = Vec::with_capacity(n_hosts);
-            for s in sessions.iter_mut() {
-                outcomes.push(s.run_epoch()?);
-            }
-            let last_epoch = epoch + 1 == self.cfg.epochs;
-            if self.cfg.steal == StealMode::Epoch && !last_epoch && n_hosts > 1 {
-                rebalance(
+            outcomes.clear();
+            if self.cfg.steal == StealMode::Live {
+                run_live_epoch_sequential(
                     &mut sessions,
-                    &outcomes,
                     &mut steals_in,
                     &mut steals_out,
+                    &mut outcomes,
                 )?;
+            } else {
+                for s in sessions.iter_mut() {
+                    outcomes.push(s.run_epoch()?);
+                }
             }
+            self.boundary_steal(&mut sessions, &outcomes, epoch, &mut steals_in, &mut steals_out)?;
+        }
+        let mut host_results = Vec::with_capacity(n_hosts);
+        for s in sessions {
+            host_results.push(s.finish()?);
+        }
+        Ok(self.aggregate(host_results, steals_in, steals_out))
+    }
+
+    /// The parallel driver: one scoped worker thread per host inside
+    /// each epoch (`steal = off|epoch` fan out `run_epoch` through
+    /// [`crate::util::par::try_par_map_n`]; `steal = live` runs the
+    /// checkpointed barrier protocol, which needs every host resident).
+    /// Thread count is pinned to `n_hosts` regardless of
+    /// `PALLAS_THREADS` — the knob decides *whether* [`Cluster::run`]
+    /// parallelizes, this method *is* the parallel path (parity tests
+    /// call it directly to exercise true interleaving on any machine).
+    /// Aggregation stays host-major on the calling thread, and a
+    /// failing host surfaces as the first `Err` in host order — both
+    /// deterministic, so results are bit-identical to
+    /// [`Cluster::run_sequential`].
+    pub fn run_parallel(&self) -> Result<RunResult> {
+        let n_hosts = self.host_cfgs.len();
+        let mut sessions = self.build_sessions()?;
+        let mut steals_in = vec![0u64; n_hosts];
+        let mut steals_out = vec![0u64; n_hosts];
+        let mut outcomes: Vec<crate::coordinator::EpochOutcome> = Vec::with_capacity(n_hosts);
+        for epoch in 0..self.cfg.epochs {
+            outcomes.clear();
+            if self.cfg.steal == StealMode::Live {
+                run_live_epoch_parallel(
+                    &mut sessions,
+                    &mut steals_in,
+                    &mut steals_out,
+                    &mut outcomes,
+                )?;
+            } else {
+                let refs: Vec<&mut Session<'_>> = sessions.iter_mut().collect();
+                outcomes.extend(crate::util::par::try_par_map_n(refs, n_hosts, |s| {
+                    s.run_epoch()
+                })?);
+            }
+            self.boundary_steal(&mut sessions, &outcomes, epoch, &mut steals_in, &mut steals_out)?;
         }
         let mut host_results = Vec::with_capacity(n_hosts);
         for s in sessions {
@@ -419,6 +512,283 @@ fn rebalance(
     Ok(())
 }
 
+// ----------------------------------------------------------------------
+// `steal = live`: the mid-epoch checkpoint protocol
+// ----------------------------------------------------------------------
+
+/// Mid-epoch steal checkpoints per epoch: each host pauses after
+/// consuming ~25/50/75 % of its epoch-start workload, the fleet
+/// exchanges progress snapshots, and unclaimed work moves from the host
+/// with the worst projected finish time to the best.
+const LIVE_CHECKPOINTS: u32 = 3;
+
+/// Host `h`'s consumed-batches target for checkpoint `c`:
+/// `ceil(w·(c+1)/(C+1))` of its epoch-start workload `w`.
+fn live_target(w: u64, c: u32) -> u64 {
+    let num = w * (c as u64 + 1);
+    let den = LIVE_CHECKPOINTS as u64 + 1;
+    (num + den - 1) / den
+}
+
+/// One move of a live-steal plan: `donor` hands `k` unclaimed batches
+/// to `recipient`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct LiveMove {
+    donor: usize,
+    recipient: usize,
+    k: u32,
+}
+
+/// Compute the steal plan for one checkpoint from the fleet's progress
+/// snapshots. **Pure** — in the parallel driver every host thread
+/// computes the plan independently from the barrier-synchronized
+/// snapshots and they must agree exactly, which this guarantees by
+/// construction (no shared mutable state, no ambient time/randomness).
+///
+/// Mirror of [`rebalance`]: projected finish = observed pace ×
+/// remaining batches; up to `hosts − 1` moves, donor = worst projected
+/// finish, recipient = best (ties → lowest index), each move sized to
+/// close the projected gap but capped at half the donor's *unclaimed*
+/// work (claimed/in-flight batches never move). A host that has not
+/// consumed anything yet has pace 0 — projected finish 0 — and is
+/// treated as fast (recipient side), matching [`rebalance`].
+/// Working-copy updates deliberately do **not** credit a recipient's
+/// absorbed batches as donatable within the same checkpoint, so every
+/// planned donation is executable from snapshot state alone — donors
+/// and recipients can then run their halves in separate barrier phases
+/// without ordering hazards.
+fn live_plan(snaps: &[crate::coordinator::LiveProgress]) -> Vec<LiveMove> {
+    let n_hosts = snaps.len();
+    let pace: Vec<f64> = snaps
+        .iter()
+        .map(|s| {
+            if s.consumed > 0 {
+                s.elapsed / s.consumed as f64
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut remaining: Vec<u64> = snaps.iter().map(|s| s.remaining).collect();
+    let mut donatable: Vec<u32> = snaps.iter().map(|s| s.donatable).collect();
+    let mut plan = Vec::new();
+    for _ in 0..n_hosts.saturating_sub(1) {
+        let finish = |h: usize| pace[h] * remaining[h] as f64;
+        let donor = (0..n_hosts)
+            .max_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(y.cmp(&x)))
+            .expect("cluster has hosts");
+        let recipient = (0..n_hosts)
+            .min_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(x.cmp(&y)))
+            .expect("cluster has hosts");
+        if donor == recipient {
+            break;
+        }
+        let denom = pace[donor] + pace[recipient];
+        if denom <= 0.0 {
+            break;
+        }
+        let gap = finish(donor) - finish(recipient);
+        let k = ((gap / denom).floor() as u64).min(donatable[donor] as u64 / 2) as u32;
+        if k == 0 {
+            break;
+        }
+        plan.push(LiveMove { donor, recipient, k });
+        remaining[donor] -= k as u64;
+        remaining[recipient] += k as u64;
+        donatable[donor] -= k;
+    }
+    plan
+}
+
+/// One live epoch, single-threaded: the same per-session operation
+/// sequence as [`run_live_epoch_parallel`] — begin, then per
+/// checkpoint (drive → snapshot → plan → all donations in plan order →
+/// all absorptions in plan order), then finish — so the two drivers
+/// are bit-identical by construction. This is also what
+/// `PALLAS_THREADS=1` runs: the protocol needs every host's snapshot
+/// per checkpoint, so "sequential" interleaves hosts rather than
+/// completing them one by one.
+fn run_live_epoch_sequential(
+    sessions: &mut [Session<'_>],
+    steals_in: &mut [u64],
+    steals_out: &mut [u64],
+    outcomes: &mut Vec<crate::coordinator::EpochOutcome>,
+) -> Result<()> {
+    let n_hosts = sessions.len();
+    for s in sessions.iter_mut() {
+        s.begin_epoch()?;
+    }
+    let workloads: Vec<u64> = sessions.iter().map(|s| s.epoch_target()).collect();
+    let mut snaps = Vec::with_capacity(n_hosts);
+    for c in 0..LIVE_CHECKPOINTS {
+        snaps.clear();
+        for (h, s) in sessions.iter_mut().enumerate() {
+            s.drive_epoch_to(live_target(workloads[h], c))?;
+            snaps.push(s.live_progress());
+        }
+        let plan = live_plan(&snaps);
+        // Donation phase, then absorption phase — matching the parallel
+        // driver's two barrier-separated half-steps.
+        let mut moved: Vec<Vec<BatchId>> = Vec::with_capacity(plan.len());
+        for m in &plan {
+            let ids = sessions[m.donor].donate_live(m.k);
+            steals_out[m.donor] += ids.len() as u64;
+            moved.push(ids);
+        }
+        for (m, ids) in plan.iter().zip(&moved) {
+            if !ids.is_empty() {
+                sessions[m.recipient].absorb_live(ids)?;
+                steals_in[m.recipient] += ids.len() as u64;
+            }
+        }
+    }
+    for s in sessions.iter_mut() {
+        outcomes.push(s.finish_epoch()?);
+    }
+    Ok(())
+}
+
+/// One live epoch, one scoped thread per host. Checkpoints are
+/// barrier-synchronized: each host drives to its consumption target,
+/// publishes a progress snapshot, and after the barrier every thread
+/// computes the identical [`live_plan`] from the same snapshots; donors
+/// execute their moves, a second barrier publishes the transferred ids,
+/// recipients absorb theirs. All scheduling time is virtual, so the OS
+/// interleaving between barriers cannot reach any result bit.
+///
+/// Errors: a failing host raises the fleet-wide `failed` flag *before*
+/// its next barrier wait and then keeps attending every remaining
+/// barrier as a no-op (never deadlocking the others); once the flag is
+/// up no further plans are computed fleet-wide. The first error in
+/// **host order** is returned — deterministic, same as the sequential
+/// driver.
+fn run_live_epoch_parallel(
+    sessions: &mut [Session<'_>],
+    steals_in: &mut [u64],
+    steals_out: &mut [u64],
+    outcomes: &mut Vec<crate::coordinator::EpochOutcome>,
+) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Barrier, Mutex};
+
+    use crate::coordinator::{EpochOutcome, LiveProgress};
+
+    let n_hosts = sessions.len();
+    let c_total = LIVE_CHECKPOINTS as usize;
+    let barrier = Barrier::new(n_hosts);
+    let failed = AtomicBool::new(false);
+    // Pre-sized per-checkpoint slots — no reset step between
+    // checkpoints, so no write/clear race windows.
+    let snaps: Vec<Vec<Mutex<Option<LiveProgress>>>> = (0..c_total)
+        .map(|_| (0..n_hosts).map(|_| Mutex::new(None)).collect())
+        .collect();
+    // Transfer slots keyed by (checkpoint, plan-move index) — a donor
+    // can appear in several moves of one plan.
+    let transfers: Vec<Vec<Mutex<Option<Vec<BatchId>>>>> = (0..c_total)
+        .map(|_| (0..n_hosts.saturating_sub(1)).map(|_| Mutex::new(None)).collect())
+        .collect();
+
+    let mut results: Vec<(Result<EpochOutcome>, u64, u64)> = Vec::with_capacity(n_hosts);
+    std::thread::scope(|sc| {
+        let barrier = &barrier;
+        let failed = &failed;
+        let snaps = &snaps;
+        let transfers = &transfers;
+        let handles: Vec<_> = sessions
+            .iter_mut()
+            .enumerate()
+            .map(|(h, s)| {
+                sc.spawn(move || {
+                    let mut err: Option<anyhow::Error> = None;
+                    let mut d_in = 0u64;
+                    let mut d_out = 0u64;
+                    if let Err(e) = s.begin_epoch() {
+                        failed.store(true, Ordering::SeqCst);
+                        err = Some(e);
+                    }
+                    let w = if err.is_none() { s.epoch_target() } else { 0 };
+                    for c in 0..c_total {
+                        if err.is_none() {
+                            match s.drive_epoch_to(live_target(w, c as u32)) {
+                                Ok(_complete) => {
+                                    *snaps[c][h].lock().unwrap() = Some(s.live_progress());
+                                }
+                                Err(e) => {
+                                    failed.store(true, Ordering::SeqCst);
+                                    err = Some(e);
+                                }
+                            }
+                        }
+                        barrier.wait();
+                        // Flag raises happen-before every thread's wait
+                        // return, so the fleet agrees on `fleet_ok` and
+                        // therefore on whether a plan exists.
+                        let fleet_ok = !failed.load(Ordering::SeqCst);
+                        let plan = if fleet_ok {
+                            let snapshot: Vec<LiveProgress> = (0..snaps[c].len())
+                                .map(|i| {
+                                    snaps[c][i]
+                                        .lock()
+                                        .unwrap()
+                                        .expect("fleet_ok implies every snapshot published")
+                                })
+                                .collect();
+                            live_plan(&snapshot)
+                        } else {
+                            Vec::new()
+                        };
+                        for (i, m) in plan.iter().enumerate() {
+                            if m.donor == h {
+                                let ids = s.donate_live(m.k);
+                                d_out += ids.len() as u64;
+                                *transfers[c][i].lock().unwrap() = Some(ids);
+                            }
+                        }
+                        barrier.wait();
+                        for (i, m) in plan.iter().enumerate() {
+                            if m.recipient == h && err.is_none() {
+                                let ids = transfers[c][i]
+                                    .lock()
+                                    .unwrap()
+                                    .take()
+                                    .unwrap_or_default();
+                                if ids.is_empty() {
+                                    continue;
+                                }
+                                match s.absorb_live(&ids) {
+                                    Ok(()) => d_in += ids.len() as u64,
+                                    Err(e) => {
+                                        failed.store(true, Ordering::SeqCst);
+                                        err = Some(e);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    let outcome = match err {
+                        Some(e) => Err(e),
+                        None => s.finish_epoch(),
+                    };
+                    (outcome, d_in, d_out)
+                })
+            })
+            .collect();
+        for hd in handles {
+            match hd.join() {
+                Ok(v) => results.push(v),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+    });
+    for (h, (outcome, d_in, d_out)) in results.into_iter().enumerate() {
+        // First error by host order wins (deterministic).
+        outcomes.push(outcome?);
+        steals_in[h] += d_in;
+        steals_out[h] += d_out;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -438,10 +808,11 @@ mod tests {
 
     #[test]
     fn steal_mode_parse_roundtrip() {
-        for m in [StealMode::Off, StealMode::Epoch] {
+        for m in [StealMode::Off, StealMode::Epoch, StealMode::Live] {
             assert_eq!(StealMode::parse(m.name()), Some(m));
         }
         assert_eq!(StealMode::parse("EPOCH"), Some(StealMode::Epoch));
+        assert_eq!(StealMode::parse("Live"), Some(StealMode::Live));
         assert_eq!(StealMode::parse("none"), Some(StealMode::Off));
         assert_eq!(StealMode::parse("x"), None);
     }

@@ -15,7 +15,7 @@
 //! n_accel = 1
 //! n_csd = 1             # CSD fleet size (0 valid for cpu strategy)
 //! csd_assign = block    # block | stripe shard→CSD assignment
-//! steal = off           # off | epoch cross-host work stealing
+//! steal = off           # off | epoch | live cross-host work stealing
 //! loader = torchvision  # torchvision | dali_cpu | dali_gpu
 //! seed = 0
 //! trace_mode = full     # full | stats_only (streaming stats, O(1) mem)
@@ -99,7 +99,7 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
             }
             "steal" => {
                 let s = StealMode::parse(v)
-                    .with_context(|| format!("bad steal {v:?} (expected off | epoch)"))?;
+                    .with_context(|| format!("bad steal {v:?} (expected off | epoch | live)"))?;
                 b.steal(s)
             }
             "n_batches" => b.n_batches(v.parse().context("n_batches")?),
@@ -251,6 +251,7 @@ mod tests {
         assert_eq!(cfg.steal, StealMode::Epoch);
         assert!(load("steal = sometimes\n", &[]).is_err());
         assert_eq!(load("steal = off\n", &[]).unwrap().steal, StealMode::Off);
+        assert_eq!(load("steal = live\n", &[]).unwrap().steal, StealMode::Live);
         // shape validation flows through the builder
         assert!(load("n_hosts = 2\n", &[]).is_err());
         assert!(load("n_hosts = 0\n", &[]).is_err());

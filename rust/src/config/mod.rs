@@ -221,10 +221,12 @@ pub struct ExperimentConfig {
     pub n_csd: u32,
     /// Shard→CSD assignment mode (`csd_assign = block|stripe`).
     pub csd_assign: CsdAssign,
-    /// Cross-host work stealing (`steal = off|epoch`): whether a
+    /// Cross-host work stealing (`steal = off|epoch|live`): whether a
     /// multi-host cluster rebalances unstarted batch ranges from the
-    /// slowest host between epochs. `off` (default) keeps every host on
-    /// its static shard — bit-identical to independent sessions.
+    /// slowest host between epochs (`epoch`), additionally moves
+    /// unclaimed batches mid-epoch at consumption checkpoints (`live`),
+    /// or not at all. `off` (default) keeps every host on its static
+    /// shard — bit-identical to independent sessions.
     pub steal: StealMode,
     /// Batches per epoch (dataset_size / batch_size).
     pub n_batches: u32,

@@ -83,10 +83,13 @@ pub trait CostProvider {
 /// and benches hand in `FixedCosts` they keep owning); the
 /// `coordinator::Session` path builds the provider from the config and
 /// hands the engine ownership. One enum instead of a generic keeps
-/// `Engine` object-safe for both.
+/// `Engine` object-safe for both. Both variants require `Send`: the
+/// cluster driver moves whole `Session`s (engine + provider) onto
+/// scoped worker threads, so every provider in the chain must be able
+/// to cross a thread boundary.
 pub enum CostSource<'a> {
-    Owned(Box<dyn CostProvider + 'a>),
-    Borrowed(&'a mut dyn CostProvider),
+    Owned(Box<dyn CostProvider + Send + 'a>),
+    Borrowed(&'a mut (dyn CostProvider + Send)),
 }
 
 impl CostSource<'_> {

@@ -111,8 +111,28 @@ pub struct Engine<'a> {
     max_free: Secs,
     // ---- per-epoch state ----
     cursors: Vec<HeadTailCursor>,
+    /// Per-accelerator consumption target for the **current** epoch.
+    /// Equals `shards[a].len()` at every `reset_epoch`; diverges only
+    /// when a live cross-host steal (`steal = live`) moves batches
+    /// mid-epoch — donations shrink it, absorptions grow it. All
+    /// epoch-progress probes (`shard_len`, selection rebuild, consume
+    /// bookkeeping, the iteration budget) read this, never the shards,
+    /// so a live steal retargets the epoch without touching the
+    /// next-epoch pool (loans are transient: the donor's shard keeps
+    /// its ids for the following epoch).
+    epoch_quota: Vec<u32>,
+    /// Batch ids absorbed mid-epoch from another host (`steal = live`),
+    /// per accelerator. Kept outside the [`HeadTailCursor`] — growing a
+    /// cursor after tail claims would re-issue already-claimed local
+    /// indices — and drained FIFO by the CPU head via
+    /// [`Engine::claim_head_gid`]. Always empty unless a live steal
+    /// fires, so every other mode is bit-identical by construction.
+    live_extra: Vec<VecDeque<BatchId>>,
     queues: Vec<VecDeque<HostReady>>,
     consumed: Vec<u32>,
+    /// Batches consumed this epoch (sum of `consumed`), maintained O(1)
+    /// so the live-steal checkpoint probe is a counter read.
+    epoch_consumed: u64,
     /// Consumed-from-CSD counter (per shard).
     from_csd: Vec<u32>,
     /// Total batches consumed across epochs.
@@ -140,7 +160,7 @@ impl<'a> Engine<'a> {
     pub fn new(
         cfg: &'a ExperimentConfig,
         spec: &DatasetSpec,
-        costs: &'a mut dyn CostProvider,
+        costs: &'a mut (dyn CostProvider + Send),
     ) -> Self {
         Engine::with_topology(
             cfg,
@@ -262,8 +282,11 @@ impl<'a> Engine<'a> {
             first_unfinished_idx: 0,
             max_free: 0.0,
             cursors: shards.iter().map(|s| HeadTailCursor::new(s.len())).collect(),
+            epoch_quota: shards.iter().map(|s| s.len()).collect(),
+            live_extra: vec![VecDeque::new(); n_accel],
             queues: vec![VecDeque::new(); n_accel],
             consumed: vec![0; n_accel],
+            epoch_consumed: 0,
             from_csd: vec![0; n_accel],
             shards,
             total_consumed: 0,
@@ -277,9 +300,9 @@ impl<'a> Engine<'a> {
     }
 
     /// Rebuild the incremental selection structures from the ground
-    /// truth (`consumed` vs shard length, accelerator lanes). Runs at
-    /// construction and every epoch boundary — O(n); all intra-epoch
-    /// maintenance is incremental.
+    /// truth (`consumed` vs epoch quota, accelerator lanes). Runs at
+    /// construction, every epoch boundary, and after a live steal moves
+    /// the quota — O(n); all intra-epoch maintenance is incremental.
     fn rebuild_selection(&mut self) {
         let n = self.accels.len();
         self.ready_accels.clear();
@@ -287,17 +310,18 @@ impl<'a> Engine<'a> {
         for a in 0..n {
             let free = self.accels[a].free_at();
             self.max_free = self.max_free.max(free);
-            if self.consumed[a] < self.shards[a].len() {
+            if self.consumed[a] < self.epoch_quota[a] {
                 self.ready_accels.upsert(a, free);
             }
         }
         self.first_unfinished_idx = (0..n)
-            .find(|&a| self.consumed[a] < self.shards[a].len())
+            .find(|&a| self.consumed[a] < self.epoch_quota[a])
             .unwrap_or(n);
     }
 
-    /// Restart every CSD, reset cursors/queues/counters; unconsumed
-    /// queue entries are billed as waste.
+    /// Restart every CSD, reset cursors/quotas/queues/counters;
+    /// unconsumed queue entries and unclaimed live loans are billed as
+    /// waste.
     pub fn reset_epoch(&mut self) {
         for csd in &mut self.csds {
             csd.restart();
@@ -305,11 +329,18 @@ impl<'a> Engine<'a> {
         for a in 0..self.shards.len() {
             let len = self.shards[a].len();
             self.cursors[a] = HeadTailCursor::new(len);
+            self.epoch_quota[a] = len;
+            // A live loan never outlives its epoch (the epoch cannot end
+            // with quota unmet, and absorbed ids count toward the quota);
+            // bill any leftover defensively rather than leak it.
+            self.wasted += self.live_extra[a].len() as u64;
+            self.live_extra[a].clear();
             self.wasted += self.queues[a].len() as u64;
             self.queues[a].clear();
             self.consumed[a] = 0;
             self.from_csd[a] = 0;
         }
+        self.epoch_consumed = 0;
         self.rebuild_selection();
     }
 
@@ -355,13 +386,28 @@ impl<'a> Engine<'a> {
         self.topology.dirs_of(c)[i] as usize
     }
 
+    /// Accelerator `a`'s consumption target for the **current** epoch.
+    /// Equals the shard length except while a live steal is in flight
+    /// (donations shrink it, absorptions grow it) — policies size their
+    /// per-epoch allocations from this, never from the raw shard.
     pub fn shard_len(&self, a: usize) -> u32 {
-        self.shards[a].len()
+        self.epoch_quota[a]
     }
 
     /// Batches consumed by accelerator `a` this epoch.
     pub fn consumed(&self, a: usize) -> u32 {
         self.consumed[a]
+    }
+
+    /// Batches consumed this epoch across all accelerators. O(1).
+    pub fn epoch_consumed(&self) -> u64 {
+        self.epoch_consumed
+    }
+
+    /// This epoch's total consumption target (sum of per-accelerator
+    /// quotas; tracks live steals).
+    pub fn epoch_target(&self) -> u64 {
+        self.epoch_quota.iter().map(|&q| q as u64).sum()
     }
 
     /// CSD-sourced batches consumed by accelerator `a` this epoch.
@@ -433,6 +479,86 @@ impl<'a> Engine<'a> {
             self.shards[a].push(id);
             by_len.push(Reverse((len + 1, a)));
         }
+    }
+
+    /// Batches accelerator `a` could give up mid-epoch without touching
+    /// claimed work: unclaimed cursor batches plus unclaimed live loans.
+    fn live_unclaimed(&self, a: usize) -> u32 {
+        self.cursors[a].remaining() + self.live_extra[a].len() as u32
+    }
+
+    /// Batches this engine could donate mid-epoch right now (sum of
+    /// [`Engine::live_unclaimed`] — eagerly-claimed work, e.g. CSD
+    /// products already in flight, is never stolen).
+    pub fn live_donatable(&self) -> u32 {
+        (0..self.shards.len()).map(|a| self.live_unclaimed(a)).sum()
+    }
+
+    /// `steal = live`: remove up to `n` **unclaimed** batches from the
+    /// current epoch, always from the accelerator with the most
+    /// unclaimed work (ties → lowest index). Per batch, a previously
+    /// absorbed loan (`live_extra` back) goes first, then the cursor
+    /// tail — the exact batches the CSD prong would have reached last.
+    /// Shrinks `epoch_quota` (never below `consumed`: only unclaimed
+    /// work moves) and leaves `shards` untouched, so the loan is
+    /// transient — the donor regains these ids at the next epoch reset
+    /// while the recipient's shard never grows. Returns the exact ids
+    /// removed; exactly-once per epoch holds because a batch is either
+    /// here (removed from cursor/extra before the call returns) or
+    /// consumable locally, never both.
+    pub(crate) fn live_donate(&mut self, n: u32) -> Vec<BatchId> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut by_avail: BinaryHeap<(u32, Reverse<usize>)> = (0..self.shards.len())
+            .map(|a| (self.live_unclaimed(a), Reverse(a)))
+            .collect();
+        let mut out = Vec::new();
+        for _ in 0..n {
+            let Some((avail, Reverse(a))) = by_avail.pop() else { break };
+            if avail == 0 {
+                break;
+            }
+            let gid = match self.live_extra[a].pop_back() {
+                Some(gid) => gid,
+                None => {
+                    let local = self.cursors[a]
+                        .claim_tail()
+                        .expect("live_unclaimed > 0 with empty extra has cursor tail");
+                    self.global_id(a, local)
+                }
+            };
+            self.epoch_quota[a] -= 1;
+            out.push(gid);
+            by_avail.push((avail - 1, Reverse(a)));
+        }
+        if !out.is_empty() {
+            self.rebuild_selection();
+        }
+        out
+    }
+
+    /// `steal = live`: add stolen batches to the **current** epoch's
+    /// workload, each onto the accelerator with the most headroom left
+    /// this epoch (smallest `quota − consumed`, ties → lowest index).
+    /// Grows `epoch_quota` and queues the ids as live loans for the CPU
+    /// head ([`Engine::claim_head_gid`]); `shards` stay untouched, so
+    /// the next epoch's pool is unaffected.
+    pub(crate) fn live_absorb(&mut self, batches: &[BatchId]) {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        if batches.is_empty() {
+            return;
+        }
+        let mut by_left: BinaryHeap<Reverse<(u32, usize)>> = (0..self.shards.len())
+            .map(|a| Reverse((self.epoch_quota[a] - self.consumed[a], a)))
+            .collect();
+        for &id in batches {
+            let Reverse((left, a)) = by_left.pop().expect("engine has at least one shard");
+            self.live_extra[a].push_back(id);
+            self.epoch_quota[a] += 1;
+            by_left.push(Reverse((left + 1, a)));
+        }
+        self.rebuild_selection();
     }
 
     /// Unclaimed batches left on shard `a`'s cursor.
@@ -581,12 +707,25 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Claim the next CPU-head batch id for accelerator `a`: the shard
+    /// cursor's head first (bit-identical to the pre-live claim order),
+    /// then live loans absorbed mid-epoch (`steal = live`), FIFO. The
+    /// CSD prong stays cursor-only ([`Engine::csd_produce_one`]) —
+    /// loans arrived because this host is the *fast* one, so they feed
+    /// the always-available CPU path; every policy's claim chain falls
+    /// back to [`Engine::cpu_next`], which guarantees loans drain.
+    fn claim_head_gid(&mut self, a: usize) -> Option<BatchId> {
+        if let Some(local) = self.cursors[a].claim_head() {
+            return Some(self.global_id(a, local));
+        }
+        self.live_extra[a].pop_front()
+    }
+
     /// Refill accelerator `a`'s CPU prefetch queue.
     fn refill(&mut self, a: usize, now: Secs) {
         let depth = self.depth(a);
         while self.queues[a].len() < depth {
-            let Some(local) = self.cursors[a].claim_head() else { break };
-            let gid = self.global_id(a, local);
+            let Some(gid) = self.claim_head_gid(a) else { break };
             let cost = self.costs.provider_mut().host_batch(gid);
             let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
             self.note_host_ready(a, &cost, &ready);
@@ -598,8 +737,7 @@ impl<'a> Engine<'a> {
     /// queued otherwise).
     pub fn cpu_next(&mut self, a: usize, now: Secs) -> Option<HostReady> {
         if self.depth(a) == 0 {
-            let local = self.cursors[a].claim_head()?;
-            let gid = self.global_id(a, local);
+            let gid = self.claim_head_gid(a)?;
             let cost = self.costs.provider_mut().host_batch(gid);
             let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
             self.note_host_ready(a, &cost, &ready);
@@ -651,6 +789,7 @@ impl<'a> Engine<'a> {
         let cost = self.costs.provider_mut().train(gid, source == BatchSource::Csd);
         self.accels[a].consume(gid, source, data_ready, &cost, &mut self.trace);
         self.consumed[a] += 1;
+        self.epoch_consumed += 1;
         self.total_consumed += 1;
         if source == BatchSource::Csd {
             self.from_csd[a] += 1;
@@ -658,14 +797,14 @@ impl<'a> Engine<'a> {
         }
         let free = self.accels[a].free_at();
         self.max_free = self.max_free.max(free);
-        if self.consumed[a] < self.shards[a].len() {
+        if self.consumed[a] < self.epoch_quota[a] {
             self.ready_accels.upsert(a, free);
         } else {
             self.ready_accels.remove(a);
             if a == self.first_unfinished_idx {
                 let n = self.accels.len();
                 let mut i = self.first_unfinished_idx;
-                while i < n && self.consumed[i] >= self.shards[i].len() {
+                while i < n && self.consumed[i] >= self.epoch_quota[i] {
                     i += 1;
                 }
                 self.first_unfinished_idx = i;
@@ -680,9 +819,11 @@ impl<'a> Engine<'a> {
     fn iter_budget(&self) -> u64 {
         // Saturating: huge synthetic configs (u32-scale shards × many
         // accelerators) must clamp to "effectively unbounded", not wrap.
-        self.shards
+        // Sized from the live quota so a mid-epoch absorption widens the
+        // guard along with the workload it now has to cover.
+        self.epoch_quota
             .iter()
-            .map(|s| s.len() as u64)
+            .map(|&q| q as u64)
             .sum::<u64>()
             .saturating_add(16)
             .saturating_mul(MAX_ITERS_FACTOR)
@@ -769,7 +910,7 @@ impl<'a> Engine<'a> {
 pub fn run(
     cfg: &ExperimentConfig,
     spec: &DatasetSpec,
-    costs: &mut dyn CostProvider,
+    costs: &mut (dyn CostProvider + Send),
     policy: &mut dyn SchedPolicy,
 ) -> Result<(RunReport, Trace)> {
     // Built through the fallible path so an oversized hand-built config
@@ -787,11 +928,12 @@ pub fn run(
     Ok((report, trace))
 }
 
-/// One full epoch of the per-epoch protocol — the shared loop body of
-/// [`run`] and `Session::run_epoch` (a step-wise session must advance
-/// epoch by epoch so future sharded/work-stealing coordinators can
-/// interleave work between them).
-pub(crate) fn run_one_epoch(
+/// Epoch setup: reset per-epoch state and run the policy's epoch-start
+/// hook (delivering any observation events it scheduled eagerly). The
+/// first third of the per-epoch protocol; [`run_one_epoch`] composes
+/// all three, `Session` calls them separately so a live-steal
+/// checkpoint can interrupt the drive phase.
+pub(crate) fn begin_epoch(
     eng: &mut Engine<'_>,
     policy: &mut dyn SchedPolicy,
     ready_buf: &mut Vec<BatchReady>,
@@ -803,11 +945,35 @@ pub(crate) fn run_one_epoch(
     for ev in ready_buf.iter() {
         policy.on_batch_ready(ev);
     }
+    Ok(())
+}
+
+/// Drive the event loop until `target` epoch-consumed batches (`None`
+/// = until the epoch completes). Returns `true` when the epoch is
+/// complete (no accelerator selectable). Resumable: `iters` persists
+/// across calls within one epoch so the runaway guard covers the whole
+/// epoch, and the budget is re-read per call because a live absorption
+/// widens the workload it must cover. With `target = None` the loop is
+/// statement-for-statement the pre-split epoch loop — bit-identical.
+pub(crate) fn drive_epoch(
+    eng: &mut Engine<'_>,
+    policy: &mut dyn SchedPolicy,
+    ready_buf: &mut Vec<BatchReady>,
+    target: Option<u64>,
+    iters: &mut u64,
+) -> Result<bool> {
     let budget = eng.iter_budget();
-    let mut iters: u64 = 0;
-    while let Some(a) = policy.select_accel(eng) {
-        iters += 1;
-        if iters > budget {
+    loop {
+        if let Some(t) = target {
+            if eng.epoch_consumed() >= t {
+                return Ok(false);
+            }
+        }
+        let Some(a) = policy.select_accel(eng) else {
+            return Ok(true);
+        };
+        *iters += 1;
+        if *iters > budget {
             bail!("{}: event loop did not converge", policy.name());
         }
         policy.claim_next(eng, a)?;
@@ -818,7 +984,28 @@ pub(crate) fn run_one_epoch(
             }
         }
     }
+}
+
+/// Epoch teardown: the policy's end hook plus calibration. The final
+/// third of the per-epoch protocol.
+pub(crate) fn end_epoch(eng: &mut Engine<'_>, policy: &mut dyn SchedPolicy) -> Result<()> {
     policy.on_epoch_end(eng)?;
     policy.calibrate(eng);
     Ok(())
+}
+
+/// One full epoch of the per-epoch protocol — the shared loop body of
+/// [`run`] and `Session::run_epoch` (a step-wise session must advance
+/// epoch by epoch so sharded/work-stealing coordinators can interleave
+/// work between them; `steal = live` additionally interrupts the drive
+/// phase at consumption checkpoints via [`drive_epoch`]'s `target`).
+pub(crate) fn run_one_epoch(
+    eng: &mut Engine<'_>,
+    policy: &mut dyn SchedPolicy,
+    ready_buf: &mut Vec<BatchReady>,
+) -> Result<()> {
+    begin_epoch(eng, policy, ready_buf)?;
+    let mut iters: u64 = 0;
+    drive_epoch(eng, policy, ready_buf, None, &mut iters)?;
+    end_epoch(eng, policy)
 }

@@ -38,7 +38,7 @@ pub mod policies;
 pub mod schedule;
 pub mod session;
 
-pub use session::{EpochOutcome, Session};
+pub use session::{EpochOutcome, LiveProgress, Session};
 
 use anyhow::Result;
 

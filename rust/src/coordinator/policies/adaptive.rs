@@ -118,6 +118,12 @@ impl SchedPolicy for AdaptivePolicy {
         self.inner().on_epoch_end(eng)
     }
 
+    fn on_workload_changed(&mut self, eng: &Engine<'_>) {
+        // Only the active mode's allocations matter; WRR is stateless
+        // against quota moves, MTE re-clamps its split.
+        self.inner().on_workload_changed(eng);
+    }
+
     fn calibrate(&mut self, _eng: &Engine<'_>) {
         if self.prealloc {
             return;

@@ -74,10 +74,21 @@ pub trait SchedPolicy {
     /// Epoch-boundary recalibration: update learned throughput state
     /// (e.g. the Adaptive policy's mode-switch decision).
     fn calibrate(&mut self, _eng: &Engine<'_>) {}
+
+    /// The current epoch's workload just changed under the policy — a
+    /// live cross-host steal donated or absorbed batches mid-epoch
+    /// (`steal = live`, DESIGN.md §Cluster). Policies holding per-epoch
+    /// allocations derived from `Engine::shard_len` (MTE's `n_cpu`
+    /// split) must re-clamp them here; stateless policies ignore it.
+    /// Never called unless a live steal actually fires, so the default
+    /// no-op preserves bit-parity for every other mode.
+    fn on_workload_changed(&mut self, _eng: &Engine<'_>) {}
 }
 
-/// Build the policy for `cfg.strategy`.
-pub fn for_config(cfg: &ExperimentConfig) -> Box<dyn SchedPolicy> {
+/// Build the policy for `cfg.strategy`. The box is `Send` because the
+/// cluster driver moves each host's `Session` (policy included) onto a
+/// scoped worker thread.
+pub fn for_config(cfg: &ExperimentConfig) -> Box<dyn SchedPolicy + Send> {
     match cfg.strategy {
         Strategy::CpuOnly => Box::new(CpuOnlyPolicy),
         Strategy::CsdOnly => Box::new(CsdOnlyPolicy),

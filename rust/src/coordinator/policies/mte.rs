@@ -227,6 +227,25 @@ impl SchedPolicy for MtePolicy {
         self.resolve_and_fill(eng);
         Ok(())
     }
+
+    fn on_workload_changed(&mut self, eng: &Engine<'_>) {
+        // A live steal moved this epoch's quota under the resolved
+        // split. Re-clamp every allocation into the new quota:
+        // `n_cpu[a] ≤ shard_len(a)` keeps the CSD-side quota
+        // (`shard_len − n_cpu`) from underflowing u32 after a donation,
+        // and `n_cpu[a] ≥ cpu batches already consumed` keeps the CPU
+        // phase's `consumed − from_csd < limit` guard monotone (a
+        // donation only removes *unclaimed* batches, so consumed work
+        // always fits the shrunk quota). Unresolved shards need nothing
+        // — their split is computed from the live quota when the
+        // calibration lands.
+        for a in 0..eng.n_accel() {
+            if let Some(limit) = self.n_cpu[a] {
+                let cpu_done = eng.consumed(a) - eng.from_csd(a);
+                self.n_cpu[a] = Some(limit.min(eng.shard_len(a)).max(cpu_done));
+            }
+        }
+    }
 }
 
 #[cfg(test)]

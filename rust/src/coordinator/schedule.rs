@@ -27,7 +27,7 @@ use crate::trace::Trace;
 pub fn run_schedule(
     cfg: &ExperimentConfig,
     spec: &DatasetSpec,
-    costs: &mut dyn CostProvider,
+    costs: &mut (dyn CostProvider + Send),
 ) -> Result<(RunReport, Trace)> {
     let mut policy = policies::for_config(cfg);
     engine::run(cfg, spec, costs, policy.as_mut())

@@ -60,14 +60,45 @@ pub struct EpochOutcome {
     pub unstarted: u64,
 }
 
+/// Mid-epoch progress snapshot for the live-steal protocol (`steal =
+/// live`): what one host publishes at a checkpoint so the fleet can
+/// project per-host finish times and move unclaimed work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LiveProgress {
+    /// Batches consumed so far this epoch.
+    pub consumed: u64,
+    /// Virtual seconds this epoch has run so far (pace numerator —
+    /// `elapsed / consumed` ≈ seconds per batch at this host's pace).
+    pub elapsed: Secs,
+    /// Batches still to consume this epoch (current quota − consumed).
+    pub remaining: u64,
+    /// Batches this host could give up right now without touching
+    /// claimed work (the steal ceiling).
+    pub donatable: u32,
+}
+
 /// One experiment bound to one device topology: the stable run surface.
+/// `Send` end to end (policy, costs, engine) — the cluster driver moves
+/// whole sessions onto scoped worker threads.
 pub struct Session<'a> {
     engine: Engine<'a>,
-    policy: Box<dyn SchedPolicy>,
+    policy: Box<dyn SchedPolicy + Send>,
     epochs_run: u32,
     /// Reusable event scratch buffer: swapped with the engine's event
     /// vector each delivery round, so steady state allocates nothing.
     ready_buf: Vec<BatchReady>,
+    /// An epoch is mid-flight (`begin_epoch` ran, `finish_epoch` has
+    /// not): the live-steal surface is open, the epoch-boundary steal
+    /// surface is closed.
+    epoch_open: bool,
+    /// Event-loop iterations so far this epoch — persists across
+    /// interrupted `drive` calls so the runaway guard covers the whole
+    /// epoch exactly as the uninterrupted loop would.
+    epoch_iters: u64,
+    /// `max_accel_free` when the open epoch began (span baseline).
+    epoch_span_start: Secs,
+    /// `total_consumed` when the open epoch began.
+    epoch_consumed_before: u64,
 }
 
 impl<'a> Session<'a> {
@@ -77,7 +108,7 @@ impl<'a> Session<'a> {
     /// drive virtual durations).
     pub fn new(cfg: &'a ExperimentConfig, topology: Topology) -> Result<Session<'a>> {
         let spec = Self::spec_of(cfg)?;
-        let costs: Box<dyn CostProvider + 'a> = match &cfg.exec {
+        let costs: Box<dyn CostProvider + Send + 'a> = match &cfg.exec {
             ExecMode::Analytic => Box::new(AnalyticCosts::new(cfg, &spec)?),
             ExecMode::Real { artifacts_dir } => Box::new(crate::runtime::RealSession::new(
                 std::path::Path::new(artifacts_dir),
@@ -104,7 +135,7 @@ impl<'a> Session<'a> {
         cfg: &'a ExperimentConfig,
         topology: Topology,
         spec: &DatasetSpec,
-        costs: &'a mut dyn CostProvider,
+        costs: &'a mut (dyn CostProvider + Send),
     ) -> Result<Session<'a>> {
         Self::assemble(cfg, spec, CostSource::Borrowed(costs), topology)
     }
@@ -116,7 +147,7 @@ impl<'a> Session<'a> {
     pub fn with_owned_costs(
         cfg: &'a ExperimentConfig,
         topology: Topology,
-        costs: Box<dyn CostProvider + 'a>,
+        costs: Box<dyn CostProvider + Send + 'a>,
     ) -> Result<Session<'a>> {
         let spec = Self::spec_of(cfg)?;
         Self::assemble(cfg, &spec, CostSource::Owned(costs), topology)
@@ -145,6 +176,10 @@ impl<'a> Session<'a> {
             policy,
             epochs_run: 0,
             ready_buf: Vec::new(),
+            epoch_open: false,
+            epoch_iters: 0,
+            epoch_span_start: 0.0,
+            epoch_consumed_before: 0,
         })
     }
 
@@ -168,28 +203,131 @@ impl<'a> Session<'a> {
     /// Returns the [`EpochOutcome`] — makespan, batches, residual work
     /// — the cluster driver's rebalancing signal.
     pub fn run_epoch(&mut self) -> Result<EpochOutcome> {
+        self.begin_epoch()?;
+        self.finish_epoch()
+    }
+
+    /// Open the next epoch: per-epoch reset + the policy's epoch-start
+    /// hook, no batches consumed yet. The first phase of the
+    /// interruptible epoch surface (`steal = live`); paired with
+    /// [`Session::finish_epoch`], optionally with
+    /// [`Session::drive_epoch_to`] checkpoints in between.
+    /// [`Session::run_epoch`] is exactly this pair, so the uninterrupted
+    /// path is bit-identical.
+    pub fn begin_epoch(&mut self) -> Result<()> {
+        if self.epoch_open {
+            bail!("epoch already open (finish_epoch before beginning another)");
+        }
         if self.epochs_remaining() == 0 {
             bail!(
                 "session already ran all {} epochs",
                 self.engine.cfg().epochs
             );
         }
-        let span_start = self.engine.max_accel_free();
-        let consumed_before = self.engine.total_consumed();
-        engine::run_one_epoch(&mut self.engine, self.policy.as_mut(), &mut self.ready_buf)?;
+        self.epoch_span_start = self.engine.max_accel_free();
+        self.epoch_consumed_before = self.engine.total_consumed();
+        engine::begin_epoch(&mut self.engine, self.policy.as_mut(), &mut self.ready_buf)?;
+        self.epoch_iters = 0;
+        self.epoch_open = true;
+        Ok(())
+    }
+
+    /// Drive the open epoch until `target` batches have been consumed
+    /// this epoch (a live-steal checkpoint), or the epoch completes,
+    /// whichever first. Returns `true` when the epoch is already
+    /// complete.
+    pub fn drive_epoch_to(&mut self, target: u64) -> Result<bool> {
+        if !self.epoch_open {
+            bail!("no open epoch to drive (call begin_epoch first)");
+        }
+        engine::drive_epoch(
+            &mut self.engine,
+            self.policy.as_mut(),
+            &mut self.ready_buf,
+            Some(target),
+            &mut self.epoch_iters,
+        )
+    }
+
+    /// Drive the open epoch to completion and close it, producing the
+    /// same [`EpochOutcome`] the one-shot [`Session::run_epoch`] would.
+    pub fn finish_epoch(&mut self) -> Result<EpochOutcome> {
+        if !self.epoch_open {
+            bail!("no open epoch to finish (call begin_epoch first)");
+        }
+        engine::drive_epoch(
+            &mut self.engine,
+            self.policy.as_mut(),
+            &mut self.ready_buf,
+            None,
+            &mut self.epoch_iters,
+        )?;
+        engine::end_epoch(&mut self.engine, self.policy.as_mut())?;
+        self.epoch_open = false;
         self.epochs_run += 1;
         let makespan = self.engine.max_accel_free();
         Ok(EpochOutcome {
             epochs_run: self.epochs_run,
             makespan,
-            epoch_span: makespan - span_start,
-            batches: self.engine.total_consumed() - consumed_before,
+            epoch_span: makespan - self.epoch_span_start,
+            batches: self.engine.total_consumed() - self.epoch_consumed_before,
             unstarted: if self.epochs_remaining() > 0 {
                 self.engine.epoch_workload()
             } else {
                 0
             },
         })
+    }
+
+    /// This epoch's consumption target (moves with live steals). Only
+    /// meaningful while an epoch is open.
+    pub fn epoch_target(&self) -> u64 {
+        self.engine.epoch_target()
+    }
+
+    /// Mid-epoch progress snapshot — what a live-steal checkpoint
+    /// publishes so the fleet can project this host's finish time.
+    pub fn live_progress(&self) -> LiveProgress {
+        LiveProgress {
+            consumed: self.engine.epoch_consumed(),
+            elapsed: self.engine.max_accel_free() - self.epoch_span_start,
+            remaining: self.engine.epoch_target() - self.engine.epoch_consumed(),
+            donatable: self.engine.live_donatable(),
+        }
+    }
+
+    /// Donate up to `n` **unclaimed** batches out of the open epoch —
+    /// the donor half of a live steal (`steal = live`). Shrinks this
+    /// epoch's quota only; the next epoch's shard pool is untouched
+    /// (the loan is transient). Notifies the policy so quota-derived
+    /// allocations re-clamp. Empty when no epoch is open.
+    pub fn donate_live(&mut self, n: u32) -> Vec<BatchId> {
+        if !self.epoch_open {
+            return Vec::new();
+        }
+        let ids = self.engine.live_donate(n);
+        if !ids.is_empty() {
+            self.policy.on_workload_changed(&self.engine);
+        }
+        ids
+    }
+
+    /// Absorb batches stolen live from another host into the open
+    /// epoch — the recipient half of a live steal. Fails when no epoch
+    /// is open (the batches would vanish from the exactly-once ledger).
+    pub fn absorb_live(&mut self, batches: &[BatchId]) -> Result<()> {
+        if batches.is_empty() {
+            return Ok(());
+        }
+        if !self.epoch_open {
+            bail!(
+                "cannot live-absorb {} batches: no epoch is open",
+                batches.len()
+            );
+        }
+        self.engine.live_absorb(batches);
+        self.policy.on_workload_changed(&self.engine);
+        Ok(())
     }
 
     /// Next-epoch workload (batches this session will consume if no
@@ -207,7 +345,7 @@ impl<'a> Session<'a> {
     /// cluster's exactly-once ledger). Call only between epochs —
     /// `run_epoch` is atomic, so every caller is.
     pub fn donate_tail(&mut self, n: u32) -> Vec<BatchId> {
-        if self.epochs_remaining() == 0 {
+        if self.epochs_remaining() == 0 || self.epoch_open {
             return Vec::new();
         }
         self.engine.donate_tail(n)
@@ -223,6 +361,9 @@ impl<'a> Session<'a> {
                 batches.len(),
                 self.engine.cfg().epochs
             );
+        }
+        if self.epoch_open {
+            bail!("cannot boundary-absorb mid-epoch: use absorb_live while an epoch is open");
         }
         self.engine.absorb(batches);
         Ok(())
@@ -244,6 +385,9 @@ impl<'a> Session<'a> {
     pub fn finish(self) -> Result<RunResult> {
         if self.epochs_run == 0 {
             bail!("session finished before any epoch ran (call run_epoch()/run() first)");
+        }
+        if self.epoch_open {
+            bail!("session finished with an epoch still open (call finish_epoch first)");
         }
         let csd_devices = self.engine.csd_device_reports();
         // The engine moves the loss curve out of its cost provider —

@@ -80,7 +80,7 @@ fn real_main() -> Result<()> {
                  ddlp e2e   [--artifacts DIR] [--set k=v]...\n  \
                  ddlp version\n\nconfig keys: model, pipeline, strategy (cpu|csd|mte|wrr|adaptive), \
                  num_workers, n_hosts, n_accel, n_csd, csd_assign (block|stripe), \
-                 steal (off|epoch), n_batches, epochs, \
+                 steal (off|epoch|live), n_batches, epochs, \
                  loader, seed, csd_slowdown, adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()

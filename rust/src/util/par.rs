@@ -1,33 +1,71 @@
 //! Minimal scoped-thread parallel map (offline stand-in for rayon).
 //!
 //! The paper-table generators ([`crate::bench`]) run dozens of
-//! independent experiments per table; `par_map` fans them out across
-//! the machine's cores while returning results **in input order**, so
-//! table rows stay deterministic regardless of completion order.
+//! independent experiments per table, and the cluster driver
+//! ([`crate::cluster`]) fans one `Session::run_epoch` per host out of
+//! the same pool; `par_map` spreads them across the machine's cores
+//! while returning results **in input order**, so table rows and
+//! per-host outcomes stay deterministic regardless of completion order.
 //!
 //! Work distribution is a shared atomic cursor over the task list
 //! (work-stealing-free, but experiments are coarse enough that static
 //! imbalance is negligible). Worker panics propagate to the caller via
 //! `std::thread::scope`'s join, so a failing experiment still fails the
-//! bench/test loudly.
+//! bench/test loudly. Fallible tasks go through [`try_par_map`], which
+//! surfaces the first error (by **input order**, not completion order —
+//! deterministic) instead of forcing callers to panic.
+//!
+//! The `PALLAS_THREADS` env knob caps the worker count (down to 1 =
+//! fully sequential): it keeps nested fan-outs — a bench-table
+//! `par_map` whose experiments are parallel clusters — from
+//! oversubscribing, and pins CI determinism checks to an exact thread
+//! count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Apply `f` to every item, on up to `available_parallelism()` threads;
-/// the result vector preserves input order. Falls back to a sequential
-/// map for empty/singleton inputs or single-core machines.
+/// Worker-count ceiling for the parallel maps: `PALLAS_THREADS` when
+/// set to a positive integer (an unparsable value falls back — the maps
+/// degrade to fewer threads, never to wrong results), otherwise
+/// `available_parallelism()`.
+pub fn max_threads() -> usize {
+    if let Ok(raw) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = raw.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+        eprintln!("[par] WARNING: ignoring unparsable PALLAS_THREADS={raw:?}");
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item, on up to [`max_threads`] threads; the
+/// result vector preserves input order. Falls back to a sequential map
+/// for empty/singleton inputs or single-core machines.
 pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    let threads = max_threads();
+    par_map_n(items, threads, f)
+}
+
+/// [`par_map`] with an explicit worker-thread count (callers that must
+/// pin concurrency — e.g. the cluster parity tests force one thread per
+/// host so true interleaving is exercised even on a single-core box).
+pub fn par_map_n<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
     let n = items.len();
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(n);
+    let threads = threads.min(n);
     if threads <= 1 {
         return items.into_iter().map(f).collect();
     }
@@ -59,6 +97,33 @@ where
                 .expect("par_map worker exited without a result")
         })
         .collect()
+}
+
+/// Fallible [`par_map`]: every task runs to completion (no early
+/// cancellation — tasks are coarse and side-effect-free), then the
+/// first error **by input order** is returned, so which error surfaces
+/// is deterministic regardless of thread timing. `Ok` collects all
+/// results in input order.
+pub fn try_par_map<T, R, E, F>(items: Vec<T>, f: F) -> Result<Vec<R>, E>
+where
+    T: Send,
+    R: Send,
+    E: Send,
+    F: Fn(T) -> Result<R, E> + Sync,
+{
+    let threads = max_threads();
+    try_par_map_n(items, threads, f)
+}
+
+/// [`try_par_map`] with an explicit worker-thread count.
+pub fn try_par_map_n<T, R, E, F>(items: Vec<T>, threads: usize, f: F) -> Result<Vec<R>, E>
+where
+    T: Send,
+    R: Send,
+    E: Send,
+    F: Fn(T) -> Result<R, E> + Sync,
+{
+    par_map_n(items, threads, f).into_iter().collect()
 }
 
 #[cfg(test)]
@@ -96,6 +161,36 @@ mod tests {
                 }
             });
         assert!(out[0].is_ok() && out[1].is_err() && out[2].is_ok());
+    }
+
+    #[test]
+    fn try_par_map_collects_ok() {
+        let out: Result<Vec<i32>, String> = try_par_map((0..50).collect(), |x| Ok(x + 1));
+        assert_eq!(out.unwrap(), (1..51).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn try_par_map_surfaces_first_error_by_input_order() {
+        // Both 10 and 30 fail; input order makes 10 the winner no
+        // matter which worker finishes first.
+        let out: Result<Vec<i32>, String> = try_par_map_n((0..50).collect(), 8, |x| {
+            if x == 10 || x == 30 {
+                Err(format!("bad {x}"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert_eq!(out.unwrap_err(), "bad 10");
+    }
+
+    #[test]
+    fn par_map_n_pins_thread_count() {
+        // threads = 1 must be the plain sequential map.
+        let out = par_map_n((0..20).collect::<Vec<i32>>(), 1, |x| x * 3);
+        assert_eq!(out, (0..20).map(|x| x * 3).collect::<Vec<i32>>());
+        // More threads than items also works (capped at n).
+        let out = par_map_n(vec![1, 2], 16, |x| x);
+        assert_eq!(out, vec![1, 2]);
     }
 
     #[test]

@@ -59,14 +59,19 @@ fn assert_exact_coverage(trace: &Trace, n: u32, epochs: u32, label: &str) {
 }
 
 /// Uniform toy costs for every host.
-fn uniform_factory(_h: u32) -> Box<dyn CostProvider> {
+fn uniform_factory(_h: u32) -> Box<dyn CostProvider + Send> {
     Box::new(FixedCosts::toy_fig6())
 }
 
 /// Toy costs where host 0 is `slow×` slower on both prongs — the
 /// deliberately imbalanced fleet that makes stealing fire.
-fn skewed_costs(h: u32, slow: f64) -> Box<dyn CostProvider> {
-    let f = if h == 0 { slow } else { 1.0 };
+fn skewed_costs(h: u32, slow: f64) -> Box<dyn CostProvider + Send> {
+    costs_with_factor(if h == 0 { slow } else { 1.0 })
+}
+
+/// Toy costs uniformly scaled by `f` — building block for fleets with
+/// more than one slow host.
+fn costs_with_factor(f: f64) -> Box<dyn CostProvider + Send> {
     Box::new(FixedCosts {
         host: HostBatchCost {
             read_s: 0.0,
@@ -272,8 +277,8 @@ fn prop_steal_conservation_no_loss_no_duplication() {
 
 #[test]
 fn one_host_cluster_with_steal_is_passthrough() {
-    // steal = epoch over a single host has no peer to trade with: the
-    // run must still be bit-identical to the no-steal run.
+    // steal = epoch|live over a single host has no peer to trade with:
+    // the run must still be bit-identical to the no-steal run.
     let run = |steal: StealMode| {
         let c = cfg_cluster(Strategy::Wrr, 200, 1, 2, 1, CsdAssign::Block, steal, 3);
         Cluster::from_config(&c)
@@ -282,11 +287,13 @@ fn one_host_cluster_with_steal_is_passthrough() {
             .run()
             .unwrap()
     };
-    let on = run(StealMode::Epoch);
     let off = run(StealMode::Off);
-    assert_eq!(on.report, off.report);
-    assert_eq!(on.trace.spans, off.trace.spans);
-    assert!(on.host_reports.iter().all(|h| h.steals_in == 0));
+    for steal in [StealMode::Epoch, StealMode::Live] {
+        let on = run(steal);
+        assert_eq!(on.report, off.report, "steal={steal}");
+        assert_eq!(on.trace.spans, off.trace.spans, "steal={steal}");
+        assert!(on.host_reports.iter().all(|h| h.steals_in == 0));
+    }
 }
 
 #[test]
@@ -341,4 +348,171 @@ fn merged_trace_remaps_accel_ranks() {
     ranks.sort_unstable();
     ranks.dedup();
     assert_eq!(ranks, vec![0, 1, 2, 3], "global accel ranks in merged trace");
+}
+
+/// Compare two cluster results bit-for-bit: report, merged trace,
+/// per-host attribution and losses.
+fn assert_results_identical(
+    a: &ddlp::coordinator::RunResult,
+    b: &ddlp::coordinator::RunResult,
+    label: &str,
+) {
+    assert_eq!(a.report, b.report, "{label}: report diverged");
+    assert_eq!(a.trace.spans, b.trace.spans, "{label}: trace diverged");
+    assert_eq!(a.host_reports, b.host_reports, "{label}: host reports diverged");
+    assert_eq!(a.losses, b.losses, "{label}: losses diverged");
+}
+
+#[test]
+fn determinism_same_config_twice_is_bit_identical() {
+    // Acceptance grid: n_hosts {2,4} × steal {off,epoch,live} × every
+    // strategy — the same config run twice through `Cluster::run`
+    // (whatever driver the machine picks) must be bit-identical:
+    // report, merged trace, host reports, losses.
+    const N: u32 = 120;
+    for n_hosts in [2u32, 4] {
+        for steal in [StealMode::Off, StealMode::Epoch, StealMode::Live] {
+            for strategy in Strategy::ALL {
+                let n_csd = if strategy.uses_csd() { n_hosts } else { 0 };
+                let label = format!("{strategy} hosts={n_hosts} steal={steal}");
+                let c = cfg_cluster(
+                    strategy,
+                    N,
+                    n_hosts,
+                    4,
+                    n_csd,
+                    CsdAssign::Block,
+                    steal,
+                    2,
+                );
+                let run = || {
+                    Cluster::from_config(&c)
+                        .unwrap()
+                        .with_cost_factory(|h| skewed_costs(h, 2.5))
+                        .run()
+                        .unwrap()
+                };
+                let a = run();
+                let b = run();
+                assert_results_identical(&a, &b, &label);
+                assert_exact_coverage(&a.trace, N, 2, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_driver_is_bit_identical_to_sequential() {
+    // The tentpole invariant: `run_parallel` (one scoped worker per
+    // host, true thread interleaving — it pins n_hosts threads no
+    // matter what PALLAS_THREADS says) must match `run_sequential`
+    // bit-for-bit for every steal mode, on a deliberately imbalanced
+    // fleet so epoch and live stealing actually fire.
+    const N: u32 = 240;
+    const EPOCHS: u32 = 3;
+    for steal in [StealMode::Off, StealMode::Epoch, StealMode::Live] {
+        for n_hosts in [2u32, 4] {
+            let label = format!("steal={steal} hosts={n_hosts}");
+            let c = cfg_cluster(
+                Strategy::Wrr,
+                N,
+                n_hosts,
+                4,
+                n_hosts,
+                CsdAssign::Block,
+                steal,
+                EPOCHS,
+            );
+            let build = || {
+                Cluster::from_config(&c)
+                    .unwrap()
+                    .with_cost_factory(|h| skewed_costs(h, 3.0))
+            };
+            let par = build().run_parallel().unwrap();
+            let seq = build().run_sequential().unwrap();
+            assert_results_identical(&par, &seq, &label);
+            assert_exact_coverage(&par.trace, N, EPOCHS, &label);
+        }
+    }
+}
+
+#[test]
+fn live_steal_rescues_a_slow_host_mid_epoch() {
+    // A single-epoch run is exactly the case epoch-boundary stealing
+    // cannot help (there is no boundary before the last epoch). With
+    // steal = live the fast host must absorb part of the slow host's
+    // unclaimed work *within* the epoch: steals fire, every batch still
+    // trains exactly once, and the makespan is no worse than leaving
+    // the imbalance alone.
+    const N: u32 = 400;
+    let run = |steal: StealMode| {
+        let c = cfg_cluster(Strategy::Wrr, N, 2, 4, 2, CsdAssign::Block, steal, 1);
+        Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(|h| skewed_costs(h, 3.0))
+            .run()
+            .unwrap()
+    };
+    let live = run(StealMode::Live);
+    let off = run(StealMode::Off);
+    assert_exact_coverage(&live.trace, N, 1, "steal=live");
+    assert_exact_coverage(&off.trace, N, 1, "steal=off");
+    let stolen: u64 = live.host_reports.iter().map(|h| h.steals_in).sum();
+    let donated: u64 = live.host_reports.iter().map(|h| h.steals_out).sum();
+    assert!(stolen > 0, "live stealing must fire mid-epoch on a 3× skew");
+    assert_eq!(stolen, donated, "live steal ledger must balance");
+    assert!(
+        live.host_reports[0].steals_out > 0,
+        "the slow host must donate"
+    );
+    assert!(off
+        .host_reports
+        .iter()
+        .all(|h| h.steals_in == 0 && h.steals_out == 0));
+    assert!(
+        live.report.makespan <= off.report.makespan + 1e-9,
+        "live stealing made the cluster slower: {} vs {}",
+        live.report.makespan,
+        off.report.makespan
+    );
+}
+
+#[test]
+fn live_steal_conserves_batches_under_concurrent_donors() {
+    // Two equally-slow hosts in a fleet of four make the live plan
+    // carry several moves with *different* donors per checkpoint, so
+    // the parallel driver's donate phase runs concurrently on separate
+    // threads. Exactly-once must hold, the ledger must balance, and
+    // two parallel runs — plus the sequential reference — must all be
+    // bit-identical.
+    const N: u32 = 240;
+    let c = cfg_cluster(
+        Strategy::Wrr,
+        N,
+        4,
+        4,
+        4,
+        CsdAssign::Block,
+        StealMode::Live,
+        1,
+    );
+    let build = || {
+        Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(|h| costs_with_factor(if h < 2 { 3.0 } else { 1.0 }))
+    };
+    let a = build().run_parallel().unwrap();
+    let b = build().run_parallel().unwrap();
+    let seq = build().run_sequential().unwrap();
+    assert_results_identical(&a, &b, "parallel run × 2");
+    assert_results_identical(&a, &seq, "parallel vs sequential");
+    assert_exact_coverage(&a.trace, N, 1, "concurrent donors");
+    let stolen: u64 = a.host_reports.iter().map(|h| h.steals_in).sum();
+    let donated: u64 = a.host_reports.iter().map(|h| h.steals_out).sum();
+    assert!(stolen > 0, "two slow hosts must trigger live steals");
+    assert_eq!(stolen, donated, "ledger unbalanced under concurrent donors");
+    let slow_out: u64 = a.host_reports[..2].iter().map(|h| h.steals_out).sum();
+    assert!(slow_out > 0, "the slow hosts must donate");
+    let host_sum: u64 = a.host_reports.iter().map(|h| h.batches()).sum();
+    assert_eq!(host_sum, N as u64, "host batch counts don't sum");
 }

@@ -13,7 +13,7 @@ use ddlp::trace::Trace;
 pub fn run_session(
     cfg: &ExperimentConfig,
     spec: &DatasetSpec,
-    costs: &mut dyn CostProvider,
+    costs: &mut (dyn CostProvider + Send),
 ) -> anyhow::Result<(RunReport, Trace)> {
     let r = Session::with_costs(cfg, Topology::from_config(cfg)?, spec, costs)?.run()?;
     Ok((r.report, r.trace))

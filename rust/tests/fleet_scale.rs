@@ -161,7 +161,7 @@ fn fleet64_cluster_exactly_once_with_stealing() {
             .unwrap();
         let r = Cluster::from_config(&c)
             .unwrap()
-            .with_cost_factory(|h| -> Box<dyn CostProvider> {
+            .with_cost_factory(|h| -> Box<dyn CostProvider + Send> {
                 // Host 0 drags: stealing must fire and stay exact.
                 let mut costs = FixedCosts::toy_fig6();
                 if h == 0 {

@@ -523,7 +523,7 @@ fn spec() -> DatasetSpec {
 
 fn assert_parity(
     c: &ExperimentConfig,
-    costs_new: &mut dyn CostProvider,
+    costs_new: &mut (dyn CostProvider + Send),
     costs_old: &mut dyn CostProvider,
 ) {
     let label = format!(
@@ -697,7 +697,7 @@ fn parity_one_host_cluster_vs_session() {
             let c = cfg(strategy, n_accel, 0, 2);
             let cluster_r = Cluster::from_config(&c)
                 .unwrap()
-                .with_cost_factory(|_| -> Box<dyn CostProvider> {
+                .with_cost_factory(|_| -> Box<dyn CostProvider + Send> {
                     Box::new(FixedCosts::toy_fig6())
                 })
                 .run()
