@@ -1,0 +1,227 @@
+//! Fault-recovery cost curves (DESIGN.md §Faults): makespan
+//! degradation as scripted CSD brownouts grow in **duration** and in
+//! **fleet fraction** (1 of 4, 2 of 4, all 4 CSDs down at once), on a
+//! WRR fleet over fixed toy costs.
+//!
+//! All measured quantities are *virtual* makespans — faults fire in
+//! virtual time, so every row is bit-exact deterministic and the CI
+//! ceiling below gates on real scheduling behavior, not wall-clock
+//! noise.
+//!
+//! Besides the stdout report, results are written to
+//! `BENCH_fault_recovery.json` (per scenario: faulted makespan, the
+//! degradation ratio vs the healthy run, rerouted batches, degraded
+//! virtual seconds, recovery latency; plus the sweep-wide maximum
+//! degradation ratio) so the recovery-cost trajectory is
+//! machine-checkable across PRs.
+//!
+//! Env knobs (CI chaos smoke):
+//!   FAULT_RECOVERY_N               total batches            (default 2000)
+//!   FAULT_RECOVERY_MAX_DEGRADATION max allowed faulted/healthy makespan
+//!                                  ratio across the whole sweep; above
+//!                                  it the bench exits non-zero. Unset,
+//!                                  the sweep just records.
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::FixedCosts;
+use ddlp::coordinator::{Session, Strategy};
+use ddlp::dataset::DatasetSpec;
+use ddlp::fault::FaultPlan;
+use ddlp::pipeline::PipelineKind;
+use ddlp::topology::{CsdAssign, Topology};
+
+const N_ACCEL: u32 = 4;
+const N_CSD: u32 = 4;
+
+/// Brownout duration as a fraction of the healthy makespan.
+const DURATION_FRACS: [f64; 3] = [0.1, 0.3, 0.6];
+
+/// How many of the four CSDs brown out simultaneously.
+const FLEET_FRACS: [u32; 3] = [1, 2, 4];
+
+/// Brownouts start this far into the healthy makespan, so the fleet is
+/// warmed up (directories populated) when the fault fires.
+const ONSET_FRAC: f64 = 0.25;
+
+struct Row {
+    n_down: u32,
+    duration_frac: f64,
+    makespan_s: f64,
+    degradation: f64,
+    rerouted: u64,
+    degraded_s: f64,
+    recovery_latency_s: f64,
+}
+
+/// Read an f64 env knob. A knob that is *set but unparsable* is a hard
+/// error — silently ignoring it would disable the CI chaos gate.
+fn env_f64(key: &str) -> Option<f64> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!("[fault_recovery] FAIL: {key}={raw:?} is not a number");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Read a strictly-positive integer env knob (same hard-error policy).
+fn env_u32_pos(key: &str) -> Option<u32> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse::<u32>() {
+        Ok(v) if v > 0 => Some(v),
+        _ => {
+            eprintln!("[fault_recovery] FAIL: {key}={raw:?} is not a positive integer");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run(n: u32, plan: FaultPlan) -> ddlp::metrics::RunReport {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    let cfg = ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .num_workers(N_ACCEL)
+        .n_accel(N_ACCEL)
+        .n_csd(N_CSD)
+        .csd_assign(CsdAssign::Stripe)
+        .n_batches(n)
+        .record_trace(false)
+        .profile(profile)
+        .fault_plan(plan)
+        .build()
+        .unwrap();
+    let spec = DatasetSpec {
+        n_batches: n,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    };
+    let topo = Topology::from_config(&cfg).unwrap();
+    let mut costs = FixedCosts::toy_fig6();
+    Session::with_costs(&cfg, topo, &spec, &mut costs)
+        .unwrap()
+        .run()
+        .unwrap()
+        .report
+}
+
+fn main() {
+    let n: u32 = env_u32_pos("FAULT_RECOVERY_N").unwrap_or(2000);
+
+    let healthy = run(n, FaultPlan::new());
+    // Determinism anchor: an empty plan twice must be bit-identical —
+    // the engine's fault gating must not perturb a healthy run.
+    let healthy2 = run(n, FaultPlan::new());
+    if healthy != healthy2 {
+        eprintln!("[fault_recovery] FAIL: healthy run is not bit-reproducible");
+        std::process::exit(1);
+    }
+    println!(
+        "[fault_recovery] healthy wrr n_accel={N_ACCEL} n_csd={N_CSD} {n} batches: \
+         makespan {:.3}s virtual",
+        healthy.makespan
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for n_down in FLEET_FRACS {
+        for frac in DURATION_FRACS {
+            let at = ONSET_FRAC * healthy.makespan;
+            let until = at + frac * healthy.makespan;
+            let mut plan = FaultPlan::new();
+            for c in 0..n_down {
+                plan = plan.csd_brownout(c, at, until).unwrap();
+            }
+            let r = run(n, plan);
+            if r.n_batches != healthy.n_batches {
+                eprintln!(
+                    "[fault_recovery] FAIL: faulted run lost batches \
+                     ({} vs {} healthy, {n_down} CSDs down for {frac} of the run)",
+                    r.n_batches, healthy.n_batches
+                );
+                std::process::exit(1);
+            }
+            let degradation = r.makespan / healthy.makespan;
+            println!(
+                "[fault_recovery] {n_down}/{N_CSD} CSDs down for {:>4.0}% of the run: \
+                 makespan {:.3}s ({degradation:.3}x healthy), rerouted {}, \
+                 degraded {:.3}s, recovery latency {:.3}s",
+                frac * 100.0,
+                r.makespan,
+                r.fault.rerouted_batches,
+                r.fault.degraded_s,
+                r.fault.recovery_latency_s
+            );
+            rows.push(Row {
+                n_down,
+                duration_frac: frac,
+                makespan_s: r.makespan,
+                degradation,
+                rerouted: r.fault.rerouted_batches,
+                degraded_s: r.fault.degraded_s,
+                recovery_latency_s: r.fault.recovery_latency_s,
+            });
+        }
+    }
+
+    let max_degradation = rows.iter().map(|r| r.degradation).fold(0.0, f64::max);
+    println!("[fault_recovery] max degradation across the sweep: {max_degradation:.3}x");
+
+    // Machine-readable recovery-cost record, tracked across PRs.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"fault_recovery\",\n");
+    json.push_str(&format!("  \"n_batches\": {n},\n"));
+    json.push_str(&format!(
+        "  \"healthy_makespan_s\": {:.6},\n",
+        healthy.makespan
+    ));
+    json.push_str(&format!(
+        "  \"max_degradation\": {max_degradation:.4},\n"
+    ));
+    json.push_str(
+        "  \"degradation_definition\": \"faulted virtual makespan / healthy virtual \
+         makespan; brownouts start at 25% of the healthy makespan\",\n",
+    );
+    json.push_str("  \"results\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"csd{}of{}_d{:.2}\": {{\"makespan_s\": {:.6}, \"degradation\": {:.4}, \
+             \"rerouted_batches\": {}, \"degraded_s\": {:.6}, \
+             \"recovery_latency_s\": {:.6}}}{comma}\n",
+            r.n_down,
+            N_CSD,
+            r.duration_frac,
+            r.makespan_s,
+            r.degradation,
+            r.rerouted,
+            r.degraded_s,
+            r.recovery_latency_s
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_fault_recovery.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[fault_recovery] wrote {path}"),
+        Err(e) => eprintln!("[fault_recovery] WARNING: could not write {path}: {e}"),
+    }
+
+    // CI chaos smoke: recovery-overhead ceiling. Deterministic (virtual
+    // makespans), so the gate is exact — no timer noise margin needed.
+    if let Some(ceiling) = env_f64("FAULT_RECOVERY_MAX_DEGRADATION") {
+        if max_degradation > ceiling {
+            eprintln!(
+                "[fault_recovery] FAIL: max degradation {max_degradation:.3}x > \
+                 allowed {ceiling:.3}x"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "[fault_recovery] recovery-overhead smoke OK: {max_degradation:.3}x <= {ceiling:.3}x"
+        );
+    }
+}

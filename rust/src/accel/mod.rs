@@ -30,6 +30,10 @@ pub struct AccelEngine {
     trained: u32,
     t_train_busy: Secs,
     t_gds_busy: Secs,
+    /// Scripted permanent failure: the device is retired once its
+    /// stream reaches this virtual time; the coordinator redirects its
+    /// remaining shard work to survivors.
+    fail_at: Option<Secs>,
 }
 
 impl AccelEngine {
@@ -40,6 +44,7 @@ impl AccelEngine {
             trained: 0,
             t_train_busy: 0.0,
             t_gds_busy: 0.0,
+            fail_at: None,
         }
     }
 
@@ -50,6 +55,20 @@ impl AccelEngine {
     /// Earliest time this accelerator can start new work.
     pub fn free_at(&self) -> Secs {
         self.lane.next_free()
+    }
+
+    /// Inject a permanent device failure at virtual time `t` (earliest
+    /// wins when scripted twice).
+    pub fn fail_at(&mut self, t: Secs) {
+        self.fail_at = Some(self.fail_at.map_or(t, |old: f64| old.min(t)));
+    }
+
+    /// Has the device's stream reached its scripted failure time? Work
+    /// in flight before `fail_at` completes; nothing may start after.
+    /// The lane freezes once the coordinator stops reserving on it, so
+    /// a failed device stays failed.
+    pub fn failed(&self) -> bool {
+        self.fail_at.is_some_and(|t| self.lane.next_free() >= t)
     }
 
     /// Consume a batch available at `data_ready` from `source`; returns

@@ -41,14 +41,14 @@
 //!   is a transparent pass-through: report, trace and losses are
 //!   bit-identical to a plain [`Session::run`] (golden parity).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::cost::CostProvider;
 use crate::coordinator::{CsdDeviceReport, RunResult, Session};
 use crate::dataset::BatchId;
 use crate::energy::EnergyReport;
-use crate::metrics::RunReport;
+use crate::metrics::{FaultStats, RunReport};
 use crate::sim::Secs;
 use crate::topology::Topology;
 use crate::trace::{Device, Trace};
@@ -113,6 +113,13 @@ pub struct HostReport {
     pub steals_in: u64,
     /// Batches donated *out of* this host's queue across the run.
     pub steals_out: u64,
+    /// Scripted crash attribution (DESIGN.md §Faults): `Some(e)` when
+    /// the fault plan crashed this host after it completed `e` epochs —
+    /// the remaining epochs' workload moved to the survivors (counted
+    /// in `steals_out`) and the host sat out the rest of the run.
+    /// `None` for a host that lived the whole run (including crashes
+    /// scripted at or past the final epoch, which never fire).
+    pub crashed_after_epoch: Option<u32>,
     /// Per-CSD rollups of the host's devices (local device order —
     /// globally these are the host's contiguous CSD block).
     pub csd_devices: Vec<CsdDeviceReport>,
@@ -143,6 +150,12 @@ pub struct Cluster {
     cfg: ExperimentConfig,
     host_cfgs: Vec<ExperimentConfig>,
     host_topos: Vec<Topology>,
+    /// Per-host scripted crash point, read from the **global** fault
+    /// plan before slicing (host crashes are cluster-level events;
+    /// [`crate::topology::Topology::host_slice`] drops them from the
+    /// per-host plans). `Some(e)` = host completes `e` epochs, then
+    /// crashes; its remaining workload moves to the survivors.
+    crash_after: Vec<Option<u32>>,
     /// Injected per-host cost providers (tests/benches); `None` builds
     /// the provider each host's config asks for (analytic or real).
     cost_factory: Option<CostFactory>,
@@ -201,10 +214,14 @@ impl Cluster {
             host_cfgs.push(host_cfg);
             host_topos.push(slice);
         }
+        let crash_after: Vec<Option<u32>> = (0..n_hosts)
+            .map(|h| topology.fault().host_crash_after(h))
+            .collect();
         Ok(Cluster {
             cfg: cfg.clone(),
             host_cfgs,
             host_topos,
+            crash_after,
             cost_factory: None,
         })
     }
@@ -236,6 +253,90 @@ impl Cluster {
         &self.host_topos
     }
 
+    /// Is host `h` still alive when epoch `epoch` (0-based) begins? A
+    /// crash scripted after `e` epochs kills the host for epochs `e..`.
+    fn host_alive(&self, h: usize, epoch: u32) -> bool {
+        match self.crash_after[h] {
+            Some(e) => epoch < e,
+            None => true,
+        }
+    }
+
+    /// Per-host aliveness for one epoch (all-true for a crash-free
+    /// plan — the mask then changes nothing anywhere it is consulted).
+    fn alive_mask(&self, epoch: u32) -> Vec<bool> {
+        (0..self.host_cfgs.len())
+            .map(|h| self.host_alive(h, epoch))
+            .collect()
+    }
+
+    /// Host-crash recovery (DESIGN.md §Faults): when the fault plan
+    /// crashes a host after `epoch` epochs, the driver — not an error
+    /// path — drains the host's entire remaining shard pool through
+    /// the same donate/absorb machinery the steal modes use and splits
+    /// it across the surviving hosts in index order (balanced
+    /// contiguous chunks, remainder to the lowest indices —
+    /// deterministic). The crashed host then sits out every remaining
+    /// epoch; its [`HostReport`] keeps the epochs it completed and
+    /// attributes the handoff as `steals_out`.
+    fn apply_crashes(
+        &self,
+        sessions: &mut [Session<'_>],
+        epoch: u32,
+        steals_in: &mut [u64],
+        steals_out: &mut [u64],
+    ) -> Result<()> {
+        for h in 0..sessions.len() {
+            if self.crash_after[h] != Some(epoch) {
+                continue;
+            }
+            let survivors: Vec<usize> = (0..sessions.len())
+                .filter(|&s| self.host_alive(s, epoch))
+                .collect();
+            if survivors.is_empty() {
+                bail!(
+                    "fault plan crashes host {h} after epoch {epoch} with no \
+                     surviving host to absorb its {} unstarted batches",
+                    sessions[h].workload()
+                );
+            }
+            // Drain the whole pool (donate_tail moves shard entries
+            // permanently, so one drain covers all remaining epochs).
+            let mut pool: Vec<BatchId> = Vec::new();
+            loop {
+                let w = sessions[h].workload().min(u32::MAX as u64) as u32;
+                if w == 0 {
+                    break;
+                }
+                let got = sessions[h].donate_tail(w);
+                if got.is_empty() {
+                    break;
+                }
+                pool.extend(got);
+            }
+            if pool.is_empty() {
+                continue;
+            }
+            steals_out[h] += pool.len() as u64;
+            let base = pool.len() / survivors.len();
+            let rem = pool.len() % survivors.len();
+            let mut start = 0usize;
+            for (i, &s) in survivors.iter().enumerate() {
+                let take = base + usize::from(i < rem);
+                if take == 0 {
+                    continue;
+                }
+                let chunk = &pool[start..start + take];
+                start += take;
+                sessions[s]
+                    .absorb(chunk)
+                    .with_context(|| format!("host {s} absorbing crashed host {h}'s work"))?;
+                steals_in[s] += chunk.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
     /// Drive every host through all epochs — in parallel (one scoped
     /// worker per host) whenever the machine and `PALLAS_THREADS` allow
     /// more than one thread — stealing at epoch boundaries when `steal
@@ -265,7 +366,10 @@ impl Cluster {
             .collect()
     }
 
-    /// Epoch-boundary steal pass shared by both drivers.
+    /// Epoch-boundary steal pass shared by both drivers. Rebalances for
+    /// the *next* epoch, so the aliveness mask is evaluated at
+    /// `epoch + 1` — a host about to crash is neither donor nor
+    /// recipient (its pool is drained by [`Cluster::apply_crashes`]).
     fn boundary_steal(
         &self,
         sessions: &mut [Session<'_>],
@@ -277,7 +381,8 @@ impl Cluster {
         let last_epoch = epoch + 1 == self.cfg.epochs;
         let steal_boundary = matches!(self.cfg.steal, StealMode::Epoch | StealMode::Live);
         if steal_boundary && !last_epoch && sessions.len() > 1 {
-            rebalance(sessions, outcomes, steals_in, steals_out)?;
+            let alive = self.alive_mask(epoch + 1);
+            rebalance(sessions, outcomes, &alive, steals_in, steals_out)?;
         }
         Ok(())
     }
@@ -293,17 +398,25 @@ impl Cluster {
         // Hoisted per-epoch outcome buffer (reused across epochs).
         let mut outcomes = Vec::with_capacity(n_hosts);
         for epoch in 0..self.cfg.epochs {
+            self.apply_crashes(&mut sessions, epoch, &mut steals_in, &mut steals_out)?;
+            let alive = self.alive_mask(epoch);
             outcomes.clear();
             if self.cfg.steal == StealMode::Live {
                 run_live_epoch_sequential(
                     &mut sessions,
+                    &alive,
                     &mut steals_in,
                     &mut steals_out,
                     &mut outcomes,
                 )?;
             } else {
-                for s in sessions.iter_mut() {
-                    outcomes.push(s.run_epoch()?);
+                for (h, s) in sessions.iter_mut().enumerate() {
+                    outcomes.push(if alive[h] {
+                        s.run_epoch()
+                            .with_context(|| format!("host {h} failed in epoch {}", epoch + 1))?
+                    } else {
+                        dead_outcome(s)
+                    });
                 }
             }
             self.boundary_steal(&mut sessions, &outcomes, epoch, &mut steals_in, &mut steals_out)?;
@@ -334,19 +447,38 @@ impl Cluster {
         let mut steals_out = vec![0u64; n_hosts];
         let mut outcomes: Vec<crate::coordinator::EpochOutcome> = Vec::with_capacity(n_hosts);
         for epoch in 0..self.cfg.epochs {
+            self.apply_crashes(&mut sessions, epoch, &mut steals_in, &mut steals_out)?;
+            let alive = self.alive_mask(epoch);
             outcomes.clear();
             if self.cfg.steal == StealMode::Live {
                 run_live_epoch_parallel(
                     &mut sessions,
+                    &alive,
                     &mut steals_in,
                     &mut steals_out,
                     &mut outcomes,
                 )?;
             } else {
-                let refs: Vec<&mut Session<'_>> = sessions.iter_mut().collect();
-                outcomes.extend(crate::util::par::try_par_map_n(refs, n_hosts, |s| {
+                // Only live hosts fan out; crashed hosts get placeholder
+                // outcomes so the vector stays host-indexed.
+                let refs: Vec<(usize, &mut Session<'_>)> = sessions
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(h, _)| alive[*h])
+                    .collect();
+                let ran = crate::util::par::try_par_map_n(refs, n_hosts, |(h, s)| {
                     s.run_epoch()
-                })?);
+                        .with_context(|| format!("host {h} failed in epoch {}", epoch + 1))
+                        .map(|o| (h, o))
+                });
+                let ran = match ran {
+                    Ok(v) => v,
+                    Err(e) => return Err(e.context(fleet_progress(&sessions))),
+                };
+                outcomes.extend(sessions.iter().map(dead_outcome));
+                for (h, o) in ran {
+                    outcomes[h] = o;
+                }
             }
             self.boundary_steal(&mut sessions, &outcomes, epoch, &mut steals_in, &mut steals_out)?;
         }
@@ -375,6 +507,9 @@ impl Cluster {
                 report: r.report.clone(),
                 steals_in: steals_in[h],
                 steals_out: steals_out[h],
+                // A crash scripted at or past the final epoch never
+                // fired — the host lived the whole run.
+                crashed_after_epoch: self.crash_after[h].filter(|&e| e < self.cfg.epochs),
                 csd_devices: r.csd_devices.clone(),
             });
         }
@@ -397,6 +532,10 @@ impl Cluster {
             .iter()
             .map(|r| r.report.cpu_dram_time_per_batch * r.report.n_batches as f64)
             .sum();
+        let mut fault = FaultStats::default();
+        for r in &results {
+            fault.absorb(&r.report.fault);
+        }
         let energy = EnergyReport {
             joules_per_batch: results
                 .iter()
@@ -423,6 +562,7 @@ impl Cluster {
                 .sum(),
             wasted_batches: results.iter().map(|r| r.report.wasted_batches).sum(),
             energy,
+            fault,
         };
         // Merged timeline: spans concatenate host-major with
         // accelerator indices remapped to global ranks (host-local CSD
@@ -453,19 +593,51 @@ impl Cluster {
     }
 }
 
+/// Placeholder outcome for a crashed host's skipped epoch: zero
+/// batches, zero span, nothing donatable. Never read for pace —
+/// crashed hosts are masked out of [`rebalance`] and [`live_plan`] —
+/// it exists so the per-epoch outcome vector stays host-indexed.
+fn dead_outcome(s: &Session<'_>) -> crate::coordinator::EpochOutcome {
+    crate::coordinator::EpochOutcome {
+        epochs_run: s.epochs_run(),
+        makespan: 0.0,
+        epoch_span: 0.0,
+        batches: 0,
+        unstarted: 0,
+    }
+}
+
+/// Fleet-progress summary attached to a failing parallel epoch, so a
+/// cluster error names how far every host (survivors included) got.
+fn fleet_progress(sessions: &[Session<'_>]) -> String {
+    let per_host: Vec<String> = sessions
+        .iter()
+        .enumerate()
+        .map(|(h, s)| format!("host {h}: {} epochs", s.epochs_run()))
+        .collect();
+    format!("cluster epoch failed; per-host progress: {}", per_host.join(", "))
+}
+
 /// One epoch-boundary rebalancing pass: estimate each host's pace from
 /// the epoch it just ran, predict next-epoch finish times, and move
 /// batches from the slowest predicted host to the fastest until the
 /// prediction levels out (at most `hosts − 1` moves, each capped at
 /// half the donor's queue so no host is drained dry). Deterministic:
 /// pure arithmetic on the outcomes, ties broken by lowest host index.
+/// Hosts masked out by `alive` (crashed, or crashing before the next
+/// epoch) are neither donors nor recipients.
 fn rebalance(
     sessions: &mut [Session<'_>],
     outcomes: &[crate::coordinator::EpochOutcome],
+    alive: &[bool],
     steals_in: &mut [u64],
     steals_out: &mut [u64],
 ) -> Result<()> {
     let n_hosts = sessions.len();
+    let candidates: Vec<usize> = (0..n_hosts).filter(|&h| alive[h]).collect();
+    if candidates.len() < 2 {
+        return Ok(());
+    }
     // Seconds per batch each host demonstrated this epoch.
     let pace: Vec<f64> = outcomes
         .iter()
@@ -478,14 +650,18 @@ fn rebalance(
         })
         .collect();
     let mut load: Vec<u64> = sessions.iter().map(|s| s.workload()).collect();
-    for _ in 0..n_hosts.saturating_sub(1) {
+    for _ in 0..candidates.len().saturating_sub(1) {
         let finish = |h: usize| pace[h] * load[h] as f64;
-        let donor = (0..n_hosts)
+        let donor = candidates
+            .iter()
+            .copied()
             .max_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(y.cmp(&x)))
-            .expect("cluster has hosts");
-        let recipient = (0..n_hosts)
+            .expect("cluster has live hosts");
+        let recipient = candidates
+            .iter()
+            .copied()
             .min_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(x.cmp(&y)))
-            .expect("cluster has hosts");
+            .expect("cluster has live hosts");
         if donor == recipient {
             break;
         }
@@ -556,9 +732,15 @@ struct LiveMove {
 /// absorbed batches as donatable within the same checkpoint, so every
 /// planned donation is executable from snapshot state alone — donors
 /// and recipients can then run their halves in separate barrier phases
-/// without ordering hazards.
-fn live_plan(snaps: &[crate::coordinator::LiveProgress]) -> Vec<LiveMove> {
+/// without ordering hazards. Hosts masked out by `alive` (crashed
+/// earlier in the run) publish dead snapshots and are excluded from
+/// both sides of every move.
+fn live_plan(snaps: &[crate::coordinator::LiveProgress], alive: &[bool]) -> Vec<LiveMove> {
     let n_hosts = snaps.len();
+    let candidates: Vec<usize> = (0..n_hosts).filter(|&h| alive[h]).collect();
+    if candidates.len() < 2 {
+        return Vec::new();
+    }
     let pace: Vec<f64> = snaps
         .iter()
         .map(|s| {
@@ -572,14 +754,18 @@ fn live_plan(snaps: &[crate::coordinator::LiveProgress]) -> Vec<LiveMove> {
     let mut remaining: Vec<u64> = snaps.iter().map(|s| s.remaining).collect();
     let mut donatable: Vec<u32> = snaps.iter().map(|s| s.donatable).collect();
     let mut plan = Vec::new();
-    for _ in 0..n_hosts.saturating_sub(1) {
+    for _ in 0..candidates.len().saturating_sub(1) {
         let finish = |h: usize| pace[h] * remaining[h] as f64;
-        let donor = (0..n_hosts)
+        let donor = candidates
+            .iter()
+            .copied()
             .max_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(y.cmp(&x)))
-            .expect("cluster has hosts");
-        let recipient = (0..n_hosts)
+            .expect("cluster has live hosts");
+        let recipient = candidates
+            .iter()
+            .copied()
             .min_by(|&x, &y| finish(x).total_cmp(&finish(y)).then(x.cmp(&y)))
-            .expect("cluster has hosts");
+            .expect("cluster has live hosts");
         if donor == recipient {
             break;
         }
@@ -610,23 +796,34 @@ fn live_plan(snaps: &[crate::coordinator::LiveProgress]) -> Vec<LiveMove> {
 /// completing them one by one.
 fn run_live_epoch_sequential(
     sessions: &mut [Session<'_>],
+    alive: &[bool],
     steals_in: &mut [u64],
     steals_out: &mut [u64],
     outcomes: &mut Vec<crate::coordinator::EpochOutcome>,
 ) -> Result<()> {
     let n_hosts = sessions.len();
-    for s in sessions.iter_mut() {
-        s.begin_epoch()?;
+    for (h, s) in sessions.iter_mut().enumerate() {
+        if alive[h] {
+            s.begin_epoch()?;
+        }
     }
-    let workloads: Vec<u64> = sessions.iter().map(|s| s.epoch_target()).collect();
+    let workloads: Vec<u64> = sessions
+        .iter()
+        .enumerate()
+        .map(|(h, s)| if alive[h] { s.epoch_target() } else { 0 })
+        .collect();
     let mut snaps = Vec::with_capacity(n_hosts);
     for c in 0..LIVE_CHECKPOINTS {
         snaps.clear();
         for (h, s) in sessions.iter_mut().enumerate() {
-            s.drive_epoch_to(live_target(workloads[h], c))?;
-            snaps.push(s.live_progress());
+            if alive[h] {
+                s.drive_epoch_to(live_target(workloads[h], c))?;
+                snaps.push(s.live_progress());
+            } else {
+                snaps.push(dead_snapshot());
+            }
         }
-        let plan = live_plan(&snaps);
+        let plan = live_plan(&snaps, alive);
         // Donation phase, then absorption phase — matching the parallel
         // driver's two barrier-separated half-steps.
         let mut moved: Vec<Vec<BatchId>> = Vec::with_capacity(plan.len());
@@ -642,10 +839,27 @@ fn run_live_epoch_sequential(
             }
         }
     }
-    for s in sessions.iter_mut() {
-        outcomes.push(s.finish_epoch()?);
+    for (h, s) in sessions.iter_mut().enumerate() {
+        outcomes.push(if alive[h] {
+            s.finish_epoch()?
+        } else {
+            dead_outcome(s)
+        });
     }
     Ok(())
+}
+
+/// The snapshot a crashed host contributes to a checkpoint: nothing
+/// consumed, nothing remaining, nothing donatable. [`live_plan`] masks
+/// crashed hosts out anyway; the dead snapshot keeps the vector
+/// host-indexed (and harmless should anything else read it).
+fn dead_snapshot() -> crate::coordinator::LiveProgress {
+    crate::coordinator::LiveProgress {
+        consumed: 0,
+        elapsed: 0.0,
+        remaining: 0,
+        donatable: 0,
+    }
 }
 
 /// One live epoch, one scoped thread per host. Checkpoints are
@@ -664,6 +878,7 @@ fn run_live_epoch_sequential(
 /// driver.
 fn run_live_epoch_parallel(
     sessions: &mut [Session<'_>],
+    alive: &[bool],
     steals_in: &mut [u64],
     steals_out: &mut [u64],
     outcomes: &mut Vec<crate::coordinator::EpochOutcome>,
@@ -674,13 +889,23 @@ fn run_live_epoch_parallel(
     use crate::coordinator::{EpochOutcome, LiveProgress};
 
     let n_hosts = sessions.len();
+    let n_alive = alive.iter().filter(|&&a| a).count();
     let c_total = LIVE_CHECKPOINTS as usize;
-    let barrier = Barrier::new(n_hosts);
+    // Only surviving hosts participate in the checkpoint protocol; a
+    // crashed host's pool was drained at its crash boundary, so it has
+    // nothing to publish, donate or absorb.
+    let barrier = Barrier::new(n_alive);
     let failed = AtomicBool::new(false);
     // Pre-sized per-checkpoint slots — no reset step between
-    // checkpoints, so no write/clear race windows.
+    // checkpoints, so no write/clear race windows. Crashed hosts'
+    // slots are pre-filled with dead snapshots so every thread can
+    // read a complete host-indexed vector.
     let snaps: Vec<Vec<Mutex<Option<LiveProgress>>>> = (0..c_total)
-        .map(|_| (0..n_hosts).map(|_| Mutex::new(None)).collect())
+        .map(|_| {
+            (0..n_hosts)
+                .map(|h| Mutex::new(if alive[h] { None } else { Some(dead_snapshot()) }))
+                .collect()
+        })
         .collect();
     // Transfer slots keyed by (checkpoint, plan-move index) — a donor
     // can appear in several moves of one plan.
@@ -688,7 +913,15 @@ fn run_live_epoch_parallel(
         .map(|_| (0..n_hosts.saturating_sub(1)).map(|_| Mutex::new(None)).collect())
         .collect();
 
-    let mut results: Vec<(Result<EpochOutcome>, u64, u64)> = Vec::with_capacity(n_hosts);
+    // A peer that panicked while holding one of these cells must not
+    // take the whole fleet down with a poison panic: peers recover the
+    // value (`into_inner`) and keep going, so the panicking host is the
+    // one that surfaces (via the scope join below).
+    fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    let mut results: Vec<(usize, Result<EpochOutcome>, u64, u64)> = Vec::with_capacity(n_alive);
     std::thread::scope(|sc| {
         let barrier = &barrier;
         let failed = &failed;
@@ -697,6 +930,7 @@ fn run_live_epoch_parallel(
         let handles: Vec<_> = sessions
             .iter_mut()
             .enumerate()
+            .filter(|(h, _)| alive[*h])
             .map(|(h, s)| {
                 sc.spawn(move || {
                     let mut err: Option<anyhow::Error> = None;
@@ -711,7 +945,7 @@ fn run_live_epoch_parallel(
                         if err.is_none() {
                             match s.drive_epoch_to(live_target(w, c as u32)) {
                                 Ok(_complete) => {
-                                    *snaps[c][h].lock().unwrap() = Some(s.live_progress());
+                                    *relock(&snaps[c][h]) = Some(s.live_progress());
                                 }
                                 Err(e) => {
                                     failed.store(true, Ordering::SeqCst);
@@ -727,13 +961,11 @@ fn run_live_epoch_parallel(
                         let plan = if fleet_ok {
                             let snapshot: Vec<LiveProgress> = (0..snaps[c].len())
                                 .map(|i| {
-                                    snaps[c][i]
-                                        .lock()
-                                        .unwrap()
+                                    relock(&snaps[c][i])
                                         .expect("fleet_ok implies every snapshot published")
                                 })
                                 .collect();
-                            live_plan(&snapshot)
+                            live_plan(&snapshot, alive)
                         } else {
                             Vec::new()
                         };
@@ -741,17 +973,13 @@ fn run_live_epoch_parallel(
                             if m.donor == h {
                                 let ids = s.donate_live(m.k);
                                 d_out += ids.len() as u64;
-                                *transfers[c][i].lock().unwrap() = Some(ids);
+                                *relock(&transfers[c][i]) = Some(ids);
                             }
                         }
                         barrier.wait();
                         for (i, m) in plan.iter().enumerate() {
                             if m.recipient == h && err.is_none() {
-                                let ids = transfers[c][i]
-                                    .lock()
-                                    .unwrap()
-                                    .take()
-                                    .unwrap_or_default();
+                                let ids = relock(&transfers[c][i]).take().unwrap_or_default();
                                 if ids.is_empty() {
                                     continue;
                                 }
@@ -769,7 +997,7 @@ fn run_live_epoch_parallel(
                         Some(e) => Err(e),
                         None => s.finish_epoch(),
                     };
-                    (outcome, d_in, d_out)
+                    (h, outcome, d_in, d_out)
                 })
             })
             .collect();
@@ -780,11 +1008,25 @@ fn run_live_epoch_parallel(
             }
         }
     });
-    for (h, (outcome, d_in, d_out)) in results.into_iter().enumerate() {
-        // First error by host order wins (deterministic).
-        outcomes.push(outcome?);
+    let mut host_outcomes: Vec<Option<Result<EpochOutcome>>> = Vec::with_capacity(n_hosts);
+    host_outcomes.resize_with(n_hosts, || None);
+    for (h, outcome, d_in, d_out) in results {
         steals_in[h] += d_in;
         steals_out[h] += d_out;
+        host_outcomes[h] = Some(outcome);
+    }
+    for (h, slot) in host_outcomes.into_iter().enumerate() {
+        // First error by host order wins (deterministic), carrying the
+        // failing host's index and the whole fleet's epoch progress.
+        match slot {
+            Some(Ok(o)) => outcomes.push(o),
+            Some(Err(e)) => {
+                return Err(e
+                    .context(format!("host {h} failed mid-epoch (live steal protocol)"))
+                    .context(fleet_progress(sessions)));
+            }
+            None => outcomes.push(dead_outcome(&sessions[h])),
+        }
     }
     Ok(())
 }
@@ -853,5 +1095,31 @@ mod tests {
         assert_eq!(r.host_reports.len(), 1);
         assert_eq!(r.host_reports[0].batches(), 40);
         assert_eq!(r.host_reports[0].steals_in, 0);
+    }
+
+    #[test]
+    fn fleet_progress_names_every_host() {
+        // The context a failing parallel epoch attaches: one entry per
+        // host, in host order, with the epochs each completed.
+        let c = cfg(2, 4, 2);
+        let cluster = Cluster::from_config(&c).unwrap();
+        let mut sessions = cluster.build_sessions().unwrap();
+        sessions[0].run_epoch().unwrap();
+        assert_eq!(
+            fleet_progress(&sessions),
+            "cluster epoch failed; per-host progress: host 0: 1 epochs, host 1: 0 epochs"
+        );
+    }
+
+    #[test]
+    fn crash_masks_track_the_fault_plan() {
+        let mut c = cfg(3, 6, 3);
+        c.fault_plan = crate::fault::FaultPlan::new().host_crash(1, 2).unwrap();
+        let cluster = Cluster::from_config(&c).unwrap();
+        assert_eq!(cluster.crash_after, vec![None, Some(2), None]);
+        assert!(cluster.host_alive(1, 0) && cluster.host_alive(1, 1));
+        assert!(!cluster.host_alive(1, 2) && !cluster.host_alive(1, 5));
+        assert_eq!(cluster.alive_mask(2), vec![true, false, true]);
+        assert_eq!(cluster.alive_mask(0), vec![true, true, true]);
     }
 }

@@ -16,6 +16,7 @@
 //! n_csd = 1             # CSD fleet size (0 valid for cpu strategy)
 //! csd_assign = block    # block | stripe shard→CSD assignment
 //! steal = off           # off | epoch | live cross-host work stealing
+//! fault_plan = csd0:down@10..20  # scripted faults (see crate::fault)
 //! loader = torchvision  # torchvision | dali_cpu | dali_gpu
 //! seed = 0
 //! trace_mode = full     # full | stats_only (streaming stats, O(1) mem)
@@ -101,6 +102,10 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
                 let s = StealMode::parse(v)
                     .with_context(|| format!("bad steal {v:?} (expected off | epoch | live)"))?;
                 b.steal(s)
+            }
+            "fault_plan" => {
+                let p = crate::fault::FaultPlan::parse(v).context("fault_plan")?;
+                b.fault_plan(p)
             }
             "n_batches" => b.n_batches(v.parse().context("n_batches")?),
             "epochs" => b.epochs(v.parse().context("epochs")?),
@@ -255,6 +260,19 @@ mod tests {
         // shape validation flows through the builder
         assert!(load("n_hosts = 2\n", &[]).is_err());
         assert!(load("n_hosts = 0\n", &[]).is_err());
+    }
+
+    #[test]
+    fn fault_plan_key_parses() {
+        let cfg = load("n_csd = 2\nn_accel = 2\nfault_plan = csd1:down@5..9; csd0:slow@1..2x2\n", &[])
+            .unwrap();
+        assert_eq!(cfg.fault_plan.events().len(), 2);
+        assert_eq!(cfg.fault_plan.csd_down_windows(1), vec![(5.0, 9.0)]);
+        assert!(load("fault_plan = csd0:explode@3\n", &[]).is_err());
+        // device bounds flow through builder validation
+        assert!(load("fault_plan = csd4:fail@1\n", &[]).is_err());
+        // the empty value is the empty plan
+        assert!(load("fault_plan = \n", &[]).unwrap().fault_plan.is_empty());
     }
 
     #[test]

@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
+use crate::fault::FaultPlan;
 use crate::pipeline::{OpCosts, PipelineKind};
 use crate::topology::CsdAssign;
 
@@ -228,6 +229,11 @@ pub struct ExperimentConfig {
     /// or not at all. `off` (default) keeps every host on its static
     /// shard — bit-identical to independent sessions.
     pub steal: StealMode,
+    /// Scripted fault plan (config key `fault_plan`, DSL in
+    /// [`crate::fault`]): deterministic virtual-time brownouts,
+    /// slowdowns, device failures and host crashes. Empty by default —
+    /// an empty plan is bit-identical to a build without the subsystem.
+    pub fault_plan: FaultPlan,
     /// Batches per epoch (dataset_size / batch_size).
     pub n_batches: u32,
     /// Training epochs to simulate.
@@ -280,6 +286,7 @@ pub struct ExperimentBuilder {
     n_csd: u32,
     csd_assign: CsdAssign,
     steal: StealMode,
+    fault_plan: FaultPlan,
     n_batches: u32,
     epochs: u32,
     loader: Loader,
@@ -302,6 +309,7 @@ impl Default for ExperimentBuilder {
             n_csd: 1,
             csd_assign: CsdAssign::Block,
             steal: StealMode::Off,
+            fault_plan: FaultPlan::new(),
             n_batches: 500,
             epochs: 1,
             loader: Loader::Torchvision,
@@ -364,6 +372,13 @@ impl ExperimentBuilder {
 
     pub fn csd_assign(mut self, a: CsdAssign) -> Self {
         self.csd_assign = a;
+        self
+    }
+
+    /// Attach a scripted [`FaultPlan`]. Validated against the fleet
+    /// shape when the topology is built.
+    pub fn fault_plan(mut self, p: FaultPlan) -> Self {
+        self.fault_plan = p;
         self
     }
 
@@ -468,6 +483,10 @@ impl ExperimentBuilder {
         if self.adaptive.min_samples < 2 {
             bail!("adaptive_min_samples must be >= 2");
         }
+        // Fault-plan device indices must name real devices. (Also
+        // checked at topology build; failing here gives config-file and
+        // CLI users the error at parse time.)
+        self.fault_plan.validate(self.n_csd, self.n_accel, self.n_hosts)?;
         let cfg = ExperimentConfig {
             model: self.model,
             pipeline: self.pipeline,
@@ -478,6 +497,7 @@ impl ExperimentBuilder {
             n_csd: self.n_csd,
             csd_assign: self.csd_assign,
             steal: self.steal,
+            fault_plan: self.fault_plan,
             n_batches: self.n_batches,
             epochs: self.epochs,
             loader: self.loader,

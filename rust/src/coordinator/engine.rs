@@ -47,14 +47,25 @@ use crate::csd::{CsdEngine, CsdProduct};
 use crate::dataset::{BatchId, DatasetSpec, HeadTailCursor, Shard, ShardView};
 use crate::energy::compute_energy;
 use crate::host::{HostEngine, HostReady};
-use crate::metrics::RunReport;
+use crate::metrics::{FaultStats, RunReport};
 use crate::sim::Secs;
 use crate::topology::Topology;
-use crate::trace::Trace;
+use crate::trace::{Device, Phase, Trace};
 use crate::util::idxheap::IdxMinHeap;
 
 /// Upper bound on event-loop iterations per epoch (runaway guard).
 const MAX_ITERS_FACTOR: u64 = 64;
+
+/// Health fingerprint of one CSD: 0 healthy, 1 browned out, 2 dead
+/// (stop signal or permanent failure). Transitions of this value drive
+/// [`SchedPolicy::on_workload_changed`] under an active fault plan.
+fn csd_health_of(csd: &CsdEngine) -> u8 {
+    match csd.available_from() {
+        None => 2,
+        Some(_) if csd.in_brownout() => 1,
+        Some(_) => 0,
+    }
+}
 
 /// A batch that finished preprocessing on one of the two prongs — the
 /// observation events delivered to [`SchedPolicy::on_batch_ready`] so
@@ -145,6 +156,20 @@ pub struct Engine<'a> {
     /// Record [`BatchReady`] events for the active policy?
     record_events: bool,
     events: Vec<BatchReady>,
+    // ---- fault machinery (DESIGN.md §Faults) ----
+    /// Does the topology's fault plan script any per-device event?
+    /// Every fault branch on the hot path gates on this, so a plan-free
+    /// run takes the legacy code paths — and produces the legacy bits —
+    /// exactly.
+    fault_active: bool,
+    /// Batches that executed on a device other than their assigned one
+    /// (CSD production rerouted to a survivor, accelerator training
+    /// redirected after a permanent failure). Cumulative across epochs.
+    rerouted: u64,
+    /// Per-CSD health fingerprint (0 healthy, 1 browned out, 2 dead)
+    /// from the last policy notification; a change mid-epoch triggers
+    /// [`SchedPolicy::on_workload_changed`]. Empty unless `fault_active`.
+    csd_health: Vec<u8>,
 }
 
 impl<'a> Engine<'a> {
@@ -236,13 +261,15 @@ impl<'a> Engine<'a> {
         };
         // Built before the struct literal: the closure reads `topology`,
         // which the literal then moves into the engine.
+        let fault_active = topology.fault().has_device_events();
         let csds: Vec<CsdEngine> = (0..topology.n_csd() as usize)
             .map(|c| {
                 let mut csd =
                     CsdEngine::new(cfg.n_accel as u16, cfg.profile.csd_signal_latency_s);
                 // Profile-wide failure (the paper's single-device knob)
                 // kills every CSD; topology-level injection kills one
-                // device. Earliest time wins.
+                // device. Earliest time wins. The fault plan's CsdFail
+                // events arrive through `topology.csd_fail_at` too.
                 let profile_fail =
                     (cfg.profile.csd_fail_at_s >= 0.0).then_some(cfg.profile.csd_fail_at_s);
                 let fail = match (profile_fail, topology.csd_fail_at(c)) {
@@ -252,9 +279,29 @@ impl<'a> Engine<'a> {
                 if let Some(t) = fail {
                     csd.fail_at(t);
                 }
+                if fault_active {
+                    csd.set_fault_windows(
+                        topology.fault().csd_down_windows(c as u32),
+                        topology.fault().csd_slow_windows(c as u32),
+                    );
+                }
                 csd
             })
             .collect();
+        let accels: Vec<AccelEngine> = (0..n_accel)
+            .map(|i| {
+                let mut a = AccelEngine::new(i as u16);
+                if let Some(t) = topology.fault().accel_fail_at(i as u32) {
+                    a.fail_at(t);
+                }
+                a
+            })
+            .collect();
+        let csd_health = if fault_active {
+            csds.iter().map(csd_health_of).collect()
+        } else {
+            Vec::new()
+        };
         let mut eng = Engine {
             cfg,
             topology,
@@ -277,7 +324,7 @@ impl<'a> Engine<'a> {
                 .map(|_| HostEngine::new(w_per, cfg.profile.worker_scaling_exp, collate))
                 .collect(),
             csds,
-            accels: (0..n_accel).map(|i| AccelEngine::new(i as u16)).collect(),
+            accels,
             ready_accels: IdxMinHeap::new(n_accel),
             first_unfinished_idx: 0,
             max_free: 0.0,
@@ -294,6 +341,9 @@ impl<'a> Engine<'a> {
             wasted: 0,
             record_events: false,
             events: Vec::new(),
+            fault_active,
+            rerouted: 0,
+            csd_health,
         };
         eng.rebuild_selection();
         Ok(eng)
@@ -602,17 +652,48 @@ impl<'a> Engine<'a> {
 
     /// Pop the oldest unconsumed batch from directory `dir` regardless
     /// of current time (the caller waits until `ready`). `None` when no
-    /// CSD serves `dir`.
+    /// CSD serves `dir`. Under an active fault plan, production for
+    /// `dir` may have been rerouted to a surviving device
+    /// ([`Engine::csd_produce_one`]) — the assigned device is probed
+    /// first (bit-exact with the legacy path when nothing rerouted),
+    /// then the rest of the fleet in index order.
     pub fn take_next_csd(&mut self, dir: u16) -> Option<CsdProduct> {
         let c = self.topology.csd_of(dir as usize)?;
-        self.csds[c].take_next(dir)
+        if let Some(p) = self.csds[c].take_next(dir) {
+            return Some(p);
+        }
+        if self.fault_active {
+            for i in 0..self.csds.len() {
+                if i == c {
+                    continue;
+                }
+                if let Some(p) = self.csds[i].take_next(dir) {
+                    return Some(p);
+                }
+            }
+        }
+        None
     }
 
     /// Pop the oldest unconsumed batch from `dir` whose write-back
-    /// completed by `t` (the WRR readiness probe's consume path).
+    /// completed by `t` (the WRR readiness probe's consume path). Same
+    /// fault-reroute scan order as [`Engine::take_next_csd`].
     pub fn take_ready_csd(&mut self, dir: u16, t: Secs) -> Option<CsdProduct> {
         let c = self.topology.csd_of(dir as usize)?;
-        self.csds[c].take_ready(dir, t)
+        if let Some(p) = self.csds[c].take_ready(dir, t) {
+            return Some(p);
+        }
+        if self.fault_active {
+            for i in 0..self.csds.len() {
+                if i == c {
+                    continue;
+                }
+                if let Some(p) = self.csds[i].take_ready(dir, t) {
+                    return Some(p);
+                }
+            }
+        }
+        None
     }
 
     /// Time CSD device `c` becomes idle.
@@ -657,13 +738,59 @@ impl<'a> Engine<'a> {
                 produced: c.produced_len(),
                 wasted: c.wasted(),
                 busy_s: c.busy(),
+                degraded_s: c.degraded_s(),
+                recovery_latency_s: c.recovery_latency_s(),
             })
             .collect()
     }
 
+    /// Engine-side fault attribution accrued so far: rerouted batches
+    /// plus every CSD's brownout/slowdown degradation and recovery
+    /// latency. All-zero unless a fault plan fired.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut f = FaultStats {
+            rerouted_batches: self.rerouted,
+            ..FaultStats::default()
+        };
+        for c in &self.csds {
+            f.degraded_s += c.degraded_s();
+            f.recovery_latency_s += c.recovery_latency_s();
+        }
+        f
+    }
+
+    /// Is the fault machinery live (the topology's plan scripts
+    /// per-device CSD/accelerator events)?
+    pub fn fault_active(&self) -> bool {
+        self.fault_active
+    }
+
+    /// Re-fingerprint CSD health (healthy / browned out / dead); `true`
+    /// when any device transitioned since the last call — the epoch
+    /// driver then notifies the policy via
+    /// [`SchedPolicy::on_workload_changed`]. Only meaningful (and only
+    /// called) under an active fault plan.
+    pub(crate) fn note_fault_transitions(&mut self) -> bool {
+        let mut changed = false;
+        for (c, csd) in self.csds.iter().enumerate() {
+            let h = csd_health_of(csd);
+            if self.csd_health[c] != h {
+                self.csd_health[c] = h;
+                changed = true;
+            }
+        }
+        changed
+    }
+
     /// Charge the WRR readiness probe (`len(os.listdir)`) to `a`'s
-    /// device stream, when the profile prices it.
+    /// device stream, when the profile prices it. A permanently failed
+    /// accelerator charges nothing — its lane stays frozen at the
+    /// failure point, so `failed()` remains monotone and the dead
+    /// device's timeline shows no post-mortem activity.
     pub fn poll_overhead(&mut self, a: usize) {
+        if self.fault_active && self.accels[a].failed() {
+            return;
+        }
         if self.cfg.profile.poll_cost_s > 0.0 {
             self.accels[a].overhead(self.cfg.profile.poll_cost_s);
             let free = self.accels[a].free_at();
@@ -748,13 +875,73 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Under an active fault plan, the CSD that should execute a
+    /// production assigned to `primary`: the primary itself while it is
+    /// healthy; during a brownout, whichever device (primary included)
+    /// could start earliest (ties → the primary, then the lowest
+    /// index); after a permanent failure, the earliest-available
+    /// survivor. `None` when no device in the fleet can produce — the
+    /// caller degrades to the CPU head, generalizing the single-device
+    /// `unclaim_tail` race path. Deterministic: depends only on lane
+    /// clocks and scripted windows, never on host threads.
+    fn route_csd(&self, primary: usize) -> Option<(usize, bool)> {
+        if let Some(t) = self.csds[primary].available_from() {
+            if !self.csds[primary].in_brownout() {
+                return Some((primary, false));
+            }
+            // Browned out but alive: reroute only if a peer can start
+            // strictly earlier than the post-window primary.
+            let mut best = (t, primary);
+            for (i, csd) in self.csds.iter().enumerate() {
+                if i == primary {
+                    continue;
+                }
+                if let Some(ti) = csd.available_from() {
+                    if ti < best.0 {
+                        best = (ti, i);
+                    }
+                }
+            }
+            return Some((best.1, best.1 != primary));
+        }
+        // Primary is dead: earliest-available survivor, ties → lowest
+        // index.
+        let mut best: Option<(Secs, usize)> = None;
+        for (i, csd) in self.csds.iter().enumerate() {
+            if i == primary {
+                continue;
+            }
+            if let Some(ti) = csd.available_from() {
+                match best {
+                    Some((bt, _)) if ti >= bt => {}
+                    _ => best = Some((ti, i)),
+                }
+            }
+        }
+        best.map(|(_, i)| (i, true))
+    }
+
     /// Produce one CSD batch into `dir` from shard `shard_of` on the
     /// CSD device the topology assigns to `dir`; returns false when no
     /// CSD serves the directory, that shard's cursor is exhausted, or
-    /// the device stopped.
+    /// the device stopped. Under an active fault plan a browned-out or
+    /// dead device's production is rerouted to the earliest-available
+    /// survivor ([`Engine::route_csd`]); with no survivor the batch
+    /// stays on the cursor for the CPU head.
     pub fn csd_produce_one(&mut self, dir: u16, shard_of: usize) -> bool {
-        let Some(c) = self.topology.csd_of(dir as usize) else {
+        let Some(primary) = self.topology.csd_of(dir as usize) else {
             return false;
+        };
+        let (c, rerouted) = if self.fault_active {
+            match self.route_csd(primary) {
+                Some(r) => r,
+                // No device in the fleet can produce: leave the batch
+                // unclaimed — the CPU head absorbs the tail, exactly
+                // like the legacy single-device failure path.
+                None => return false,
+            }
+        } else {
+            (primary, false)
         };
         let Some(local) = self.cursors[shard_of].claim_tail() else {
             return false;
@@ -763,6 +950,14 @@ impl<'a> Engine<'a> {
         let cost = self.costs.provider_mut().csd_batch(gid);
         match self.csds[c].produce(gid, dir, &cost, &mut self.trace) {
             Some(ready) => {
+                if rerouted {
+                    self.rerouted += 1;
+                    // Zero-length marker on the absorbing device's
+                    // timeline: visible in span queries, invisible to
+                    // every busy-time aggregate.
+                    self.trace
+                        .record(Device::Csd, Phase::FaultReroute, Some(gid), ready, ready);
+                }
                 if self.record_events {
                     self.events.push(BatchReady {
                         batch: gid,
@@ -785,9 +980,44 @@ impl<'a> Engine<'a> {
 
     /// Consume one batch on accelerator `a`, keeping the incremental
     /// selection structures in sync with the advanced lane clock.
+    ///
+    /// Under an active fault plan, a permanently failed accelerator's
+    /// training is redirected to the surviving accelerator with the
+    /// earliest lane (ties → lowest index); shard bookkeeping (consumed
+    /// counters, quotas, selection) stays under `a`, so policies keep
+    /// draining the dead device's shard with no policy-side changes. If
+    /// *every* accelerator has failed the batch executes on `a` anyway
+    /// — the simulation never drops work.
     pub fn consume(&mut self, a: usize, gid: BatchId, source: BatchSource, data_ready: Secs) {
         let cost = self.costs.provider_mut().train(gid, source == BatchSource::Csd);
-        self.accels[a].consume(gid, source, data_ready, &cost, &mut self.trace);
+        let exec = if self.fault_active && self.accels[a].failed() {
+            let mut best: Option<(Secs, usize)> = None;
+            for (i, acc) in self.accels.iter().enumerate() {
+                if acc.failed() {
+                    continue;
+                }
+                let f = acc.free_at();
+                match best {
+                    Some((bf, _)) if f >= bf => {}
+                    _ => best = Some((f, i)),
+                }
+            }
+            best.map_or(a, |(_, i)| i)
+        } else {
+            a
+        };
+        self.accels[exec].consume(gid, source, data_ready, &cost, &mut self.trace);
+        if exec != a {
+            self.rerouted += 1;
+            let at = self.accels[exec].free_at();
+            self.trace.record(
+                Device::Accel(exec as u16),
+                Phase::FaultReroute,
+                Some(gid),
+                at,
+                at,
+            );
+        }
         self.consumed[a] += 1;
         self.epoch_consumed += 1;
         self.total_consumed += 1;
@@ -795,8 +1025,8 @@ impl<'a> Engine<'a> {
             self.from_csd[a] += 1;
             self.total_from_csd += 1;
         }
+        self.max_free = self.max_free.max(self.accels[exec].free_at());
         let free = self.accels[a].free_at();
-        self.max_free = self.max_free.max(free);
         if self.consumed[a] < self.epoch_quota[a] {
             self.ready_accels.upsert(a, free);
         } else {
@@ -897,6 +1127,7 @@ impl<'a> Engine<'a> {
             batches_from_csd: self.total_from_csd as u32,
             wasted_batches: self.wasted,
             energy,
+            fault: self.fault_stats(),
         }
     }
 }
@@ -916,7 +1147,11 @@ pub fn run(
     // Built through the fallible path so an oversized hand-built config
     // (n_accel past the u16 device-index width) errors instead of
     // panicking out of a Result-returning API.
-    let topology = Topology::builder().accels(cfg.n_accel).csds(1).build()?;
+    let topology = Topology::builder()
+        .accels(cfg.n_accel)
+        .csds(1)
+        .fault_plan(cfg.fault_plan.clone())
+        .build()?;
     let mut eng = Engine::with_topology(cfg, spec, CostSource::Borrowed(costs), topology)?;
     // Reusable event scratch buffer: swapped with the engine's event
     // vector each delivery round, so steady state allocates nothing.
@@ -968,6 +1203,13 @@ pub(crate) fn drive_epoch(
             if eng.epoch_consumed() >= t {
                 return Ok(false);
             }
+        }
+        // Fault transitions (a CSD dying, entering or leaving a
+        // brownout) change where workload can run; notify the policy
+        // once per transition so it can re-balance (MTE re-clamps its
+        // pre-allocation). Gated on the plan: healthy runs never probe.
+        if eng.fault_active() && eng.note_fault_transitions() {
+            policy.on_workload_changed(eng);
         }
         let Some(a) = policy.select_accel(eng) else {
             return Ok(true);

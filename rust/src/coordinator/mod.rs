@@ -114,6 +114,12 @@ pub struct CsdDeviceReport {
     pub wasted: u64,
     /// Device busy seconds (read + preprocess + write-back).
     pub busy_s: f64,
+    /// Degraded-mode seconds (brownout delay absorbed + slowdown
+    /// overhead) this device accrued under a fault plan. 0 when healthy.
+    pub degraded_s: f64,
+    /// Summed recovery latency over the brownout windows this device
+    /// produced past (fault onset → first post-recovery batch).
+    pub recovery_latency_s: f64,
 }
 
 /// Outcome of a [`Session`] or [`crate::cluster::Cluster`] run.

@@ -75,13 +75,16 @@ pub trait SchedPolicy {
     /// (e.g. the Adaptive policy's mode-switch decision).
     fn calibrate(&mut self, _eng: &Engine<'_>) {}
 
-    /// The current epoch's workload just changed under the policy — a
-    /// live cross-host steal donated or absorbed batches mid-epoch
-    /// (`steal = live`, DESIGN.md §Cluster). Policies holding per-epoch
-    /// allocations derived from `Engine::shard_len` (MTE's `n_cpu`
-    /// split) must re-clamp them here; stateless policies ignore it.
-    /// Never called unless a live steal actually fires, so the default
-    /// no-op preserves bit-parity for every other mode.
+    /// The current epoch's workload (or where it can run) just changed
+    /// under the policy: a live cross-host steal donated or absorbed
+    /// batches mid-epoch (`steal = live`, DESIGN.md §Cluster), or a
+    /// scripted fault transitioned a CSD's health — died, entered or
+    /// left a brownout window (DESIGN.md §Faults). Policies holding
+    /// per-epoch allocations derived from `Engine::shard_len` (MTE's
+    /// `n_cpu` split) must re-clamp them here; stateless policies
+    /// ignore it. Never called unless a live steal or a fault
+    /// transition actually fires, so the default no-op preserves
+    /// bit-parity for every healthy, non-stealing mode.
     fn on_workload_changed(&mut self, _eng: &Engine<'_>) {}
 }
 

@@ -56,6 +56,25 @@ pub struct CsdEngine {
     /// time, and — unlike a stop signal — it survives epoch restarts.
     fail_at: Option<Secs>,
     started_at: Secs,
+    /// Scripted brownout windows `[down, up)`, sorted by start: no
+    /// production may *start* inside a window (in-flight batches
+    /// complete); production resumes at `up`. Empty for a healthy
+    /// device — every fault branch is gated on that, so the legacy
+    /// paths stay bit-exact.
+    down: Vec<(Secs, Secs)>,
+    /// Scripted slowdown windows `[from, until, factor)`, sorted by
+    /// start: batches *starting* inside run `factor×` slower.
+    slow: Vec<(Secs, Secs, f64)>,
+    /// Per-brownout-window flag: recovery latency and the
+    /// FaultDown/FaultRecover markers are recorded once, at the first
+    /// production pushed past the window.
+    down_hit: Vec<bool>,
+    /// Virtual seconds of degradation: production delay absorbed behind
+    /// brownouts plus extra seconds added by slowdown factors.
+    degraded_s: Secs,
+    /// Summed time from each brownout onset to the first batch produced
+    /// after it.
+    recovery_latency_s: Secs,
 }
 
 impl CsdEngine {
@@ -74,7 +93,22 @@ impl CsdEngine {
             stopped_at: None,
             fail_at: None,
             started_at: signal_latency,
+            down: Vec::new(),
+            slow: Vec::new(),
+            down_hit: Vec::new(),
+            degraded_s: 0.0,
+            recovery_latency_s: 0.0,
         }
+    }
+
+    /// Install scripted fault windows (sorted by start by the caller —
+    /// [`crate::fault::FaultPlan`] extraction guarantees it). Unlike a
+    /// stop signal, windows survive epoch restarts: they are positions
+    /// on the virtual clock, not per-epoch control signals.
+    pub fn set_fault_windows(&mut self, down: Vec<(Secs, Secs)>, slow: Vec<(Secs, Secs, f64)>) {
+        self.down_hit = vec![false; down.len()];
+        self.down = down;
+        self.slow = slow;
     }
 
     pub fn started_at(&self) -> Secs {
@@ -97,21 +131,61 @@ impl CsdEngine {
             (Some(s), Some(f)) => Some(s.min(f)),
             (s, f) => s.or(f),
         };
+        // Brownouts delay the start (production may not *start* inside a
+        // window); the `reserve(earliest, …)` below starts at
+        // `next_free.max(earliest)`, so with no windows `earliest = 0`
+        // reproduces the legacy `reserve(0.0, …)` bit-exactly.
+        let mut earliest = 0.0;
+        if !self.down.is_empty() {
+            let pushed = Self::push_past(&self.down, self.lane.next_free());
+            if pushed > self.lane.next_free() {
+                earliest = pushed;
+            }
+        }
         if let Some(cut) = cutoff {
-            if self.lane.next_free() >= cut {
+            if self.lane.next_free().max(earliest) >= cut {
                 return None;
             }
         }
-        let (s, e) = self.lane.reserve(0.0, cost.total());
-        trace.record(Device::Csd, Phase::CsdRead, Some(b), s, s + cost.read_s);
+        // Slowdown windows scale the batch that *starts* inside them.
+        let start = self.lane.next_free().max(earliest);
+        let factor = self.slow_factor_at(start);
+        let (read_s, pp_s, write_s, total) = if factor > 1.0 {
+            (
+                cost.read_s * factor,
+                cost.pp_s * factor,
+                cost.write_s * factor,
+                cost.total() * factor,
+            )
+        } else {
+            (cost.read_s, cost.pp_s, cost.write_s, cost.total())
+        };
+        if earliest > self.lane.next_free() {
+            // First production after each brownout window records the
+            // markers and the fault's recovery latency.
+            self.degraded_s += earliest - self.lane.next_free();
+            for (i, &(d0, d1)) in self.down.iter().enumerate() {
+                if d1 <= earliest && !self.down_hit[i] && self.lane.next_free() < d1 {
+                    self.down_hit[i] = true;
+                    self.recovery_latency_s += start - d0;
+                    trace.record(Device::Csd, Phase::FaultDown, None, d0, d0);
+                    trace.record(Device::Csd, Phase::FaultRecover, None, start, start);
+                }
+            }
+        }
+        if factor > 1.0 {
+            self.degraded_s += total - cost.total();
+        }
+        let (s, e) = self.lane.reserve(earliest, total);
+        trace.record(Device::Csd, Phase::CsdRead, Some(b), s, s + read_s);
         trace.record(
             Device::Csd,
             Phase::CsdPreprocess,
             Some(b),
-            s + cost.read_s,
-            s + cost.read_s + cost.pp_s,
+            s + read_s,
+            s + read_s + pp_s,
         );
-        trace.record(Device::Csd, Phase::CsdWrite, Some(b), e - cost.write_s, e);
+        trace.record(Device::Csd, Phase::CsdWrite, Some(b), e - write_s, e);
         self.per_dir[dir as usize].push(self.produced.len() as u32);
         self.produced.push(CsdProduct {
             batch: b,
@@ -120,6 +194,64 @@ impl CsdEngine {
         });
         self.total_produced += 1;
         Some(e)
+    }
+
+    /// Push `t` past every brownout window containing it (windows are
+    /// sorted by start, so one forward pass converges).
+    fn push_past(down: &[(Secs, Secs)], mut t: Secs) -> Secs {
+        for &(d0, d1) in down {
+            if t >= d0 && t < d1 {
+                t = d1;
+            }
+        }
+        t
+    }
+
+    /// Slowdown factor for a batch starting at `t` (1.0 = healthy; the
+    /// largest factor wins when windows overlap).
+    fn slow_factor_at(&self, t: Secs) -> f64 {
+        let mut f = 1.0;
+        for &(s0, s1, factor) in &self.slow {
+            if t >= s0 && t < s1 && factor > f {
+                f = factor;
+            }
+        }
+        f
+    }
+
+    /// Earliest time this device could *start* a new production: its
+    /// lane availability pushed past any brownout window, or `None` if
+    /// that start would be at/after a stop signal or permanent failure
+    /// (the device cannot produce again). The engine's reroute pass
+    /// compares these across the fleet.
+    pub fn available_from(&self) -> Option<Secs> {
+        let t = Self::push_past(&self.down, self.lane.next_free());
+        let cutoff = match (self.stopped_at, self.fail_at) {
+            (Some(s), Some(f)) => Some(s.min(f)),
+            (s, f) => s.or(f),
+        };
+        match cutoff {
+            Some(cut) if t >= cut => None,
+            _ => Some(t),
+        }
+    }
+
+    /// Is the device's next production start currently pushed back by a
+    /// brownout window?
+    pub fn in_brownout(&self) -> bool {
+        Self::push_past(&self.down, self.lane.next_free()) > self.lane.next_free()
+    }
+
+    /// Virtual seconds of degradation accrued so far (brownout delay +
+    /// slowdown overhead).
+    pub fn degraded_s(&self) -> Secs {
+        self.degraded_s
+    }
+
+    /// Summed recovery latency over the brownout windows this device
+    /// has produced past.
+    pub fn recovery_latency_s(&self) -> Secs {
+        self.recovery_latency_s
     }
 
     /// Host stop signal (Alg. 2 `sendsignaltoCSD`): no production may

@@ -1,0 +1,459 @@
+//! Scriptable fault plans: deterministic, virtual-time device/host
+//! fault injection (DESIGN.md §Faults).
+//!
+//! A [`FaultPlan`] is a list of [`FaultEvent`]s scripted against the
+//! run's *virtual* clock, so a faulted run is exactly as deterministic
+//! as a healthy one: the same plan over the same config reproduces the
+//! same report bit-for-bit on any thread count. An **empty plan is the
+//! absence of the feature** — every consumer gates its fault paths on
+//! [`FaultPlan::is_empty`], so a plan-free run takes the exact code
+//! paths (and produces the exact bits) it did before the subsystem
+//! existed.
+//!
+//! Four fault shapes cover the failure modes a production fleet
+//! actually sees (ROADMAP: "transient storage brownouts against the
+//! existing per-device failure injection"):
+//!
+//! * **CSD brownout** — the device is down over `[down_at, up_at)` and
+//!   recovers; batches in flight at `down_at` complete (the sub-phases
+//!   already occupy the lane), new production resumes at `up_at`.
+//! * **CSD slowdown** — batches *starting* inside `[from, until)` run
+//!   `factor×` slower (thermal throttling, a flaky flash channel).
+//! * **CSD fail** — the permanent death the paper models
+//!   (`csd_fail_at_s`), now just a one-event plan.
+//! * **Accelerator fail** — the accelerator is retired at `at`; its
+//!   remaining shard work executes on surviving accelerators.
+//! * **Host crash** — the host is lost at an epoch boundary (and, under
+//!   `steal = live`, at the first mid-epoch checkpoint of that epoch):
+//!   the cluster driver turns it into a full donor through the live
+//!   loan machinery instead of propagating an error.
+//!
+//! The textual DSL (config key `fault_plan`) is `;`-separated events:
+//!
+//! ```text
+//! csd0:down@10..20; csd1:slow@5..15x3; csd0:fail@40; accel1:fail@30; host2:crash@epoch1
+//! ```
+
+use std::fmt;
+use std::ops::Range;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::Secs;
+
+/// One scripted fault, in virtual time. Device indices are global
+/// (fleet-wide) until [`FaultPlan::host_slice`] localizes them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// CSD `csd` is unavailable over `[down_at, up_at)`, then recovers.
+    CsdBrownout { csd: u32, down_at: Secs, up_at: Secs },
+    /// Batches starting in `[from, until)` on CSD `csd` run `factor×`
+    /// slower.
+    CsdSlowdown {
+        csd: u32,
+        from: Secs,
+        until: Secs,
+        factor: f64,
+    },
+    /// CSD `csd` dies permanently at `at` (the paper's knob).
+    CsdFail { csd: u32, at: Secs },
+    /// Accelerator `accel` is permanently retired at `at`.
+    AccelFail { accel: u32, at: Secs },
+    /// Host `host` crashes after completing `after_epoch` epochs
+    /// (0-based boundary: `after_epoch = 1` means epochs `>= 1` are
+    /// driven by the recovery path).
+    HostCrash { host: u32, after_epoch: u32 },
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            FaultEvent::CsdBrownout { csd, down_at, up_at } => {
+                write!(f, "csd{csd}:down@{down_at}..{up_at}")
+            }
+            FaultEvent::CsdSlowdown {
+                csd,
+                from,
+                until,
+                factor,
+            } => write!(f, "csd{csd}:slow@{from}..{until}x{factor}"),
+            FaultEvent::CsdFail { csd, at } => write!(f, "csd{csd}:fail@{at}"),
+            FaultEvent::AccelFail { accel, at } => write!(f, "accel{accel}:fail@{at}"),
+            FaultEvent::HostCrash { host, after_epoch } => {
+                write!(f, "host{host}:crash@epoch{after_epoch}")
+            }
+        }
+    }
+}
+
+/// A deterministic script of fault events. `Default` is the empty plan
+/// — bit-identical behavior to a build without the fault subsystem.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    // ---- builders (validating the event shape, not device bounds —
+    // bounds are checked against a concrete topology in `validate`) ----
+
+    pub fn csd_brownout(mut self, csd: u32, down_at: Secs, up_at: Secs) -> Result<Self> {
+        if !(down_at.is_finite() && up_at.is_finite()) || down_at < 0.0 || up_at <= down_at {
+            bail!("csd brownout window [{down_at}, {up_at}) must be finite, >= 0 and non-empty");
+        }
+        self.events.push(FaultEvent::CsdBrownout { csd, down_at, up_at });
+        Ok(self)
+    }
+
+    pub fn csd_slowdown(mut self, csd: u32, from: Secs, until: Secs, factor: f64) -> Result<Self> {
+        if !(from.is_finite() && until.is_finite()) || from < 0.0 || until <= from {
+            bail!("csd slowdown window [{from}, {until}) must be finite, >= 0 and non-empty");
+        }
+        if !factor.is_finite() || factor < 1.0 {
+            bail!("csd slowdown factor {factor} must be finite and >= 1");
+        }
+        self.events.push(FaultEvent::CsdSlowdown {
+            csd,
+            from,
+            until,
+            factor,
+        });
+        Ok(self)
+    }
+
+    pub fn csd_fail(mut self, csd: u32, at: Secs) -> Result<Self> {
+        if !at.is_finite() || at < 0.0 {
+            bail!("csd fail time {at} must be finite and >= 0");
+        }
+        self.events.push(FaultEvent::CsdFail { csd, at });
+        Ok(self)
+    }
+
+    pub fn accel_fail(mut self, accel: u32, at: Secs) -> Result<Self> {
+        if !at.is_finite() || at < 0.0 {
+            bail!("accel fail time {at} must be finite and >= 0");
+        }
+        self.events.push(FaultEvent::AccelFail { accel, at });
+        Ok(self)
+    }
+
+    pub fn host_crash(mut self, host: u32, after_epoch: u32) -> Result<Self> {
+        if after_epoch == 0 {
+            bail!("host crash epoch must be >= 1 (a host dead at epoch 0 never held work)");
+        }
+        self.events.push(FaultEvent::HostCrash { host, after_epoch });
+        Ok(self)
+    }
+
+    /// Check every event's device index against a concrete fleet shape.
+    pub fn validate(&self, n_csd: u32, n_accel: u32, n_hosts: u32) -> Result<()> {
+        for ev in &self.events {
+            match *ev {
+                FaultEvent::CsdBrownout { csd, .. }
+                | FaultEvent::CsdSlowdown { csd, .. }
+                | FaultEvent::CsdFail { csd, .. } => {
+                    if csd >= n_csd {
+                        bail!("fault plan names csd{csd} but the fleet has {n_csd} CSD(s)");
+                    }
+                }
+                FaultEvent::AccelFail { accel, .. } => {
+                    if accel >= n_accel {
+                        bail!(
+                            "fault plan names accel{accel} but the fleet has {n_accel} \
+                             accelerator(s)"
+                        );
+                    }
+                }
+                FaultEvent::HostCrash { host, .. } => {
+                    if host >= n_hosts {
+                        bail!("fault plan names host{host} but the cluster has {n_hosts} host(s)");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- extraction (what each engine layer consumes) ----
+
+    /// Earliest permanent-failure time for CSD `c`, if any.
+    pub fn csd_fail_at(&self, c: u32) -> Option<Secs> {
+        self.events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::CsdFail { csd, at } if csd == c => Some(at),
+                _ => None,
+            })
+            .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
+    }
+
+    /// Brownout windows for CSD `c`, sorted by start time.
+    pub fn csd_down_windows(&self, c: u32) -> Vec<(Secs, Secs)> {
+        let mut w: Vec<(Secs, Secs)> = self
+            .events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::CsdBrownout { csd, down_at, up_at } if csd == c => {
+                    Some((down_at, up_at))
+                }
+                _ => None,
+            })
+            .collect();
+        w.sort_by(|a, b| a.0.total_cmp(&b.0));
+        w
+    }
+
+    /// Slowdown windows for CSD `c`, sorted by start time.
+    pub fn csd_slow_windows(&self, c: u32) -> Vec<(Secs, Secs, f64)> {
+        let mut w: Vec<(Secs, Secs, f64)> = self
+            .events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::CsdSlowdown {
+                    csd,
+                    from,
+                    until,
+                    factor,
+                } if csd == c => Some((from, until, factor)),
+                _ => None,
+            })
+            .collect();
+        w.sort_by(|a, b| a.0.total_cmp(&b.0));
+        w
+    }
+
+    /// Earliest permanent-failure time for accelerator `a`, if any.
+    pub fn accel_fail_at(&self, a: u32) -> Option<Secs> {
+        self.events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::AccelFail { accel, at } if accel == a => Some(at),
+                _ => None,
+            })
+            .fold(None, |acc, t| Some(acc.map_or(t, |x: f64| x.min(t))))
+    }
+
+    /// Earliest crash boundary for host `h`, if any.
+    pub fn host_crash_after(&self, h: u32) -> Option<u32> {
+        self.events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::HostCrash { host, after_epoch } if host == h => Some(after_epoch),
+                _ => None,
+            })
+            .min()
+    }
+
+    /// Does the plan script any per-device (CSD/accelerator) event?
+    /// Host crashes are handled by the cluster driver, not the engine.
+    pub fn has_device_events(&self) -> bool {
+        self.events
+            .iter()
+            .any(|ev| !matches!(ev, FaultEvent::HostCrash { .. }))
+    }
+
+    /// Localize the plan to one host's device slice: CSD/accelerator
+    /// events inside the given global index ranges are kept and
+    /// re-indexed to the slice; everything else (other hosts' devices,
+    /// host crashes — those belong to the cluster driver) is dropped.
+    pub fn host_slice(&self, csds: Range<u32>, accels: Range<u32>) -> FaultPlan {
+        let remap_csd = |c: u32| csds.contains(&c).then(|| c - csds.start);
+        let remap_accel = |a: u32| accels.contains(&a).then(|| a - accels.start);
+        let events = self
+            .events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::CsdBrownout { csd, down_at, up_at } => {
+                    remap_csd(csd).map(|csd| FaultEvent::CsdBrownout { csd, down_at, up_at })
+                }
+                FaultEvent::CsdSlowdown {
+                    csd,
+                    from,
+                    until,
+                    factor,
+                } => remap_csd(csd).map(|csd| FaultEvent::CsdSlowdown {
+                    csd,
+                    from,
+                    until,
+                    factor,
+                }),
+                FaultEvent::CsdFail { csd, at } => {
+                    remap_csd(csd).map(|csd| FaultEvent::CsdFail { csd, at })
+                }
+                FaultEvent::AccelFail { accel, at } => {
+                    remap_accel(accel).map(|accel| FaultEvent::AccelFail { accel, at })
+                }
+                FaultEvent::HostCrash { .. } => None,
+            })
+            .collect();
+        FaultPlan { events }
+    }
+
+    /// Parse the `;`-separated DSL (see module docs). Whitespace around
+    /// events is ignored; the empty string is the empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for raw in s.split(';') {
+            let ev = raw.trim();
+            if ev.is_empty() {
+                continue;
+            }
+            plan = plan
+                .parse_event(ev)
+                .with_context(|| format!("fault event {ev:?}"))?;
+        }
+        Ok(plan)
+    }
+
+    fn parse_event(self, ev: &str) -> Result<FaultPlan> {
+        let (dev, spec) = ev
+            .split_once(':')
+            .context("expected <device>:<fault> (e.g. csd0:down@10..20)")?;
+        let idx = |prefix: &str| -> Result<u32> {
+            dev.strip_prefix(prefix)
+                .with_context(|| format!("device {dev:?} is not {prefix}<N>"))?
+                .parse::<u32>()
+                .with_context(|| format!("device index in {dev:?}"))
+        };
+        let time = |s: &str| -> Result<f64> {
+            s.parse::<f64>().with_context(|| format!("time {s:?}"))
+        };
+        let window = |s: &str| -> Result<(f64, f64)> {
+            let (a, b) = s
+                .split_once("..")
+                .with_context(|| format!("window {s:?} is not <t1>..<t2>"))?;
+            Ok((time(a)?, time(b)?))
+        };
+        if dev.starts_with("csd") {
+            let c = idx("csd")?;
+            if let Some(w) = spec.strip_prefix("down@") {
+                let (t1, t2) = window(w)?;
+                self.csd_brownout(c, t1, t2)
+            } else if let Some(w) = spec.strip_prefix("slow@") {
+                let (range, factor) = w
+                    .rsplit_once('x')
+                    .with_context(|| format!("slowdown {w:?} is not <t1>..<t2>x<factor>"))?;
+                let (t1, t2) = window(range)?;
+                self.csd_slowdown(c, t1, t2, time(factor)?)
+            } else if let Some(t) = spec.strip_prefix("fail@") {
+                self.csd_fail(c, time(t)?)
+            } else {
+                bail!("unknown csd fault {spec:?} (want down@, slow@ or fail@)");
+            }
+        } else if dev.starts_with("accel") {
+            let a = idx("accel")?;
+            let t = spec
+                .strip_prefix("fail@")
+                .with_context(|| format!("unknown accel fault {spec:?} (want fail@<t>)"))?;
+            self.accel_fail(a, time(t)?)
+        } else if dev.starts_with("host") {
+            let h = idx("host")?;
+            let e = spec
+                .strip_prefix("crash@epoch")
+                .with_context(|| format!("unknown host fault {spec:?} (want crash@epoch<E>)"))?;
+            self.host_crash(h, e.parse::<u32>().with_context(|| format!("epoch {e:?}"))?)
+        } else {
+            bail!("unknown device {dev:?} (want csd<N>, accel<N> or host<N>)");
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(f, "{ev}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_default() {
+        assert!(FaultPlan::new().is_empty());
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert_eq!(FaultPlan::parse("  ;  ").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn dsl_round_trips() {
+        let s = "csd0:down@10..20;csd1:slow@5..15x3;csd0:fail@40;accel1:fail@30;host2:crash@epoch1";
+        let plan = FaultPlan::parse(s).unwrap();
+        assert_eq!(plan.events().len(), 5);
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert_eq!(plan.csd_fail_at(0), Some(40.0));
+        assert_eq!(plan.csd_fail_at(1), None);
+        assert_eq!(plan.csd_down_windows(0), vec![(10.0, 20.0)]);
+        assert_eq!(plan.csd_slow_windows(1), vec![(5.0, 15.0, 3.0)]);
+        assert_eq!(plan.accel_fail_at(1), Some(30.0));
+        assert_eq!(plan.host_crash_after(2), Some(1));
+        assert!(plan.has_device_events());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "csd0",
+            "csd0:down@20..10",
+            "csd0:slow@1..2x0.5",
+            "csd0:explode@3",
+            "gpu0:fail@1",
+            "host0:crash@epoch0",
+            "accel0:fail@-1",
+            "csdX:fail@1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn windows_sort_and_fail_merges_earliest() {
+        let plan = FaultPlan::parse("csd0:down@30..40;csd0:down@5..6;csd0:fail@9;csd0:fail@3")
+            .unwrap();
+        assert_eq!(plan.csd_down_windows(0), vec![(5.0, 6.0), (30.0, 40.0)]);
+        assert_eq!(plan.csd_fail_at(0), Some(3.0));
+    }
+
+    #[test]
+    fn validate_bounds() {
+        let plan = FaultPlan::parse("csd2:fail@1").unwrap();
+        assert!(plan.validate(3, 1, 1).is_ok());
+        assert!(plan.validate(2, 1, 1).is_err());
+        let plan = FaultPlan::parse("accel1:fail@1;host1:crash@epoch1").unwrap();
+        assert!(plan.validate(0, 2, 2).is_ok());
+        assert!(plan.validate(0, 1, 2).is_err());
+        assert!(plan.validate(0, 2, 1).is_err());
+    }
+
+    #[test]
+    fn host_slice_localizes_and_drops() {
+        let plan = FaultPlan::parse(
+            "csd0:down@1..2;csd2:fail@3;csd3:slow@1..4x2;accel5:fail@7;host0:crash@epoch1",
+        )
+        .unwrap();
+        let local = plan.host_slice(2..4, 4..8);
+        assert_eq!(local.csd_fail_at(0), Some(3.0)); // csd2 → local 0
+        assert_eq!(local.csd_slow_windows(1), vec![(1.0, 4.0, 2.0)]); // csd3 → 1
+        assert!(local.csd_down_windows(0).is_empty()); // csd0 dropped
+        assert_eq!(local.accel_fail_at(1), Some(7.0)); // accel5 → local 1
+        assert_eq!(local.host_crash_after(0), None); // host events dropped
+    }
+}

@@ -90,6 +90,35 @@
 //!     );
 //! }
 //! ```
+//!
+//! Faults are scripted in virtual time through a [`fault::FaultPlan`]
+//! (see `examples/brownout_recovery.rs` for the full walkthrough): a
+//! CSD that browns out mid-run has its directories rerouted to the
+//! surviving devices and picks its work back up on recovery, with the
+//! degraded interval attributed in the report:
+//!
+//! ```no_run
+//! use ddlp::config::ExperimentConfig;
+//! use ddlp::coordinator::{Session, Strategy};
+//! use ddlp::fault::FaultPlan;
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .model("wrn")
+//!     .strategy(Strategy::Wrr)
+//!     .n_accel(4)
+//!     .n_csd(2)
+//!     // csd1 is down over [10s, 25s) of virtual time, then recovers
+//!     .fault_plan(FaultPlan::parse("csd1:down@10..25").unwrap())
+//!     .build()
+//!     .unwrap();
+//! let result = Session::from_config(&cfg).unwrap().run().unwrap();
+//! println!(
+//!     "rerouted {} batches, {:.1}s degraded, recovery latency {:.1}s",
+//!     result.report.fault.rerouted_batches,
+//!     result.report.fault.degraded_s,
+//!     result.report.fault.recovery_latency_s,
+//! );
+//! ```
 
 pub mod accel;
 pub mod bench;
@@ -99,6 +128,7 @@ pub mod coordinator;
 pub mod csd;
 pub mod dataset;
 pub mod energy;
+pub mod fault;
 pub mod host;
 pub mod metrics;
 pub mod pipeline;

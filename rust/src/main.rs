@@ -80,7 +80,8 @@ fn real_main() -> Result<()> {
                  ddlp e2e   [--artifacts DIR] [--set k=v]...\n  \
                  ddlp version\n\nconfig keys: model, pipeline, strategy (cpu|csd|mte|wrr|adaptive), \
                  num_workers, n_hosts, n_accel, n_csd, csd_assign (block|stripe), \
-                 steal (off|epoch|live), n_batches, epochs, \
+                 steal (off|epoch|live), fault_plan (e.g. csd0:down@10..20;host1:crash@epoch1), \
+                 n_batches, epochs, \
                  loader, seed, csd_slowdown, adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()
@@ -136,6 +137,18 @@ fn cmd_run(args: &[String]) -> Result<()> {
         fmt_s(r.energy.cpu_joules),
         fmt_s(r.energy.csd_joules)
     );
+    // Degraded-mode attribution, printed only under a scripted fault
+    // plan — a healthy run's stdout stays byte-identical to before
+    // fault support existed (CI diffs it across thread counts).
+    let faulted = !cfg.fault_plan.is_empty();
+    if faulted {
+        println!(
+            "faults: rerouted batches {}   degraded {}s   recovery latency {}s",
+            r.fault.rerouted_batches,
+            fmt_s(r.fault.degraded_s),
+            fmt_s(r.fault.recovery_latency_s)
+        );
+    }
     if result.csd_devices.len() > 1 {
         for (i, d) in result.csd_devices.iter().enumerate() {
             println!(
@@ -144,17 +157,28 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 d.wasted,
                 fmt_s(d.busy_s)
             );
+            if faulted && (d.degraded_s > 0.0 || d.recovery_latency_s > 0.0) {
+                println!(
+                    "csd[{i}]: degraded {}s  recovery latency {}s",
+                    fmt_s(d.degraded_s),
+                    fmt_s(d.recovery_latency_s)
+                );
+            }
         }
     }
     if result.host_reports.len() > 1 {
         for h in &result.host_reports {
             println!(
-                "host[{}]: makespan {}s  batches {}  stolen in {} / out {}",
+                "host[{}]: makespan {}s  batches {}  stolen in {} / out {}{}",
                 h.host,
                 fmt_s(h.makespan()),
                 h.batches(),
                 h.steals_in,
-                h.steals_out
+                h.steals_out,
+                match h.crashed_after_epoch {
+                    Some(e) => format!("  CRASHED after epoch {e}"),
+                    None => String::new(),
+                }
             );
         }
     }

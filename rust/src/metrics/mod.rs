@@ -7,6 +7,33 @@
 use crate::energy::EnergyReport;
 use crate::sim::Secs;
 
+/// Degraded-mode attribution for a run driven under a
+/// [`crate::fault::FaultPlan`]. All-zero (the `Default`) for a run
+/// without faults, so the struct's presence in [`RunReport`] cannot
+/// perturb bit-exact comparisons of healthy runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Batches that executed on a device other than their assigned one
+    /// (CSD production rerouted to a survivor, or an accelerator's
+    /// training redirected after a permanent accel failure).
+    pub rerouted_batches: u64,
+    /// Virtual seconds of degradation: production delay absorbed behind
+    /// brownout windows plus the extra seconds slowdown factors added.
+    pub degraded_s: Secs,
+    /// Summed per-fault recovery latency: time from each fault firing
+    /// to the first batch the affected device produced after recovering.
+    pub recovery_latency_s: Secs,
+}
+
+impl FaultStats {
+    /// Accumulate another run's (or device's) attribution into this one.
+    pub fn absorb(&mut self, other: &FaultStats) {
+        self.rerouted_batches += other.rerouted_batches;
+        self.degraded_s += other.degraded_s;
+        self.recovery_latency_s += other.recovery_latency_s;
+    }
+}
+
 /// §VII-C decomposition of one run plus the per-batch aggregates the
 /// tables report.
 ///
@@ -46,6 +73,8 @@ pub struct RunReport {
     pub wasted_batches: u64,
     /// Energy accounting (Table VIII).
     pub energy: EnergyReport,
+    /// Degraded-mode attribution (all-zero unless a fault plan fired).
+    pub fault: FaultStats,
 }
 
 impl RunReport {

@@ -46,6 +46,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::ExperimentConfig;
+use crate::fault::FaultPlan;
 use crate::sim::Secs;
 
 /// Shard→CSD assignment mode (config key `csd_assign = block|stripe`).
@@ -99,6 +100,9 @@ pub struct Topology {
     /// Per-CSD injected failure time (fleet health, not a device-model
     /// profile knob: one device dying must not kill its peers).
     csd_fail_at: Vec<Option<Secs>>,
+    /// Scripted fault plan: brownouts, slowdowns, device failures and
+    /// host crashes, all in virtual time. Empty for a healthy fleet.
+    fault: FaultPlan,
     /// Global rank of this topology's first accelerator (non-zero only
     /// for a [`Topology::host_slice`] of a multi-host topology).
     accel_base: u32,
@@ -141,6 +145,7 @@ impl Topology {
             .accels(cfg.n_accel)
             .csds(cfg.n_csd)
             .assign(cfg.csd_assign)
+            .fault_plan(cfg.fault_plan.clone())
             .build()
     }
 
@@ -176,9 +181,19 @@ impl Topology {
         &self.csd_dirs[c]
     }
 
-    /// Injected failure time of CSD `c` (fleet health), if any.
+    /// Injected failure time of CSD `c` (fleet health), if any —
+    /// earliest of the builder's `fail_csd` injections and the fault
+    /// plan's `CsdFail` events (the plan re-expresses the legacy knob).
     pub fn csd_fail_at(&self, c: usize) -> Option<Secs> {
-        self.csd_fail_at[c]
+        match (self.csd_fail_at[c], self.fault.csd_fail_at(c as u32)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// The scripted fault plan (empty for a healthy fleet).
+    pub fn fault(&self) -> &FaultPlan {
+        &self.fault
     }
 
     /// Global rank of this topology's first accelerator (0 unless this
@@ -251,6 +266,10 @@ impl Topology {
             .clone()
             .map(|c| self.csd_fail_at[c as usize])
             .collect();
+        // The host's share of the fault plan, device indices shifted to
+        // the local window. Host crashes are a cluster-level concern and
+        // are dropped from per-host slices.
+        let fault = self.fault.host_slice(cr.clone(), ar.clone());
         Ok(Topology {
             n_hosts: 1,
             n_accel,
@@ -259,6 +278,7 @@ impl Topology {
             accel_csd,
             csd_dirs,
             csd_fail_at,
+            fault,
             accel_base: ar.start,
             world_accel: self.n_accel,
         })
@@ -302,6 +322,7 @@ pub struct TopologyBuilder {
     csds: u32,
     assign: CsdAssign,
     fail: Vec<(u32, Secs)>,
+    fault: FaultPlan,
 }
 
 impl Default for TopologyBuilder {
@@ -312,6 +333,7 @@ impl Default for TopologyBuilder {
             csds: 1,
             assign: CsdAssign::Block,
             fail: Vec::new(),
+            fault: FaultPlan::new(),
         }
     }
 }
@@ -345,6 +367,14 @@ impl TopologyBuilder {
         self
     }
 
+    /// Attach a scripted [`FaultPlan`] (brownouts, slowdowns, device
+    /// failures, host crashes). Validated against the fleet shape at
+    /// build time. Replaces any previously attached plan.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = plan;
+        self
+    }
+
     pub fn build(self) -> Result<Topology> {
         if self.hosts == 0 {
             bail!("topology needs at least one host");
@@ -375,6 +405,7 @@ impl TopologyBuilder {
                 bail!("fail_csd({idx}, {t}): failure time must be finite and >= 0");
             }
         }
+        self.fault.validate(self.csds, self.accels, self.hosts)?;
         let (accel_csd, csd_dirs) = assign_maps(self.accels, self.csds, self.assign);
         let mut csd_fail_at: Vec<Option<Secs>> = vec![None; self.csds as usize];
         for &(idx, t) in &self.fail {
@@ -389,6 +420,7 @@ impl TopologyBuilder {
             accel_csd,
             csd_dirs,
             csd_fail_at,
+            fault: self.fault,
             accel_base: 0,
             world_accel: self.accels,
         })
@@ -567,6 +599,35 @@ mod tests {
         let s1 = t.host_slice(1).unwrap();
         assert_eq!(s0.csd_fail_at(0), None);
         assert_eq!(s1.csd_fail_at(0), Some(7.0));
+    }
+
+    #[test]
+    fn fault_plan_validated_and_sliced() {
+        let plan =
+            FaultPlan::parse("csd1:down@5..9;csd1:fail@20;host1:crash@epoch1").unwrap();
+        let t = Topology::builder()
+            .hosts(2)
+            .accels(4)
+            .csds(2)
+            .fault_plan(plan)
+            .build()
+            .unwrap();
+        // Plan CsdFail events surface through the legacy accessor.
+        assert_eq!(t.csd_fail_at(1), Some(20.0));
+        assert_eq!(t.fault().host_crash_after(1), Some(1));
+        let s0 = t.host_slice(0).unwrap();
+        let s1 = t.host_slice(1).unwrap();
+        assert_eq!(s0.csd_fail_at(0), None);
+        assert_eq!(s1.csd_fail_at(0), Some(20.0)); // global csd1 → local 0
+        assert_eq!(s1.fault().csd_down_windows(0), vec![(5.0, 9.0)]);
+        // Host crashes stay cluster-level: dropped from every slice.
+        assert_eq!(s1.fault().host_crash_after(1), None);
+        // Out-of-range device indices are rejected at build time.
+        assert!(Topology::builder()
+            .csds(1)
+            .fault_plan(FaultPlan::parse("csd1:fail@1").unwrap())
+            .build()
+            .is_err());
     }
 
     #[test]

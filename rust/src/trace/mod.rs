@@ -82,10 +82,21 @@ pub enum Phase {
     Train,
     /// Accelerator-side preprocessing (the DALI-GPU mode).
     AccelPreprocess,
+    /// Zero-length marker: a scripted fault took the device down
+    /// (brownout onset or permanent failure). Zero duration keeps the
+    /// busy-time accumulators (`t_csd` sums *any* `Device::Csd` span)
+    /// bit-exact.
+    FaultDown,
+    /// Zero-length marker: the device produced its first batch after
+    /// recovering from a fault window.
+    FaultRecover,
+    /// Zero-length marker: a batch was rerouted off its assigned device
+    /// (recorded on the device that absorbed it).
+    FaultReroute,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 9] = [
+    pub const ALL: [Phase; 12] = [
         Phase::SsdRead,
         Phase::CpuPreprocess,
         Phase::H2d,
@@ -95,6 +106,9 @@ impl Phase {
         Phase::GdsRead,
         Phase::Train,
         Phase::AccelPreprocess,
+        Phase::FaultDown,
+        Phase::FaultRecover,
+        Phase::FaultReroute,
     ];
     pub const COUNT: usize = Phase::ALL.len();
 

@@ -10,6 +10,7 @@ use ddlp::cluster::{Cluster, StealMode};
 use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::{CostProvider, CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
 use ddlp::coordinator::Strategy;
+use ddlp::fault::FaultPlan;
 use ddlp::pipeline::PipelineKind;
 use ddlp::topology::CsdAssign;
 use ddlp::trace::{Phase, Trace};
@@ -475,6 +476,231 @@ fn live_steal_rescues_a_slow_host_mid_epoch() {
         live.report.makespan,
         off.report.makespan
     );
+}
+
+// ----------------------------------------------------------------------
+// Scripted host crashes and device faults (DESIGN.md §Faults)
+// ----------------------------------------------------------------------
+
+#[test]
+fn host_crash_hands_work_to_survivors_every_steal_mode() {
+    // Acceptance: a 4-host fleet loses host 2 after its first epoch.
+    // The driver must drain the crashed host's remaining shard pool
+    // through the steal machinery and split it across the survivors —
+    // in every steal mode, since crash recovery is driver-level, not a
+    // stealing feature. With uniform costs the arithmetic is exact:
+    // host 2 hands off its 60-batch shard, each survivor absorbs 20.
+    const N: u32 = 240;
+    const EPOCHS: u32 = 3;
+    for steal in [StealMode::Off, StealMode::Epoch, StealMode::Live] {
+        let label = format!("steal={steal}");
+        let mut c = cfg_cluster(
+            Strategy::Wrr,
+            N,
+            4,
+            4,
+            4,
+            CsdAssign::Block,
+            steal,
+            EPOCHS,
+        );
+        c.fault_plan = FaultPlan::new().host_crash(2, 1).unwrap();
+        let r = Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(uniform_factory)
+            .run()
+            .unwrap();
+        assert_eq!(r.report.n_batches, N * EPOCHS, "{label}: lost batches");
+        assert_exact_coverage(&r.trace, N, EPOCHS, &label);
+        let crashed = &r.host_reports[2];
+        assert_eq!(crashed.crashed_after_epoch, Some(1), "{label}");
+        assert_eq!(crashed.steals_out, 60, "{label}: crashed host hands off its shard");
+        assert_eq!(crashed.steals_in, 0, "{label}");
+        assert_eq!(crashed.batches(), 60, "{label}: one epoch before the crash");
+        for h in [0usize, 1, 3] {
+            let s = &r.host_reports[h];
+            assert_eq!(s.crashed_after_epoch, None, "{label}: host {h}");
+            assert_eq!(s.steals_in, 20, "{label}: host {h} absorbs a third");
+            assert_eq!(s.batches(), 220, "{label}: host {h} runs 60 + 2×80");
+        }
+        let stolen: u64 = r.host_reports.iter().map(|h| h.steals_in).sum();
+        let donated: u64 = r.host_reports.iter().map(|h| h.steals_out).sum();
+        assert_eq!(stolen, donated, "{label}: ledger unbalanced");
+    }
+}
+
+#[test]
+fn faulted_cluster_parallel_matches_sequential() {
+    // The ISSUE's acceptance scenario: 4 hosts, 4 CSDs, steal = live,
+    // host 2 crashes mid-run AND host 1's only CSD browns out early —
+    // the run must complete with exactly-once conservation, carry
+    // degraded-mode attribution up through the cluster rollup, and the
+    // parallel driver must stay bit-identical to the sequential one.
+    const N: u32 = 240;
+    const EPOCHS: u32 = 3;
+    let mut c = cfg_cluster(
+        Strategy::Wrr,
+        N,
+        4,
+        4,
+        4,
+        CsdAssign::Block,
+        StealMode::Live,
+        EPOCHS,
+    );
+    c.fault_plan = FaultPlan::new()
+        .host_crash(2, 1)
+        .unwrap()
+        .csd_brownout(1, 0.5, 40.0)
+        .unwrap();
+    let build = || {
+        Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(|h| skewed_costs(h, 3.0))
+    };
+    let par = build().run_parallel().unwrap();
+    let seq = build().run_sequential().unwrap();
+    assert_results_identical(&par, &seq, "faulted live cluster");
+    assert_eq!(par.report.n_batches, N * EPOCHS);
+    assert_exact_coverage(&par.trace, N, EPOCHS, "faulted live cluster");
+    assert_eq!(par.host_reports[2].crashed_after_epoch, Some(1));
+    assert!(par.host_reports[2].steals_out > 0, "crash must hand off work");
+    // The brownout hits host 1's only CSD: its work reroutes to the
+    // CPU head and the degradation is attributed on that host...
+    let h1 = &par.host_reports[1].report.fault;
+    assert!(
+        h1.rerouted_batches > 0 || h1.degraded_s > 0.0,
+        "brownout on host 1 left no attribution"
+    );
+    // ...and the cluster report is the exact sum of the host reports.
+    let sum: u64 = par
+        .host_reports
+        .iter()
+        .map(|h| h.report.fault.rerouted_batches)
+        .sum();
+    assert_eq!(par.report.fault.rerouted_batches, sum);
+    let degraded: f64 = par.host_reports.iter().map(|h| h.report.fault.degraded_s).sum();
+    assert!((par.report.fault.degraded_s - degraded).abs() < 1e-9);
+}
+
+#[test]
+fn crash_scripted_past_final_epoch_never_fires() {
+    // A crash after epoch 5 in a 2-epoch run never happens: the run
+    // must be bit-identical to the crash-free one and the host report
+    // must not claim a crash.
+    let c = cfg_cluster(
+        Strategy::Wrr,
+        160,
+        2,
+        4,
+        2,
+        CsdAssign::Block,
+        StealMode::Epoch,
+        2,
+    );
+    let mut scripted = c.clone();
+    scripted.fault_plan = FaultPlan::new().host_crash(0, 5).unwrap();
+    let run = |cfg: &ExperimentConfig| {
+        Cluster::from_config(cfg)
+            .unwrap()
+            .with_cost_factory(|h| skewed_costs(h, 2.0))
+            .run()
+            .unwrap()
+    };
+    let clean = run(&c);
+    let ghost = run(&scripted);
+    assert_results_identical(&clean, &ghost, "never-firing crash");
+    assert!(ghost.host_reports.iter().all(|h| h.crashed_after_epoch.is_none()));
+}
+
+#[test]
+fn all_hosts_crashing_is_a_reported_error() {
+    // When the fault plan leaves no survivor to absorb a crashed
+    // host's work, the run must fail with an error naming the host and
+    // the stranded workload — not panic, not lose batches silently.
+    let mut c = cfg_cluster(
+        Strategy::Wrr,
+        120,
+        2,
+        2,
+        2,
+        CsdAssign::Block,
+        StealMode::Off,
+        3,
+    );
+    c.fault_plan = FaultPlan::new()
+        .host_crash(0, 1)
+        .unwrap()
+        .host_crash(1, 1)
+        .unwrap();
+    let err = Cluster::from_config(&c)
+        .unwrap()
+        .with_cost_factory(uniform_factory)
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("crashes host 0"), "error must name the host: {msg}");
+    assert!(msg.contains("no surviving host"), "error must explain: {msg}");
+}
+
+#[test]
+fn prop_cluster_faults_conserve_batches() {
+    // Property: a random host crash — optionally stacked with a CSD
+    // brownout — across steal modes, strategies and skews never loses
+    // or duplicates a batch, the steal ledger balances, and the crash
+    // is attributed on exactly the scripted host.
+    run_prop("cluster faults conserve batches", 10, |g| {
+        let n_hosts = *g.choose(&[2u32, 4]);
+        let epochs = *g.choose(&[2u32, 3]);
+        let steal = *g.choose(&[StealMode::Off, StealMode::Epoch, StealMode::Live]);
+        let strategy = *g.choose(&[Strategy::Wrr, Strategy::Mte]);
+        let n = g.size(120, 280) as u32;
+        let slow = g.float(1.0, 4.0);
+        let crash_host = g.int(0, n_hosts as i64 - 1) as u32;
+        let after = g.int(1, epochs as i64 - 1) as u32;
+        let mut plan = FaultPlan::new().host_crash(crash_host, after).unwrap();
+        let mut brown = None;
+        if g.bool() {
+            let csd = g.int(0, n_hosts as i64 - 1) as u32;
+            let at = g.float(0.0, 20.0);
+            let dur = g.float(1.0, 30.0);
+            plan = plan.csd_brownout(csd, at, at + dur).unwrap();
+            brown = Some(csd);
+        }
+        let label = format!(
+            "{strategy} hosts={n_hosts} steal={steal} crash=host{crash_host}@{after} \
+             brownout={brown:?} n={n} epochs={epochs} slow={slow:.2}"
+        );
+        let mut c = cfg_cluster(
+            strategy,
+            n,
+            n_hosts,
+            n_hosts,
+            n_hosts,
+            CsdAssign::Block,
+            steal,
+            epochs,
+        );
+        c.fault_plan = plan;
+        let r = Cluster::from_config(&c)
+            .unwrap()
+            .with_cost_factory(move |h| skewed_costs(h, slow))
+            .run()
+            .unwrap();
+        assert_eq!(r.report.n_batches, n * epochs, "{label}");
+        assert_exact_coverage(&r.trace, n, epochs, &label);
+        let stolen: u64 = r.host_reports.iter().map(|h| h.steals_in).sum();
+        let donated: u64 = r.host_reports.iter().map(|h| h.steals_out).sum();
+        assert_eq!(stolen, donated, "{label}: ledger unbalanced");
+        for h in &r.host_reports {
+            let want = (h.host == crash_host).then_some(after);
+            assert_eq!(h.crashed_after_epoch, want, "{label}: host {}", h.host);
+        }
+        assert!(
+            r.host_reports[crash_host as usize].steals_out > 0,
+            "{label}: crashed host must hand off work"
+        );
+    });
 }
 
 #[test]

@@ -8,6 +8,7 @@ use ddlp::config::{DeviceProfile, ExperimentConfig};
 use ddlp::coordinator::cost::{CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
 use ddlp::coordinator::{Session, Strategy};
 use ddlp::dataset::DatasetSpec;
+use ddlp::fault::FaultPlan;
 use ddlp::metrics::RunReport;
 use ddlp::pipeline::PipelineKind;
 use ddlp::topology::{CsdAssign, Topology};
@@ -494,6 +495,164 @@ fn multi_csd_per_device_waste_sums_to_report() {
         per_device, r.report.wasted_batches,
         "per-CSD waste {per_device} != report total {}",
         r.report.wasted_batches
+    );
+}
+
+// ---------------------------------------------------------------------
+// Scripted fault plans (crate::fault; DESIGN.md §Faults)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_fault_plans_preserve_exactly_once() {
+    // Random fault schedules racing the CSD claim paths: whatever mix
+    // of brownouts, slowdowns and device deaths the plan scripts —
+    // across strategies, fleets and both shard→CSD assignments — every
+    // batch still trains exactly once and the batch count conserves.
+    run_prop("fault plans preserve exactly-once", 30, |g| {
+        let n = g.size(60, 300) as u32;
+        let strategy = *g.choose(&[Strategy::Mte, Strategy::Wrr]);
+        let assign = *g.choose(&[CsdAssign::Block, CsdAssign::Stripe]);
+        let n_csd = *g.choose(&[2u32, 4]);
+        let horizon = (n as f64 * 0.4).max(2.0);
+        let mut plan = FaultPlan::new();
+        for c in 0..n_csd {
+            match g.int(0, 3) {
+                0 => {} // this device stays healthy
+                1 => {
+                    let at = g.float(0.0, horizon);
+                    let dur = g.float(0.5, horizon);
+                    plan = plan.csd_brownout(c, at, at + dur).unwrap();
+                }
+                2 => {
+                    let from = g.float(0.0, horizon);
+                    let dur = g.float(0.5, horizon);
+                    let factor = g.float(1.5, 6.0);
+                    plan = plan.csd_slowdown(c, from, from + dur, factor).unwrap();
+                }
+                _ => {
+                    plan = plan.csd_fail(c, g.float(0.0, horizon)).unwrap();
+                }
+            }
+        }
+        let mut c = cfg_fleet(strategy, n, 4, n_csd, assign);
+        c.fault_plan = plan;
+        let topo = Topology::from_config(&c).unwrap();
+        let mut costs = rand_costs(g);
+        let r = Session::with_costs(&c, topo, &spec(n), &mut costs)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.report.n_batches, n, "conservation under faults");
+        assert_exact_coverage(&r.trace, n, 1);
+        // Device rollups stay consistent with the report's fault stats.
+        let deg: f64 = r.csd_devices.iter().map(|d| d.degraded_s).sum();
+        assert!(
+            (deg - r.report.fault.degraded_s).abs() < 1e-9,
+            "per-device degraded {deg} != report {}",
+            r.report.fault.degraded_s
+        );
+    });
+}
+
+#[test]
+fn fault_plan_that_never_fires_is_bit_identical() {
+    // Determinism gate: a plan whose windows lie beyond the run horizon
+    // activates the fault machinery but changes no routing decision —
+    // report and trace must be bit-identical to the unfaulted run.
+    const N: u32 = 200;
+    let base = cfg_fleet(Strategy::Wrr, N, 4, 2, CsdAssign::Block);
+    let mut costs_a = FixedCosts::toy_fig6();
+    let clean = Session::with_costs(
+        &base,
+        Topology::from_config(&base).unwrap(),
+        &spec(N),
+        &mut costs_a,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let mut faulted_cfg = base.clone();
+    faulted_cfg.fault_plan = FaultPlan::new()
+        .csd_brownout(1, 1e9, 2e9)
+        .unwrap()
+        .csd_slowdown(0, 1e9, 2e9, 3.0)
+        .unwrap();
+    let mut costs_b = FixedCosts::toy_fig6();
+    let faulted = Session::with_costs(
+        &faulted_cfg,
+        Topology::from_config(&faulted_cfg).unwrap(),
+        &spec(N),
+        &mut costs_b,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(clean.report, faulted.report);
+    assert_eq!(clean.trace.spans, faulted.trace.spans);
+}
+
+#[test]
+fn brownout_recovers_and_attributes_degradation() {
+    // A transient brownout on one device of a 2-CSD fleet: coverage
+    // stays exactly-once, the disruption shows up in the degraded-mode
+    // attribution (time absorbed or batches rerouted), and the run is
+    // never *faster* than the healthy one.
+    const N: u32 = 200;
+    let base = cfg_fleet(Strategy::Wrr, N, 4, 2, CsdAssign::Block);
+    let mut costs_a = FixedCosts::toy_fig6();
+    let clean = Session::with_costs(
+        &base,
+        Topology::from_config(&base).unwrap(),
+        &spec(N),
+        &mut costs_a,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let mut c = base.clone();
+    c.fault_plan = FaultPlan::new().csd_brownout(1, 2.0, 30.0).unwrap();
+    let mut costs_b = FixedCosts::toy_fig6();
+    let r = Session::with_costs(&c, Topology::from_config(&c).unwrap(), &spec(N), &mut costs_b)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.report.n_batches, N);
+    assert_exact_coverage(&r.trace, N, 1);
+    let f = &r.report.fault;
+    assert!(
+        f.degraded_s > 0.0 || f.rerouted_batches > 0,
+        "brownout left no attribution: {f:?}"
+    );
+    assert!(
+        r.report.makespan >= clean.report.makespan - 1e-9,
+        "faulted run faster than healthy: {} < {}",
+        r.report.makespan,
+        clean.report.makespan
+    );
+}
+
+#[test]
+fn accel_failure_reroutes_batches_to_survivors() {
+    // An accelerator dies mid-run: its shard's batches execute on the
+    // survivors, coverage stays exactly-once, and the reroutes appear
+    // in both the fault stats and the trace markers.
+    const N: u32 = 200;
+    let mut c = cfg_fleet(Strategy::Wrr, N, 4, 2, CsdAssign::Block);
+    c.fault_plan = FaultPlan::new().accel_fail(1, 5.0).unwrap();
+    let mut costs = FixedCosts::toy_fig6();
+    let r = Session::with_costs(&c, Topology::from_config(&c).unwrap(), &spec(N), &mut costs)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.report.n_batches, N);
+    assert_exact_coverage(&r.trace, N, 1);
+    assert!(
+        r.report.fault.rerouted_batches > 0,
+        "no batch rerouted off the dead accelerator"
+    );
+    assert!(
+        r.trace.spans.iter().any(|s| s.phase == Phase::FaultReroute),
+        "reroutes left no trace markers"
     );
 }
 
