@@ -1,0 +1,263 @@
+//! Remote-storage cache curves (DESIGN.md §Storage): virtual makespan
+//! and cache hit rate as the host cache grows (disabled, quarter-epoch,
+//! full-epoch) across remote round-trip times, on a CPU-only fleet over
+//! fixed toy costs — CPU-only so *every* read crosses the remote tier
+//! and the cache curve is undiluted by the CSD prong.
+//!
+//! All measured quantities are *virtual* makespans — every remote
+//! latency draw is a keyed stream off the experiment seed, so every
+//! row is bit-exact deterministic and the CI floor below gates on real
+//! scheduling behavior, not wall-clock noise.
+//!
+//! Besides the stdout report, results are written to
+//! `BENCH_remote_cache.json` (per scenario: makespan, speedup vs the
+//! uncached run at the same RTT, cache hit rate, remote misses, hedges
+//! issued; plus the headline full-epoch-cache speedup at the highest
+//! RTT) so the cache-benefit trajectory is machine-checkable across
+//! PRs.
+//!
+//! Env knobs (CI smoke):
+//!   REMOTE_CACHE_N                 total batches          (default 800)
+//!   REMOTE_CACHE_MIN_HIT_SPEEDUP   minimum allowed speedup of the
+//!                                  full-epoch cache over the uncached
+//!                                  run at the highest RTT; below it
+//!                                  the bench exits non-zero. Unset,
+//!                                  the sweep just records.
+
+use ddlp::config::{DeviceProfile, ExperimentConfig};
+use ddlp::coordinator::cost::{CsdBatchCost, FixedCosts, HostBatchCost, TrainCost};
+use ddlp::coordinator::{RunResult, Session, Strategy};
+use ddlp::dataset::DatasetSpec;
+use ddlp::pipeline::PipelineKind;
+use ddlp::storage::remote::StorageKind;
+use ddlp::topology::Topology;
+
+const N_ACCEL: u32 = 4;
+const EPOCHS: u32 = 2;
+
+/// Remote round-trip times swept (seconds).
+const RTTS: [f64; 3] = [0.0005, 0.002, 0.008];
+
+/// Cache capacity as a fraction of the dataset (0 = caching disabled,
+/// 1 = the whole epoch stays resident, so epoch 2 hits locally).
+const CAP_FRACS: [f64; 3] = [0.0, 0.25, 1.0];
+
+struct Row {
+    rtt_s: f64,
+    cache_objects: u32,
+    makespan_s: f64,
+    speedup: f64,
+    hit_rate: f64,
+    misses: u64,
+    hedges_issued: u64,
+}
+
+/// Read an f64 env knob. A knob that is *set but unparsable* is a hard
+/// error — silently ignoring it would disable the CI floor.
+fn env_f64(key: &str) -> Option<f64> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!("[remote_cache] FAIL: {key}={raw:?} is not a number");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Read a strictly-positive integer env knob (same hard-error policy).
+fn env_u32_pos(key: &str) -> Option<u32> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse::<u32>() {
+        Ok(v) if v > 0 => Some(v),
+        _ => {
+            eprintln!("[remote_cache] FAIL: {key}={raw:?} is not a positive integer");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Main-process loading (workers = 0) keeps the read leg serial, so
+/// the makespan tracks the read cost the cache is supposed to remove.
+fn costs() -> FixedCosts {
+    FixedCosts {
+        host: HostBatchCost {
+            read_s: 0.0005,
+            pp_s: 0.002,
+            xfer_s: 0.0,
+            accel_pp_s: 0.0,
+        },
+        csd: CsdBatchCost {
+            read_s: 0.0,
+            pp_s: 0.0,
+            write_s: 0.0,
+        },
+        train_cpu: TrainCost {
+            gds_s: 0.0,
+            train_s: 0.001,
+        },
+        train_csd: TrainCost {
+            gds_s: 0.0,
+            train_s: 0.001,
+        },
+    }
+}
+
+fn run(n: u32, storage: StorageKind, rtt_s: f64, cache_objects: u32) -> RunResult {
+    let mut profile = DeviceProfile::default();
+    profile.csd_signal_latency_s = 0.0;
+    profile.poll_cost_s = 0.0;
+    profile.remote_rtt_s = rtt_s;
+    profile.remote_tail_s = rtt_s / 4.0;
+    profile.cache_objects = cache_objects;
+    let cfg = ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::CpuOnly)
+        .num_workers(0)
+        .n_accel(N_ACCEL)
+        .n_csd(0)
+        .n_batches(n)
+        .epochs(EPOCHS)
+        .record_trace(false)
+        .storage(storage)
+        .profile(profile)
+        .build()
+        .unwrap();
+    let spec = DatasetSpec {
+        n_batches: n,
+        batch_size: 1,
+        pipeline: PipelineKind::ImageNet1,
+        seed: 0,
+    };
+    let topo = Topology::from_config(&cfg).unwrap();
+    let mut costs = costs();
+    Session::with_costs(&cfg, topo, &spec, &mut costs)
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn main() {
+    let n: u32 = env_u32_pos("REMOTE_CACHE_N").unwrap_or(800);
+
+    let local = run(n, StorageKind::Local, RTTS[0], 0);
+    println!(
+        "[remote_cache] local-ssd baseline cpu-only n_accel={N_ACCEL} {n} batches x {EPOCHS} \
+         epochs: makespan {:.3}s virtual",
+        local.report.makespan
+    );
+    // Determinism anchor: the remote tier twice must be bit-identical —
+    // keyed latency streams must not depend on call order.
+    let probe = run(n, StorageKind::Remote, RTTS[0], n);
+    let probe2 = run(n, StorageKind::Remote, RTTS[0], n);
+    if probe.report != probe2.report || probe.cache != probe2.cache {
+        eprintln!("[remote_cache] FAIL: remote run is not bit-reproducible");
+        std::process::exit(1);
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    for rtt in RTTS {
+        let mut uncached_makespan = None;
+        for frac in CAP_FRACS {
+            let cache_objects = (frac * n as f64) as u32;
+            let r = run(n, StorageKind::Remote, rtt, cache_objects);
+            if r.report.n_batches != n * EPOCHS {
+                eprintln!(
+                    "[remote_cache] FAIL: remote run lost batches \
+                     ({} vs {}, rtt {rtt}s cache {cache_objects})",
+                    r.report.n_batches,
+                    n * EPOCHS
+                );
+                std::process::exit(1);
+            }
+            let rem = r.report.remote;
+            if rem.hedges_won + rem.hedges_wasted != rem.hedges_issued {
+                eprintln!("[remote_cache] FAIL: hedge ledger unbalanced at rtt {rtt}s");
+                std::process::exit(1);
+            }
+            let base = *uncached_makespan.get_or_insert(r.report.makespan);
+            let speedup = base / r.report.makespan;
+            println!(
+                "[remote_cache] rtt {:>5.1}ms cache {:>4} objects: makespan {:.3}s \
+                 ({speedup:.3}x uncached), hit rate {:>5.1}%, {} misses, {} hedges",
+                rtt * 1e3,
+                cache_objects,
+                r.report.makespan,
+                r.cache.hit_rate() * 100.0,
+                rem.misses,
+                rem.hedges_issued
+            );
+            rows.push(Row {
+                rtt_s: rtt,
+                cache_objects,
+                makespan_s: r.report.makespan,
+                speedup,
+                hit_rate: r.cache.hit_rate(),
+                misses: rem.misses,
+                hedges_issued: rem.hedges_issued,
+            });
+        }
+    }
+
+    // Headline: what the full-epoch cache buys at the slowest store.
+    let hit_speedup = rows
+        .iter()
+        .filter(|r| r.rtt_s == RTTS[RTTS.len() - 1] && r.cache_objects == n)
+        .map(|r| r.speedup)
+        .next()
+        .unwrap_or(0.0);
+    println!(
+        "[remote_cache] full-epoch cache at rtt {:.1}ms: {hit_speedup:.3}x over uncached",
+        RTTS[RTTS.len() - 1] * 1e3
+    );
+
+    // Machine-readable cache-benefit record, tracked across PRs.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"remote_cache\",\n");
+    json.push_str(&format!("  \"n_batches\": {n},\n"));
+    json.push_str(&format!("  \"epochs\": {EPOCHS},\n"));
+    json.push_str(&format!(
+        "  \"local_makespan_s\": {:.6},\n",
+        local.report.makespan
+    ));
+    json.push_str(&format!("  \"hit_speedup\": {hit_speedup:.4},\n"));
+    json.push_str(
+        "  \"hit_speedup_definition\": \"uncached virtual makespan / full-epoch-cache \
+         virtual makespan at the highest swept RTT\",\n",
+    );
+    json.push_str("  \"results\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"rtt{:.1}ms_c{}\": {{\"makespan_s\": {:.6}, \"speedup\": {:.4}, \
+             \"hit_rate\": {:.4}, \"misses\": {}, \"hedges_issued\": {}}}{comma}\n",
+            r.rtt_s * 1e3,
+            r.cache_objects,
+            r.makespan_s,
+            r.speedup,
+            r.hit_rate,
+            r.misses,
+            r.hedges_issued
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_remote_cache.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[remote_cache] wrote {path}"),
+        Err(e) => eprintln!("[remote_cache] WARNING: could not write {path}: {e}"),
+    }
+
+    // CI smoke: the cache must actually buy something at the slow end.
+    // Deterministic (virtual makespans), so the gate is exact — no
+    // timer noise margin needed.
+    if let Some(floor) = env_f64("REMOTE_CACHE_MIN_HIT_SPEEDUP") {
+        if hit_speedup < floor {
+            eprintln!(
+                "[remote_cache] FAIL: full-epoch-cache speedup {hit_speedup:.3}x < \
+                 required {floor:.3}x"
+            );
+            std::process::exit(1);
+        }
+        println!("[remote_cache] cache-benefit smoke OK: {hit_speedup:.3}x >= {floor:.3}x");
+    }
+}

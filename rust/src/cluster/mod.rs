@@ -50,6 +50,7 @@ use crate::dataset::BatchId;
 use crate::energy::EnergyReport;
 use crate::metrics::{FaultStats, RunReport};
 use crate::sim::Secs;
+use crate::storage::remote::{CacheStats, RemoteStats};
 use crate::topology::Topology;
 use crate::trace::{Device, Trace};
 
@@ -123,6 +124,10 @@ pub struct HostReport {
     /// Per-CSD rollups of the host's devices (local device order —
     /// globally these are the host's contiguous CSD block).
     pub csd_devices: Vec<CsdDeviceReport>,
+    /// The host's local remote-tier cache counters (all-zero under
+    /// `storage = local`; the remote robustness counters live in
+    /// `report.remote`).
+    pub cache: CacheStats,
 }
 
 impl HostReport {
@@ -511,6 +516,7 @@ impl Cluster {
                 // fired — the host lived the whole run.
                 crashed_after_epoch: self.crash_after[h].filter(|&e| e < self.cfg.epochs),
                 csd_devices: r.csd_devices.clone(),
+                cache: r.cache,
             });
         }
         let mut results = host_results;
@@ -533,8 +539,12 @@ impl Cluster {
             .map(|r| r.report.cpu_dram_time_per_batch * r.report.n_batches as f64)
             .sum();
         let mut fault = FaultStats::default();
+        let mut remote = RemoteStats::default();
+        let mut cache = CacheStats::default();
         for r in &results {
             fault.absorb(&r.report.fault);
+            remote.absorb(&r.report.remote);
+            cache.absorb(&r.cache);
         }
         let energy = EnergyReport {
             joules_per_batch: results
@@ -563,6 +573,7 @@ impl Cluster {
             wasted_batches: results.iter().map(|r| r.report.wasted_batches).sum(),
             energy,
             fault,
+            remote,
         };
         // Merged timeline: spans concatenate host-major with
         // accelerator indices remapped to global ranks (host-local CSD
@@ -589,6 +600,7 @@ impl Cluster {
             losses,
             csd_devices,
             host_reports,
+            cache,
         }
     }
 }

@@ -21,6 +21,13 @@
 //! seed = 0
 //! trace_mode = full     # full | stats_only (streaming stats, O(1) mem)
 //!
+//! # remote object-storage tier (inert under storage = local)
+//! storage = local       # local | remote backing tier
+//! cache_objects = 256   # host-local cache capacity (objects)
+//! cache_policy = lru    # lru | fifo eviction
+//! remote_rtt_s = 2e-3
+//! remote_timeout_s = 0.05
+//!
 //! # device profile overrides
 //! csd_slowdown = 5.0
 //! host_ssd_bw = 3.2e9
@@ -41,6 +48,7 @@ use super::{ExperimentBuilder, ExperimentConfig, Loader};
 use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
 use crate::pipeline::PipelineKind;
+use crate::storage::remote::{CachePolicy, StorageKind};
 use crate::topology::CsdAssign;
 
 /// Parse file contents into a key→value map (comments `#`, blank lines).
@@ -107,6 +115,11 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
                 let p = crate::fault::FaultPlan::parse(v).context("fault_plan")?;
                 b.fault_plan(p)
             }
+            "storage" => {
+                let s = StorageKind::parse(v)
+                    .with_context(|| format!("bad storage {v:?} (expected local | remote)"))?;
+                b.storage(s)
+            }
             "n_batches" => b.n_batches(v.parse().context("n_batches")?),
             "epochs" => b.epochs(v.parse().context("epochs")?),
             "seed" => b.seed(v.parse().context("seed")?),
@@ -152,6 +165,79 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
             }
             "h2d_bw" => {
                 profile.h2d_bw = v.parse().context("h2d_bw")?;
+                b
+            }
+            // per-channel fixed latency overrides
+            "host_pcie_latency_s" => {
+                profile.host_pcie_latency_s = v.parse().context("host_pcie_latency_s")?;
+                b
+            }
+            "csd_internal_latency_s" => {
+                profile.csd_internal_latency_s = v.parse().context("csd_internal_latency_s")?;
+                b
+            }
+            "gds_latency_s" => {
+                profile.gds_latency_s = v.parse().context("gds_latency_s")?;
+                b
+            }
+            "csd_write_latency_s" => {
+                profile.csd_write_latency_s = v.parse().context("csd_write_latency_s")?;
+                b
+            }
+            "h2d_latency_s" => {
+                profile.h2d_latency_s = v.parse().context("h2d_latency_s")?;
+                b
+            }
+            // remote-tier knobs (inert under storage = local)
+            "remote_rtt_s" => {
+                profile.remote_rtt_s = v.parse().context("remote_rtt_s")?;
+                b
+            }
+            "remote_tail_s" => {
+                profile.remote_tail_s = v.parse().context("remote_tail_s")?;
+                b
+            }
+            "remote_bw" => {
+                profile.remote_bw = v.parse().context("remote_bw")?;
+                b
+            }
+            "remote_concurrency" => {
+                profile.remote_concurrency = v.parse().context("remote_concurrency")?;
+                b
+            }
+            "remote_timeout_s" => {
+                profile.remote_timeout_s = v.parse().context("remote_timeout_s")?;
+                b
+            }
+            "remote_retry_max" => {
+                profile.remote_retry_max = v.parse().context("remote_retry_max")?;
+                b
+            }
+            "remote_retry_backoff_s" => {
+                profile.remote_retry_backoff_s = v.parse().context("remote_retry_backoff_s")?;
+                b
+            }
+            "remote_hedge_after_s" => {
+                profile.remote_hedge_after_s = v.parse().context("remote_hedge_after_s")?;
+                b
+            }
+            "remote_breaker_threshold" => {
+                profile.remote_breaker_threshold =
+                    v.parse().context("remote_breaker_threshold")?;
+                b
+            }
+            "remote_breaker_cooldown_s" => {
+                profile.remote_breaker_cooldown_s =
+                    v.parse().context("remote_breaker_cooldown_s")?;
+                b
+            }
+            "cache_objects" => {
+                profile.cache_objects = v.parse().context("cache_objects")?;
+                b
+            }
+            "cache_policy" => {
+                profile.cache_policy = CachePolicy::parse(v)
+                    .with_context(|| format!("bad cache_policy {v:?} (expected lru | fifo)"))?;
                 b
             }
             "worker_scaling_exp" => {
@@ -280,6 +366,35 @@ mod tests {
         let cfg = load("csd_slowdown = 7.5\ncpu_process_w = 6.0\n", &[]).unwrap();
         assert_eq!(cfg.profile.csd_slowdown, 7.5);
         assert_eq!(cfg.profile.power.cpu_process_w, 6.0);
+    }
+
+    #[test]
+    fn storage_and_remote_keys_parse() {
+        let text = "storage = remote\ncache_objects = 64\ncache_policy = fifo\n\
+                    remote_rtt_s = 4e-3\nremote_timeout_s = 0.1\nremote_retry_max = 2\n\
+                    remote_breaker_threshold = 3\nremote_hedge_after_s = 0\n";
+        let cfg = load(text, &[]).unwrap();
+        assert_eq!(cfg.storage, StorageKind::Remote);
+        assert_eq!(cfg.profile.cache_objects, 64);
+        assert_eq!(cfg.profile.cache_policy, CachePolicy::Fifo);
+        assert_eq!(cfg.profile.remote_rtt_s, 4e-3);
+        assert_eq!(cfg.profile.remote_timeout_s, 0.1);
+        assert_eq!(cfg.profile.remote_retry_max, 2);
+        assert_eq!(cfg.profile.remote_breaker_threshold, 3);
+        assert_eq!(cfg.profile.remote_hedge_after_s, 0.0);
+        // default is the local tier
+        assert_eq!(load("model = wrn\n", &[]).unwrap().storage, StorageKind::Local);
+        assert!(load("storage = s3\n", &[]).is_err());
+        assert!(load("cache_policy = clock\n", &[]).is_err());
+    }
+
+    #[test]
+    fn channel_latency_keys_parse() {
+        let cfg = load("gds_latency_s = 5e-6\nh2d_latency_s = 1e-5\n", &[]).unwrap();
+        assert_eq!(cfg.profile.gds_latency_s, 5e-6);
+        assert_eq!(cfg.profile.h2d_latency_s, 1e-5);
+        // untouched channels keep the historical 30 µs default
+        assert_eq!(cfg.profile.host_pcie_latency_s, 30e-6);
     }
 
     #[test]

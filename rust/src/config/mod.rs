@@ -16,6 +16,7 @@ use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
 use crate::fault::FaultPlan;
 use crate::pipeline::{OpCosts, PipelineKind};
+use crate::storage::remote::{CachePolicy, StorageKind};
 use crate::topology::CsdAssign;
 
 /// Electrical power model (paper §VI-B6: 5 W per CPU process, 0.25 W
@@ -104,6 +105,49 @@ pub struct DeviceProfile {
     /// DALI's pipelined data path replaces the python collate/hand-off:
     /// its fixed main-process overhead shrinks by this factor.
     pub dali_gpu_collate_factor: f64,
+    // ---- per-channel fixed request latency (s): command setup, DMA
+    // descriptor, interrupt. All default to the historical shared 30 µs
+    // so an untouched profile is bit-identical to the old single-const
+    // model (DESIGN.md §Storage). ----
+    /// SSD → host DRAM request latency.
+    pub host_pcie_latency_s: f64,
+    /// Flash → CSD engine request latency.
+    pub csd_internal_latency_s: f64,
+    /// SSD → accelerator (GDS) request latency.
+    pub gds_latency_s: f64,
+    /// CSD → flash write-back request latency.
+    pub csd_write_latency_s: f64,
+    /// Host DRAM → accelerator (H2D) request latency.
+    pub h2d_latency_s: f64,
+    // ---- remote object-storage tier (`storage = remote`; DESIGN.md
+    // §Storage). All knobs are inert under `storage = local`. ----
+    /// Baseline round-trip latency per remote request (s).
+    pub remote_rtt_s: f64,
+    /// Scale of the exponential latency tail per request (s).
+    pub remote_tail_s: f64,
+    /// Remote payload streaming bandwidth (bytes/s).
+    pub remote_bw: f64,
+    /// Bounded in-flight remote request concurrency per host.
+    pub remote_concurrency: u32,
+    /// Per-request deadline (s); slower responses count as timeouts.
+    pub remote_timeout_s: f64,
+    /// Retries after the first attempt (total attempts = 1 + this).
+    pub remote_retry_max: u32,
+    /// Base retry backoff (s); doubles per attempt + deterministic
+    /// jitter.
+    pub remote_retry_backoff_s: f64,
+    /// P-tail deadline after which a hedged second request is issued
+    /// (0 disables hedging).
+    pub remote_hedge_after_s: f64,
+    /// Consecutive failures that trip the per-host circuit breaker
+    /// (0 disables the breaker).
+    pub remote_breaker_threshold: u32,
+    /// Seconds the breaker stays open before the half-open probe.
+    pub remote_breaker_cooldown_s: f64,
+    /// Host-local cache capacity in objects (0 disables caching).
+    pub cache_objects: u32,
+    /// Cache eviction policy (`cache_policy = lru|fifo`).
+    pub cache_policy: CachePolicy,
     pub power: PowerModel,
 }
 
@@ -128,6 +172,23 @@ impl Default for DeviceProfile {
             dali_gpu_cost_factor: 0.02,
             dali_gpu_residual_cpu: 0.25,
             dali_gpu_collate_factor: 0.3,
+            host_pcie_latency_s: 30e-6,
+            csd_internal_latency_s: 30e-6,
+            gds_latency_s: 30e-6,
+            csd_write_latency_s: 30e-6,
+            h2d_latency_s: 30e-6,
+            remote_rtt_s: 2e-3,
+            remote_tail_s: 1e-3,
+            remote_bw: 1.2e9,
+            remote_concurrency: 8,
+            remote_timeout_s: 0.05,
+            remote_retry_max: 3,
+            remote_retry_backoff_s: 0.01,
+            remote_hedge_after_s: 8e-3,
+            remote_breaker_threshold: 4,
+            remote_breaker_cooldown_s: 5.0,
+            cache_objects: 256,
+            cache_policy: CachePolicy::Lru,
             power: PowerModel::default(),
         }
     }
@@ -234,6 +295,12 @@ pub struct ExperimentConfig {
     /// slowdowns, device failures and host crashes. Empty by default —
     /// an empty plan is bit-identical to a build without the subsystem.
     pub fault_plan: FaultPlan,
+    /// Backing storage tier (`storage = local|remote`). `Local`
+    /// (default) is the direct-attached SSD/CSD model and is
+    /// bit-identical to a build without the remote subsystem; `Remote`
+    /// fronts reads with a host-local cache over an object store with
+    /// retries, hedging and a circuit breaker (DESIGN.md §Storage).
+    pub storage: StorageKind,
     /// Batches per epoch (dataset_size / batch_size).
     pub n_batches: u32,
     /// Training epochs to simulate.
@@ -287,6 +354,7 @@ pub struct ExperimentBuilder {
     csd_assign: CsdAssign,
     steal: StealMode,
     fault_plan: FaultPlan,
+    storage: StorageKind,
     n_batches: u32,
     epochs: u32,
     loader: Loader,
@@ -310,6 +378,7 @@ impl Default for ExperimentBuilder {
             csd_assign: CsdAssign::Block,
             steal: StealMode::Off,
             fault_plan: FaultPlan::new(),
+            storage: StorageKind::Local,
             n_batches: 500,
             epochs: 1,
             loader: Loader::Torchvision,
@@ -379,6 +448,12 @@ impl ExperimentBuilder {
     /// shape when the topology is built.
     pub fn fault_plan(mut self, p: FaultPlan) -> Self {
         self.fault_plan = p;
+        self
+    }
+
+    /// Select the backing storage tier (`StorageKind::Local` default).
+    pub fn storage(mut self, s: StorageKind) -> Self {
+        self.storage = s;
         self
     }
 
@@ -498,6 +573,7 @@ impl ExperimentBuilder {
             csd_assign: self.csd_assign,
             steal: self.steal,
             fault_plan: self.fault_plan,
+            storage: self.storage,
             n_batches: self.n_batches,
             epochs: self.epochs,
             loader: self.loader,
@@ -525,6 +601,7 @@ mod tests {
         assert_eq!(cfg.n_csd, 1);
         assert_eq!(cfg.csd_assign, CsdAssign::Block);
         assert_eq!(cfg.steal, StealMode::Off);
+        assert_eq!(cfg.storage, StorageKind::Local);
         assert!(cfg.record_trace);
     }
 

@@ -49,6 +49,7 @@ use crate::energy::compute_energy;
 use crate::host::{HostEngine, HostReady};
 use crate::metrics::{FaultStats, RunReport};
 use crate::sim::Secs;
+use crate::storage::remote::{CacheStats, RemoteModel, RemoteStats};
 use crate::topology::Topology;
 use crate::trace::{Device, Phase, Trace};
 use crate::util::idxheap::IdxMinHeap;
@@ -170,6 +171,10 @@ pub struct Engine<'a> {
     /// from the last policy notification; a change mid-epoch triggers
     /// [`SchedPolicy::on_workload_changed`]. Empty unless `fault_active`.
     csd_health: Vec<u8>,
+    /// Remote object-storage tier fronting the CPU prong's reads
+    /// (`storage = remote`; DESIGN.md §Storage). `None` — and every
+    /// read the legacy local cost — under the default local tier.
+    remote: Option<RemoteModel>,
 }
 
 impl<'a> Engine<'a> {
@@ -344,9 +349,30 @@ impl<'a> Engine<'a> {
             fault_active,
             rerouted: 0,
             csd_health,
+            remote: None,
         };
         eng.rebuild_selection();
         Ok(eng)
+    }
+
+    /// Attach the remote storage tier (built by the session from the
+    /// topology's [`crate::storage::remote::StorageKind`]). Every CPU
+    /// prong read now routes through [`RemoteModel::fetch`].
+    pub(crate) fn set_remote(&mut self, rm: RemoteModel) {
+        self.remote = Some(rm);
+    }
+
+    /// Remote-tier robustness counters (all-zero under local storage).
+    pub fn remote_stats(&self) -> RemoteStats {
+        self.remote.as_ref().map(|r| r.stats()).unwrap_or_default()
+    }
+
+    /// Host-local cache counters (all-zero under local storage).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.remote
+            .as_ref()
+            .map(|r| r.cache_stats())
+            .unwrap_or_default()
     }
 
     /// Rebuild the incremental selection structures from the ground
@@ -853,7 +879,11 @@ impl<'a> Engine<'a> {
         let depth = self.depth(a);
         while self.queues[a].len() < depth {
             let Some(gid) = self.claim_head_gid(a) else { break };
-            let cost = self.costs.provider_mut().host_batch(gid);
+            let mut cost = self.costs.provider_mut().host_batch(gid);
+            if let Some(rm) = self.remote.as_mut() {
+                let issue = self.hosts[a].next_issue_time(now);
+                cost.read_s = rm.fetch(gid, issue, cost.read_s, &mut self.trace);
+            }
             let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
             self.note_host_ready(a, &cost, &ready);
             self.queues[a].push_back(ready);
@@ -865,7 +895,11 @@ impl<'a> Engine<'a> {
     pub fn cpu_next(&mut self, a: usize, now: Secs) -> Option<HostReady> {
         if self.depth(a) == 0 {
             let gid = self.claim_head_gid(a)?;
-            let cost = self.costs.provider_mut().host_batch(gid);
+            let mut cost = self.costs.provider_mut().host_batch(gid);
+            if let Some(rm) = self.remote.as_mut() {
+                let issue = self.hosts[a].next_issue_time(now);
+                cost.read_s = rm.fetch(gid, issue, cost.read_s, &mut self.trace);
+            }
             let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
             self.note_host_ready(a, &cost, &ready);
             Some(ready)
@@ -1128,6 +1162,7 @@ impl<'a> Engine<'a> {
             wasted_batches: self.wasted,
             energy,
             fault: self.fault_stats(),
+            remote: self.remote_stats(),
         }
     }
 }

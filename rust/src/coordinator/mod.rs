@@ -139,6 +139,11 @@ pub struct RunResult {
     /// (maxing, for makespan) into [`RunResult::report`]. Empty for a
     /// bare single-host `Session` run, where the report *is* the host.
     pub host_reports: Vec<crate::cluster::HostReport>,
+    /// Host-local cache counters of the remote storage tier, summed
+    /// across hosts for a cluster run (per-host numbers live in
+    /// [`crate::cluster::HostReport::cache`]). All-zero under
+    /// `storage = local`.
+    pub cache: crate::storage::remote::CacheStats,
 }
 
 /// Run one experiment end-to-end (all epochs) on the topology the

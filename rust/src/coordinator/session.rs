@@ -38,6 +38,8 @@ use crate::coordinator::policies::{self, SchedPolicy};
 use crate::coordinator::RunResult;
 use crate::dataset::{BatchId, DatasetSpec};
 use crate::sim::Secs;
+use crate::storage::remote::{RemoteKnobs, RemoteModel, StorageKind};
+use crate::storage::{Channel, SsdModel};
 use crate::topology::Topology;
 
 /// What one [`Session::run_epoch`] step observed — the signal a cluster
@@ -170,7 +172,11 @@ impl<'a> Session<'a> {
         topology: Topology,
     ) -> Result<Session<'a>> {
         let policy = policies::for_config(cfg);
-        let engine = Engine::with_topology(cfg, spec, costs, topology)?;
+        let remote = remote_model_for(cfg, spec, &topology);
+        let mut engine = Engine::with_topology(cfg, spec, costs, topology)?;
+        if let Some(rm) = remote {
+            engine.set_remote(rm);
+        }
         Ok(Session {
             engine,
             policy,
@@ -390,6 +396,7 @@ impl<'a> Session<'a> {
             bail!("session finished with an epoch still open (call finish_epoch first)");
         }
         let csd_devices = self.engine.csd_device_reports();
+        let cache = self.engine.cache_stats();
         // The engine moves the loss curve out of its cost provider —
         // finish happens once, so no clone of the full vector.
         let (report, trace, losses) = self.engine.finish();
@@ -399,8 +406,42 @@ impl<'a> Session<'a> {
             losses,
             csd_devices,
             host_reports: Vec::new(),
+            cache,
         })
     }
+}
+
+/// The remote storage model a session should attach, if the topology
+/// selects the remote tier: knobs and cache shape from the device
+/// profile, payload size from the dataset spec, degraded-path read cost
+/// from the local SSD model (CSD short path when the fleet has one,
+/// else the host SSD head), scripted `store:*` windows from the fault
+/// plan, and the experiment seed so draws replay bit-exactly.
+fn remote_model_for(
+    cfg: &ExperimentConfig,
+    spec: &DatasetSpec,
+    topology: &Topology,
+) -> Option<RemoteModel> {
+    if topology.storage() != StorageKind::Remote {
+        return None;
+    }
+    let bytes = spec.raw_batch_bytes();
+    let ssd = SsdModel::from_profile(&cfg.profile);
+    let degraded = if topology.n_csd() > 0 {
+        ssd.transfer_time(Channel::CsdInternal, bytes)
+    } else {
+        ssd.transfer_time(Channel::HostPcie, bytes)
+    };
+    Some(RemoteModel::new(
+        RemoteKnobs::from_profile(&cfg.profile),
+        cfg.profile.cache_objects,
+        cfg.profile.cache_policy,
+        bytes,
+        degraded,
+        topology.fault().store_down_windows(),
+        topology.fault().store_slow_windows(),
+        cfg.seed,
+    ))
 }
 
 #[cfg(test)]

@@ -27,11 +27,17 @@
 //!   `steal = live`, at the first mid-epoch checkpoint of that epoch):
 //!   the cluster driver turns it into a full donor through the live
 //!   loan machinery instead of propagating an error.
+//! * **Store down / slow** — the *remote object store* (shared by every
+//!   host; no device index) is unavailable over a window, or serves
+//!   requests `factor×` slower. Consumed by
+//!   [`crate::storage::remote::RemoteModel`] under `storage = remote`;
+//!   inert otherwise.
 //!
 //! The textual DSL (config key `fault_plan`) is `;`-separated events:
 //!
 //! ```text
-//! csd0:down@10..20; csd1:slow@5..15x3; csd0:fail@40; accel1:fail@30; host2:crash@epoch1
+//! csd0:down@10..20; csd1:slow@5..15x3; csd0:fail@40; accel1:fail@30;
+//! host2:crash@epoch1; store:down@10..30; store:slow@5..15x4
 //! ```
 
 use std::fmt;
@@ -63,6 +69,17 @@ pub enum FaultEvent {
     /// (0-based boundary: `after_epoch = 1` means epochs `>= 1` are
     /// driven by the recovery path).
     HostCrash { host: u32, after_epoch: u32 },
+    /// The remote object store is unavailable over `[down_at, up_at)`
+    /// — every request issued inside the window times out. Indexless:
+    /// the store is shared by the whole cluster.
+    StoreDown { down_at: Secs, up_at: Secs },
+    /// Requests issued to the remote store in `[from, until)` see
+    /// `factor×` latency (a network or storage-backend brownout).
+    StoreSlow {
+        from: Secs,
+        until: Secs,
+        factor: f64,
+    },
 }
 
 impl fmt::Display for FaultEvent {
@@ -81,6 +98,12 @@ impl fmt::Display for FaultEvent {
             FaultEvent::AccelFail { accel, at } => write!(f, "accel{accel}:fail@{at}"),
             FaultEvent::HostCrash { host, after_epoch } => {
                 write!(f, "host{host}:crash@epoch{after_epoch}")
+            }
+            FaultEvent::StoreDown { down_at, up_at } => {
+                write!(f, "store:down@{down_at}..{up_at}")
+            }
+            FaultEvent::StoreSlow { from, until, factor } => {
+                write!(f, "store:slow@{from}..{until}x{factor}")
             }
         }
     }
@@ -157,6 +180,25 @@ impl FaultPlan {
         Ok(self)
     }
 
+    pub fn store_down(mut self, down_at: Secs, up_at: Secs) -> Result<Self> {
+        if !(down_at.is_finite() && up_at.is_finite()) || down_at < 0.0 || up_at <= down_at {
+            bail!("store down window [{down_at}, {up_at}) must be finite, >= 0 and non-empty");
+        }
+        self.events.push(FaultEvent::StoreDown { down_at, up_at });
+        Ok(self)
+    }
+
+    pub fn store_slow(mut self, from: Secs, until: Secs, factor: f64) -> Result<Self> {
+        if !(from.is_finite() && until.is_finite()) || from < 0.0 || until <= from {
+            bail!("store slow window [{from}, {until}) must be finite, >= 0 and non-empty");
+        }
+        if !factor.is_finite() || factor < 1.0 {
+            bail!("store slow factor {factor} must be finite and >= 1");
+        }
+        self.events.push(FaultEvent::StoreSlow { from, until, factor });
+        Ok(self)
+    }
+
     /// Check every event's device index against a concrete fleet shape.
     pub fn validate(&self, n_csd: u32, n_accel: u32, n_hosts: u32) -> Result<()> {
         for ev in &self.events {
@@ -181,6 +223,10 @@ impl FaultPlan {
                         bail!("fault plan names host{host} but the cluster has {n_hosts} host(s)");
                     }
                 }
+                // The store is shared and indexless: shape was already
+                // validated by the builders, and any fleet can (not)
+                // have a remote tier.
+                FaultEvent::StoreDown { .. } | FaultEvent::StoreSlow { .. } => {}
             }
         }
         Ok(())
@@ -256,18 +302,64 @@ impl FaultPlan {
             .min()
     }
 
-    /// Does the plan script any per-device (CSD/accelerator) event?
-    /// Host crashes are handled by the cluster driver, not the engine.
-    pub fn has_device_events(&self) -> bool {
-        self.events
+    /// Scripted remote-store outage windows, sorted by start time —
+    /// consumed by [`crate::storage::remote::RemoteModel`].
+    pub fn store_down_windows(&self) -> Vec<(Secs, Secs)> {
+        let mut w: Vec<(Secs, Secs)> = self
+            .events
             .iter()
-            .any(|ev| !matches!(ev, FaultEvent::HostCrash { .. }))
+            .filter_map(|ev| match *ev {
+                FaultEvent::StoreDown { down_at, up_at } => Some((down_at, up_at)),
+                _ => None,
+            })
+            .collect();
+        w.sort_by(|a, b| a.0.total_cmp(&b.0));
+        w
+    }
+
+    /// Scripted remote-store slowdown windows, sorted by start time.
+    pub fn store_slow_windows(&self) -> Vec<(Secs, Secs, f64)> {
+        let mut w: Vec<(Secs, Secs, f64)> = self
+            .events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::StoreSlow { from, until, factor } => Some((from, until, factor)),
+                _ => None,
+            })
+            .collect();
+        w.sort_by(|a, b| a.0.total_cmp(&b.0));
+        w
+    }
+
+    /// Does the plan script any per-device (CSD/accelerator) event?
+    /// Host crashes are handled by the cluster driver, and store events
+    /// by the remote-storage model — neither arms the engine's
+    /// device-fault machinery, so a store-only plan keeps local-storage
+    /// runs on the legacy code paths bit-exactly.
+    pub fn has_device_events(&self) -> bool {
+        self.events.iter().any(|ev| {
+            !matches!(
+                ev,
+                FaultEvent::HostCrash { .. }
+                    | FaultEvent::StoreDown { .. }
+                    | FaultEvent::StoreSlow { .. }
+            )
+        })
+    }
+
+    /// Does the plan script any remote-store event?
+    pub fn has_store_events(&self) -> bool {
+        self.events.iter().any(|ev| {
+            matches!(ev, FaultEvent::StoreDown { .. } | FaultEvent::StoreSlow { .. })
+        })
     }
 
     /// Localize the plan to one host's device slice: CSD/accelerator
     /// events inside the given global index ranges are kept and
-    /// re-indexed to the slice; everything else (other hosts' devices,
-    /// host crashes — those belong to the cluster driver) is dropped.
+    /// re-indexed to the slice; store events are kept verbatim (the
+    /// remote store is shared, so every host sees the same windows);
+    /// everything else (other hosts' devices, host crashes — those
+    /// belong to the cluster driver) is dropped.
     pub fn host_slice(&self, csds: Range<u32>, accels: Range<u32>) -> FaultPlan {
         let remap_csd = |c: u32| csds.contains(&c).then(|| c - csds.start);
         let remap_accel = |a: u32| accels.contains(&a).then(|| a - accels.start);
@@ -296,6 +388,12 @@ impl FaultPlan {
                     remap_accel(accel).map(|accel| FaultEvent::AccelFail { accel, at })
                 }
                 FaultEvent::HostCrash { .. } => None,
+                FaultEvent::StoreDown { down_at, up_at } => {
+                    Some(FaultEvent::StoreDown { down_at, up_at })
+                }
+                FaultEvent::StoreSlow { from, until, factor } => {
+                    Some(FaultEvent::StoreSlow { from, until, factor })
+                }
             })
             .collect();
         FaultPlan { events }
@@ -364,8 +462,22 @@ impl FaultPlan {
                 .strip_prefix("crash@epoch")
                 .with_context(|| format!("unknown host fault {spec:?} (want crash@epoch<E>)"))?;
             self.host_crash(h, e.parse::<u32>().with_context(|| format!("epoch {e:?}"))?)
+        } else if dev == "store" {
+            // Indexless: one shared remote object store per cluster.
+            if let Some(w) = spec.strip_prefix("down@") {
+                let (t1, t2) = window(w)?;
+                self.store_down(t1, t2)
+            } else if let Some(w) = spec.strip_prefix("slow@") {
+                let (range, factor) = w
+                    .rsplit_once('x')
+                    .with_context(|| format!("slowdown {w:?} is not <t1>..<t2>x<factor>"))?;
+                let (t1, t2) = window(range)?;
+                self.store_slow(t1, t2, time(factor)?)
+            } else {
+                bail!("unknown store fault {spec:?} (want down@ or slow@)");
+            }
         } else {
-            bail!("unknown device {dev:?} (want csd<N>, accel<N> or host<N>)");
+            bail!("unknown device {dev:?} (want csd<N>, accel<N>, host<N> or store)");
         }
     }
 }
@@ -419,9 +531,66 @@ mod tests {
             "host0:crash@epoch0",
             "accel0:fail@-1",
             "csdX:fail@1",
+            "store:fail@1",
+            "store:down@20..10",
+            "store:slow@1..2x0.5",
+            "store0:down@1..2",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
         }
+    }
+
+    #[test]
+    fn store_events_round_trip_and_stay_in_every_slice() {
+        let plan = FaultPlan::parse("store:down@10..30;store:slow@5..15x4;csd1:down@1..2")
+            .unwrap();
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert_eq!(plan.store_down_windows(), vec![(10.0, 30.0)]);
+        assert_eq!(plan.store_slow_windows(), vec![(5.0, 15.0, 4.0)]);
+        assert!(plan.has_store_events());
+        assert!(plan.has_device_events(), "the csd event is device-level");
+        // Store-only plans never arm the engine's device-fault path.
+        let store_only = FaultPlan::parse("store:down@10..30").unwrap();
+        assert!(store_only.has_store_events());
+        assert!(!store_only.has_device_events());
+        // The shared store survives host slicing verbatim on every host.
+        let sliced = plan.host_slice(4..8, 4..8);
+        assert_eq!(sliced.store_down_windows(), vec![(10.0, 30.0)]);
+        assert_eq!(sliced.store_slow_windows(), vec![(5.0, 15.0, 4.0)]);
+        assert!(sliced.csd_down_windows(0).is_empty(), "csd1 was sliced away");
+        // Any fleet shape validates a store event (indexless).
+        assert!(store_only.validate(0, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn dsl_round_trips_randomized() {
+        use crate::util::prop::run_prop;
+        // parse(format(plan)) == plan for arbitrary well-formed plans:
+        // f64 Display is shortest-round-trip, so the property is exact
+        // equality, not approximate.
+        run_prop("fault_dsl_roundtrip", 200, |g| {
+            let n = g.size(0, 12);
+            let mut plan = FaultPlan::new();
+            for _ in 0..n {
+                let kind = g.int(0, 6);
+                let t1 = g.float(0.0, 50.0);
+                let t2 = t1 + g.float(0.001, 50.0);
+                plan = match kind {
+                    0 => plan.csd_brownout(g.int(0, 7) as u32, t1, t2),
+                    1 => plan.csd_slowdown(g.int(0, 7) as u32, t1, t2, g.float(1.0, 16.0)),
+                    2 => plan.csd_fail(g.int(0, 7) as u32, t1),
+                    3 => plan.accel_fail(g.int(0, 7) as u32, t1),
+                    4 => plan.host_crash(g.int(0, 7) as u32, g.int(1, 9) as u32),
+                    5 => plan.store_down(t1, t2),
+                    _ => plan.store_slow(t1, t2, g.float(1.0, 16.0)),
+                }
+                .unwrap();
+            }
+            let text = plan.to_string();
+            let reparsed = FaultPlan::parse(&text).unwrap();
+            assert_eq!(reparsed, plan, "parse(format(plan)) != plan for {text:?}");
+            assert_eq!(reparsed.to_string(), text, "format must be a fixed point");
+        });
     }
 
     #[test]

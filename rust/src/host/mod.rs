@@ -107,6 +107,20 @@ impl HostEngine {
         }
     }
 
+    /// When the next [`HostEngine::schedule_batch`] call would start
+    /// working — the issue time a remote fetch for that batch departs
+    /// at ([`crate::storage::remote::RemoteModel::fetch`] anchors its
+    /// fault windows and the breaker clock to it). Main-process mode
+    /// serializes behind the consumer, so the later of the main lane
+    /// and `consumer_free`; worker mode starts on the earliest-free
+    /// lane regardless of the consumer.
+    pub fn next_issue_time(&self, consumer_free: Secs) -> Secs {
+        match &self.pool {
+            None => self.main.next_free().max(consumer_free),
+            Some(pool) => pool.earliest_free(),
+        }
+    }
+
     /// Host CPU busy seconds so far (workers + main process) — the
     /// Table IX "CPU and DRAM usage" quantity.
     pub fn cpu_busy(&self) -> Secs {
@@ -202,6 +216,21 @@ mod tests {
         // 16 workers: the serial collate+H2D floor dominates
         let h16 = HostEngine::new(16, 0.85, 1.7);
         assert!((h16.pace_estimate(&cost()) - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn next_issue_time_tracks_the_scheduling_start() {
+        let mut t = Trace::new();
+        // Main-process mode: serial behind the consumer.
+        let mut h0 = HostEngine::new(0, 0.85, 0.0);
+        assert_eq!(h0.next_issue_time(2.0), 2.0);
+        let r = h0.schedule_batch(0, &cost(), 0.0, &mut t);
+        assert_eq!(h0.next_issue_time(0.0), r.ready);
+        // Worker mode: the earliest-free lane, consumer irrelevant.
+        let mut h2 = HostEngine::new(2, 1.0, 0.0);
+        assert_eq!(h2.next_issue_time(99.0), 0.0);
+        h2.schedule_batch(0, &cost(), 0.0, &mut t);
+        assert_eq!(h2.next_issue_time(99.0), 0.0); // second lane still idle
     }
 
     #[test]

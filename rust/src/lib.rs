@@ -119,6 +119,39 @@
 //!     result.report.fault.recovery_latency_s,
 //! );
 //! ```
+//!
+//! Production fleets read from remote object storage rather than a
+//! local SSD: `storage = remote` routes every CPU-prong read through a
+//! host-local cache over a modelled object store with per-request
+//! timeouts, retries, hedged requests and a circuit breaker
+//! ([`storage::remote`]; see `examples/remote_cache.rs`). A scripted
+//! `store:down` brownout exercises the whole robustness layer —
+//! accelerators keep training off the degraded local path instead of
+//! stalling:
+//!
+//! ```no_run
+//! use ddlp::config::ExperimentConfig;
+//! use ddlp::coordinator::{Session, Strategy};
+//! use ddlp::fault::FaultPlan;
+//! use ddlp::storage::remote::StorageKind;
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .model("wrn")
+//!     .strategy(Strategy::Wrr)
+//!     .storage(StorageKind::Remote)
+//!     // the store is unreachable over [5s, 20s) of virtual time
+//!     .fault_plan(FaultPlan::parse("store:down@5..20").unwrap())
+//!     .build()
+//!     .unwrap();
+//! let result = Session::from_config(&cfg).unwrap().run().unwrap();
+//! println!(
+//!     "cache hit rate {:.1}%, {} retries, {} timeouts, breaker open {:.1}s",
+//!     result.cache.hit_rate() * 100.0,
+//!     result.report.remote.retries,
+//!     result.report.remote.timeouts,
+//!     result.report.remote.breaker_open_s,
+//! );
+//! ```
 
 pub mod accel;
 pub mod bench;

@@ -80,8 +80,10 @@ fn real_main() -> Result<()> {
                  ddlp e2e   [--artifacts DIR] [--set k=v]...\n  \
                  ddlp version\n\nconfig keys: model, pipeline, strategy (cpu|csd|mte|wrr|adaptive), \
                  num_workers, n_hosts, n_accel, n_csd, csd_assign (block|stripe), \
-                 steal (off|epoch|live), fault_plan (e.g. csd0:down@10..20;host1:crash@epoch1), \
-                 n_batches, epochs, \
+                 steal (off|epoch|live), fault_plan (e.g. csd0:down@10..20;store:down@5..15), \
+                 storage (local|remote), cache_objects, cache_policy (lru|fifo), \
+                 remote_rtt_s, remote_timeout_s, remote_retry_max, remote_hedge_after_s, \
+                 remote_breaker_threshold, n_batches, epochs, \
                  loader, seed, csd_slowdown, adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()
@@ -149,6 +151,25 @@ fn cmd_run(args: &[String]) -> Result<()> {
             fmt_s(r.fault.recovery_latency_s)
         );
     }
+    // Remote-tier attribution, printed only under storage = remote —
+    // a local-storage run's stdout stays byte-identical to before the
+    // remote tier existed.
+    if cfg.storage == ddlp::storage::remote::StorageKind::Remote {
+        println!(
+            "remote: cache {}/{} hits ({:.1}%)   retries {}   timeouts {}   \
+             hedges {} won / {} wasted   breaker trips {} open {}s   degraded reads {}",
+            result.cache.hits,
+            result.cache.hits + result.cache.misses,
+            result.cache.hit_rate() * 100.0,
+            r.remote.retries,
+            r.remote.timeouts,
+            r.remote.hedges_won,
+            r.remote.hedges_wasted,
+            r.remote.breaker_trips,
+            fmt_s(r.remote.breaker_open_s),
+            r.remote.degraded_reads
+        );
+    }
     if result.csd_devices.len() > 1 {
         for (i, d) in result.csd_devices.iter().enumerate() {
             println!(
@@ -180,6 +201,16 @@ fn cmd_run(args: &[String]) -> Result<()> {
                     None => String::new(),
                 }
             );
+            if cfg.storage == ddlp::storage::remote::StorageKind::Remote {
+                println!(
+                    "host[{}]: cache {}/{} hits ({:.1}%)  evictions {}",
+                    h.host,
+                    h.cache.hits,
+                    h.cache.hits + h.cache.misses,
+                    h.cache.hit_rate() * 100.0,
+                    h.cache.evictions
+                );
+            }
         }
     }
     if !result.losses.is_empty() {

@@ -6,6 +6,7 @@
 
 use crate::energy::EnergyReport;
 use crate::sim::Secs;
+use crate::storage::remote::RemoteStats;
 
 /// Degraded-mode attribution for a run driven under a
 /// [`crate::fault::FaultPlan`]. All-zero (the `Default`) for a run
@@ -75,6 +76,10 @@ pub struct RunReport {
     pub energy: EnergyReport,
     /// Degraded-mode attribution (all-zero unless a fault plan fired).
     pub fault: FaultStats,
+    /// Remote-tier robustness attribution: cache hits/misses, retries,
+    /// timeouts, hedge wins/waste, breaker trips and open time
+    /// (all-zero unless the run used `storage = remote`).
+    pub remote: RemoteStats,
 }
 
 impl RunReport {

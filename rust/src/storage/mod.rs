@@ -10,6 +10,8 @@
 use crate::config::DeviceProfile;
 use crate::sim::Secs;
 
+pub mod remote;
+
 /// Which path a transfer takes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Channel {
@@ -25,12 +27,12 @@ pub enum Channel {
     H2d,
 }
 
-/// Fixed per-request latency of a channel (s): command setup, DMA
-/// descriptor, interrupt. Orders of magnitude below batch transfer
-/// times; included so latency-bound tiny transfers behave sanely.
-const CHANNEL_LATENCY_S: f64 = 30e-6;
-
-/// The SSD + link model.
+/// The SSD + link model: per-channel bandwidth plus per-channel fixed
+/// request latency (command setup, DMA descriptor, interrupt). Latency
+/// is orders of magnitude below batch transfer times; included so
+/// latency-bound tiny transfers behave sanely. All five latencies come
+/// from the device profile and default to the historical shared 30 µs,
+/// so an untouched profile produces bit-identical transfer times.
 #[derive(Debug, Clone)]
 pub struct SsdModel {
     host_bw: f64,
@@ -38,6 +40,11 @@ pub struct SsdModel {
     gds_bw: f64,
     write_bw: f64,
     h2d_bw: f64,
+    host_lat: Secs,
+    csd_lat: Secs,
+    gds_lat: Secs,
+    write_lat: Secs,
+    h2d_lat: Secs,
 }
 
 impl SsdModel {
@@ -48,19 +55,24 @@ impl SsdModel {
             gds_bw: p.gds_bw,
             write_bw: p.ssd_write_bw,
             h2d_bw: p.h2d_bw,
+            host_lat: p.host_pcie_latency_s,
+            csd_lat: p.csd_internal_latency_s,
+            gds_lat: p.gds_latency_s,
+            write_lat: p.csd_write_latency_s,
+            h2d_lat: p.h2d_latency_s,
         }
     }
 
     /// Seconds to move `bytes` over `channel`.
     pub fn transfer_time(&self, channel: Channel, bytes: f64) -> Secs {
-        let bw = match channel {
-            Channel::HostPcie => self.host_bw,
-            Channel::CsdInternal => self.csd_bw,
-            Channel::Gds => self.gds_bw,
-            Channel::CsdWriteBack => self.write_bw,
-            Channel::H2d => self.h2d_bw,
+        let (bw, lat) = match channel {
+            Channel::HostPcie => (self.host_bw, self.host_lat),
+            Channel::CsdInternal => (self.csd_bw, self.csd_lat),
+            Channel::Gds => (self.gds_bw, self.gds_lat),
+            Channel::CsdWriteBack => (self.write_bw, self.write_lat),
+            Channel::H2d => (self.h2d_bw, self.h2d_lat),
         };
-        CHANNEL_LATENCY_S + bytes / bw
+        lat + bytes / bw
     }
 }
 
@@ -126,14 +138,28 @@ mod tests {
         let m = SsdModel::from_profile(&DeviceProfile::default());
         let t1 = m.transfer_time(Channel::HostPcie, 1e6);
         let t2 = m.transfer_time(Channel::HostPcie, 2e6);
-        let latency = CHANNEL_LATENCY_S;
+        let latency = DeviceProfile::default().host_pcie_latency_s;
         assert!(((t2 - latency) / (t1 - latency) - 2.0).abs() < 1e-9);
     }
 
     #[test]
     fn zero_bytes_costs_latency_only() {
         let m = SsdModel::from_profile(&DeviceProfile::default());
-        assert_eq!(m.transfer_time(Channel::Gds, 0.0), CHANNEL_LATENCY_S);
+        assert_eq!(
+            m.transfer_time(Channel::Gds, 0.0),
+            DeviceProfile::default().gds_latency_s
+        );
+    }
+
+    #[test]
+    fn per_channel_latency_is_independent() {
+        let mut p = DeviceProfile::default();
+        p.gds_latency_s = 5e-6;
+        let m = SsdModel::from_profile(&p);
+        assert_eq!(m.transfer_time(Channel::Gds, 0.0), 5e-6);
+        // Other channels keep the default 30 µs floor.
+        assert_eq!(m.transfer_time(Channel::HostPcie, 0.0), 30e-6);
+        assert_eq!(m.transfer_time(Channel::H2d, 0.0), 30e-6);
     }
 
     #[test]

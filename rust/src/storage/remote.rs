@@ -1,0 +1,787 @@
+//! Remote object-storage tier with a host-local cache and a robustness
+//! layer (DESIGN.md §Storage).
+//!
+//! The paper's testbed keeps all data on a local SSD/CSD; production
+//! training fleets read from remote object storage, where *tail
+//! latency* and transient unavailability — not bandwidth — are the
+//! bottleneck (Versaci & Busonera, "Hiding Latencies in Network-Based
+//! Image Loading"). [`RemoteModel`] models that tier in virtual time:
+//!
+//! - **Latency distribution**: per-request latency is `rtt + tail ·
+//!   Exp(1)`, sampled from a seeded [`Prng`] keyed by `(batch, attempt,
+//!   leg)` — deterministic regardless of host thread count or call
+//!   order, like every other virtual-time quantity in the engine.
+//! - **Bandwidth cap + bounded concurrency**: the payload streams over
+//!   one of `concurrency` service lanes ([`LanePool`]), so a burst of
+//!   concurrent misses queues instead of magically parallelizing.
+//! - **Host-local cache** ([`HostCache`]): capacity in objects with an
+//!   LRU or FIFO eviction policy; a hit serves the batch at the local
+//!   SSD read cost and never touches the wire.
+//!
+//! The robustness layer wraps every miss: a per-request timeout, retry
+//! with exponential backoff and deterministic jitter, a hedged second
+//! request once the first response blows past the P-tail deadline
+//! (winner-takes-all; `hedges_won + hedges_wasted == hedges_issued` by
+//! construction), and a per-host circuit breaker that trips after
+//! `breaker_threshold` consecutive failures and serves reads from the
+//! degraded local path (CSD short path, or the host SSD head) until a
+//! cooldown elapses — the half-open probe then closes it. Scripted
+//! `store:down@a..b` / `store:slow@a..bxF` fault windows
+//! ([`crate::fault::FaultPlan`]) force timeouts / stretch latencies so
+//! remote brownouts compose with the existing CSD/accel/host faults.
+//!
+//! Everything is attributed: [`RemoteStats`] flows into
+//! `RunReport.remote`, [`CacheStats`] into `RunResult.cache` and the
+//! cluster's per-host reports, and `RemoteTimeout` / `RemoteRetry` /
+//! `BreakerOpen` / `BreakerClose` zero-length markers land on the
+//! host-CPU timeline.
+
+use std::collections::VecDeque;
+
+use crate::dataset::BatchId;
+use crate::sim::{LanePool, Secs};
+use crate::trace::{Device, Phase, Trace};
+use crate::util::Prng;
+
+/// Which storage tier feeds the CPU prong's reads (config key
+/// `storage = local|remote`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum StorageKind {
+    /// The paper's local SSD: reads cost what the analytic host-path
+    /// model says, nothing else. The default — and bit-identical to
+    /// every pre-remote run.
+    #[default]
+    Local,
+    /// Remote object store fronted by a host-local cache; reads go
+    /// through [`RemoteModel::fetch`].
+    Remote,
+}
+
+impl StorageKind {
+    pub fn parse(s: &str) -> Option<StorageKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "local" => Some(StorageKind::Local),
+            "remote" => Some(StorageKind::Remote),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageKind::Local => "local",
+            StorageKind::Remote => "remote",
+        }
+    }
+}
+
+impl std::fmt::Display for StorageKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Cache eviction policy (config key `cache_policy = lru|fifo`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CachePolicy {
+    /// Evict the least-recently-*used* object (hits refresh recency).
+    #[default]
+    Lru,
+    /// Evict the oldest-*inserted* object (hits don't reorder).
+    Fifo,
+}
+
+impl CachePolicy {
+    pub fn parse(s: &str) -> Option<CachePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(CachePolicy::Lru),
+            "fifo" => Some(CachePolicy::Fifo),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::Fifo => "fifo",
+        }
+    }
+}
+
+impl std::fmt::Display for CachePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Host-local cache counters. All-zero unless the run used the remote
+/// tier; summable across hosts ([`CacheStats::absorb`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Probes answered from the cache.
+    pub hits: u64,
+    /// Probes that had to go to the remote store.
+    pub misses: u64,
+    /// Objects admitted after a successful remote fetch.
+    pub insertions: u64,
+    /// Objects evicted to make room.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Fold another host's cache counters into this one.
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+    }
+
+    /// Hit fraction of all probes (0 when the cache saw none).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Remote-tier robustness counters (`RunReport.remote`). All-zero
+/// unless the run used the remote tier; summable across hosts
+/// ([`RemoteStats::absorb`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RemoteStats {
+    /// Reads served from the host-local cache.
+    pub hits: u64,
+    /// Reads that went to the remote store (cache misses).
+    pub misses: u64,
+    /// Requests re-issued after a timeout.
+    pub retries: u64,
+    /// Requests that blew the per-request deadline (scripted downtime
+    /// or a latency draw past `remote_timeout_s`).
+    pub timeouts: u64,
+    /// Hedged second requests issued after the P-tail deadline.
+    pub hedges_issued: u64,
+    /// Hedges whose second leg finished first.
+    pub hedges_won: u64,
+    /// Hedges whose first leg finished first (duplicate read wasted).
+    /// `hedges_won + hedges_wasted == hedges_issued` always.
+    pub hedges_wasted: u64,
+    /// Circuit-breaker trips (threshold consecutive failures).
+    pub breaker_trips: u64,
+    /// Total virtual seconds the breaker spent open.
+    pub breaker_open_s: Secs,
+    /// Reads served from the degraded local path (breaker open, or
+    /// retries exhausted).
+    pub degraded_reads: u64,
+}
+
+impl RemoteStats {
+    /// Fold another host's remote counters into this one.
+    pub fn absorb(&mut self, other: &RemoteStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+        self.hedges_issued += other.hedges_issued;
+        self.hedges_won += other.hedges_won;
+        self.hedges_wasted += other.hedges_wasted;
+        self.breaker_trips += other.breaker_trips;
+        self.breaker_open_s += other.breaker_open_s;
+        self.degraded_reads += other.degraded_reads;
+    }
+}
+
+/// Host-local object cache: capacity in objects (0 disables caching),
+/// LRU or FIFO eviction. Objects are batch ids — a multi-epoch run
+/// re-reads the same ids every epoch, which is exactly the reuse a
+/// training-input cache exists to capture.
+#[derive(Debug, Clone)]
+pub struct HostCache {
+    policy: CachePolicy,
+    capacity: u32,
+    /// Resident objects, front = next eviction victim (LRU: least
+    /// recently used; FIFO: oldest inserted). O(len) membership scans —
+    /// fine at simulation scale, and keeps eviction order exact.
+    order: VecDeque<BatchId>,
+    stats: CacheStats,
+}
+
+impl HostCache {
+    pub fn new(capacity: u32, policy: CachePolicy) -> HostCache {
+        HostCache {
+            policy,
+            capacity,
+            order: VecDeque::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    /// Resident objects.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Look up `id`, counting a hit or miss. An LRU hit refreshes the
+    /// object's recency; FIFO hits leave the eviction order untouched.
+    pub fn probe(&mut self, id: BatchId) -> bool {
+        match self.order.iter().position(|&x| x == id) {
+            Some(pos) => {
+                self.stats.hits += 1;
+                if self.policy == CachePolicy::Lru {
+                    self.order.remove(pos);
+                    self.order.push_back(id);
+                }
+                true
+            }
+            None => {
+                self.stats.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Admit `id` after a successful remote fetch, evicting the
+    /// front-of-order victim when full. No-op at capacity 0 (caching
+    /// disabled) or when the object is already resident.
+    pub fn insert(&mut self, id: BatchId) {
+        if self.capacity == 0 || self.order.contains(&id) {
+            return;
+        }
+        if self.order.len() as u32 >= self.capacity {
+            self.order.pop_front();
+            self.stats.evictions += 1;
+        }
+        self.order.push_back(id);
+        self.stats.insertions += 1;
+    }
+}
+
+/// Remote-tier knobs, distilled from the device profile so the model
+/// owns plain numbers instead of borrowing the config.
+#[derive(Debug, Clone, Copy)]
+pub struct RemoteKnobs {
+    /// Baseline round-trip latency per request (s).
+    pub rtt_s: Secs,
+    /// Scale of the exponential tail added to every request (s).
+    pub tail_s: Secs,
+    /// Payload streaming bandwidth (bytes/s).
+    pub bw: f64,
+    /// Bounded in-flight request concurrency (service lanes).
+    pub concurrency: u32,
+    /// Per-request deadline; a slower response counts as a timeout.
+    pub timeout_s: Secs,
+    /// Retries after the first attempt (total attempts = 1 + retry_max).
+    pub retry_max: u32,
+    /// Base backoff before the first retry; doubles per attempt, plus
+    /// deterministic jitter in [0, 50%].
+    pub backoff_s: Secs,
+    /// P-tail deadline after which a hedged second request is issued
+    /// (0 disables hedging).
+    pub hedge_after_s: Secs,
+    /// Consecutive failures that trip the circuit breaker (0 disables
+    /// the breaker).
+    pub breaker_threshold: u32,
+    /// Seconds the breaker stays open before the half-open probe.
+    pub breaker_cooldown_s: Secs,
+}
+
+impl RemoteKnobs {
+    /// Lift the remote knobs out of a device profile.
+    pub fn from_profile(p: &crate::config::DeviceProfile) -> RemoteKnobs {
+        RemoteKnobs {
+            rtt_s: p.remote_rtt_s,
+            tail_s: p.remote_tail_s,
+            bw: p.remote_bw,
+            concurrency: p.remote_concurrency,
+            timeout_s: p.remote_timeout_s,
+            retry_max: p.remote_retry_max,
+            backoff_s: p.remote_retry_backoff_s,
+            hedge_after_s: p.remote_hedge_after_s,
+            breaker_threshold: p.remote_breaker_threshold,
+            breaker_cooldown_s: p.remote_breaker_cooldown_s,
+        }
+    }
+}
+
+/// The remote object store as one host's engine sees it: cache in
+/// front, robustness layer around every miss, scripted fault windows
+/// composed in. One instance per host — the cache and circuit breaker
+/// are host-local by design, and the bounded concurrency models the
+/// host's own connection pool.
+#[derive(Debug, Clone)]
+pub struct RemoteModel {
+    knobs: RemoteKnobs,
+    /// Bounded request concurrency: each payload streams over one lane.
+    lanes: LanePool,
+    /// Seed root; every random quantity forks a keyed stream off this,
+    /// so draws depend only on `(batch, attempt, leg)` — never on call
+    /// order or thread count.
+    prng: Prng,
+    cache: HostCache,
+    stats: RemoteStats,
+    /// Payload bytes per object (one raw batch).
+    bytes: f64,
+    /// Read time of the degraded local path: the CSD short path when
+    /// the fleet has one, else the host SSD head.
+    degraded_read_s: Secs,
+    /// Scripted `store:down@a..b` windows (virtual seconds).
+    down: Vec<(Secs, Secs)>,
+    /// Scripted `store:slow@a..bxF` windows.
+    slow: Vec<(Secs, Secs, f64)>,
+    /// Consecutive failed requests — the breaker's trip counter.
+    consecutive_failures: u32,
+    /// `Some(t)`: the breaker is open until virtual time `t`.
+    breaker_until: Option<Secs>,
+}
+
+impl RemoteModel {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        knobs: RemoteKnobs,
+        cache_objects: u32,
+        policy: CachePolicy,
+        bytes: f64,
+        degraded_read_s: Secs,
+        down: Vec<(Secs, Secs)>,
+        slow: Vec<(Secs, Secs, f64)>,
+        seed: u64,
+    ) -> RemoteModel {
+        RemoteModel {
+            lanes: LanePool::new(knobs.concurrency.max(1) as usize),
+            prng: Prng::new(seed ^ 0x7265_6d6f_7465), // "remote"
+            cache: HostCache::new(cache_objects, policy),
+            stats: RemoteStats::default(),
+            knobs,
+            bytes,
+            degraded_read_s,
+            down,
+            slow,
+            consecutive_failures: 0,
+            breaker_until: None,
+        }
+    }
+
+    /// Robustness counters so far.
+    pub fn stats(&self) -> RemoteStats {
+        self.stats
+    }
+
+    /// Cache counters so far.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Is the circuit breaker currently open at virtual time `t`?
+    pub fn breaker_open(&self, t: Secs) -> bool {
+        matches!(self.breaker_until, Some(until) if t < until)
+    }
+
+    /// Fetch one object issued at virtual time `issue`; returns the
+    /// effective read duration that replaces the local `read_s` in the
+    /// host batch cost. A cache hit costs the local read
+    /// (`local_read_s`); a miss runs the full robustness pipeline —
+    /// attempt / hedge / timeout / backoff+retry — and falls back to
+    /// the degraded local path when the breaker is open or retries are
+    /// exhausted. Never stalls: every path returns a finite duration,
+    /// so accelerators keep training through a total outage.
+    pub fn fetch(
+        &mut self,
+        gid: BatchId,
+        issue: Secs,
+        local_read_s: Secs,
+        trace: &mut Trace,
+    ) -> Secs {
+        if self.cache.probe(gid) {
+            self.stats.hits += 1;
+            return local_read_s;
+        }
+        self.stats.misses += 1;
+        let mut half_open = false;
+        if let Some(until) = self.breaker_until {
+            if issue < until {
+                // Breaker open: don't touch the wire.
+                self.stats.degraded_reads += 1;
+                return self.degraded_read_s;
+            }
+            // Cooldown elapsed: this read is the half-open probe — one
+            // more failure re-trips immediately, a success closes.
+            self.breaker_until = None;
+            self.consecutive_failures = self.knobs.breaker_threshold.saturating_sub(1);
+            half_open = true;
+        }
+        let mut t = issue;
+        for attempt in 0..=self.knobs.retry_max {
+            match self.attempt(gid, attempt, t) {
+                Ok(done) => {
+                    self.consecutive_failures = 0;
+                    if half_open {
+                        trace.record(Device::CpuMain, Phase::BreakerClose, Some(gid), done, done);
+                    }
+                    self.cache.insert(gid);
+                    return done - issue;
+                }
+                Err(fail_t) => {
+                    self.stats.timeouts += 1;
+                    trace.record(
+                        Device::CpuMain,
+                        Phase::RemoteTimeout,
+                        Some(gid),
+                        fail_t,
+                        fail_t,
+                    );
+                    self.consecutive_failures += 1;
+                    if self.knobs.breaker_threshold > 0
+                        && self.consecutive_failures >= self.knobs.breaker_threshold
+                    {
+                        self.stats.breaker_trips += 1;
+                        self.stats.breaker_open_s += self.knobs.breaker_cooldown_s;
+                        self.breaker_until = Some(fail_t + self.knobs.breaker_cooldown_s);
+                        trace.record(
+                            Device::CpuMain,
+                            Phase::BreakerOpen,
+                            Some(gid),
+                            fail_t,
+                            fail_t,
+                        );
+                        self.stats.degraded_reads += 1;
+                        return (fail_t - issue) + self.degraded_read_s;
+                    }
+                    if attempt < self.knobs.retry_max {
+                        self.stats.retries += 1;
+                        t = fail_t + self.backoff(gid, attempt);
+                        trace.record(Device::CpuMain, Phase::RemoteRetry, Some(gid), t, t);
+                    } else {
+                        // Retries exhausted without tripping: degrade
+                        // this one read.
+                        self.stats.degraded_reads += 1;
+                        return (fail_t - issue) + self.degraded_read_s;
+                    }
+                }
+            }
+        }
+        unreachable!("retry loop returns on success, breaker trip, or exhaustion")
+    }
+
+    /// One wire request issued at `t`: `Ok(done_time)` on success,
+    /// `Err(fail_time)` on timeout. Scripted downtime forces a timeout;
+    /// slow windows stretch the latency draw; a draw past the P-tail
+    /// deadline issues the hedged second leg and the earlier completion
+    /// wins.
+    fn attempt(&mut self, gid: BatchId, attempt: u32, t: Secs) -> Result<Secs, Secs> {
+        if self.in_down(t) {
+            return Err(t + self.knobs.timeout_s);
+        }
+        let factor = self.slow_factor(t);
+        let mut lat = self.sample_latency(gid, attempt, 0) * factor;
+        if self.knobs.hedge_after_s > 0.0 && lat > self.knobs.hedge_after_s {
+            self.stats.hedges_issued += 1;
+            let hedged = self.knobs.hedge_after_s + self.sample_latency(gid, attempt, 1) * factor;
+            if hedged < lat {
+                self.stats.hedges_won += 1;
+                lat = hedged;
+            } else {
+                self.stats.hedges_wasted += 1;
+            }
+        }
+        if lat > self.knobs.timeout_s {
+            return Err(t + self.knobs.timeout_s);
+        }
+        // Latency first, then the payload streams over one of the
+        // bounded service lanes (bandwidth cap + queueing).
+        let (_lane, _start, end) = self.lanes.reserve_earliest(t + lat, self.bytes / self.knobs.bw);
+        Ok(end)
+    }
+
+    /// Keyed uniform draw in [0, 1): depends only on `(salt, gid,
+    /// attempt, leg)`, never on how many draws happened before.
+    fn stream(&self, salt: u64, gid: BatchId, attempt: u32, leg: u64) -> f64 {
+        self.prng
+            .fork(salt)
+            .fork(((gid as u64) << 20) | ((attempt as u64) << 1) | leg)
+            .f64()
+    }
+
+    /// `rtt + tail · Exp(1)` — the Versaci-Busonera object-store shape.
+    fn sample_latency(&self, gid: BatchId, attempt: u32, leg: u64) -> Secs {
+        let u = self.stream(1, gid, attempt, leg);
+        self.knobs.rtt_s + self.knobs.tail_s * -(1.0 - u).ln()
+    }
+
+    /// Exponential backoff with deterministic jitter in [0, 50%].
+    fn backoff(&self, gid: BatchId, attempt: u32) -> Secs {
+        let pow = (1u64 << attempt.min(20)) as f64;
+        let jitter = self.stream(2, gid, attempt, 0);
+        self.knobs.backoff_s * pow * (1.0 + 0.5 * jitter)
+    }
+
+    fn in_down(&self, t: Secs) -> bool {
+        self.down.iter().any(|&(a, b)| t >= a && t < b)
+    }
+
+    fn slow_factor(&self, t: Secs) -> f64 {
+        let mut f = 1.0;
+        for &(a, b, x) in &self.slow {
+            if t >= a && t < b {
+                f *= x;
+            }
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn knobs() -> RemoteKnobs {
+        RemoteKnobs {
+            rtt_s: 2e-3,
+            tail_s: 1e-3,
+            bw: 1.2e9,
+            concurrency: 8,
+            timeout_s: 0.05,
+            retry_max: 3,
+            backoff_s: 0.01,
+            hedge_after_s: 8e-3,
+            breaker_threshold: 4,
+            breaker_cooldown_s: 5.0,
+        }
+    }
+
+    fn model(k: RemoteKnobs, cache: u32, down: Vec<(Secs, Secs)>) -> RemoteModel {
+        RemoteModel::new(k, cache, CachePolicy::Lru, 1e6, 1e-3, down, Vec::new(), 42)
+    }
+
+    #[test]
+    fn storage_kind_and_policy_parse_roundtrip() {
+        for k in [StorageKind::Local, StorageKind::Remote] {
+            assert_eq!(StorageKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StorageKind::parse("REMOTE"), Some(StorageKind::Remote));
+        assert_eq!(StorageKind::parse("s3"), None);
+        for p in [CachePolicy::Lru, CachePolicy::Fifo] {
+            assert_eq!(CachePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(CachePolicy::parse("LRU"), Some(CachePolicy::Lru));
+        assert_eq!(CachePolicy::parse("arc"), None);
+    }
+
+    #[test]
+    fn cache_occupancy_never_exceeds_capacity() {
+        run_prop("cache_occupancy", 200, |g| {
+            let cap = g.int(0, 32) as u32;
+            let policy = *g.choose(&[CachePolicy::Lru, CachePolicy::Fifo]);
+            let mut c = HostCache::new(cap, policy);
+            let n_ops = g.size(1, 300);
+            for _ in 0..n_ops {
+                let id = g.int(0, 63) as BatchId;
+                if !c.probe(id) {
+                    c.insert(id);
+                }
+                assert!(
+                    c.len() as u32 <= cap,
+                    "occupancy {} exceeds capacity {cap} ({policy})",
+                    c.len()
+                );
+            }
+            if cap == 0 {
+                assert!(c.is_empty(), "capacity-0 cache must stay empty");
+                assert_eq!(c.stats().hits, 0);
+            }
+            let s = c.stats();
+            assert_eq!(s.insertions - s.evictions, c.len() as u64);
+        });
+    }
+
+    #[test]
+    fn eviction_respects_policy() {
+        // LRU: a hit refreshes recency, so the *unprobed* object is the
+        // victim.
+        let mut lru = HostCache::new(2, CachePolicy::Lru);
+        lru.insert(1);
+        lru.insert(2);
+        assert!(lru.probe(1), "1 resident");
+        lru.insert(3); // evicts 2 (least recently used)
+        assert!(lru.probe(1));
+        assert!(!lru.probe(2), "LRU victim was 2");
+        assert!(lru.probe(3));
+
+        // FIFO: probing never reorders — the oldest *insertion* is the
+        // victim even though it was just probed.
+        let mut fifo = HostCache::new(2, CachePolicy::Fifo);
+        fifo.insert(1);
+        fifo.insert(2);
+        assert!(fifo.probe(1), "1 resident");
+        fifo.insert(3); // evicts 1 (oldest inserted)
+        assert!(!fifo.probe(1), "FIFO victim was 1");
+        assert!(fifo.probe(2));
+        assert!(fifo.probe(3));
+    }
+
+    #[test]
+    fn lru_hit_rate_monotone_in_capacity() {
+        // LRU is a stack algorithm: on any fixed trace, a bigger cache
+        // contains the smaller one, so hits can only grow. (FIFO is
+        // deliberately excluded — Belady's anomaly.)
+        run_prop("lru_monotone", 150, |g| {
+            let c1 = g.int(1, 16) as u32;
+            let c2 = c1 + g.int(1, 16) as u32;
+            let n_ops = g.size(10, 400);
+            let trace: Vec<BatchId> = (0..n_ops).map(|_| g.int(0, 29) as BatchId).collect();
+            let mut hits = [0u64; 2];
+            for (i, cap) in [c1, c2].into_iter().enumerate() {
+                let mut c = HostCache::new(cap, CachePolicy::Lru);
+                for &id in &trace {
+                    if !c.probe(id) {
+                        c.insert(id);
+                    }
+                }
+                hits[i] = c.stats().hits;
+            }
+            assert!(
+                hits[1] >= hits[0],
+                "hit count dropped when capacity grew {c1} -> {c2}: {} -> {}",
+                hits[0],
+                hits[1]
+            );
+        });
+    }
+
+    #[test]
+    fn hedge_accounting_balances() {
+        // Hedge on (almost) every request: threshold at the rtt floor.
+        run_prop("hedge_accounting", 50, |g| {
+            let mut k = knobs();
+            k.hedge_after_s = k.rtt_s;
+            k.timeout_s = 10.0; // no timeouts — isolate hedging
+            let mut m = RemoteModel::new(
+                k,
+                0,
+                CachePolicy::Lru,
+                1e6,
+                1e-3,
+                Vec::new(),
+                Vec::new(),
+                g.rng().next_u64(),
+            );
+            let mut trace = crate::trace::Trace::stats_only();
+            let n = g.size(5, 120);
+            for gid in 0..n as BatchId {
+                let d = m.fetch(gid, gid as f64 * 0.01, 1e-4, &mut trace);
+                assert!(d > 0.0 && d.is_finite());
+            }
+            let s = m.stats();
+            assert!(s.hedges_issued > 0, "tail draws must trigger hedges");
+            assert_eq!(
+                s.hedges_won + s.hedges_wasted,
+                s.hedges_issued,
+                "every hedge is won or wasted"
+            );
+            assert!(s.hedges_wasted <= s.hedges_issued);
+        });
+    }
+
+    #[test]
+    fn same_seed_same_behavior() {
+        let run = || {
+            let mut m = model(knobs(), 16, vec![(0.5, 0.8)]);
+            let mut trace = crate::trace::Trace::stats_only();
+            let mut durs = Vec::new();
+            for gid in 0..200u32 {
+                durs.push(m.fetch(gid % 40, gid as f64 * 0.01, 1e-4, &mut trace));
+            }
+            (durs, m.stats(), m.cache_stats())
+        };
+        let (d1, s1, c1) = run();
+        let (d2, s2, c2) = run();
+        assert_eq!(d1, d2, "same seed, same fetch sequence, same durations");
+        assert_eq!(s1, s2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn cache_hit_skips_the_wire() {
+        let mut m = model(knobs(), 8, Vec::new());
+        let mut trace = crate::trace::Trace::stats_only();
+        let miss = m.fetch(7, 0.0, 1e-4, &mut trace);
+        assert!(miss >= knobs().rtt_s, "miss pays at least the rtt");
+        let hit = m.fetch(7, 1.0, 1e-4, &mut trace);
+        assert_eq!(hit, 1e-4, "hit costs exactly the local read");
+        let s = m.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn breaker_trips_degrades_and_recovers() {
+        let mut k = knobs();
+        k.breaker_threshold = 2;
+        k.retry_max = 1;
+        k.breaker_cooldown_s = 5.0;
+        // Store down for the first 10 virtual seconds.
+        let mut m = model(k, 0, vec![(0.0, 10.0)]);
+        let mut trace = crate::trace::Trace::stats_only();
+
+        // First read: attempt + retry both time out -> breaker trips,
+        // read degrades.
+        let d = m.fetch(0, 0.0, 1e-4, &mut trace);
+        assert!(d > 0.0);
+        let s = m.stats();
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.timeouts, 2);
+        assert_eq!(s.degraded_reads, 1);
+        assert!(m.breaker_open(1.0));
+
+        // While open: degraded immediately, no wire traffic.
+        let d2 = m.fetch(1, 1.0, 1e-4, &mut trace);
+        assert_eq!(d2, 1e-3, "breaker-open read costs the degraded path");
+        assert_eq!(m.stats().timeouts, 2, "no new wire attempts while open");
+        assert_eq!(m.stats().degraded_reads, 2);
+
+        // Past cooldown *and* past the outage window: the half-open
+        // probe succeeds and the breaker closes.
+        let d3 = m.fetch(2, 20.0, 1e-4, &mut trace);
+        assert!(d3 >= k.rtt_s, "probe went over the wire");
+        assert!(!m.breaker_open(20.5));
+        assert_eq!(m.stats().breaker_trips, 1, "closed, not re-tripped");
+        assert_eq!(m.stats().breaker_open_s, 5.0);
+    }
+
+    #[test]
+    fn slow_window_stretches_latency() {
+        let k = knobs();
+        let mut healthy = model(k, 0, Vec::new());
+        let mut slowed = RemoteModel::new(
+            k,
+            0,
+            CachePolicy::Lru,
+            1e6,
+            1e-3,
+            Vec::new(),
+            vec![(0.0, 100.0, 4.0)],
+            42,
+        );
+        let mut trace = crate::trace::Trace::stats_only();
+        let dh = healthy.fetch(3, 0.0, 1e-4, &mut trace);
+        let ds = slowed.fetch(3, 0.0, 1e-4, &mut trace);
+        assert!(
+            ds > dh,
+            "4x slow window must stretch the read ({ds} <= {dh})"
+        );
+    }
+}

@@ -48,6 +48,7 @@ use anyhow::{bail, Result};
 use crate::config::ExperimentConfig;
 use crate::fault::FaultPlan;
 use crate::sim::Secs;
+use crate::storage::remote::StorageKind;
 
 /// Shard→CSD assignment mode (config key `csd_assign = block|stripe`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -103,6 +104,11 @@ pub struct Topology {
     /// Scripted fault plan: brownouts, slowdowns, device failures and
     /// host crashes, all in virtual time. Empty for a healthy fleet.
     fault: FaultPlan,
+    /// Backing storage tier: the paper's local SSD/CSD (default) or a
+    /// remote object store fronted by a host-local cache
+    /// ([`crate::storage::remote`]). Every host slice inherits it —
+    /// the remote store is shared fleet infrastructure.
+    storage: StorageKind,
     /// Global rank of this topology's first accelerator (non-zero only
     /// for a [`Topology::host_slice`] of a multi-host topology).
     accel_base: u32,
@@ -146,6 +152,7 @@ impl Topology {
             .csds(cfg.n_csd)
             .assign(cfg.csd_assign)
             .fault_plan(cfg.fault_plan.clone())
+            .storage(cfg.storage)
             .build()
     }
 
@@ -194,6 +201,11 @@ impl Topology {
     /// The scripted fault plan (empty for a healthy fleet).
     pub fn fault(&self) -> &FaultPlan {
         &self.fault
+    }
+
+    /// The backing storage tier (`StorageKind::Local` default).
+    pub fn storage(&self) -> StorageKind {
+        self.storage
     }
 
     /// Global rank of this topology's first accelerator (0 unless this
@@ -279,6 +291,7 @@ impl Topology {
             csd_dirs,
             csd_fail_at,
             fault,
+            storage: self.storage,
             accel_base: ar.start,
             world_accel: self.n_accel,
         })
@@ -323,6 +336,7 @@ pub struct TopologyBuilder {
     assign: CsdAssign,
     fail: Vec<(u32, Secs)>,
     fault: FaultPlan,
+    storage: StorageKind,
 }
 
 impl Default for TopologyBuilder {
@@ -334,6 +348,7 @@ impl Default for TopologyBuilder {
             assign: CsdAssign::Block,
             fail: Vec::new(),
             fault: FaultPlan::new(),
+            storage: StorageKind::Local,
         }
     }
 }
@@ -372,6 +387,12 @@ impl TopologyBuilder {
     /// build time. Replaces any previously attached plan.
     pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
         self.fault = plan;
+        self
+    }
+
+    /// Select the backing storage tier ([`StorageKind::Local`] default).
+    pub fn storage(mut self, s: StorageKind) -> Self {
+        self.storage = s;
         self
     }
 
@@ -421,6 +442,7 @@ impl TopologyBuilder {
             csd_dirs,
             csd_fail_at,
             fault: self.fault,
+            storage: self.storage,
             accel_base: 0,
             world_accel: self.accels,
         })
@@ -628,6 +650,24 @@ mod tests {
             .fault_plan(FaultPlan::parse("csd1:fail@1").unwrap())
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn storage_kind_defaults_local_and_slices_inherit() {
+        let t = Topology::builder().build().unwrap();
+        assert_eq!(t.storage(), StorageKind::Local);
+        let t = Topology::builder()
+            .hosts(2)
+            .accels(4)
+            .csds(2)
+            .storage(StorageKind::Remote)
+            .build()
+            .unwrap();
+        assert_eq!(t.storage(), StorageKind::Remote);
+        // The remote store is shared fleet infrastructure: every host
+        // slice keeps reading through it.
+        assert_eq!(t.host_slice(0).unwrap().storage(), StorageKind::Remote);
+        assert_eq!(t.host_slice(1).unwrap().storage(), StorageKind::Remote);
     }
 
     #[test]

@@ -93,10 +93,22 @@ pub enum Phase {
     /// Zero-length marker: a batch was rerouted off its assigned device
     /// (recorded on the device that absorbed it).
     FaultReroute,
+    /// Zero-length marker: a remote object-store request blew its
+    /// per-request deadline (DESIGN.md §Storage).
+    RemoteTimeout,
+    /// Zero-length marker: a timed-out remote request was re-issued
+    /// after its backoff delay.
+    RemoteRetry,
+    /// Zero-length marker: the per-host circuit breaker tripped —
+    /// remote reads degrade to surviving local sources until cooldown.
+    BreakerOpen,
+    /// Zero-length marker: a half-open probe succeeded and the breaker
+    /// closed (remote reads resume).
+    BreakerClose,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 12] = [
+    pub const ALL: [Phase; 16] = [
         Phase::SsdRead,
         Phase::CpuPreprocess,
         Phase::H2d,
@@ -109,6 +121,10 @@ impl Phase {
         Phase::FaultDown,
         Phase::FaultRecover,
         Phase::FaultReroute,
+        Phase::RemoteTimeout,
+        Phase::RemoteRetry,
+        Phase::BreakerOpen,
+        Phase::BreakerClose,
     ];
     pub const COUNT: usize = Phase::ALL.len();
 

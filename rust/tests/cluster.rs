@@ -12,6 +12,7 @@ use ddlp::coordinator::cost::{CostProvider, CsdBatchCost, FixedCosts, HostBatchC
 use ddlp::coordinator::Strategy;
 use ddlp::fault::FaultPlan;
 use ddlp::pipeline::PipelineKind;
+use ddlp::storage::remote::StorageKind;
 use ddlp::topology::CsdAssign;
 use ddlp::trace::{Phase, Trace};
 use ddlp::util::prop::run_prop;
@@ -701,6 +702,81 @@ fn prop_cluster_faults_conserve_batches() {
             "{label}: crashed host must hand off work"
         );
     });
+}
+
+// ----------------------------------------------------------------------
+// Remote object-storage tier across the cluster (DESIGN.md §Storage)
+// ----------------------------------------------------------------------
+
+#[test]
+fn remote_brownout_completes_every_strategy_and_steal_mode() {
+    // Acceptance grid: storage = remote with a scripted store outage
+    // plus a slow window must complete under every strategy × steal
+    // mode — graceful degradation means accelerators never stall on the
+    // dead store — with exactly-once conservation and the per-host
+    // cache counters rolling up into the cluster-wide ones.
+    const N: u32 = 160;
+    const EPOCHS: u32 = 2;
+    for steal in [StealMode::Off, StealMode::Epoch, StealMode::Live] {
+        for strategy in Strategy::ALL {
+            let n_csd = if strategy.uses_csd() { 2 } else { 0 };
+            let label = format!("{strategy} steal={steal}");
+            let mut c = cfg_cluster(strategy, N, 2, 4, n_csd, CsdAssign::Block, steal, EPOCHS);
+            c.storage = StorageKind::Remote;
+            c.fault_plan = FaultPlan::parse("store:down@1..10;store:slow@12..25x4").unwrap();
+            let r = Cluster::from_config(&c)
+                .unwrap()
+                .with_cost_factory(|h| skewed_costs(h, 2.0))
+                .run()
+                .unwrap();
+            assert_eq!(r.report.n_batches, N * EPOCHS, "{label}: lost batches");
+            assert_exact_coverage(&r.trace, N, EPOCHS, &label);
+            let hits: u64 = r.host_reports.iter().map(|h| h.cache.hits).sum();
+            let misses: u64 = r.host_reports.iter().map(|h| h.cache.misses).sum();
+            assert_eq!((r.cache.hits, r.cache.misses), (hits, misses), "{label}: cache rollup");
+            let rem = &r.report.remote;
+            assert_eq!(
+                rem.hedges_won + rem.hedges_wasted,
+                rem.hedges_issued,
+                "{label}: hedge ledger"
+            );
+            // The CSD-only baseline has no CPU-prong reads, so the
+            // remote tier (which fronts the CPU prong) stays idle.
+            if strategy != Strategy::CsdOnly {
+                assert!(rem.misses > 0, "{label}: remote tier never touched");
+            }
+        }
+    }
+}
+
+#[test]
+fn remote_cluster_parallel_matches_sequential() {
+    // Thread-count bit-exactness extends through the remote tier: the
+    // parallel driver over a remote-storage brownout must match the
+    // sequential reference bit-for-bit (reports, merged trace, per-host
+    // cache counters), because every latency draw is keyed, not shared.
+    const N: u32 = 200;
+    const EPOCHS: u32 = 2;
+    for steal in [StealMode::Off, StealMode::Live] {
+        let label = format!("remote steal={steal}");
+        let mut c = cfg_cluster(Strategy::Wrr, N, 4, 4, 4, CsdAssign::Block, steal, EPOCHS);
+        c.storage = StorageKind::Remote;
+        c.fault_plan = FaultPlan::parse("store:down@0..6").unwrap();
+        let build = || {
+            Cluster::from_config(&c)
+                .unwrap()
+                .with_cost_factory(|h| skewed_costs(h, 3.0))
+        };
+        let par = build().run_parallel().unwrap();
+        let seq = build().run_sequential().unwrap();
+        assert_results_identical(&par, &seq, &label);
+        assert_eq!(par.cache, seq.cache, "{label}: cluster cache diverged");
+        assert_exact_coverage(&par.trace, N, EPOCHS, &label);
+        assert!(
+            par.report.remote.timeouts > 0 || par.report.remote.degraded_reads > 0,
+            "{label}: the outage left no attribution"
+        );
+    }
 }
 
 #[test]
