@@ -19,7 +19,7 @@ use ddlp::coordinator::Strategy;
 use ddlp::metrics::{fmt_s, pct_faster, Table};
 
 /// Host 0 runs `slow×` slower on both prongs.
-fn skewed(h: u32, slow: f64) -> Box<dyn CostProvider> {
+fn skewed(h: u32, slow: f64) -> Box<dyn CostProvider + Send> {
     let mut c = FixedCosts::toy_fig6();
     if h == 0 {
         c.host.pp_s *= slow;

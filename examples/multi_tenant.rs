@@ -1,0 +1,77 @@
+//! Multi-tenant serving: many jobs, one fleet — FIFO vs fair-share on
+//! a skewed arrival mix.
+//!
+//! ```bash
+//! cargo run --release --example multi_tenant
+//! ```
+//!
+//! One long job lands first and three short ones arrive moments later,
+//! every job asking for the whole fleet. Under FIFO the long head runs
+//! first and every short job stretches by its entire makespan; under
+//! fair-share (fewest accel-hours admitted first) the shorts overtake
+//! it in the queue and worst-case stretch collapses, at the price of a
+//! small delay on the long job. Same fleet, same jobs, same total work
+//! — only the admission order differs.
+
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::cost::{CostProvider, FixedCosts};
+use ddlp::coordinator::Strategy;
+use ddlp::metrics::{fmt_s, Table};
+use ddlp::tenant::{Sched, Tenancy, TenancyResult};
+
+const JOBS: &str = "big:@0 accel=4 csd=2 batches=480; \
+                    alpha:@1 accel=4 csd=2 batches=40; \
+                    beta:@2 accel=4 csd=2 batches=60 prio=hi; \
+                    gamma:@3 accel=4 csd=2 batches=40 prio=lo";
+
+fn run(sched: Sched) -> anyhow::Result<TenancyResult> {
+    let cfg = ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(4)
+        .n_csd(2)
+        .n_batches(480)
+        .jobs(JOBS.parse()?)
+        .sched(sched)
+        .build()?;
+    Tenancy::new(&cfg)?
+        .with_cost_factory(|_job, _host| -> Box<dyn CostProvider + Send> {
+            Box::new(FixedCosts::toy_fig6())
+        })
+        .run()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("Multi-tenant DDLP — 4 accel / 2 CSD fleet, 1 long + 3 short jobs\n");
+    for sched in [Sched::Fifo, Sched::Fair] {
+        let r = run(sched)?;
+        println!("sched = {sched}");
+        let mut table = Table::new(vec![
+            "job", "prio", "arrive", "wait", "makespan", "stretch",
+        ]);
+        for t in &r.tenants {
+            table.row(vec![
+                t.name.clone(),
+                t.prio.to_string(),
+                fmt_s(t.arrival),
+                fmt_s(t.queue_wait),
+                fmt_s(t.makespan),
+                format!("{:.2}x", t.stretch),
+            ]);
+        }
+        print!("{}", table.to_text());
+        let f = &r.fleet;
+        println!(
+            "fleet: makespan {}  util {:.1}%  stretch mean {:.2}x max {:.2}x  \
+             fairness {:.3}\n",
+            fmt_s(f.fleet_makespan),
+            f.utilization * 100.0,
+            f.mean_stretch,
+            f.max_stretch,
+            f.fairness
+        );
+    }
+    println!("(identical work either way — fair-share only reorders admission,");
+    println!(" trading a little stretch on the long job for the shorts' tail)");
+    Ok(())
+}

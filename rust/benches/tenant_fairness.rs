@@ -1,0 +1,227 @@
+//! Multi-tenant fairness curves (DESIGN.md §Tenancy): per-job stretch
+//! and fleet rollups as the admission policy varies over a skewed job
+//! mix — one long job ahead of a tail of short ones, every job
+//! requesting the whole fleet so execution serializes and the policy's
+//! admission *order* is the only degree of freedom. FIFO lets the long
+//! head stretch every short job by its whole makespan; fair-share
+//! (fewest accel-hours first) runs the shorts ahead of it.
+//!
+//! All measured quantities are *virtual* — the tenancy clock is a
+//! deterministic event loop over fixed toy costs — so every row is
+//! bit-exact reproducible and the CI ceiling below gates on real
+//! scheduling behavior, not wall-clock noise.
+//!
+//! Besides the stdout report, results are written to
+//! `BENCH_tenant_fairness.json` (per scenario: fleet makespan,
+//! utilization, mean/max stretch, p95 queue wait, Jain fairness; plus
+//! the headline FIFO-over-fair max-stretch ratio on the biggest mix)
+//! so the fairness trajectory is machine-checkable across PRs.
+//!
+//! Env knobs (CI smoke):
+//!   TENANT_MAX_STRETCH   maximum allowed max-stretch for the fair
+//!                        policy on the biggest mix; above it the bench
+//!                        exits non-zero. Unset, the sweep just records.
+
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::cost::{CostProvider, FixedCosts};
+use ddlp::coordinator::Strategy;
+use ddlp::tenant::{FleetReport, JobPlan, Sched, Tenancy};
+
+const FLEET_ACCEL: u32 = 4;
+const FLEET_CSD: u32 = 2;
+/// The long job's workload; shorts cycle through 30/60/90/120 batches.
+const BIG_BATCHES: u32 = 960;
+
+/// Job counts swept: solo baseline, small mix, the gated big mix.
+const N_JOBS: [usize; 3] = [1, 4, 16];
+
+struct Row {
+    n_jobs: usize,
+    sched: Sched,
+    fleet: FleetReport,
+}
+
+/// Read an f64 env knob. A knob that is *set but unparsable* is a hard
+/// error — silently ignoring it would disable the CI ceiling.
+fn env_f64(key: &str) -> Option<f64> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!("[tenant_fairness] FAIL: {key}={raw:?} is not a number");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The skewed mix: `big` first in plan order, then `n - 1` shorts of
+/// cycling sizes, all arriving at t=0 and all requesting the full
+/// fleet. FIFO admits in plan order (big first); fair re-ranks by
+/// accel-hours (shorts first).
+fn plan(n_jobs: usize) -> JobPlan {
+    let mut s = format!("big:@0 accel={FLEET_ACCEL} csd={FLEET_CSD} batches={BIG_BATCHES}");
+    for i in 1..n_jobs {
+        let batches = 30 * (1 + (i - 1) % 4) as u32;
+        s.push_str(&format!(
+            "; s{i}:@0 accel={FLEET_ACCEL} csd={FLEET_CSD} batches={batches}"
+        ));
+    }
+    s.parse().expect("bench plan is well-formed")
+}
+
+fn run(n_jobs: usize, sched: Sched) -> FleetReport {
+    let cfg = ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(FLEET_ACCEL)
+        .n_csd(FLEET_CSD)
+        .n_batches(BIG_BATCHES)
+        .record_trace(false)
+        .jobs(plan(n_jobs))
+        .sched(sched)
+        .build()
+        .unwrap();
+    Tenancy::new(&cfg)
+        .unwrap()
+        .with_cost_factory(|_job, _host| -> Box<dyn CostProvider + Send> {
+            Box::new(FixedCosts::toy_fig6())
+        })
+        .run()
+        .unwrap()
+        .fleet
+}
+
+fn main() {
+    // Determinism anchor: the same mix twice must be bit-identical —
+    // the tenancy clock must not depend on thread or call order.
+    if run(4, Sched::Fair) != run(4, Sched::Fair) {
+        eprintln!("[tenant_fairness] FAIL: tenancy run is not bit-reproducible");
+        std::process::exit(1);
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    for n_jobs in N_JOBS {
+        for sched in [Sched::Fifo, Sched::Fair, Sched::Priority] {
+            let fleet = run(n_jobs, sched);
+            if fleet.n_jobs != n_jobs {
+                eprintln!(
+                    "[tenant_fairness] FAIL: {} of {n_jobs} jobs reported under {sched}",
+                    fleet.n_jobs
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "[tenant_fairness] jobs {n_jobs:>2} sched {sched:>8}: fleet makespan {:>8.3}s \
+                 util {:>5.1}% stretch mean {:>7.3}x max {:>7.3}x p95 wait {:>8.3}s \
+                 fairness {:.4}",
+                fleet.fleet_makespan,
+                fleet.utilization * 100.0,
+                fleet.mean_stretch,
+                fleet.max_stretch,
+                fleet.queue_wait_p95,
+                fleet.fairness
+            );
+            rows.push(Row {
+                n_jobs,
+                sched,
+                fleet,
+            });
+        }
+    }
+
+    let get = |n: usize, s: Sched| -> FleetReport {
+        rows.iter()
+            .find(|r| r.n_jobs == n && r.sched == s)
+            .expect("row exists")
+            .fleet
+            .clone()
+    };
+
+    // Structural gates, exact because everything is virtual:
+    // a solo job never stretches, and on every contended mix fair-share
+    // must strictly beat FIFO on max stretch — the ISSUE acceptance.
+    for sched in [Sched::Fifo, Sched::Fair, Sched::Priority] {
+        let solo = get(1, sched);
+        if solo.max_stretch != 1.0 || solo.utilization != 1.0 {
+            eprintln!(
+                "[tenant_fairness] FAIL: solo job stretched under {sched} \
+                 (stretch {}, util {})",
+                solo.max_stretch, solo.utilization
+            );
+            std::process::exit(1);
+        }
+    }
+    for n_jobs in N_JOBS.iter().copied().filter(|&n| n > 1) {
+        let (fifo, fair) = (get(n_jobs, Sched::Fifo), get(n_jobs, Sched::Fair));
+        if fair.max_stretch >= fifo.max_stretch {
+            eprintln!(
+                "[tenant_fairness] FAIL: fair max stretch {:.3}x is not strictly below \
+                 FIFO {:.3}x on the {n_jobs}-job mix",
+                fair.max_stretch, fifo.max_stretch
+            );
+            std::process::exit(1);
+        }
+    }
+
+    // Headline: what fair-share buys on the biggest mix.
+    let big = N_JOBS[N_JOBS.len() - 1];
+    let (fifo, fair) = (get(big, Sched::Fifo), get(big, Sched::Fair));
+    let ratio = fifo.max_stretch / fair.max_stretch;
+    println!(
+        "[tenant_fairness] {big}-job mix: FIFO max stretch {:.3}x vs fair {:.3}x \
+         ({ratio:.3}x better)",
+        fifo.max_stretch, fair.max_stretch
+    );
+
+    // Machine-readable fairness record, tracked across PRs.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"tenant_fairness\",\n");
+    json.push_str(&format!("  \"fleet_accel\": {FLEET_ACCEL},\n"));
+    json.push_str(&format!("  \"fleet_csd\": {FLEET_CSD},\n"));
+    json.push_str(&format!("  \"big_batches\": {BIG_BATCHES},\n"));
+    json.push_str(&format!("  \"fair_max_stretch\": {:.4},\n", fair.max_stretch));
+    json.push_str(&format!("  \"fifo_over_fair_max_stretch\": {ratio:.4},\n"));
+    json.push_str(
+        "  \"ratio_definition\": \"FIFO max stretch / fair-share max stretch on the \
+         biggest swept mix, virtual time\",\n",
+    );
+    json.push_str("  \"results\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"jobs{}_{}\": {{\"fleet_makespan_s\": {:.6}, \"utilization\": {:.4}, \
+             \"mean_stretch\": {:.4}, \"max_stretch\": {:.4}, \"queue_wait_p95_s\": {:.6}, \
+             \"fairness\": {:.4}}}{comma}\n",
+            r.n_jobs,
+            r.sched,
+            r.fleet.fleet_makespan,
+            r.fleet.utilization,
+            r.fleet.mean_stretch,
+            r.fleet.max_stretch,
+            r.fleet.queue_wait_p95,
+            r.fleet.fairness
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_tenant_fairness.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[tenant_fairness] wrote {path}"),
+        Err(e) => eprintln!("[tenant_fairness] WARNING: could not write {path}: {e}"),
+    }
+
+    // CI smoke: fair-share must keep worst-case stretch under the
+    // ceiling on the biggest mix. Deterministic, so the gate is exact.
+    if let Some(ceiling) = env_f64("TENANT_MAX_STRETCH") {
+        if fair.max_stretch > ceiling {
+            eprintln!(
+                "[tenant_fairness] FAIL: fair max stretch {:.3}x > allowed {ceiling:.3}x",
+                fair.max_stretch
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "[tenant_fairness] fairness smoke OK: {:.3}x <= {ceiling:.3}x",
+            fair.max_stretch
+        );
+    }
+}

@@ -25,8 +25,13 @@
 //! storage = local       # local | remote backing tier
 //! cache_objects = 256   # host-local cache capacity (objects)
 //! cache_policy = lru    # lru | fifo eviction
+//! cache_admit = always  # always | second-access admission doorkeeper
 //! remote_rtt_s = 2e-3
 //! remote_timeout_s = 0.05
+//!
+//! # multi-tenant serving (empty jobs = classic single-job run)
+//! jobs = big:@0 accel=4 csd=2 prio=hi; tiny:@12 accel=2
+//! sched = fifo          # fifo | fair | priority admission
 //!
 //! # device profile overrides
 //! csd_slowdown = 5.0
@@ -48,7 +53,8 @@ use super::{ExperimentBuilder, ExperimentConfig, Loader};
 use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
 use crate::pipeline::PipelineKind;
-use crate::storage::remote::{CachePolicy, StorageKind};
+use crate::storage::remote::{CacheAdmit, CachePolicy, StorageKind};
+use crate::tenant::Sched;
 use crate::topology::CsdAssign;
 
 /// Parse file contents into a key→value map (comments `#`, blank lines).
@@ -119,6 +125,15 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
                 let s = StorageKind::parse(v)
                     .with_context(|| format!("bad storage {v:?} (expected local | remote)"))?;
                 b.storage(s)
+            }
+            "jobs" => {
+                let p: crate::tenant::JobPlan = v.parse().context("jobs")?;
+                b.jobs(p)
+            }
+            "sched" => {
+                let s = Sched::parse(v)
+                    .with_context(|| format!("bad sched {v:?} (expected fifo | fair | priority)"))?;
+                b.sched(s)
             }
             "n_batches" => b.n_batches(v.parse().context("n_batches")?),
             "epochs" => b.epochs(v.parse().context("epochs")?),
@@ -238,6 +253,12 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
             "cache_policy" => {
                 profile.cache_policy = CachePolicy::parse(v)
                     .with_context(|| format!("bad cache_policy {v:?} (expected lru | fifo)"))?;
+                b
+            }
+            "cache_admit" => {
+                profile.cache_admit = CacheAdmit::parse(v).with_context(|| {
+                    format!("bad cache_admit {v:?} (expected always | second-access)")
+                })?;
                 b
             }
             "worker_scaling_exp" => {
@@ -386,6 +407,32 @@ mod tests {
         assert_eq!(load("model = wrn\n", &[]).unwrap().storage, StorageKind::Local);
         assert!(load("storage = s3\n", &[]).is_err());
         assert!(load("cache_policy = clock\n", &[]).is_err());
+    }
+
+    #[test]
+    fn cache_admit_key_parses() {
+        use crate::storage::remote::CacheAdmit;
+        let cfg = load("cache_admit = second-access\n", &[]).unwrap();
+        assert_eq!(cfg.profile.cache_admit, CacheAdmit::SecondAccess);
+        // default stays the historical always-admit
+        assert_eq!(load("model = wrn\n", &[]).unwrap().profile.cache_admit, CacheAdmit::Always);
+        assert!(load("cache_admit = tinylfu\n", &[]).is_err());
+    }
+
+    #[test]
+    fn tenancy_keys_parse() {
+        let text = "n_accel = 4\nn_csd = 2\nsched = fair\n\
+                    jobs = big:@0 accel=4 csd=2 prio=hi; tiny:@12 accel=2 csd=1\n";
+        let cfg = load(text, &[]).unwrap();
+        assert_eq!(cfg.sched, Sched::Fair);
+        assert_eq!(cfg.jobs.len(), 2);
+        assert_eq!(cfg.jobs.jobs[1].arrival, 12.0);
+        assert!(load("sched = lottery\n", &[]).is_err());
+        assert!(load("jobs = big:@0 accel\n", &[]).is_err());
+        // plan validation flows through the builder: over-capacity job
+        assert!(load("n_accel = 2\nn_csd = 1\njobs = big:@0 accel=4 csd=2\n", &[]).is_err());
+        // the empty value is the empty plan (classic single-job run)
+        assert!(load("jobs = \n", &[]).unwrap().jobs.is_empty());
     }
 
     #[test]

@@ -16,7 +16,8 @@ use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
 use crate::fault::FaultPlan;
 use crate::pipeline::{OpCosts, PipelineKind};
-use crate::storage::remote::{CachePolicy, StorageKind};
+use crate::storage::remote::{CacheAdmit, CachePolicy, StorageKind};
+use crate::tenant::{JobPlan, Sched};
 use crate::topology::CsdAssign;
 
 /// Electrical power model (paper §VI-B6: 5 W per CPU process, 0.25 W
@@ -148,6 +149,11 @@ pub struct DeviceProfile {
     pub cache_objects: u32,
     /// Cache eviction policy (`cache_policy = lru|fifo`).
     pub cache_policy: CachePolicy,
+    /// Cache admission policy (`cache_admit = always|second-access`):
+    /// whether an object enters the cache on first fetch or only once
+    /// it has been fetched twice (scan resistance — one-shot objects
+    /// never evict the hot set).
+    pub cache_admit: CacheAdmit,
     pub power: PowerModel,
 }
 
@@ -189,6 +195,7 @@ impl Default for DeviceProfile {
             remote_breaker_cooldown_s: 5.0,
             cache_objects: 256,
             cache_policy: CachePolicy::Lru,
+            cache_admit: CacheAdmit::Always,
             power: PowerModel::default(),
         }
     }
@@ -301,6 +308,14 @@ pub struct ExperimentConfig {
     /// fronts reads with a host-local cache over an object store with
     /// retries, hedging and a circuit breaker (DESIGN.md §Storage).
     pub storage: StorageKind,
+    /// Multi-tenant arrival plan (config key `jobs`, DSL in
+    /// [`crate::tenant`]): N jobs with virtual arrival times and
+    /// resource requests, admitted against the fleet by `sched`. Empty
+    /// (default) = classic single-experiment run.
+    pub jobs: JobPlan,
+    /// Admission policy for the `jobs` plan
+    /// (`sched = fifo|fair|priority`); inert when `jobs` is empty.
+    pub sched: Sched,
     /// Batches per epoch (dataset_size / batch_size).
     pub n_batches: u32,
     /// Training epochs to simulate.
@@ -355,6 +370,8 @@ pub struct ExperimentBuilder {
     steal: StealMode,
     fault_plan: FaultPlan,
     storage: StorageKind,
+    jobs: JobPlan,
+    sched: Sched,
     n_batches: u32,
     epochs: u32,
     loader: Loader,
@@ -379,6 +396,8 @@ impl Default for ExperimentBuilder {
             steal: StealMode::Off,
             fault_plan: FaultPlan::new(),
             storage: StorageKind::Local,
+            jobs: JobPlan::default(),
+            sched: Sched::Fifo,
             n_batches: 500,
             epochs: 1,
             loader: Loader::Torchvision,
@@ -454,6 +473,19 @@ impl ExperimentBuilder {
     /// Select the backing storage tier (`StorageKind::Local` default).
     pub fn storage(mut self, s: StorageKind) -> Self {
         self.storage = s;
+        self
+    }
+
+    /// Attach a multi-tenant arrival plan (empty default = tenancy
+    /// off). Validated against the fleet shape at build time.
+    pub fn jobs(mut self, p: JobPlan) -> Self {
+        self.jobs = p;
+        self
+    }
+
+    /// Admission policy for the jobs plan (`Sched::Fifo` default).
+    pub fn sched(mut self, s: Sched) -> Self {
+        self.sched = s;
         self
     }
 
@@ -562,6 +594,13 @@ impl ExperimentBuilder {
         // checked at topology build; failing here gives config-file and
         // CLI users the error at parse time.)
         self.fault_plan.validate(self.n_csd, self.n_accel, self.n_hosts)?;
+        // Job resource requests must fit the fleet the config declares.
+        self.jobs.validate(
+            self.n_accel,
+            self.n_csd,
+            self.strategy.uses_csd(),
+            self.n_batches,
+        )?;
         let cfg = ExperimentConfig {
             model: self.model,
             pipeline: self.pipeline,
@@ -574,6 +613,8 @@ impl ExperimentBuilder {
             steal: self.steal,
             fault_plan: self.fault_plan,
             storage: self.storage,
+            jobs: self.jobs,
+            sched: self.sched,
             n_batches: self.n_batches,
             epochs: self.epochs,
             loader: self.loader,
@@ -697,6 +738,33 @@ mod tests {
             min_samples: 1,
         };
         assert!(ExperimentConfig::builder().adaptive(bad_n).build().is_err());
+    }
+
+    #[test]
+    fn builder_validates_jobs_plan_against_fleet() {
+        // Defaults: tenancy off, FIFO admission.
+        let cfg = ExperimentConfig::builder().build().unwrap();
+        assert!(cfg.jobs.is_empty());
+        assert_eq!(cfg.sched, Sched::Fifo);
+        // A job requesting more accels than the fleet has is rejected
+        // at build time, like a bad fault plan.
+        let over: JobPlan = "a:@0 accel=8 csd=1".parse().unwrap();
+        let err = ExperimentConfig::builder()
+            .n_accel(4)
+            .jobs(over)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("accel"), "{err}");
+        // A fitting plan builds.
+        let ok: JobPlan = "a:@0 accel=2 csd=1; b:@5 accel=4 csd=1 prio=hi".parse().unwrap();
+        let cfg = ExperimentConfig::builder()
+            .n_accel(4)
+            .jobs(ok)
+            .sched(Sched::Fair)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.jobs.len(), 2);
+        assert_eq!(cfg.sched, Sched::Fair);
     }
 
     #[test]

@@ -79,8 +79,8 @@ pub trait CostProvider {
 
 /// Where the engine's cost provider lives.
 ///
-/// The legacy `run_schedule` path borrows the caller's provider (tests
-/// and benches hand in `FixedCosts` they keep owning); the
+/// The borrowed path serves tests and benches (they hand in
+/// `FixedCosts` they keep owning); the
 /// `coordinator::Session` path builds the provider from the config and
 /// hands the engine ownership. One enum instead of a generic keeps
 /// `Engine` object-safe for both. Both variants require `Send`: the

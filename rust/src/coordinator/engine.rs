@@ -179,7 +179,8 @@ pub struct Engine<'a> {
 
 impl<'a> Engine<'a> {
     /// Legacy constructor: the paper's implicit single-host/single-CSD
-    /// topology over a borrowed cost provider (the `run_schedule` path).
+    /// topology over a borrowed cost provider (the shape tests and
+    /// benches use with `FixedCosts`).
     ///
     /// # Panics
     ///

@@ -28,21 +28,18 @@
 //! explicit [`crate::topology::Topology`] (multi-CSD fleets,
 //! block/stripe shard assignment, per-device failure injection) and
 //! runs one-shot ([`Session::run`]) or epoch-by-epoch
-//! ([`Session::run_epoch`]). The old free functions
-//! ([`schedule::run_schedule`], [`run_experiment`]) remain as
-//! deprecated shims over the implicit single-node topology.
+//! ([`Session::run_epoch`]). The pre-refactor free functions
+//! (`run_schedule`, `run_experiment`) are gone; their bit-exact
+//! behavior is locked by `rust/tests/golden_parity.rs` against a
+//! verbatim copy of the original monolithic scheduler.
 
 pub mod cost;
 pub mod engine;
 pub mod policies;
-pub mod schedule;
 pub mod session;
 
 pub use session::{EpochOutcome, LiveProgress, Session};
 
-use anyhow::Result;
-
-use crate::config::ExperimentConfig;
 use crate::metrics::RunReport;
 use crate::trace::Trace;
 
@@ -144,13 +141,6 @@ pub struct RunResult {
     /// [`crate::cluster::HostReport::cache`]). All-zero under
     /// `storage = local`.
     pub cache: crate::storage::remote::CacheStats,
-}
-
-/// Run one experiment end-to-end (all epochs) on the topology the
-/// config describes.
-#[deprecated(note = "use coordinator::Session")]
-pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
-    Session::from_config(cfg)?.run()
 }
 
 #[cfg(test)]

@@ -1,7 +1,6 @@
 //! The topology-first run surface.
 //!
-//! [`Session`] replaces the one-shot `run_schedule(cfg, spec, costs)`
-//! tuple-returning free function: a session binds an
+//! [`Session`] is the one-experiment run surface: a session binds an
 //! [`ExperimentConfig`] to an explicit [`Topology`] (which hosts, CSDs,
 //! accelerators and storage channels exist, and who serves whom), owns
 //! the engine + policy for the whole run, and exposes both the one-shot
@@ -25,8 +24,8 @@
 //! ```
 //!
 //! A session over [`Topology::single_node`] is bit-identical to the
-//! legacy `run_schedule` path (`rust/tests/golden_parity.rs`); richer
-//! topologies (multi-CSD fleets, block/stripe shard assignment,
+//! pre-refactor monolithic scheduler (`rust/tests/golden_parity.rs`);
+//! richer topologies (multi-CSD fleets, block/stripe shard assignment,
 //! per-device failure injection) run through exactly the same engine.
 
 use anyhow::{bail, Result};
@@ -436,6 +435,7 @@ fn remote_model_for(
         RemoteKnobs::from_profile(&cfg.profile),
         cfg.profile.cache_objects,
         cfg.profile.cache_policy,
+        cfg.profile.cache_admit,
         bytes,
         degraded,
         topology.fault().store_down_windows(),

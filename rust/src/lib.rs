@@ -152,6 +152,44 @@
 //!     result.report.remote.breaker_open_s,
 //! );
 //! ```
+//!
+//! Many *jobs* on one fleet are a [`tenant::Tenancy`]: an arrival plan
+//! (the `jobs` DSL or [`tenant::JobSpec`] builders) queues jobs against
+//! fleet capacity, an admission policy (`sched = fifo|fair|priority`)
+//! grants each a carved device slice, and per-job/fleet attribution
+//! reports queue wait, stretch and fairness (see
+//! `examples/multi_tenant.rs`):
+//!
+//! ```no_run
+//! use ddlp::config::ExperimentConfig;
+//! use ddlp::coordinator::Strategy;
+//! use ddlp::tenant::{self, Sched};
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .model("wrn")
+//!     .strategy(Strategy::Wrr)
+//!     .n_accel(4)
+//!     .n_csd(2)
+//!     // big job owns the fleet at t=0; two small jobs queue behind it
+//!     .jobs("big:@0 accel=4 csd=2; a:@5 accel=2 csd=1 batches=50; \
+//!            b:@6 accel=2 csd=1 batches=50".parse().unwrap())
+//!     .sched(Sched::Fair)
+//!     .build()
+//!     .unwrap();
+//! let result = tenant::run(&cfg).unwrap();
+//! for t in &result.tenants {
+//!     println!(
+//!         "{}: waited {:.1}s, ran {:.1}s, stretch {:.2}x on accels {:?}",
+//!         t.name, t.queue_wait, t.makespan, t.stretch, t.accel_ids
+//!     );
+//! }
+//! println!(
+//!     "fleet: util {:.0}%, p95 wait {:.1}s, fairness {:.3}",
+//!     result.fleet.utilization * 100.0,
+//!     result.fleet.queue_wait_p95,
+//!     result.fleet.fairness,
+//! );
+//! ```
 
 pub mod accel;
 pub mod bench;
@@ -168,6 +206,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod storage;
+pub mod tenant;
 pub mod topology;
 pub mod trace;
 pub mod util;

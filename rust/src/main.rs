@@ -82,8 +82,11 @@ fn real_main() -> Result<()> {
                  num_workers, n_hosts, n_accel, n_csd, csd_assign (block|stripe), \
                  steal (off|epoch|live), fault_plan (e.g. csd0:down@10..20;store:down@5..15), \
                  storage (local|remote), cache_objects, cache_policy (lru|fifo), \
+                 cache_admit (always|second-access), \
                  remote_rtt_s, remote_timeout_s, remote_retry_max, remote_hedge_after_s, \
-                 remote_breaker_threshold, n_batches, epochs, \
+                 remote_breaker_threshold, \
+                 jobs (e.g. big:@0 accel=4 csd=2 prio=hi;tiny:@12 accel=2), \
+                 sched (fifo|fair|priority), n_batches, epochs, \
                  loader, seed, csd_slowdown, adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()
@@ -96,6 +99,12 @@ fn real_main() -> Result<()> {
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let cfg = load_config(args)?;
+    // A non-empty jobs plan runs the multi-tenant path; otherwise the
+    // classic single-job run below prints byte-identical to before
+    // tenancy existed (CI diffs it across thread counts).
+    if !cfg.jobs.is_empty() {
+        return cmd_run_tenancy(&cfg);
+    }
     // The cluster is the top-level entry: a 1-host cluster is a
     // transparent pass-through to a single Session.
     let result = Cluster::from_config(&cfg)?.run()?;
@@ -222,6 +231,65 @@ fn cmd_run(args: &[String]) -> Result<()> {
             l.len()
         );
     }
+    Ok(())
+}
+
+/// Multi-tenant run: per-job timeline + attribution, then the fleet
+/// rollup. Deterministic virtual-time output — CI diffs it bit-exact
+/// across `PALLAS_THREADS`.
+fn cmd_run_tenancy(cfg: &ExperimentConfig) -> Result<()> {
+    let result = ddlp::tenant::run(cfg)?;
+    println!(
+        "tenancy: sched={} jobs={} fleet accel={} csd={} strategy={}",
+        cfg.sched,
+        cfg.jobs.len(),
+        cfg.n_accel,
+        cfg.n_csd,
+        cfg.strategy
+    );
+    for t in &result.tenants {
+        println!(
+            "job[{}] {}: prio={} arrived {}s waited {}s ran {}s..{}s \
+             makespan {}s stretch {:.3}x batches {} accel {:?} csd {:?}",
+            t.job,
+            t.name,
+            t.prio,
+            fmt_s(t.arrival),
+            fmt_s(t.queue_wait),
+            fmt_s(t.start),
+            fmt_s(t.finish),
+            fmt_s(t.makespan),
+            t.stretch,
+            t.result.report.n_batches,
+            t.accel_ids,
+            t.csd_ids
+        );
+        println!(
+            "job[{}] {}: {} J total  csd share {:.1}%  wasted {}",
+            t.job,
+            t.name,
+            fmt_s(t.result.report.energy.total_joules),
+            t.result.report.csd_share() * 100.0,
+            t.result.report.wasted_batches
+        );
+    }
+    let f = &result.fleet;
+    println!(
+        "fleet: makespan {}s  utilization {:.1}%  queue wait p50 {}s p95 {}s",
+        fmt_s(f.fleet_makespan),
+        f.utilization * 100.0,
+        fmt_s(f.queue_wait_p50),
+        fmt_s(f.queue_wait_p95)
+    );
+    println!(
+        "fleet: stretch mean {:.3}x max {:.3}x  fairness {:.4}  \
+         batches {}  energy {} J",
+        f.mean_stretch,
+        f.max_stretch,
+        f.fairness,
+        f.total_batches,
+        fmt_s(f.total_joules)
+    );
     Ok(())
 }
 

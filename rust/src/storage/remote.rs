@@ -36,7 +36,7 @@
 //! `BreakerOpen` / `BreakerClose` zero-length markers land on the
 //! host-CPU timeline.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 use crate::dataset::BatchId;
 use crate::sim::{LanePool, Secs};
@@ -113,6 +113,44 @@ impl std::fmt::Display for CachePolicy {
     }
 }
 
+/// Cache admission policy (config key `cache_admit = always|second-access`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CacheAdmit {
+    /// Every successfully fetched object is admitted (the classic
+    /// cache, and the historical behavior).
+    #[default]
+    Always,
+    /// An object is admitted only on its *second* fetch: the first
+    /// fetch registers it in a doorkeeper set and is rejected. One-shot
+    /// objects (a cold scan) never enter the cache, so they cannot
+    /// evict the re-used hot set — scan resistance at the cost of one
+    /// extra warm-up miss per genuinely hot object.
+    SecondAccess,
+}
+
+impl CacheAdmit {
+    pub fn parse(s: &str) -> Option<CacheAdmit> {
+        match s.to_ascii_lowercase().as_str() {
+            "always" => Some(CacheAdmit::Always),
+            "second-access" | "second_access" => Some(CacheAdmit::SecondAccess),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheAdmit::Always => "always",
+            CacheAdmit::SecondAccess => "second-access",
+        }
+    }
+}
+
+impl std::fmt::Display for CacheAdmit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Host-local cache counters. All-zero unless the run used the remote
 /// tier; summable across hosts ([`CacheStats::absorb`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -125,6 +163,9 @@ pub struct CacheStats {
     pub insertions: u64,
     /// Objects evicted to make room.
     pub evictions: u64,
+    /// First-fetch insertions rejected by the `second-access` admission
+    /// policy (always 0 under `cache_admit = always`).
+    pub admit_rejections: u64,
 }
 
 impl CacheStats {
@@ -134,6 +175,7 @@ impl CacheStats {
         self.misses += other.misses;
         self.insertions += other.insertions;
         self.evictions += other.evictions;
+        self.admit_rejections += other.admit_rejections;
     }
 
     /// Hit fraction of all probes (0 when the cache saw none).
@@ -200,20 +242,31 @@ impl RemoteStats {
 #[derive(Debug, Clone)]
 pub struct HostCache {
     policy: CachePolicy,
+    admit: CacheAdmit,
     capacity: u32,
     /// Resident objects, front = next eviction victim (LRU: least
     /// recently used; FIFO: oldest inserted). O(len) membership scans —
     /// fine at simulation scale, and keeps eviction order exact.
     order: VecDeque<BatchId>,
+    /// Doorkeeper for `second-access` admission: every object id ever
+    /// offered to [`HostCache::insert`]. Unused (empty) under `always`.
+    seen: HashSet<BatchId>,
     stats: CacheStats,
 }
 
 impl HostCache {
+    /// An always-admit cache (the historical behavior).
     pub fn new(capacity: u32, policy: CachePolicy) -> HostCache {
+        HostCache::with_admit(capacity, policy, CacheAdmit::Always)
+    }
+
+    pub fn with_admit(capacity: u32, policy: CachePolicy, admit: CacheAdmit) -> HostCache {
         HostCache {
             policy,
+            admit,
             capacity,
             order: VecDeque::new(),
+            seen: HashSet::new(),
             stats: CacheStats::default(),
         }
     }
@@ -256,9 +309,15 @@ impl HostCache {
 
     /// Admit `id` after a successful remote fetch, evicting the
     /// front-of-order victim when full. No-op at capacity 0 (caching
-    /// disabled) or when the object is already resident.
+    /// disabled) or when the object is already resident. Under
+    /// `second-access` admission the first offer of an id only marks
+    /// the doorkeeper and is rejected.
     pub fn insert(&mut self, id: BatchId) {
         if self.capacity == 0 || self.order.contains(&id) {
+            return;
+        }
+        if self.admit == CacheAdmit::SecondAccess && self.seen.insert(id) {
+            self.stats.admit_rejections += 1;
             return;
         }
         if self.order.len() as u32 >= self.capacity {
@@ -354,6 +413,7 @@ impl RemoteModel {
         knobs: RemoteKnobs,
         cache_objects: u32,
         policy: CachePolicy,
+        admit: CacheAdmit,
         bytes: f64,
         degraded_read_s: Secs,
         down: Vec<(Secs, Secs)>,
@@ -363,7 +423,7 @@ impl RemoteModel {
         RemoteModel {
             lanes: LanePool::new(knobs.concurrency.max(1) as usize),
             prng: Prng::new(seed ^ 0x7265_6d6f_7465), // "remote"
-            cache: HostCache::new(cache_objects, policy),
+            cache: HostCache::with_admit(cache_objects, policy, admit),
             stats: RemoteStats::default(),
             knobs,
             bytes,
@@ -564,7 +624,17 @@ mod tests {
     }
 
     fn model(k: RemoteKnobs, cache: u32, down: Vec<(Secs, Secs)>) -> RemoteModel {
-        RemoteModel::new(k, cache, CachePolicy::Lru, 1e6, 1e-3, down, Vec::new(), 42)
+        RemoteModel::new(
+            k,
+            cache,
+            CachePolicy::Lru,
+            CacheAdmit::Always,
+            1e6,
+            1e-3,
+            down,
+            Vec::new(),
+            42,
+        )
     }
 
     #[test]
@@ -663,6 +733,94 @@ mod tests {
     }
 
     #[test]
+    fn second_access_admits_only_on_second_offer() {
+        let mut c = HostCache::with_admit(4, CachePolicy::Lru, CacheAdmit::SecondAccess);
+        c.insert(1); // first offer: doorkeeper only
+        assert!(c.is_empty());
+        assert_eq!(c.stats().admit_rejections, 1);
+        c.insert(1); // second offer: admitted
+        assert!(c.probe(1));
+        assert_eq!(c.stats().insertions, 1);
+        // Always-admit never rejects.
+        let mut a = HostCache::new(4, CachePolicy::Lru);
+        a.insert(1);
+        assert_eq!(a.stats().admit_rejections, 0);
+        assert!(a.probe(1));
+    }
+
+    #[test]
+    fn cache_admit_parse_roundtrip() {
+        for a in [CacheAdmit::Always, CacheAdmit::SecondAccess] {
+            assert_eq!(CacheAdmit::parse(a.name()), Some(a));
+            assert_eq!(a.to_string(), a.name());
+        }
+        assert_eq!(
+            CacheAdmit::parse("second_access"),
+            Some(CacheAdmit::SecondAccess)
+        );
+        assert_eq!(CacheAdmit::parse("tinylfu"), None);
+    }
+
+    #[test]
+    fn second_access_never_loses_to_always_on_repeat_heavy_scans() {
+        // The satellite property, on the trace shape second-access
+        // admission exists for: a hot set re-read every round, with a
+        // flood of one-shot cold objects (a scan) between rounds. The
+        // cold singletons are globally unique, so second-access never
+        // admits one — the hot set stays resident from round 2 on.
+        // Always-admit lets every scan object in, flushing the hot set
+        // (the scan is at least `cap` objects long), so it re-misses
+        // the hot set every round. Both LRU and FIFO orderings.
+        run_prop("second_access_repeat_heavy", 120, |g| {
+            let hot = g.size(2, 12);
+            let cap = (hot + g.size(0, 8)) as u32;
+            let rounds = g.size(3, 8);
+            let scan_len = cap as usize + g.size(0, 10);
+            let policy = *g.choose(&[CachePolicy::Lru, CachePolicy::Fifo]);
+
+            let mut trace: Vec<BatchId> = Vec::new();
+            let mut next_cold: BatchId = 1_000;
+            for _ in 0..rounds {
+                for h in 0..hot {
+                    trace.push(h as BatchId);
+                }
+                for _ in 0..scan_len {
+                    trace.push(next_cold);
+                    next_cold += 1;
+                }
+            }
+
+            let hits = |admit: CacheAdmit| {
+                let mut c = HostCache::with_admit(cap, policy, admit);
+                for &id in &trace {
+                    if !c.probe(id) {
+                        c.insert(id);
+                    }
+                }
+                c.stats()
+            };
+            let always = hits(CacheAdmit::Always);
+            let second = hits(CacheAdmit::SecondAccess);
+            assert!(
+                second.hit_rate() >= always.hit_rate(),
+                "second-access hit rate {:.3} < always {:.3} \
+                 (hot {hot}, cap {cap}, rounds {rounds}, scan {scan_len}, {policy})",
+                second.hit_rate(),
+                always.hit_rate()
+            );
+            // And it genuinely captures the hot set: every hot object
+            // hits from round 3 on (round 1 = first sight, round 2 =
+            // admitted on the re-offer).
+            let expect = (hot * (rounds - 2)) as u64;
+            assert!(
+                second.hits >= expect,
+                "second-access hits {} < expected {expect}",
+                second.hits
+            );
+        });
+    }
+
+    #[test]
     fn hedge_accounting_balances() {
         // Hedge on (almost) every request: threshold at the rtt floor.
         run_prop("hedge_accounting", 50, |g| {
@@ -673,6 +831,7 @@ mod tests {
                 k,
                 0,
                 CachePolicy::Lru,
+                CacheAdmit::Always,
                 1e6,
                 1e-3,
                 Vec::new(),
@@ -770,6 +929,7 @@ mod tests {
             k,
             0,
             CachePolicy::Lru,
+            CacheAdmit::Always,
             1e6,
             1e-3,
             Vec::new(),

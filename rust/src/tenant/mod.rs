@@ -1,0 +1,975 @@
+//! Multi-tenant serving: many jobs, one fleet (DESIGN.md §Tenancy).
+//!
+//! The layers below this one run exactly one experiment per process —
+//! [`crate::cluster::Cluster`] owns the whole fleet for one config. This
+//! module adds the production shape on top: an **open-loop job-arrival
+//! layer** where N concurrent jobs (each a config delta + resource
+//! request) arrive on a deterministic virtual-time schedule, queue
+//! against fleet capacity, are admitted by a knob-selectable policy
+//! (`sched = fifo|fair|priority`), and each run as a fleet-slice
+//! [`Cluster`] on a carved set of devices. One coordinator drives all
+//! admitted jobs in one virtual clock, so jobs genuinely interleave:
+//! a finishing job's slice returns to the free pool *mid-run* and
+//! unblocks queued jobs at that virtual instant.
+//!
+//! Two structural facts make the interleaving exact rather than
+//! approximate:
+//!
+//! 1. **Jobs share no simulated resource except capacity.** Devices are
+//!    homogeneous and each job's slice is private, so a job's entire
+//!    run — makespan, trace, energy, cache/remote/fault behavior — is
+//!    fully determined by its own config, independent of *which* global
+//!    device ids it landed on or who else is running. Each job's
+//!    cluster run is therefore computed once, and the tenancy
+//!    coordinator is a pure event loop over arrival/finish events.
+//! 2. **Contention manifests only as queue wait.** A job's in-fleet
+//!    makespan equals its solo makespan; what tenancy adds is the time
+//!    spent waiting for a slice. Stretch is therefore
+//!    `(queue_wait + makespan) / makespan` — 1.0 for a job that was
+//!    admitted the instant it arrived.
+//!
+//! Device carving assigns the **lowest free global indices first**
+//! (accelerators and CSDs independently), and a released slice returns
+//! its ids to the sorted free pool — so the mapping from job-local
+//! device index `i` to global id is `accel_ids[i]` / `csd_ids[i]` in
+//! each [`TenantReport`], per-job deterministic, and never
+//! over-subscribed (property-tested in `rust/tests/tenant.rs`).
+//!
+//! The arrival schedule is a DSL in the fault-plan style
+//! (`jobs = job0:@0 accel=4 csd=2 prio=hi; job1:@12 accel=2`), or
+//! [`JobSpec`] builders in code. A **single-job plan requesting the
+//! whole fleet is bit-identical to [`Cluster::run`]** on the same
+//! config — the job's config is the base config with only the `jobs`
+//! plan cleared (golden-tested in `rust/tests/tenant.rs`).
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::Cluster;
+use crate::config::ExperimentConfig;
+use crate::coordinator::cost::CostProvider;
+use crate::coordinator::RunResult;
+use crate::sim::Secs;
+use crate::trace::{Device, Phase, Trace};
+
+/// Job priority class (`prio = lo|normal|hi` in the DSL). Order is
+/// ascending urgency: `Lo < Normal < Hi`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Prio {
+    Lo,
+    #[default]
+    Normal,
+    Hi,
+}
+
+impl Prio {
+    pub fn parse(s: &str) -> Result<Prio> {
+        match s {
+            "lo" => Ok(Prio::Lo),
+            "normal" => Ok(Prio::Normal),
+            "hi" => Ok(Prio::Hi),
+            other => bail!("unknown prio {other:?} (expected lo|normal|hi)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Prio::Lo => "lo",
+            Prio::Normal => "normal",
+            Prio::Hi => "hi",
+        }
+    }
+}
+
+impl fmt::Display for Prio {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Admission policy for queued jobs (`sched = fifo|fair|priority`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Sched {
+    /// Strict FCFS with capacity gating: the queue head is admitted
+    /// when its slice fits; a blocked head blocks everyone behind it
+    /// (no backfill — the simplest policy, and the baseline the
+    /// fairness bench measures against).
+    #[default]
+    Fifo,
+    /// Max-min fair share over accel-hours: among queued jobs that fit
+    /// right now, repeatedly admit the one demanding the fewest
+    /// accel-hours (`accel × solo makespan`), ties broken by arrival
+    /// order. Small jobs stop being starved behind big ones, which is
+    /// exactly what minimizes max stretch on skewed mixes.
+    Fair,
+    /// Priority with preemption-free backfill: queued jobs are ranked
+    /// (priority desc, arrival, index) and the first *fitting* job in
+    /// rank order is admitted — a blocked high-priority job lets
+    /// smaller low-priority work backfill around it, but nothing
+    /// already running is ever preempted.
+    Priority,
+}
+
+impl Sched {
+    pub const ALL: [Sched; 3] = [Sched::Fifo, Sched::Fair, Sched::Priority];
+
+    pub fn parse(s: &str) -> Result<Sched> {
+        match s {
+            "fifo" => Ok(Sched::Fifo),
+            "fair" => Ok(Sched::Fair),
+            "priority" => Ok(Sched::Priority),
+            other => bail!("unknown sched {other:?} (expected fifo|fair|priority)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Sched::Fifo => "fifo",
+            Sched::Fair => "fair",
+            Sched::Priority => "priority",
+        }
+    }
+}
+
+impl fmt::Display for Sched {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One job in the arrival plan: a virtual arrival time, a resource
+/// request against the fleet, a priority class, and optional workload
+/// overrides (batches/epochs) on the base config.
+///
+/// Built either from the DSL (`job0:@0 accel=4 csd=2 prio=hi`) or in
+/// code:
+///
+/// ```
+/// use ddlp::tenant::{JobSpec, Prio};
+/// let job = JobSpec::new("big", 0.0).accel(4).csd(2).prio(Prio::Hi);
+/// assert_eq!(job.to_string(), "big:@0 accel=4 csd=2 prio=hi");
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Job name (the DSL's `name:` prefix); must be unique in a plan.
+    pub name: String,
+    /// Virtual arrival time (seconds since fleet clock zero).
+    pub arrival: Secs,
+    /// Accelerators requested (≥ 1).
+    pub n_accel: u32,
+    /// CSDs requested (may be 0 for CPU-only strategies).
+    pub n_csd: u32,
+    /// Hosts the job shards itself across *within its slice* (a job
+    /// sharding knob, not a fleet capacity dimension — the fleet model
+    /// pools accelerators/CSDs, and each job's cluster re-partitions
+    /// its slice into per-host sub-slices exactly as a solo run would).
+    pub n_hosts: u32,
+    /// Priority class (only `sched = priority` reads it).
+    pub prio: Prio,
+    /// Batches override (`None` inherits the base config).
+    pub n_batches: Option<u32>,
+    /// Epochs override (`None` inherits the base config).
+    pub epochs: Option<u32>,
+}
+
+impl JobSpec {
+    /// A job arriving at `arrival` requesting 1 accelerator, 0 CSDs,
+    /// 1 host, normal priority, base workload.
+    pub fn new(name: impl Into<String>, arrival: Secs) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            arrival,
+            n_accel: 1,
+            n_csd: 0,
+            n_hosts: 1,
+            prio: Prio::Normal,
+            n_batches: None,
+            epochs: None,
+        }
+    }
+
+    pub fn accel(mut self, n: u32) -> Self {
+        self.n_accel = n;
+        self
+    }
+
+    pub fn csd(mut self, n: u32) -> Self {
+        self.n_csd = n;
+        self
+    }
+
+    pub fn hosts(mut self, n: u32) -> Self {
+        self.n_hosts = n;
+        self
+    }
+
+    pub fn prio(mut self, p: Prio) -> Self {
+        self.prio = p;
+        self
+    }
+
+    pub fn batches(mut self, n: u32) -> Self {
+        self.n_batches = Some(n);
+        self
+    }
+
+    pub fn epochs(mut self, n: u32) -> Self {
+        self.epochs = Some(n);
+        self
+    }
+
+    fn parse(s: &str) -> Result<JobSpec> {
+        let (name, rest) = s
+            .split_once(':')
+            .with_context(|| format!("job {s:?}: expected name:@arrival ..."))?;
+        let name = name.trim();
+        if name.is_empty() {
+            bail!("job {s:?}: empty name");
+        }
+        let mut toks = rest.split_whitespace();
+        let at = toks
+            .next()
+            .with_context(|| format!("job {name}: missing @arrival"))?;
+        let arrival: Secs = at
+            .strip_prefix('@')
+            .with_context(|| format!("job {name}: expected @arrival, got {at:?}"))?
+            .parse()
+            .with_context(|| format!("job {name}: bad arrival in {at:?}"))?;
+        let mut spec = JobSpec::new(name, arrival);
+        for tok in toks {
+            let (key, val) = tok
+                .split_once('=')
+                .with_context(|| format!("job {name}: expected key=value, got {tok:?}"))?;
+            match key {
+                "accel" => spec.n_accel = parse_u32(name, key, val)?,
+                "csd" => spec.n_csd = parse_u32(name, key, val)?,
+                "hosts" => spec.n_hosts = parse_u32(name, key, val)?,
+                "prio" => spec.prio = Prio::parse(val).with_context(|| format!("job {name}"))?,
+                "batches" => spec.n_batches = Some(parse_u32(name, key, val)?),
+                "epochs" => spec.epochs = Some(parse_u32(name, key, val)?),
+                other => bail!(
+                    "job {name}: unknown key {other:?} \
+                     (expected accel|csd|hosts|prio|batches|epochs)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+fn parse_u32(job: &str, key: &str, val: &str) -> Result<u32> {
+    val.parse()
+        .with_context(|| format!("job {job}: bad {key} value {val:?}"))
+}
+
+impl fmt::Display for JobSpec {
+    /// Round-trips exactly through [`JobSpec::parse`]: `{}` on the
+    /// arrival prints the shortest f64 representation that re-parses to
+    /// the same bits, and defaulted keys are omitted.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:@{} accel={}", self.name, self.arrival, self.n_accel)?;
+        if self.n_csd != 0 {
+            write!(f, " csd={}", self.n_csd)?;
+        }
+        if self.n_hosts != 1 {
+            write!(f, " hosts={}", self.n_hosts)?;
+        }
+        if self.prio != Prio::Normal {
+            write!(f, " prio={}", self.prio)?;
+        }
+        if let Some(b) = self.n_batches {
+            write!(f, " batches={b}")?;
+        }
+        if let Some(e) = self.epochs {
+            write!(f, " epochs={e}")?;
+        }
+        Ok(())
+    }
+}
+
+/// An ordered arrival plan: the `jobs = ...` config knob. Empty means
+/// tenancy is off and the process runs the classic single-experiment
+/// path.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct JobPlan {
+    pub jobs: Vec<JobSpec>,
+}
+
+impl JobPlan {
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Capacity/shape checks against the fleet the base config
+    /// declares. `uses_csd` is the base strategy's
+    /// [`crate::coordinator::Strategy::uses_csd`]; `base_batches` the
+    /// base `n_batches` (the per-job default).
+    pub fn validate(
+        &self,
+        fleet_accel: u32,
+        fleet_csd: u32,
+        uses_csd: bool,
+        base_batches: u32,
+    ) -> Result<()> {
+        for (i, job) in self.jobs.iter().enumerate() {
+            let ctx = |msg: String| format!("jobs[{i}] ({}): {msg}", job.name);
+            if !job.arrival.is_finite() || job.arrival < 0.0 {
+                bail!(ctx(format!("arrival {} must be finite and >= 0", job.arrival)));
+            }
+            if job.n_accel == 0 {
+                bail!(ctx("accel must be >= 1".into()));
+            }
+            if job.n_accel > fleet_accel {
+                bail!(ctx(format!(
+                    "requests {} accels but the fleet has {fleet_accel}",
+                    job.n_accel
+                )));
+            }
+            if job.n_csd > fleet_csd {
+                bail!(ctx(format!(
+                    "requests {} CSDs but the fleet has {fleet_csd}",
+                    job.n_csd
+                )));
+            }
+            if job.n_hosts == 0 {
+                bail!(ctx("hosts must be >= 1".into()));
+            }
+            if job.n_accel < job.n_hosts {
+                bail!(ctx(format!(
+                    "{} accels cannot shard across {} hosts",
+                    job.n_accel, job.n_hosts
+                )));
+            }
+            if uses_csd && job.n_csd < job.n_hosts.max(1) {
+                bail!(ctx(format!(
+                    "a CSD strategy needs >= 1 CSD per host ({} hosts, {} CSDs)",
+                    job.n_hosts, job.n_csd
+                )));
+            }
+            let batches = job.n_batches.unwrap_or(base_batches);
+            if batches == 0 {
+                bail!(ctx("batches must be >= 1".into()));
+            }
+            if job.n_hosts > 1 && batches < job.n_accel {
+                bail!(ctx(format!(
+                    "multi-host sharding needs n_batches ({batches}) >= accel ({})",
+                    job.n_accel
+                )));
+            }
+            if let Some(e) = job.epochs {
+                if e == 0 {
+                    bail!(ctx("epochs must be >= 1".into()));
+                }
+            }
+            for other in &self.jobs[..i] {
+                if other.name == job.name {
+                    bail!(ctx("duplicate job name".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for JobPlan {
+    type Err = anyhow::Error;
+
+    /// Parse the `jobs` DSL: `;`-separated job specs, e.g.
+    /// `job0:@0 accel=4 csd=2 prio=hi; job1:@12 accel=2`. Empty string
+    /// (or only separators) parses to the empty plan (tenancy off).
+    fn from_str(s: &str) -> Result<JobPlan> {
+        let mut jobs = Vec::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            jobs.push(JobSpec::parse(part)?);
+        }
+        Ok(JobPlan { jobs })
+    }
+}
+
+impl fmt::Display for JobPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, job) in self.jobs.iter().enumerate() {
+            if i > 0 {
+                f.write_str("; ")?;
+            }
+            write!(f, "{job}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-job attribution: the tenancy-level timeline plus the job's full
+/// [`RunResult`] (batches, energy, cache/remote/fault stats).
+#[derive(Debug)]
+pub struct TenantReport {
+    /// Index of the job in the plan.
+    pub job: usize,
+    pub name: String,
+    pub prio: Prio,
+    /// Virtual arrival time.
+    pub arrival: Secs,
+    /// Seconds spent queued (start − arrival).
+    pub queue_wait: Secs,
+    /// Virtual time the slice was granted and the job started.
+    pub start: Secs,
+    /// Virtual time the job finished and released its slice.
+    pub finish: Secs,
+    /// The job's own run makespan (identical to its solo makespan —
+    /// see the module docs: contention shows up only as queue wait).
+    pub makespan: Secs,
+    /// `(queue_wait + makespan) / makespan`; 1.0 = never waited.
+    pub stretch: f64,
+    /// Global accelerator ids carved for this job (job-local
+    /// accelerator `i` ran on global id `accel_ids[i]`).
+    pub accel_ids: Vec<u32>,
+    /// Global CSD ids carved for this job.
+    pub csd_ids: Vec<u32>,
+    /// The job's complete run result (report, per-host/per-CSD
+    /// attribution, cache stats, losses, trace).
+    pub result: RunResult,
+}
+
+/// Fleet-level rollup across all jobs in the plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub n_jobs: usize,
+    /// Virtual time the last job finished.
+    pub fleet_makespan: Secs,
+    /// Accel-hours served / accel-hours available:
+    /// `Σ(accel_j × makespan_j) / (fleet_accel × fleet_makespan)`.
+    pub utilization: f64,
+    /// Nearest-rank p50 of per-job queue waits.
+    pub queue_wait_p50: Secs,
+    /// Nearest-rank p95 of per-job queue waits.
+    pub queue_wait_p95: Secs,
+    pub mean_stretch: f64,
+    pub max_stretch: f64,
+    /// Jain's fairness index over per-job stretches:
+    /// `(Σs)² / (n × Σs²)` — 1.0 when every job stretches equally.
+    pub fairness: f64,
+    /// Batches consumed across all jobs.
+    pub total_batches: u64,
+    /// Joules across all jobs.
+    pub total_joules: f64,
+}
+
+/// Everything one tenancy run produces.
+#[derive(Debug)]
+pub struct TenancyResult {
+    /// Per-job reports, in plan order.
+    pub tenants: Vec<TenantReport>,
+    pub fleet: FleetReport,
+    /// Fleet-level timeline: zero-length `JobAdmit`/`JobStart`/
+    /// `JobFinish` markers (`batch` = job index) in chronological
+    /// order. Empty when the base config has `record_trace = false`.
+    pub trace: Trace,
+}
+
+/// Per-(job, host) cost-provider factory — the tenancy analogue of
+/// [`Cluster::with_cost_factory`], used by tests and benches to run
+/// plans over fixed toy costs.
+pub type TenantCostFactory = Arc<dyn Fn(usize, u32) -> Box<dyn CostProvider + Send> + Send + Sync>;
+
+/// The tenancy coordinator: owns the base config and drives the whole
+/// plan in one virtual clock.
+pub struct Tenancy<'a> {
+    cfg: &'a ExperimentConfig,
+    cost_factory: Option<TenantCostFactory>,
+}
+
+impl<'a> Tenancy<'a> {
+    /// Bind a coordinator to a config whose `jobs` plan is non-empty.
+    pub fn new(cfg: &'a ExperimentConfig) -> Result<Tenancy<'a>> {
+        if cfg.jobs.is_empty() {
+            bail!("tenancy needs a non-empty jobs plan (set jobs = ...)");
+        }
+        Ok(Tenancy {
+            cfg,
+            cost_factory: None,
+        })
+    }
+
+    /// Inject per-(job, host) cost providers instead of building them
+    /// from the config.
+    pub fn with_cost_factory(
+        mut self,
+        f: impl Fn(usize, u32) -> Box<dyn CostProvider + Send> + Send + Sync + 'static,
+    ) -> Self {
+        self.cost_factory = Some(Arc::new(f));
+        self
+    }
+
+    /// The config one job actually runs: the base config with the
+    /// job's resource slice and workload overrides applied and the
+    /// plan itself cleared. A job requesting exactly the fleet with no
+    /// overrides therefore runs a config identical to the base minus
+    /// `jobs` — which is what makes single-job tenancy bit-identical
+    /// to [`Cluster::run`].
+    fn job_config(&self, spec: &JobSpec) -> ExperimentConfig {
+        let mut jc = self.cfg.clone();
+        jc.jobs = JobPlan::default();
+        jc.n_accel = spec.n_accel;
+        jc.n_csd = spec.n_csd;
+        jc.n_hosts = spec.n_hosts;
+        if let Some(b) = spec.n_batches {
+            jc.n_batches = b;
+        }
+        if let Some(e) = spec.epochs {
+            jc.epochs = e;
+        }
+        jc
+    }
+
+    /// Run the whole plan. Jobs' cluster runs are computed in plan
+    /// order (each cluster parallelizes internally per
+    /// `PALLAS_THREADS`); the admission event loop then interleaves
+    /// them on the fleet clock. Fully deterministic: virtual time
+    /// everywhere, no wall clock, no thread-order dependence.
+    pub fn run(&self) -> Result<TenancyResult> {
+        let plan = &self.cfg.jobs;
+        self.cfg
+            .jobs
+            .validate(
+                self.cfg.n_accel,
+                self.cfg.n_csd,
+                self.cfg.strategy.uses_csd(),
+                self.cfg.n_batches,
+            )
+            .context("jobs plan")?;
+
+        // Phase 1: each job's run, computed solo (see module docs for
+        // why this is exact, not an approximation).
+        let mut results = Vec::with_capacity(plan.len());
+        for (j, spec) in plan.jobs.iter().enumerate() {
+            let jc = self.job_config(spec);
+            let mut cluster = Cluster::from_config(&jc)
+                .with_context(|| format!("job {} ({})", j, spec.name))?;
+            if let Some(fac) = &self.cost_factory {
+                let fac = Arc::clone(fac);
+                cluster = cluster.with_cost_factory(move |h| fac(j, h));
+            }
+            let result = cluster
+                .run()
+                .with_context(|| format!("job {} ({})", j, spec.name))?;
+            results.push(result);
+        }
+
+        // Phase 2: the admission event loop on the fleet clock.
+        let timeline = self.interleave(plan, &results)?;
+
+        // Phase 3: attribution.
+        Ok(self.attribute(plan, results, timeline))
+    }
+
+    /// Run the event loop: arrivals enqueue, the policy admits against
+    /// the free pools, finishes release. Returns per-job
+    /// (start, finish, accel_ids, csd_ids) plus the marker trace.
+    fn interleave(&self, plan: &JobPlan, results: &[RunResult]) -> Result<Timeline> {
+        let n = plan.len();
+        let makespans: Vec<Secs> = results.iter().map(|r| r.report.makespan).collect();
+        let mut free_accel: Vec<u32> = (0..self.cfg.n_accel).collect();
+        let mut free_csd: Vec<u32> = (0..self.cfg.n_csd).collect();
+
+        // Arrival order: (arrival, plan index) — the queue is kept in
+        // this order and policies re-rank it per admission pass.
+        let mut arrivals: Vec<usize> = (0..n).collect();
+        arrivals.sort_by(|&a, &b| {
+            plan.jobs[a]
+                .arrival
+                .total_cmp(&plan.jobs[b].arrival)
+                .then(a.cmp(&b))
+        });
+
+        let mut trace = Trace::new();
+        let record = self.cfg.record_trace;
+        let mut mark = |phase: Phase, job: usize, t: Secs| {
+            if record {
+                trace.record(Device::CpuMain, phase, Some(job as u32), t, t);
+            }
+        };
+
+        let mut queue: Vec<usize> = Vec::new(); // arrival order
+        let mut running: Vec<(Secs, usize)> = Vec::new(); // (finish, job)
+        let mut slots: Vec<Option<JobSlot>> = (0..n).map(|_| None).collect();
+        let mut next_arrival = 0usize;
+        let mut done = 0usize;
+
+        while done < n {
+            // Next event time: the earliest pending finish or arrival.
+            let t_fin = running
+                .iter()
+                .map(|&(t, _)| t)
+                .fold(f64::INFINITY, f64::min);
+            let t_arr = arrivals
+                .get(next_arrival)
+                .map(|&j| plan.jobs[j].arrival)
+                .unwrap_or(f64::INFINITY);
+            let t = t_fin.min(t_arr);
+            if !t.is_finite() {
+                bail!("tenancy event loop stalled with {} of {n} jobs done", done);
+            }
+
+            // 1. Releases at t (ascending job index for determinism).
+            let mut finished: Vec<usize> = running
+                .iter()
+                .filter(|&&(ft, _)| ft == t)
+                .map(|&(_, j)| j)
+                .collect();
+            finished.sort_unstable();
+            running.retain(|&(ft, _)| ft != t);
+            for j in finished {
+                let slot = slots[j].as_ref().expect("finished job has a slot");
+                free_accel.extend_from_slice(&slot.accel_ids);
+                free_csd.extend_from_slice(&slot.csd_ids);
+                free_accel.sort_unstable();
+                free_csd.sort_unstable();
+                mark(Phase::JobFinish, j, t);
+                done += 1;
+            }
+
+            // 2. Arrivals at t join the queue.
+            while next_arrival < n && plan.jobs[arrivals[next_arrival]].arrival == t {
+                let j = arrivals[next_arrival];
+                queue.push(j);
+                mark(Phase::JobAdmit, j, t);
+                next_arrival += 1;
+            }
+
+            // 3. Admission pass: the policy picks from the queue until
+            //    nothing (more) fits.
+            loop {
+                let Some(pick) = self.pick(&queue, plan, &makespans, &free_accel, &free_csd)
+                else {
+                    break;
+                };
+                let j = queue.remove(pick);
+                let spec = &plan.jobs[j];
+                let accel_ids: Vec<u32> =
+                    free_accel.drain(..spec.n_accel as usize).collect();
+                let csd_ids: Vec<u32> = free_csd.drain(..spec.n_csd as usize).collect();
+                let finish = t + makespans[j];
+                slots[j] = Some(JobSlot {
+                    start: t,
+                    finish,
+                    accel_ids,
+                    csd_ids,
+                });
+                running.push((finish, j));
+                mark(Phase::JobStart, j, t);
+            }
+        }
+
+        let slots: Vec<JobSlot> = slots
+            .into_iter()
+            .map(|s| s.expect("every job ran"))
+            .collect();
+        Ok(Timeline { slots, trace })
+    }
+
+    /// The admission policy: given the queue (arrival order), pick the
+    /// queue position to admit next, or `None` if nothing (the policy
+    /// allows to be) admitted fits the free pools.
+    fn pick(
+        &self,
+        queue: &[usize],
+        plan: &JobPlan,
+        makespans: &[Secs],
+        free_accel: &[u32],
+        free_csd: &[u32],
+    ) -> Option<usize> {
+        let fits = |j: usize| {
+            let s = &plan.jobs[j];
+            s.n_accel as usize <= free_accel.len() && s.n_csd as usize <= free_csd.len()
+        };
+        match self.cfg.sched {
+            Sched::Fifo => match queue.first() {
+                Some(&head) if fits(head) => Some(0),
+                _ => None,
+            },
+            Sched::Fair => queue
+                .iter()
+                .enumerate()
+                .filter(|&(_, &j)| fits(j))
+                .min_by(|&(_, &a), &(_, &b)| {
+                    let hours = |j: usize| plan.jobs[j].n_accel as f64 * makespans[j];
+                    hours(a)
+                        .total_cmp(&hours(b))
+                        .then(plan.jobs[a].arrival.total_cmp(&plan.jobs[b].arrival))
+                        .then(a.cmp(&b))
+                })
+                .map(|(pos, _)| pos),
+            Sched::Priority => queue
+                .iter()
+                .enumerate()
+                .filter(|&(_, &j)| fits(j))
+                .min_by(|&(_, &a), &(_, &b)| {
+                    plan.jobs[b]
+                        .prio
+                        .cmp(&plan.jobs[a].prio) // desc priority
+                        .then(plan.jobs[a].arrival.total_cmp(&plan.jobs[b].arrival))
+                        .then(a.cmp(&b))
+                })
+                .map(|(pos, _)| pos),
+        }
+    }
+
+    fn attribute(
+        &self,
+        plan: &JobPlan,
+        results: Vec<RunResult>,
+        timeline: Timeline,
+    ) -> TenancyResult {
+        let Timeline { slots, trace } = timeline;
+        let mut tenants = Vec::with_capacity(plan.len());
+        for (j, (result, slot)) in results.into_iter().zip(slots).enumerate() {
+            let spec = &plan.jobs[j];
+            let makespan = result.report.makespan;
+            let queue_wait = slot.start - spec.arrival;
+            let stretch = if makespan > 0.0 {
+                (queue_wait + makespan) / makespan
+            } else {
+                1.0
+            };
+            tenants.push(TenantReport {
+                job: j,
+                name: spec.name.clone(),
+                prio: spec.prio,
+                arrival: spec.arrival,
+                queue_wait,
+                start: slot.start,
+                finish: slot.finish,
+                makespan,
+                stretch,
+                accel_ids: slot.accel_ids,
+                csd_ids: slot.csd_ids,
+                result,
+            });
+        }
+
+        let fleet_makespan = tenants.iter().map(|t| t.finish).fold(0.0, f64::max);
+        let served: f64 = tenants
+            .iter()
+            .map(|t| t.accel_ids.len() as f64 * t.makespan)
+            .sum();
+        let available = self.cfg.n_accel as f64 * fleet_makespan;
+        let mut waits: Vec<Secs> = tenants.iter().map(|t| t.queue_wait).collect();
+        waits.sort_by(f64::total_cmp);
+        let stretches: Vec<f64> = tenants.iter().map(|t| t.stretch).collect();
+        let fleet = FleetReport {
+            n_jobs: tenants.len(),
+            fleet_makespan,
+            utilization: if available > 0.0 { served / available } else { 0.0 },
+            queue_wait_p50: percentile(&waits, 50.0),
+            queue_wait_p95: percentile(&waits, 95.0),
+            mean_stretch: stretches.iter().sum::<f64>() / stretches.len().max(1) as f64,
+            max_stretch: stretches.iter().copied().fold(0.0, f64::max),
+            fairness: jain(&stretches),
+            total_batches: tenants.iter().map(|t| t.result.report.n_batches as u64).sum(),
+            total_joules: tenants.iter().map(|t| t.result.report.energy.total_joules).sum(),
+        };
+        TenancyResult {
+            tenants,
+            fleet,
+            trace,
+        }
+    }
+}
+
+struct JobSlot {
+    start: Secs,
+    finish: Secs,
+    accel_ids: Vec<u32>,
+    csd_ids: Vec<u32>,
+}
+
+struct Timeline {
+    slots: Vec<JobSlot>,
+    trace: Trace,
+}
+
+/// Run the config's jobs plan — the `main.rs` entry point.
+pub fn run(cfg: &ExperimentConfig) -> Result<TenancyResult> {
+    Tenancy::new(cfg)?.run()
+}
+
+/// Nearest-rank percentile on an ascending-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Jain's fairness index: `(Σx)² / (n × Σx²)`; 1.0 when uniform (and
+/// for the degenerate empty/all-zero cases).
+fn jain(xs: &[f64]) -> f64 {
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if xs.is_empty() || sq == 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn dsl_parses_the_issue_example() {
+        let plan: JobPlan = "job0:@0 accel=4 csd=2 prio=hi; job1:@12 accel=2"
+            .parse()
+            .unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.jobs[0].name, "job0");
+        assert_eq!(plan.jobs[0].arrival, 0.0);
+        assert_eq!(plan.jobs[0].n_accel, 4);
+        assert_eq!(plan.jobs[0].n_csd, 2);
+        assert_eq!(plan.jobs[0].prio, Prio::Hi);
+        assert_eq!(plan.jobs[1].name, "job1");
+        assert_eq!(plan.jobs[1].arrival, 12.0);
+        assert_eq!(plan.jobs[1].n_accel, 2);
+        assert_eq!(plan.jobs[1].prio, Prio::Normal);
+    }
+
+    #[test]
+    fn dsl_rejects_malformed_specs() {
+        for bad in [
+            "job0",                      // no colon
+            "job0:accel=2",              // missing @arrival
+            ":@0 accel=1",               // empty name
+            "job0:@x accel=1",           // bad arrival
+            "job0:@0 accel=zero",        // bad number
+            "job0:@0 turbo=9",           // unknown key
+            "job0:@0 prio=urgent",       // unknown prio
+            "job0:@0 accel",             // not key=value
+        ] {
+            assert!(bad.parse::<JobPlan>().is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_separator_only_strings_parse_to_empty_plan() {
+        assert!("".parse::<JobPlan>().unwrap().is_empty());
+        assert!(" ; ;".parse::<JobPlan>().unwrap().is_empty());
+    }
+
+    #[test]
+    fn display_roundtrips_builders_and_defaults() {
+        let plan = JobPlan {
+            jobs: vec![
+                JobSpec::new("big", 0.0).accel(4).csd(2).prio(Prio::Hi),
+                JobSpec::new("tiny", 1.5).accel(1).batches(20).epochs(2),
+                JobSpec::new("lo", 3.25).accel(2).hosts(2).prio(Prio::Lo),
+            ],
+        };
+        let s = plan.to_string();
+        assert_eq!(
+            s,
+            "big:@0 accel=4 csd=2 prio=hi; tiny:@1.5 accel=1 batches=20 epochs=2; \
+             lo:@3.25 accel=2 hosts=2 prio=lo"
+        );
+        let back: JobPlan = s.parse().unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn prop_display_parse_roundtrip() {
+        run_prop("tenant_dsl_roundtrip", 200, |g| {
+            let n = g.size(1, 6);
+            let mut jobs = Vec::new();
+            for i in 0..n {
+                let mut spec = JobSpec::new(format!("j{i}"), g.float(0.0, 100.0))
+                    .accel(g.int(1, 8) as u32)
+                    .csd(g.int(0, 4) as u32)
+                    .hosts(g.int(1, 2) as u32)
+                    .prio(*g.choose(&[Prio::Lo, Prio::Normal, Prio::Hi]));
+                if g.bool() {
+                    spec = spec.batches(g.int(1, 500) as u32);
+                }
+                if g.bool() {
+                    spec = spec.epochs(g.int(1, 4) as u32);
+                }
+                jobs.push(spec);
+            }
+            let plan = JobPlan { jobs };
+            let back: JobPlan = plan.to_string().parse().unwrap();
+            assert_eq!(back, plan, "DSL round-trip mutated the plan");
+        });
+    }
+
+    #[test]
+    fn validate_rejects_capacity_and_shape_violations() {
+        let plan = |s: &str| s.parse::<JobPlan>().unwrap();
+        // accel over fleet
+        assert!(plan("a:@0 accel=8").validate(4, 2, false, 100).is_err());
+        // csd over fleet
+        assert!(plan("a:@0 accel=1 csd=4").validate(4, 2, false, 100).is_err());
+        // hosts > accel
+        assert!(plan("a:@0 accel=1 hosts=2").validate(4, 2, false, 100).is_err());
+        // csd strategy with no csd
+        assert!(plan("a:@0 accel=1").validate(4, 2, true, 100).is_err());
+        // multi-host with too few batches
+        assert!(plan("a:@0 accel=4 hosts=2 batches=2")
+            .validate(4, 2, false, 100)
+            .is_err());
+        // duplicate names
+        assert!(plan("a:@0 accel=1; a:@1 accel=1")
+            .validate(4, 2, false, 100)
+            .is_err());
+        // negative arrival never parses, but builders can make one
+        let neg = JobPlan {
+            jobs: vec![JobSpec::new("n", -1.0)],
+        };
+        assert!(neg.validate(4, 2, false, 100).is_err());
+        // a well-formed plan passes
+        assert!(plan("a:@0 accel=2 csd=1; b:@5 accel=4 csd=2 prio=hi")
+            .validate(4, 2, true, 100)
+            .is_ok());
+    }
+
+    #[test]
+    fn sched_and_prio_parse_name_roundtrip() {
+        for s in Sched::ALL {
+            assert_eq!(Sched::parse(s.name()).unwrap(), s);
+            assert_eq!(s.to_string(), s.name());
+        }
+        for p in [Prio::Lo, Prio::Normal, Prio::Hi] {
+            assert_eq!(Prio::parse(p.name()).unwrap(), p);
+        }
+        assert!(Sched::parse("lifo").is_err());
+        assert!(Prio::Lo < Prio::Normal && Prio::Normal < Prio::Hi);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 95.0), 4.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain(&[2.0, 2.0, 2.0]), 1.0);
+        let skew = jain(&[1.0, 1.0, 10.0]);
+        assert!(skew < 1.0 && skew > 1.0 / 3.0, "jain {skew}");
+        assert_eq!(jain(&[]), 1.0);
+        assert_eq!(jain(&[0.0, 0.0]), 1.0);
+    }
+}

@@ -28,7 +28,7 @@
 //!
 //! [`Topology::single_node`] reproduces the paper's implicit
 //! single-host/single-CSD layout; a `coordinator::Session` over it is
-//! bit-identical to the legacy `run_schedule` path
+//! bit-identical to the pre-refactor monolithic scheduler
 //! (`rust/tests/golden_parity.rs`).
 //!
 //! **Multi-host** (DESIGN.md §Cluster): `n_hosts > 1` describes a

@@ -105,10 +105,19 @@ pub enum Phase {
     /// Zero-length marker: a half-open probe succeeded and the breaker
     /// closed (remote reads resume).
     BreakerClose,
+    /// Zero-length marker: a tenancy job entered the admission queue
+    /// (`batch` carries the job index; DESIGN.md §Tenancy).
+    JobAdmit,
+    /// Zero-length marker: a tenancy job was granted its slice and
+    /// started running (`batch` carries the job index).
+    JobStart,
+    /// Zero-length marker: a tenancy job finished and released its
+    /// slice back to the free pool (`batch` carries the job index).
+    JobFinish,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 16] = [
+    pub const ALL: [Phase; 19] = [
         Phase::SsdRead,
         Phase::CpuPreprocess,
         Phase::H2d,
@@ -125,6 +134,9 @@ impl Phase {
         Phase::RemoteRetry,
         Phase::BreakerOpen,
         Phase::BreakerClose,
+        Phase::JobAdmit,
+        Phase::JobStart,
+        Phase::JobFinish,
     ];
     pub const COUNT: usize = Phase::ALL.len();
 

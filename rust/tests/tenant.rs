@@ -1,0 +1,404 @@
+//! Tenancy invariants (DESIGN.md §Tenancy): every job in a plan runs
+//! exactly once under every admission policy; concurrently running jobs
+//! never share a device (no over-subscription, property-tested over
+//! random plans); a single-job plan requesting the whole fleet is
+//! **bit-identical** to [`Cluster::run`] on the same config; and the
+//! ISSUE acceptance scenario — three mixed-priority jobs with staggered
+//! arrivals, one queued behind capacity — conserves per-job batches and
+//! populates the fleet rollup. All of it holds at any `PALLAS_THREADS`
+//! (CI runs this suite at 1 and 4 and diffs the CLI stdout bit-exact).
+
+use ddlp::cluster::Cluster;
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::cost::{CostProvider, FixedCosts};
+use ddlp::coordinator::Strategy;
+use ddlp::tenant::{self, JobPlan, Prio, Sched, Tenancy, TenancyResult};
+use ddlp::trace::Phase;
+use ddlp::util::prop::run_prop;
+
+/// Base config: the fleet plus the plan. Per-job workloads come from
+/// `batches=` overrides in the plan itself.
+fn cfg(fleet_accel: u32, fleet_csd: u32, jobs: &str, sched: Sched) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(fleet_accel)
+        .n_csd(fleet_csd)
+        .n_batches(120)
+        .jobs(jobs.parse::<JobPlan>().unwrap())
+        .sched(sched)
+        .build()
+        .unwrap()
+}
+
+/// Uniform toy costs for every (job, host).
+fn run_toy(cfg: &ExperimentConfig) -> TenancyResult {
+    Tenancy::new(cfg)
+        .unwrap()
+        .with_cost_factory(|_job, _host| -> Box<dyn CostProvider + Send> {
+            Box::new(FixedCosts::toy_fig6())
+        })
+        .run()
+        .unwrap()
+}
+
+/// Every job-local batch id trained exactly `epochs` times in the
+/// job's own trace.
+fn assert_job_coverage(r: &TenancyResult, job: usize, n: u32, epochs: u32, label: &str) {
+    let t = &r.tenants[job];
+    assert_eq!(
+        t.result.report.n_batches,
+        n * epochs,
+        "{label}: job {job} batch count"
+    );
+    let mut counts = vec![0u32; n as usize];
+    for s in &t.result.trace.spans {
+        if s.phase == Phase::Train {
+            counts[s.batch.unwrap() as usize] += 1;
+        }
+    }
+    for (b, &c) in counts.iter().enumerate() {
+        assert_eq!(
+            c, epochs,
+            "{label}: job {job} batch {b} trained {c}×, want {epochs}"
+        );
+    }
+}
+
+/// The fleet trace carries exactly one JobAdmit/JobStart/JobFinish
+/// marker per job, chronologically consistent with the report.
+fn assert_markers(r: &TenancyResult, label: &str) {
+    for (kind, phase) in [
+        ("admit", Phase::JobAdmit),
+        ("start", Phase::JobStart),
+        ("finish", Phase::JobFinish),
+    ] {
+        let mut seen = vec![0u32; r.tenants.len()];
+        for s in r.trace.spans.iter().filter(|s| s.phase == phase) {
+            assert_eq!(s.start, s.end, "{label}: {kind} marker has width");
+            seen[s.batch.unwrap() as usize] += 1;
+        }
+        for (j, &c) in seen.iter().enumerate() {
+            assert_eq!(c, 1, "{label}: job {j} has {c} {kind} markers, want 1");
+        }
+    }
+    for (j, t) in r.tenants.iter().enumerate() {
+        let at = |phase: Phase| {
+            r.trace
+                .spans
+                .iter()
+                .find(|s| s.phase == phase && s.batch == Some(j as u32))
+                .unwrap()
+                .start
+        };
+        assert_eq!(at(Phase::JobAdmit), t.arrival, "{label}: job {j} admit@arrival");
+        assert_eq!(at(Phase::JobStart), t.start, "{label}: job {j} start marker");
+        assert_eq!(at(Phase::JobFinish), t.finish, "{label}: job {j} finish marker");
+    }
+}
+
+/// Jobs whose [start, finish) intervals overlap must hold disjoint
+/// device sets, and no job may exceed the fleet.
+fn assert_no_oversubscription(r: &TenancyResult, fleet_accel: u32, fleet_csd: u32, label: &str) {
+    for (j, t) in r.tenants.iter().enumerate() {
+        assert!(
+            t.accel_ids.iter().all(|&a| a < fleet_accel),
+            "{label}: job {j} accel id out of fleet"
+        );
+        assert!(
+            t.csd_ids.iter().all(|&c| c < fleet_csd),
+            "{label}: job {j} csd id out of fleet"
+        );
+        let mut a = t.accel_ids.clone();
+        a.sort_unstable();
+        a.dedup();
+        assert_eq!(a.len(), t.accel_ids.len(), "{label}: job {j} dup accel id");
+        let mut c = t.csd_ids.clone();
+        c.sort_unstable();
+        c.dedup();
+        assert_eq!(c.len(), t.csd_ids.len(), "{label}: job {j} dup csd id");
+    }
+    for i in 0..r.tenants.len() {
+        for j in (i + 1)..r.tenants.len() {
+            let (a, b) = (&r.tenants[i], &r.tenants[j]);
+            let overlap = a.start < b.finish && b.start < a.finish;
+            if overlap {
+                assert!(
+                    a.accel_ids.iter().all(|x| !b.accel_ids.contains(x)),
+                    "{label}: jobs {i}/{j} overlap in time and share an accel"
+                );
+                assert!(
+                    a.csd_ids.iter().all(|x| !b.csd_ids.contains(x)),
+                    "{label}: jobs {i}/{j} overlap in time and share a CSD"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exactly_once_per_job_under_every_policy() {
+    // Four jobs contending for a 4-accel fleet: a full-fleet job plus
+    // three half-fleet jobs. Under every policy, every job runs its
+    // whole workload exactly once and the markers agree with the
+    // per-job timeline.
+    let plan = "big:@0 accel=4 csd=2 batches=80; a:@2 accel=2 csd=1 batches=30; \
+                b:@4 accel=2 csd=1 batches=30 prio=hi; c:@4.5 accel=2 csd=1 batches=20 prio=lo";
+    for sched in Sched::ALL {
+        let label = format!("sched={sched}");
+        let r = run_toy(&cfg(4, 2, plan, sched));
+        assert_eq!(r.tenants.len(), 4, "{label}");
+        assert_eq!(r.fleet.n_jobs, 4, "{label}");
+        for (job, n) in [(0usize, 80u32), (1, 30), (2, 30), (3, 20)] {
+            assert_job_coverage(&r, job, n, 1, &label);
+        }
+        assert_markers(&r, &label);
+        assert_no_oversubscription(&r, 4, 2, &label);
+        assert_eq!(r.fleet.total_batches, 160, "{label}");
+        // Timeline sanity: nobody starts before arriving, stretch >= 1.
+        for t in &r.tenants {
+            assert!(t.start >= t.arrival, "{label}: {} time-traveled", t.name);
+            assert!(t.queue_wait >= 0.0, "{label}");
+            assert!(t.stretch >= 1.0, "{label}");
+            assert_eq!(t.finish, t.start + t.makespan, "{label}");
+        }
+    }
+}
+
+#[test]
+fn no_oversubscription_property() {
+    // Random plans over random fleets: whatever the policy admits,
+    // overlapping jobs never share a device and every job eventually
+    // runs exactly its workload.
+    run_prop("tenancy_no_oversubscription", 25, |g| {
+        let fleet_accel = g.size(2, 8) as u32;
+        let fleet_csd = g.size(1, 4) as u32;
+        let n_jobs = g.size(2, 5);
+        let sched = *g.choose(&Sched::ALL);
+        let mut plan = String::new();
+        for j in 0..n_jobs {
+            let accel = g.size(1, fleet_accel as usize);
+            let csd = g.size(1, fleet_csd as usize);
+            let arrival = g.int(0, 4) as f64 * 2.5;
+            let batches = g.size(10, 40);
+            let prio = *g.choose(&["lo", "normal", "hi"]);
+            if j > 0 {
+                plan.push_str("; ");
+            }
+            plan.push_str(&format!(
+                "j{j}:@{arrival} accel={accel} csd={csd} batches={batches} prio={prio}"
+            ));
+        }
+        let label = format!("sched={sched} plan={plan}");
+        let c = cfg(fleet_accel, fleet_csd, &plan, sched);
+        let r = run_toy(&c);
+        assert_no_oversubscription(&r, fleet_accel, fleet_csd, &label);
+        for j in 0..n_jobs {
+            let n = c.jobs.jobs[j].n_batches.unwrap();
+            assert_job_coverage(&r, j, n, 1, &label);
+        }
+        assert_markers(&r, &label);
+    });
+}
+
+#[test]
+fn single_job_bit_identical_to_cluster_run() {
+    // The tentpole acceptance golden: a one-job plan requesting the
+    // whole fleet produces the job config == base config minus `jobs`,
+    // so its run must be bit-identical to Cluster::run — report, trace
+    // spans, cache counters, per-CSD attribution.
+    let solo = ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(2)
+        .n_csd(1)
+        .n_batches(120)
+        .build()
+        .unwrap();
+    let tenanted = ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(2)
+        .n_csd(1)
+        .n_batches(120)
+        .jobs("solo:@0 accel=2 csd=1".parse().unwrap())
+        .build()
+        .unwrap();
+
+    // Toy costs on both sides.
+    let direct = Cluster::from_config(&solo)
+        .unwrap()
+        .with_cost_factory(|_| -> Box<dyn CostProvider + Send> { Box::new(FixedCosts::toy_fig6()) })
+        .run()
+        .unwrap();
+    let via_tenancy = run_toy(&tenanted);
+    let t = &via_tenancy.tenants[0];
+    assert_eq!(t.result.report, direct.report, "report diverged");
+    assert_eq!(t.result.trace.spans, direct.trace.spans, "trace diverged");
+    assert_eq!(t.result.cache, direct.cache, "cache stats diverged");
+    assert_eq!(t.result.csd_devices, direct.csd_devices, "csd attribution diverged");
+    assert_eq!(t.queue_wait, 0.0);
+    assert_eq!(t.stretch, 1.0);
+    assert_eq!(t.accel_ids, vec![0, 1]);
+    assert_eq!(t.csd_ids, vec![0]);
+    assert_eq!(via_tenancy.fleet.fleet_makespan, direct.report.makespan);
+    assert_eq!(via_tenancy.fleet.utilization, 1.0);
+
+    // And on the config-derived (analytic) cost path the CLI uses.
+    let direct = Cluster::from_config(&solo).unwrap().run().unwrap();
+    let via_tenancy = tenant::run(&tenanted).unwrap();
+    let t = &via_tenancy.tenants[0];
+    assert_eq!(t.result.report, direct.report, "analytic report diverged");
+    assert_eq!(t.result.trace.spans, direct.trace.spans, "analytic trace diverged");
+}
+
+#[test]
+fn acceptance_three_job_mixed_priority_scenario() {
+    // ISSUE acceptance: three jobs, mixed priorities, staggered
+    // arrivals, one (two, here) queued behind capacity. `big` owns the
+    // whole fleet from t=0; its makespan is bounded below by
+    // 60 batches/accel × 0.125 s train = 7.5 s, so both later arrivals
+    // genuinely queue.
+    let plan = "big:@0 accel=4 csd=2 batches=240 prio=hi; \
+                med:@3 accel=2 csd=1 batches=60; \
+                tiny:@6 accel=2 csd=1 batches=30 prio=lo";
+    let r = run_toy(&cfg(4, 2, plan, Sched::Fifo));
+
+    let (big, med, tiny) = (&r.tenants[0], &r.tenants[1], &r.tenants[2]);
+    assert_eq!(big.prio, Prio::Hi);
+    assert_eq!(tiny.prio, Prio::Lo);
+    // big was admitted on arrival and holds the fleet past both arrivals.
+    assert_eq!(big.queue_wait, 0.0);
+    assert_eq!(big.stretch, 1.0);
+    assert!(big.makespan >= 7.5, "toy big job too short: {}", big.makespan);
+    // med and tiny queued behind capacity, then started together at
+    // big's release (they fit side by side: 2+2 accels, 1+1 CSDs).
+    for t in [med, tiny] {
+        assert!(t.queue_wait > 0.0, "{} never queued", t.name);
+        assert!(t.stretch > 1.0, "{}", t.name);
+        assert_eq!(t.start, big.finish, "{} start", t.name);
+    }
+    assert!(med.queue_wait > tiny.queue_wait, "earlier arrival waited longer");
+    assert_no_oversubscription(&r, 4, 2, "acceptance");
+    // Per-job conservation.
+    assert_job_coverage(&r, 0, 240, 1, "acceptance");
+    assert_job_coverage(&r, 1, 60, 1, "acceptance");
+    assert_job_coverage(&r, 2, 30, 1, "acceptance");
+    assert_markers(&r, "acceptance");
+
+    // Fleet rollup populated and consistent.
+    let f = &r.fleet;
+    assert_eq!(f.n_jobs, 3);
+    assert_eq!(f.total_batches, 330);
+    let last = r.tenants.iter().map(|t| t.finish).fold(0.0, f64::max);
+    assert_eq!(f.fleet_makespan, last);
+    assert!(f.utilization > 0.0 && f.utilization <= 1.0, "{}", f.utilization);
+    // waits sorted: [0, tiny, med] → p50 = tiny's, p95 = med's.
+    assert_eq!(f.queue_wait_p50, tiny.queue_wait);
+    assert_eq!(f.queue_wait_p95, med.queue_wait);
+    assert!(f.max_stretch >= f.mean_stretch && f.mean_stretch > 1.0);
+    assert!(f.fairness > 0.0 && f.fairness < 1.0, "{}", f.fairness);
+    assert!(f.total_joules > 0.0);
+}
+
+#[test]
+fn fair_share_beats_fifo_max_stretch_on_skewed_mix() {
+    // The bench mix in miniature: one long job ahead of three short
+    // ones, every job requesting the full fleet so execution
+    // serializes. FIFO runs the long job first and stretches every
+    // short job by its whole makespan; fair-share (min accel-hours
+    // first) runs the shorts first and only stretches the long job a
+    // little — strictly lower max stretch.
+    let plan = "big:@0 accel=2 csd=1 batches=240; s0:@0 accel=2 csd=1 batches=30; \
+                s1:@0 accel=2 csd=1 batches=30; s2:@0 accel=2 csd=1 batches=30";
+    let fifo = run_toy(&cfg(2, 1, plan, Sched::Fifo));
+    let fair = run_toy(&cfg(2, 1, plan, Sched::Fair));
+    // FIFO admits the queue head (plan order on the t=0 tie): big first.
+    assert_eq!(fifo.tenants[0].queue_wait, 0.0);
+    // Fair admits a short first and big last.
+    assert!(fair.tenants[0].queue_wait > 0.0, "fair ran big first");
+    assert!(
+        fair.fleet.max_stretch < fifo.fleet.max_stretch,
+        "fair {} !< fifo {}",
+        fair.fleet.max_stretch,
+        fifo.fleet.max_stretch
+    );
+    assert!(
+        fair.fleet.mean_stretch < fifo.fleet.mean_stretch,
+        "fair {} !< fifo {}",
+        fair.fleet.mean_stretch,
+        fifo.fleet.mean_stretch
+    );
+    // Work conserved identically either way.
+    assert_eq!(fifo.fleet.total_batches, fair.fleet.total_batches);
+}
+
+#[test]
+fn priority_admits_hi_first_and_backfills_around_blocked_head() {
+    // While j0 holds half the fleet, a hi-prio full-fleet job is
+    // blocked; priority lets the later lo-prio half-fleet job backfill
+    // around it, FIFO blocks everyone behind the head.
+    let plan = "j0:@0 accel=2 csd=1 batches=120; \
+                wide:@1 accel=4 csd=2 batches=40 prio=hi; \
+                lo:@2 accel=2 csd=1 batches=40 prio=lo";
+    let prio = run_toy(&cfg(4, 2, plan, Sched::Priority));
+    // Backfill: `lo` fits beside j0 and starts the instant it arrives.
+    assert_eq!(prio.tenants[2].queue_wait, 0.0, "priority failed to backfill");
+    // `wide` needs the whole fleet: it waits for both.
+    assert!(prio.tenants[1].queue_wait > 0.0);
+    let fifo = run_toy(&cfg(4, 2, plan, Sched::Fifo));
+    // FIFO's blocked head blocks the backfiller too.
+    assert!(fifo.tenants[2].queue_wait > 0.0, "fifo should not backfill");
+
+    // And when two jobs are both eligible, hi outranks an earlier lo.
+    let plan = "j0:@0 accel=2 csd=1 batches=120; \
+                lo:@1 accel=2 csd=1 batches=40 prio=lo; \
+                hi:@2 accel=2 csd=1 batches=40 prio=hi";
+    let r = run_toy(&cfg(2, 1, plan, Sched::Priority));
+    assert!(
+        r.tenants[2].start < r.tenants[1].start,
+        "hi@2 should start before lo@1: {} vs {}",
+        r.tenants[2].start,
+        r.tenants[1].start
+    );
+}
+
+#[test]
+fn tenancy_is_deterministic() {
+    let plan = "big:@0 accel=4 csd=2 batches=80 prio=hi; a:@2 accel=2 csd=1 batches=30; \
+                b:@4 accel=2 csd=1 batches=30 prio=lo";
+    for sched in Sched::ALL {
+        let c = cfg(4, 2, plan, sched);
+        let r1 = run_toy(&c);
+        let r2 = run_toy(&c);
+        assert_eq!(r1.fleet, r2.fleet, "sched={sched}");
+        assert_eq!(r1.trace.spans, r2.trace.spans, "sched={sched}");
+        for (a, b) in r1.tenants.iter().zip(r2.tenants.iter()) {
+            assert_eq!(a.start, b.start, "sched={sched}");
+            assert_eq!(a.finish, b.finish, "sched={sched}");
+            assert_eq!(a.accel_ids, b.accel_ids, "sched={sched}");
+            assert_eq!(a.csd_ids, b.csd_ids, "sched={sched}");
+            assert_eq!(a.result.report, b.result.report, "sched={sched}");
+            assert_eq!(a.result.trace.spans, b.result.trace.spans, "sched={sched}");
+        }
+    }
+}
+
+#[test]
+fn released_slice_unblocks_queued_job_mid_run() {
+    // Two half-fleet jobs run side by side; a third queues until the
+    // *first* of them releases — not until the whole fleet drains.
+    let plan = "left:@0 accel=2 csd=1 batches=30; right:@0 accel=2 csd=1 batches=240; \
+                late:@1 accel=2 csd=1 batches=30";
+    let r = run_toy(&cfg(4, 2, plan, Sched::Fifo));
+    let (left, right, late) = (&r.tenants[0], &r.tenants[1], &r.tenants[2]);
+    assert_eq!(left.start, 0.0);
+    assert_eq!(right.start, 0.0);
+    assert!(left.finish < right.finish, "toy workloads out of order");
+    // `late` started exactly when the short job released its slice —
+    // while the long job was still running — and inherited its devices.
+    assert_eq!(late.start, left.finish);
+    assert!(late.start < right.finish, "late waited for the whole fleet");
+    assert_eq!(late.accel_ids, left.accel_ids);
+    assert_eq!(late.csd_ids, left.csd_ids);
+}
