@@ -1,0 +1,114 @@
+//! Stage-level splitting: open a batch's preprocessing into its stage
+//! DAG, price every CPU/CSD split point over the storage channels, and
+//! watch the engine pick the cut that actually pays (DESIGN.md §Stages).
+//!
+//! ```bash
+//! cargo run --release --example stage_split
+//! ```
+//!
+//! Two workload families, opposite byte shapes:
+//!   - `tabular` (parse → encode → normalize → join): parse scans every
+//!     raw value and filters rows down to the spec's selectivity, so the
+//!     byte stream *collapses* at the first stage boundary. Running just
+//!     parse near storage on the CSD ships the small filtered
+//!     intermediate instead of the raw table — the split pays.
+//!   - `image-staged` (decode → augment → collate): decode *inflates*
+//!     the stored JPEG into raw pixels, so every early cut moves more
+//!     bytes than the raw read it saved. The honest best split is 0.
+//!
+//! All virtual time: every number below is bit-exact deterministic.
+
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::{Session, Strategy};
+use ddlp::dataset::TabularSpec;
+use ddlp::metrics::fmt_s;
+use ddlp::stage::{StageGraph, WorkloadKind};
+
+const N_BATCHES: u32 = 240;
+
+fn cfg(workload: WorkloadKind, split: Option<u8>) -> anyhow::Result<ExperimentConfig> {
+    ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(4)
+        .n_csd(2)
+        .n_batches(N_BATCHES)
+        .workload(workload)
+        .tabular(TabularSpec {
+            rows: 1 << 18,
+            cols: 64,
+            selectivity: 0.25,
+        })
+        .stage_split(split)
+        .build()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("DDLP stage splitting — 4 accels x 2 CSDs, WRR, {N_BATCHES} batches\n");
+
+    for workload in [WorkloadKind::Tabular, WorkloadKind::ImageStaged] {
+        let base = cfg(workload, None)?;
+        let graph = StageGraph::for_config(&base)?;
+
+        // 1. The static price list: per-batch CPU-prong cost when the
+        //    first k stages run near storage on the CSD.
+        println!("== workload = {workload} ({} stages)", graph.len());
+        println!("   raw {:.1} MB -> final {:.1} MB per batch", graph.raw_bytes() / 1e6, graph.final_bytes() / 1e6);
+        for (name, s) in graph.stages().iter().map(|s| (s.kind.name(), s)) {
+            println!(
+                "   stage {name:>9}: cpu {} s   csd {} s   emits {:>8.2} MB",
+                fmt_s(s.cpu_s),
+                fmt_s(s.csd_s),
+                s.bytes_out / 1e6
+            );
+        }
+        for (k, c) in graph.split_table().iter().enumerate() {
+            let total = c.read_s + c.pp_s + c.xfer_s;
+            let marker = if k == graph.best_split() as usize { "  <- best" } else { "" };
+            println!(
+                "   split k={k}: read {} s + pp {} s + xfer {} s = {} s{marker}",
+                fmt_s(c.read_s),
+                fmt_s(c.pp_s),
+                fmt_s(c.xfer_s),
+                fmt_s(total)
+            );
+        }
+
+        // 2. End-to-end: force each split and run the full engine. The
+        //    auto run (stage_split unset) must match the best forced one.
+        let auto = Session::from_config(&base)?.run()?;
+        println!("   auto split: makespan {} s, split_hist {:?}", fmt_s(auto.report.makespan), auto.report.stages.split_hist);
+        for k in 0..=graph.len() as u8 {
+            let r = Session::from_config(&cfg(workload, Some(k))?)?.run()?;
+            println!("   forced k={k}: makespan {} s", fmt_s(r.report.makespan));
+        }
+
+        // 3. Where each stage actually ran, and what crossed the cuts.
+        println!("   attribution (auto run):");
+        for s in &auto.report.stages.per_stage {
+            println!(
+                "   stage {:>9}: completed {:>4}  host busy {} s  csd busy {} s",
+                s.name,
+                s.completions,
+                fmt_s(s.host_busy_s),
+                fmt_s(s.csd_busy_s)
+            );
+        }
+        println!(
+            "   cut bytes moved: {:?} MB\n",
+            auto.report
+                .stages
+                .cut_bytes
+                .iter()
+                .map(|b| (b / 1e6 * 100.0).round() / 100.0)
+                .collect::<Vec<_>>()
+        );
+    }
+
+    println!("(Tabular collapses its bytes at parse, so offloading the first");
+    println!(" stage to the CSD beats both the pure host path and deeper cuts;");
+    println!(" image decode inflates bytes, so its best split is honestly 0.");
+    println!(" The single-stage `workload = image` default never arms any of");
+    println!(" this machinery and stays bit-identical to the classic path.)");
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! Stage-DAG split sweep (DESIGN.md §Stages): for each staged workload
+//! family, price every CPU/CSD split point from the stage graph's cost
+//! model, run the full engine at every forced split plus the auto
+//! (cost-model argmin) placement, and record the measured split gain.
+//!
+//! The headline number is the tabular family's per-batch split gain —
+//! what fraction of the classical host path's serial per-batch cost the
+//! best split removes (Zhu et al.'s shape: parse collapses the byte
+//! stream, so running it near storage pays). The image family is swept
+//! too as the honest control: decode inflates bytes, its best split is
+//! 0, and the sweep must *not* manufacture a gain there.
+//!
+//! All virtual time over the analytic cost model: every number is
+//! bit-exact deterministic at any `PALLAS_THREADS`.
+//!
+//! Besides the stdout report, results are written to
+//! `BENCH_stage_dag.json` so the split trajectory is machine-checkable
+//! across PRs.
+//!
+//! Env knobs (CI smoke):
+//!   STAGE_DAG_MIN_SPLIT_GAIN   minimum tabular per-batch split gain
+//!                              (fraction of the k=0 cost); below it
+//!                              the bench exits non-zero. Unset, the
+//!                              sweep just records.
+
+use ddlp::config::ExperimentConfig;
+use ddlp::coordinator::{Session, Strategy};
+use ddlp::dataset::TabularSpec;
+use ddlp::stage::{StageGraph, WorkloadKind};
+
+const N_BATCHES: u32 = 240;
+
+/// Read an f64 env knob. A knob that is *set but unparsable* is a hard
+/// error — silently ignoring it would disable the CI floor.
+fn env_f64(key: &str) -> Option<f64> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!("[stage_dag] FAIL: {key}={raw:?} is not a number");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cfg(workload: WorkloadKind, split: Option<u8>) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(4)
+        .n_csd(2)
+        .n_batches(N_BATCHES)
+        .record_trace(false)
+        .workload(workload)
+        .tabular(TabularSpec {
+            rows: 1 << 18,
+            cols: 64,
+            selectivity: 0.25,
+        })
+        .stage_split(split)
+        .build()
+        .expect("bench config is well-formed")
+}
+
+fn makespan(workload: WorkloadKind, split: Option<u8>) -> f64 {
+    let r = Session::from_config(&cfg(workload, split))
+        .expect("bench session builds")
+        .run()
+        .expect("bench run completes");
+    // Conservation inside the bench too: every (batch, stage) counted.
+    let st = &r.report.stages;
+    let want = r.report.n_batches as u64 + r.report.wasted_batches;
+    for s in &st.per_stage {
+        if s.completions != want {
+            eprintln!(
+                "[stage_dag] FAIL: {workload} split {split:?}: stage {} completed {}×, want {want}",
+                s.name, s.completions
+            );
+            std::process::exit(1);
+        }
+    }
+    r.report.makespan
+}
+
+struct Family {
+    workload: WorkloadKind,
+    best_split: u8,
+    /// Serial per-batch CPU-prong cost at each k (read + pp + xfer).
+    per_batch: Vec<f64>,
+    /// End-to-end makespan at each forced k.
+    e2e: Vec<f64>,
+    auto_makespan: f64,
+    /// 1 − per_batch[best] / per_batch[0].
+    gain: f64,
+}
+
+fn sweep(workload: WorkloadKind) -> Family {
+    let graph = StageGraph::for_config(&cfg(workload, None)).expect("graph builds");
+    let per_batch: Vec<f64> = graph
+        .split_table()
+        .iter()
+        .map(|c| c.read_s + c.pp_s + c.xfer_s)
+        .collect();
+    let best = graph.best_split();
+    let gain = 1.0 - per_batch[best as usize] / per_batch[0];
+    let e2e: Vec<f64> = (0..=graph.len() as u8)
+        .map(|k| makespan(workload, Some(k)))
+        .collect();
+    let auto_makespan = makespan(workload, None);
+    for (k, (pb, ms)) in per_batch.iter().zip(&e2e).enumerate() {
+        let marker = if k == best as usize { "  <- best" } else { "" };
+        println!(
+            "[stage_dag] {workload} k={k}: per-batch {:>8.4}s  e2e makespan {:>8.3}s{marker}",
+            pb, ms
+        );
+    }
+    println!(
+        "[stage_dag] {workload}: best split {best}, per-batch gain {:.1}%, auto makespan {:.3}s",
+        gain * 100.0,
+        auto_makespan
+    );
+    Family {
+        workload,
+        best_split: best,
+        per_batch,
+        e2e,
+        auto_makespan,
+        gain,
+    }
+}
+
+fn main() {
+    // Determinism anchor: the same staged run twice must be bit-equal.
+    if makespan(WorkloadKind::Tabular, None) != makespan(WorkloadKind::Tabular, None) {
+        eprintln!("[stage_dag] FAIL: staged run is not bit-reproducible");
+        std::process::exit(1);
+    }
+
+    let tabular = sweep(WorkloadKind::Tabular);
+    let image = sweep(WorkloadKind::ImageStaged);
+
+    // Structural gates, exact because everything is virtual.
+    // Zhu et al.'s shape: tabular gains by offloading exactly its parse.
+    if tabular.best_split != 1 || tabular.gain <= 0.0 {
+        eprintln!(
+            "[stage_dag] FAIL: tabular best split {} (gain {:.4}) — want 1 with a positive gain",
+            tabular.best_split, tabular.gain
+        );
+        std::process::exit(1);
+    }
+    // The honest control: image decode inflates bytes, no split pays.
+    if image.best_split != 0 || image.gain != 0.0 {
+        eprintln!(
+            "[stage_dag] FAIL: image-staged best split {} (gain {:.4}) — the sweep \
+             manufactured an image gain",
+            image.best_split, image.gain
+        );
+        std::process::exit(1);
+    }
+    // Auto placement must not lose to any forced split end-to-end.
+    for f in [&tabular, &image] {
+        let best_forced = f.e2e.iter().cloned().fold(f64::INFINITY, f64::min);
+        if f.auto_makespan > best_forced * 1.001 + 1e-9 {
+            eprintln!(
+                "[stage_dag] FAIL: {} auto makespan {:.4}s loses to best forced {:.4}s",
+                f.workload, f.auto_makespan, best_forced
+            );
+            std::process::exit(1);
+        }
+    }
+
+    // Machine-readable record, tracked across PRs.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"stage_dag\",\n");
+    json.push_str(&format!("  \"n_batches\": {N_BATCHES},\n"));
+    json.push_str(&format!(
+        "  \"tabular_split_gain\": {:.4},\n",
+        tabular.gain
+    ));
+    json.push_str(
+        "  \"gain_definition\": \"1 - per-batch serial CPU-prong cost at the best split / \
+         cost at split 0 (read + pp + xfer, virtual time)\",\n",
+    );
+    json.push_str("  \"results\": {\n");
+    let families = [&tabular, &image];
+    for (i, f) in families.iter().enumerate() {
+        let comma = if i + 1 < families.len() { "," } else { "" };
+        let fmt_list = |v: &[f64]| -> String {
+            v.iter()
+                .map(|x| format!("{x:.6}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        json.push_str(&format!(
+            "    \"{}\": {{\"best_split\": {}, \"per_batch_gain\": {:.4}, \
+             \"per_batch_cost_s\": [{}], \"e2e_makespan_s\": [{}], \
+             \"auto_makespan_s\": {:.6}}}{comma}\n",
+            f.workload,
+            f.best_split,
+            f.gain,
+            fmt_list(&f.per_batch),
+            fmt_list(&f.e2e),
+            f.auto_makespan
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_stage_dag.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[stage_dag] wrote {path}"),
+        Err(e) => eprintln!("[stage_dag] WARNING: could not write {path}: {e}"),
+    }
+
+    // CI smoke: the tabular split must keep paying at least the floor.
+    if let Some(floor) = env_f64("STAGE_DAG_MIN_SPLIT_GAIN") {
+        if tabular.gain < floor {
+            eprintln!(
+                "[stage_dag] FAIL: tabular split gain {:.4} < required {floor:.4}",
+                tabular.gain
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "[stage_dag] split-gain smoke OK: {:.4} >= {floor:.4}",
+            tabular.gain
+        );
+    }
+}

@@ -48,7 +48,7 @@ use crate::coordinator::cost::CostProvider;
 use crate::coordinator::{CsdDeviceReport, RunResult, Session};
 use crate::dataset::BatchId;
 use crate::energy::EnergyReport;
-use crate::metrics::{FaultStats, RunReport};
+use crate::metrics::{FaultStats, RunReport, StageReport};
 use crate::sim::Secs;
 use crate::storage::remote::{CacheStats, RemoteStats};
 use crate::topology::Topology;
@@ -541,10 +541,12 @@ impl Cluster {
         let mut fault = FaultStats::default();
         let mut remote = RemoteStats::default();
         let mut cache = CacheStats::default();
+        let mut stages = StageReport::default();
         for r in &results {
             fault.absorb(&r.report.fault);
             remote.absorb(&r.report.remote);
             cache.absorb(&r.cache);
+            stages.absorb(&r.report.stages);
         }
         let energy = EnergyReport {
             joules_per_batch: results
@@ -574,6 +576,7 @@ impl Cluster {
             energy,
             fault,
             remote,
+            stages,
         };
         // Merged timeline: spans concatenate host-major with
         // accelerator indices remapped to global ranks (host-local CSD

@@ -33,6 +33,13 @@
 //! jobs = big:@0 accel=4 csd=2 prio=hi; tiny:@12 accel=2
 //! sched = fifo          # fifo | fair | priority admission
 //!
+//! # workload family and stage placement (image = single-stage legacy)
+//! workload = image      # image | image-staged | tabular
+//! tabular_rows = 262144 # rows per batch (tabular workload only)
+//! tabular_cols = 64
+//! tabular_selectivity = 0.25  # join survivor fraction in (0, 1]
+//! stage_split = auto    # auto | <k>: first k stages on the CSD
+//!
 //! # device profile overrides
 //! csd_slowdown = 5.0
 //! host_ssd_bw = 3.2e9
@@ -53,6 +60,7 @@ use super::{ExperimentBuilder, ExperimentConfig, Loader};
 use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
 use crate::pipeline::PipelineKind;
+use crate::stage::WorkloadKind;
 use crate::storage::remote::{CacheAdmit, CachePolicy, StorageKind};
 use crate::tenant::Sched;
 use crate::topology::CsdAssign;
@@ -86,6 +94,7 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
     let mut b = ExperimentBuilder::default();
     let mut profile = super::DeviceProfile::default();
     let mut adaptive = super::AdaptiveParams::default();
+    let mut tabular = crate::dataset::TabularSpec::default();
 
     for (k, v) in map {
         b = match k.as_str() {
@@ -135,6 +144,30 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
                     .with_context(|| format!("bad sched {v:?} (expected fifo | fair | priority)"))?;
                 b.sched(s)
             }
+            "workload" => {
+                let w = WorkloadKind::parse(v).with_context(|| {
+                    format!("bad workload {v:?} (expected image | image-staged | tabular)")
+                })?;
+                b.workload(w)
+            }
+            "tabular_rows" => {
+                tabular.rows = v.parse().context("tabular_rows")?;
+                b
+            }
+            "tabular_cols" => {
+                tabular.cols = v.parse().context("tabular_cols")?;
+                b
+            }
+            "tabular_selectivity" => {
+                tabular.selectivity = v.parse().context("tabular_selectivity")?;
+                b
+            }
+            "stage_split" => match v.as_str() {
+                "auto" => b.stage_split(None),
+                _ => b.stage_split(Some(
+                    v.parse().context("stage_split (expected auto | <k>)")?,
+                )),
+            },
             "n_batches" => b.n_batches(v.parse().context("n_batches")?),
             "epochs" => b.epochs(v.parse().context("epochs")?),
             "seed" => b.seed(v.parse().context("seed")?),
@@ -285,7 +318,7 @@ pub fn apply(map: &BTreeMap<String, String>) -> Result<ExperimentConfig> {
             _ => bail!("unknown config key {k:?}"),
         };
     }
-    b.profile(profile).adaptive(adaptive).build()
+    b.profile(profile).adaptive(adaptive).tabular(tabular).build()
 }
 
 /// Parse a config file plus `--set k=v` overrides.
@@ -433,6 +466,36 @@ mod tests {
         assert!(load("n_accel = 2\nn_csd = 1\njobs = big:@0 accel=4 csd=2\n", &[]).is_err());
         // the empty value is the empty plan (classic single-job run)
         assert!(load("jobs = \n", &[]).unwrap().jobs.is_empty());
+    }
+
+    #[test]
+    fn workload_keys_parse() {
+        use crate::stage::WorkloadKind;
+        let text = "workload = tabular\ntabular_rows = 4096\ntabular_cols = 32\n\
+                    tabular_selectivity = 0.5\nstage_split = 2\n";
+        let cfg = load(text, &[]).unwrap();
+        assert_eq!(cfg.workload, WorkloadKind::Tabular);
+        assert_eq!(cfg.tabular.rows, 4096);
+        assert_eq!(cfg.tabular.cols, 32);
+        assert_eq!(cfg.tabular.selectivity, 0.5);
+        assert_eq!(cfg.stage_split, Some(2));
+        // `auto` is the default: engine picks the cost-model argmin.
+        let cfg = load("workload = image-staged\nstage_split = auto\n", &[]).unwrap();
+        assert_eq!(cfg.workload, WorkloadKind::ImageStaged);
+        assert_eq!(cfg.stage_split, None);
+        // the legacy default stays image / auto
+        let cfg = load("model = wrn\n", &[]).unwrap();
+        assert_eq!(cfg.workload, WorkloadKind::Image);
+        assert_eq!(cfg.stage_split, None);
+        assert!(load("workload = video\n", &[]).is_err());
+        assert!(load("stage_split = sometimes\n", &[]).is_err());
+        // builder validation flows through: split beyond the DAG, split
+        // without a CSD prong, bad tabular geometry.
+        assert!(load("workload = tabular\nstage_split = 9\n", &[]).is_err());
+        assert!(load("workload = tabular\nstrategy = cpu\nn_csd = 0\nstage_split = 1\n", &[])
+            .is_err());
+        assert!(load("tabular_selectivity = 0\n", &[]).is_err());
+        assert!(load("tabular_rows = 0\n", &[]).is_err());
     }
 
     #[test]

@@ -14,8 +14,10 @@ use anyhow::{bail, Result};
 
 use crate::cluster::StealMode;
 use crate::coordinator::Strategy;
+use crate::dataset::TabularSpec;
 use crate::fault::FaultPlan;
 use crate::pipeline::{OpCosts, PipelineKind};
+use crate::stage::WorkloadKind;
 use crate::storage::remote::{CacheAdmit, CachePolicy, StorageKind};
 use crate::tenant::{JobPlan, Sched};
 use crate::topology::CsdAssign;
@@ -316,6 +318,20 @@ pub struct ExperimentConfig {
     /// Admission policy for the `jobs` plan
     /// (`sched = fifo|fair|priority`); inert when `jobs` is empty.
     pub sched: Sched,
+    /// Workload family (`workload = image|image-staged|tabular`;
+    /// DESIGN.md §Stages). `Image` (default) keeps the opaque
+    /// batch-granular unit and is bit-identical to a build without the
+    /// stage subsystem; the other families open the per-batch stage
+    /// chain the scheduler can split across CPU and CSD.
+    pub workload: WorkloadKind,
+    /// Tabular batch geometry (`tabular_rows`/`tabular_cols`/
+    /// `tabular_selectivity`); inert unless `workload = tabular`.
+    pub tabular: TabularSpec,
+    /// Forced stage split point (`stage_split = auto|<k>`): `None`
+    /// (auto, default) lets the policy pick the cost-optimal split;
+    /// `Some(k)` pins the leading `k` stages to the CSD for every
+    /// CPU-prong batch (bench sweeps). Inert for single-stage graphs.
+    pub stage_split: Option<u8>,
     /// Batches per epoch (dataset_size / batch_size).
     pub n_batches: u32,
     /// Training epochs to simulate.
@@ -372,6 +388,9 @@ pub struct ExperimentBuilder {
     storage: StorageKind,
     jobs: JobPlan,
     sched: Sched,
+    workload: WorkloadKind,
+    tabular: TabularSpec,
+    stage_split: Option<u8>,
     n_batches: u32,
     epochs: u32,
     loader: Loader,
@@ -398,6 +417,9 @@ impl Default for ExperimentBuilder {
             storage: StorageKind::Local,
             jobs: JobPlan::default(),
             sched: Sched::Fifo,
+            workload: WorkloadKind::Image,
+            tabular: TabularSpec::default(),
+            stage_split: None,
             n_batches: 500,
             epochs: 1,
             loader: Loader::Torchvision,
@@ -486,6 +508,28 @@ impl ExperimentBuilder {
     /// Admission policy for the jobs plan (`Sched::Fifo` default).
     pub fn sched(mut self, s: Sched) -> Self {
         self.sched = s;
+        self
+    }
+
+    /// Select the workload family (`WorkloadKind::Image` default — the
+    /// single-stage, batch-granular path that all golden numbers pin).
+    pub fn workload(mut self, w: WorkloadKind) -> Self {
+        self.workload = w;
+        self
+    }
+
+    /// Shape of the tabular workload (rows, columns, selectivity).
+    /// Ignored unless `workload = tabular`.
+    pub fn tabular(mut self, t: TabularSpec) -> Self {
+        self.tabular = t;
+        self
+    }
+
+    /// Force the stage split point: the first `k` stages of every batch
+    /// run on the CSD, the rest on the CPU prong. `None` (default)
+    /// lets the engine pick the cost-model argmin per topology.
+    pub fn stage_split(mut self, k: Option<u8>) -> Self {
+        self.stage_split = k;
         self
     }
 
@@ -590,6 +634,50 @@ impl ExperimentBuilder {
         if self.adaptive.min_samples < 2 {
             bail!("adaptive_min_samples must be >= 2");
         }
+        if self.tabular.rows == 0 {
+            bail!("tabular_rows must be >= 1");
+        }
+        if self.tabular.cols == 0 {
+            bail!("tabular_cols must be >= 1");
+        }
+        if !self.tabular.selectivity.is_finite()
+            || self.tabular.selectivity <= 0.0
+            || self.tabular.selectivity > 1.0
+        {
+            bail!("tabular_selectivity must be a finite value in (0, 1]");
+        }
+        if let Some(k) = self.stage_split {
+            let n = self.workload.n_stages();
+            if k > n {
+                bail!(
+                    "stage_split ({}) exceeds the {} stage(s) of workload {:?}",
+                    k,
+                    n,
+                    self.workload.name()
+                );
+            }
+            // A forced split with CSD-side stages needs a CSD prong to
+            // run them on, and a multi-stage DAG to cut.
+            if k > 0 {
+                if n < 2 {
+                    bail!(
+                        "stage_split ({}) needs a multi-stage workload, but {:?} has a \
+                         single-stage DAG",
+                        k,
+                        self.workload.name()
+                    );
+                }
+                if !self.strategy.uses_csd() || self.n_csd == 0 {
+                    bail!(
+                        "stage_split ({}) places stages on the CSD, which needs a \
+                         CSD-using strategy and n_csd >= 1 (strategy {:?}, n_csd {})",
+                        k,
+                        self.strategy.name(),
+                        self.n_csd
+                    );
+                }
+            }
+        }
         // Fault-plan device indices must name real devices. (Also
         // checked at topology build; failing here gives config-file and
         // CLI users the error at parse time.)
@@ -615,6 +703,9 @@ impl ExperimentBuilder {
             storage: self.storage,
             jobs: self.jobs,
             sched: self.sched,
+            workload: self.workload,
+            tabular: self.tabular,
+            stage_split: self.stage_split,
             n_batches: self.n_batches,
             epochs: self.epochs,
             loader: self.loader,
@@ -765,6 +856,74 @@ mod tests {
             .unwrap();
         assert_eq!(cfg.jobs.len(), 2);
         assert_eq!(cfg.sched, Sched::Fair);
+    }
+
+    #[test]
+    fn builder_defaults_keep_stage_knobs_dormant() {
+        let cfg = ExperimentConfig::builder().build().unwrap();
+        assert_eq!(cfg.workload, WorkloadKind::Image);
+        assert_eq!(cfg.stage_split, None);
+        assert_eq!(cfg.tabular, TabularSpec::default());
+    }
+
+    #[test]
+    fn builder_validates_tabular_spec() {
+        let bad_rows = TabularSpec { rows: 0, ..TabularSpec::default() };
+        assert!(ExperimentConfig::builder().tabular(bad_rows).build().is_err());
+        let bad_cols = TabularSpec { cols: 0, ..TabularSpec::default() };
+        assert!(ExperimentConfig::builder().tabular(bad_cols).build().is_err());
+        for s in [0.0, -0.5, 1.5, f64::NAN] {
+            let bad = TabularSpec { selectivity: s, ..TabularSpec::default() };
+            assert!(
+                ExperimentConfig::builder().tabular(bad).build().is_err(),
+                "selectivity {s} should be rejected"
+            );
+        }
+        // Full-survival joins are legal.
+        let ok = TabularSpec { selectivity: 1.0, ..TabularSpec::default() };
+        assert!(ExperimentConfig::builder().tabular(ok).build().is_ok());
+    }
+
+    #[test]
+    fn builder_validates_stage_split() {
+        // Split beyond the DAG length is rejected.
+        let err = ExperimentConfig::builder()
+            .workload(WorkloadKind::Tabular)
+            .stage_split(Some(5))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("stage_split"), "{err}");
+        // A non-zero split needs a multi-stage workload...
+        let err = ExperimentConfig::builder()
+            .workload(WorkloadKind::Image)
+            .stage_split(Some(1))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("single-stage"), "{err}");
+        // ...and a CSD prong to run the early stages on.
+        let err = ExperimentConfig::builder()
+            .workload(WorkloadKind::Tabular)
+            .strategy(Strategy::CpuOnly)
+            .n_csd(0)
+            .stage_split(Some(1))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("CSD"), "{err}");
+        // k = 0 (all stages on the host) is always legal, even classical.
+        assert!(ExperimentConfig::builder()
+            .workload(WorkloadKind::Tabular)
+            .strategy(Strategy::CpuOnly)
+            .n_csd(0)
+            .stage_split(Some(0))
+            .build()
+            .is_ok());
+        // A legal forced split on a dual-pronged fleet builds.
+        let cfg = ExperimentConfig::builder()
+            .workload(WorkloadKind::Tabular)
+            .stage_split(Some(2))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.stage_split, Some(2));
     }
 
     #[test]

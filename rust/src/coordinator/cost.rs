@@ -8,6 +8,7 @@
 use crate::config::{ExperimentConfig, Loader};
 use crate::dataset::{BatchId, DatasetSpec};
 use crate::sim::Secs;
+use crate::stage::{StageGraph, WorkloadKind};
 use crate::storage::{Channel, SsdModel};
 
 /// CPU-side costs of one batch.
@@ -123,6 +124,32 @@ impl AnalyticCosts {
         let model = cfg.model_profile()?;
         let ssd = SsdModel::from_profile(p);
         let bs = model.batch_size as f64;
+
+        // Multi-stage workloads (`workload = image-staged | tabular`)
+        // price everything through the stage graph, so the engine's
+        // split-table row at k = 0 bit-matches what this provider
+        // returns — one cost model, two views (DESIGN.md §Stages). The
+        // loader library only shapes the *image* pipelines; the train
+        // side keeps the calibrated model costs either way.
+        if cfg.workload != WorkloadKind::Image {
+            let graph = StageGraph::for_config(cfg)?;
+            let interference =
+                1.0 + p.train_interference_per_worker * cfg.num_workers as f64;
+            let train_base = model.t_gpu_s * interference;
+            let gds_s = ssd.transfer_time(Channel::Gds, graph.final_bytes());
+            return Ok(AnalyticCosts {
+                host: graph.host_cost_at_split(0),
+                csd: graph.csd_cost(),
+                train_cpu_src: TrainCost {
+                    gds_s: 0.0,
+                    train_s: train_base,
+                },
+                train_csd_src: TrainCost {
+                    gds_s,
+                    train_s: train_base,
+                },
+            });
+        }
 
         // --- CPU side -------------------------------------------------
         let pp_single = cfg.pipeline.cpu_seconds_per_image(&p.op_costs) * bs;
@@ -324,6 +351,56 @@ mod tests {
         assert_eq!(c.host_batch(0).pp_s, 0.25);
         assert_eq!(c.csd_batch(0).total(), 1.0);
         assert_eq!(c.train(0, true).train_s, 0.125);
+    }
+
+    #[test]
+    fn csd_slowdown_scales_csd_pp_linearly() {
+        // Satellite gate: the profile's `csd_slowdown` multiplies the
+        // CSD compute leg exactly linearly and touches nothing else.
+        let base = ExperimentConfig::builder().model("wrn").build().unwrap();
+        let mut p2 = base.profile.clone();
+        p2.csd_slowdown *= 2.0;
+        let doubled = ExperimentConfig::builder()
+            .model("wrn")
+            .profile(p2)
+            .build()
+            .unwrap();
+        let mut a = AnalyticCosts::new(&base, &spec(&base)).unwrap();
+        let mut b = AnalyticCosts::new(&doubled, &spec(&doubled)).unwrap();
+        let (ca, cb) = (a.csd_batch(0), b.csd_batch(0));
+        assert!(
+            (cb.pp_s / ca.pp_s - 2.0).abs() < 1e-12,
+            "csd pp {} !≈ 2 × {}",
+            cb.pp_s,
+            ca.pp_s
+        );
+        // The read/write legs are storage-priced, not compute-priced.
+        assert_eq!(ca.read_s, cb.read_s);
+        assert_eq!(ca.write_s, cb.write_s);
+        // The host prong never sees the knob.
+        assert_eq!(a.host_batch(0).pp_s, b.host_batch(0).pp_s);
+    }
+
+    #[test]
+    fn tabular_costs_come_from_the_stage_graph() {
+        // Non-image workloads price both prongs off the stage DAG, so
+        // the engine's split table at k = 0 bit-matches the provider.
+        let cfg = ExperimentConfig::builder()
+            .model("wrn")
+            .workload(WorkloadKind::Tabular)
+            .build()
+            .unwrap();
+        let mut c = AnalyticCosts::new(&cfg, &spec(&cfg)).unwrap();
+        let graph = StageGraph::for_config(&cfg).unwrap();
+        let (h, g) = (c.host_batch(0), graph.host_cost_at_split(0));
+        assert_eq!(h.read_s, g.read_s);
+        assert_eq!(h.pp_s, g.pp_s);
+        assert_eq!(h.xfer_s, g.xfer_s);
+        assert_eq!(h.accel_pp_s, g.accel_pp_s);
+        let (d, e) = (c.csd_batch(0), graph.csd_cost());
+        assert_eq!(d.read_s, e.read_s);
+        assert_eq!(d.pp_s, e.pp_s);
+        assert_eq!(d.write_s, e.write_s);
     }
 
     #[test]

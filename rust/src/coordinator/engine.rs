@@ -47,8 +47,9 @@ use crate::csd::{CsdEngine, CsdProduct};
 use crate::dataset::{BatchId, DatasetSpec, HeadTailCursor, Shard, ShardView};
 use crate::energy::compute_energy;
 use crate::host::{HostEngine, HostReady};
-use crate::metrics::{FaultStats, RunReport};
+use crate::metrics::{FaultStats, RunReport, StageReport, StageStat};
 use crate::sim::Secs;
+use crate::stage::StageGraph;
 use crate::storage::remote::{CacheStats, RemoteModel, RemoteStats};
 use crate::topology::Topology;
 use crate::trace::{Device, Phase, Trace};
@@ -175,6 +176,36 @@ pub struct Engine<'a> {
     /// (`storage = remote`; DESIGN.md §Storage). `None` — and every
     /// read the legacy local cost — under the default local tier.
     remote: Option<RemoteModel>,
+    // ---- stage machinery (DESIGN.md §Stages) ----
+    /// The per-batch stage DAG the config's `workload` key selects.
+    /// Single-stage (`workload = image`, the default) keeps
+    /// `multi_stage == false`, and every stage branch on the hot path
+    /// gates on that — dormant like an empty fault plan.
+    graph: StageGraph,
+    /// `multi_stage` only: CPU-prong cost at each split point `k`
+    /// (`graph.split_table()`), so per-claim placement is a table read.
+    split_table: Vec<HostBatchCost>,
+    /// Config-forced split point (`stage_split = <k>`).
+    forced_split: Option<u8>,
+    /// Cost-model argmin split for this fleet (0 when no CSD prong can
+    /// host early stages).
+    auto_split: u8,
+    /// Split the *next* CPU-prong claim uses — written per-claim by
+    /// [`SchedPolicy::place_stage`] through [`Engine::set_next_split`].
+    next_split: u8,
+    /// (batch, stage) completions per stage, counted at claim or
+    /// production time (wasted productions included).
+    stage_completions: Vec<u64>,
+    /// Per-stage busy seconds on the CPU prong.
+    stage_host_busy: Vec<Secs>,
+    /// Per-stage busy seconds on the CSD prong.
+    stage_csd_busy: Vec<Secs>,
+    /// Bytes that crossed each inter-stage cut on a device handoff
+    /// (length `n_stages - 1`; only the chosen split's cut moves bytes).
+    cut_bytes_moved: Vec<f64>,
+    /// Chosen split point per batch (length `n_stages + 1`; index `n`
+    /// counts whole-graph CSD productions).
+    split_hist: Vec<u64>,
 }
 
 impl<'a> Engine<'a> {
@@ -308,6 +339,22 @@ impl<'a> Engine<'a> {
         } else {
             Vec::new()
         };
+        // Stage DAG of the configured workload. The split table and
+        // per-stage accumulators are only materialized for multi-stage
+        // graphs; the single-stage image default allocates nothing and
+        // arms nothing.
+        let graph = StageGraph::for_config(cfg)?;
+        let n_stages = graph.len();
+        let multi = graph.is_multi_stage();
+        let split_table = if multi { graph.split_table() } else { Vec::new() };
+        // A CSD-side prefix needs a CSD prong: clamp the auto split to 0
+        // on CPU-only strategies and CSD-less fleets (the forced split
+        // was already validated against the same condition at build).
+        let auto_split = if multi && cfg.strategy.uses_csd() && !csds.is_empty() {
+            graph.best_split()
+        } else {
+            0
+        };
         let mut eng = Engine {
             cfg,
             topology,
@@ -351,6 +398,16 @@ impl<'a> Engine<'a> {
             rerouted: 0,
             csd_health,
             remote: None,
+            graph,
+            split_table,
+            forced_split: cfg.stage_split,
+            auto_split,
+            next_split: 0,
+            stage_completions: if multi { vec![0; n_stages] } else { Vec::new() },
+            stage_host_busy: if multi { vec![0.0; n_stages] } else { Vec::new() },
+            stage_csd_busy: if multi { vec![0.0; n_stages] } else { Vec::new() },
+            cut_bytes_moved: if multi { vec![0.0; n_stages - 1] } else { Vec::new() },
+            split_hist: if multi { vec![0; n_stages + 1] } else { Vec::new() },
         };
         eng.rebuild_selection();
         Ok(eng)
@@ -374,6 +431,80 @@ impl<'a> Engine<'a> {
             .as_ref()
             .map(|r| r.cache_stats())
             .unwrap_or_default()
+    }
+
+    // ------------------------------------------------------------------
+    // stage DAG (DESIGN.md §Stages)
+    // ------------------------------------------------------------------
+
+    /// Is the stage machinery armed? False for the single-stage
+    /// `workload = image` default — every stage branch gates on this,
+    /// so legacy runs take the legacy code paths bit-exactly.
+    pub fn multi_stage(&self) -> bool {
+        self.graph.is_multi_stage()
+    }
+
+    /// The per-batch stage DAG the workload opened.
+    pub fn stage_graph(&self) -> &StageGraph {
+        &self.graph
+    }
+
+    /// The split point the engine would choose on its own: the
+    /// config-forced `stage_split`, else the cost-model argmin for this
+    /// fleet. The default [`SchedPolicy::place_stage`] returns this.
+    pub fn placement_hint(&self) -> u8 {
+        self.forced_split.unwrap_or(self.auto_split)
+    }
+
+    /// Set the split point the next CPU-prong claim uses (clamped to
+    /// the DAG length). Called once per claim from the drive loop with
+    /// whatever [`SchedPolicy::place_stage`] decided.
+    pub fn set_next_split(&mut self, k: u8) {
+        self.next_split = k.min(self.graph.len() as u8);
+    }
+
+    /// Account a multi-stage CPU-prong claim at split `next_split`:
+    /// stages `0..k` completed CSD-side, `k..n` host-side, the cut
+    /// moved its intermediate, the histogram took the split. Returns
+    /// the split-table cost the host schedules with.
+    fn stage_cpu_claim(&mut self) -> HostBatchCost {
+        let k = self.next_split as usize;
+        for (i, s) in self.graph.stages().iter().enumerate() {
+            self.stage_completions[i] += 1;
+            if i < k {
+                self.stage_csd_busy[i] += s.csd_s;
+            } else {
+                self.stage_host_busy[i] += s.cpu_s;
+            }
+        }
+        if k > 0 {
+            self.cut_bytes_moved[k - 1] += self.graph.cut_bytes(k);
+        }
+        self.split_hist[k] += 1;
+        self.split_table[k]
+    }
+
+    /// Per-stage attribution for the report (empty when dormant).
+    fn stage_report(&self) -> StageReport {
+        if !self.graph.is_multi_stage() {
+            return StageReport::default();
+        }
+        StageReport {
+            per_stage: self
+                .graph
+                .stages()
+                .iter()
+                .enumerate()
+                .map(|(i, s)| StageStat {
+                    name: s.kind.name(),
+                    completions: self.stage_completions[i],
+                    host_busy_s: self.stage_host_busy[i],
+                    csd_busy_s: self.stage_csd_busy[i],
+                })
+                .collect(),
+            cut_bytes: self.cut_bytes_moved.clone(),
+            split_hist: self.split_hist.clone(),
+        }
     }
 
     /// Rebuild the incremental selection structures from the ground
@@ -875,18 +1006,55 @@ impl<'a> Engine<'a> {
         self.live_extra[a].pop_front()
     }
 
+    /// Schedule one claimed CPU-prong batch: provider cost (or the
+    /// split-table cost under a multi-stage workload), the remote tier
+    /// fronting the raw host read, host engine scheduling, stage
+    /// markers, policy observation event. The shared body of `refill`
+    /// and the inline (workers == 0) path of [`Engine::cpu_next`] —
+    /// statement-for-statement the legacy sequence when the stage
+    /// machinery is dormant.
+    fn schedule_cpu_claim(&mut self, a: usize, gid: BatchId, now: Secs) -> HostReady {
+        let multi = self.graph.is_multi_stage();
+        let mut cost = if multi {
+            self.stage_cpu_claim()
+        } else {
+            self.costs.provider_mut().host_batch(gid)
+        };
+        // The remote tier fronts the *raw host read* only: a split batch
+        // (k > 0) reads flash CSD-internally, never the object store.
+        if !multi || self.next_split == 0 {
+            if let Some(rm) = self.remote.as_mut() {
+                let issue = self.hosts[a].next_issue_time(now);
+                cost.read_s = rm.fetch(gid, issue, cost.read_s, &mut self.trace);
+            }
+        }
+        let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
+        if multi {
+            // Zero-length markers: visible in span queries, invisible to
+            // every busy-time aggregate (like the fault/job markers).
+            let k = self.next_split;
+            let dev = if k > 0 { Device::Csd } else { Device::CpuMain };
+            self.trace.record(dev, Phase::StageStart, Some(gid), now, now);
+            if k > 0 {
+                self.trace.record(
+                    Device::CpuMain,
+                    Phase::StageHandoff,
+                    Some(gid),
+                    ready.ready,
+                    ready.ready,
+                );
+            }
+        }
+        self.note_host_ready(a, &cost, &ready);
+        ready
+    }
+
     /// Refill accelerator `a`'s CPU prefetch queue.
     fn refill(&mut self, a: usize, now: Secs) {
         let depth = self.depth(a);
         while self.queues[a].len() < depth {
             let Some(gid) = self.claim_head_gid(a) else { break };
-            let mut cost = self.costs.provider_mut().host_batch(gid);
-            if let Some(rm) = self.remote.as_mut() {
-                let issue = self.hosts[a].next_issue_time(now);
-                cost.read_s = rm.fetch(gid, issue, cost.read_s, &mut self.trace);
-            }
-            let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
-            self.note_host_ready(a, &cost, &ready);
+            let ready = self.schedule_cpu_claim(a, gid, now);
             self.queues[a].push_back(ready);
         }
     }
@@ -896,14 +1064,7 @@ impl<'a> Engine<'a> {
     pub fn cpu_next(&mut self, a: usize, now: Secs) -> Option<HostReady> {
         if self.depth(a) == 0 {
             let gid = self.claim_head_gid(a)?;
-            let mut cost = self.costs.provider_mut().host_batch(gid);
-            if let Some(rm) = self.remote.as_mut() {
-                let issue = self.hosts[a].next_issue_time(now);
-                cost.read_s = rm.fetch(gid, issue, cost.read_s, &mut self.trace);
-            }
-            let ready = self.hosts[a].schedule_batch(gid, &cost, now, &mut self.trace);
-            self.note_host_ready(a, &cost, &ready);
-            Some(ready)
+            Some(self.schedule_cpu_claim(a, gid, now))
         } else {
             self.refill(a, now);
             self.queues[a].pop_front()
@@ -985,6 +1146,20 @@ impl<'a> Engine<'a> {
         let cost = self.costs.provider_mut().csd_batch(gid);
         match self.csds[c].produce(gid, dir, &cost, &mut self.trace) {
             Some(ready) => {
+                if self.graph.is_multi_stage() {
+                    // A whole-graph CSD production: every stage completed
+                    // CSD-side, no cut crossed. Counted at production
+                    // time so wasted overshoot is included — the
+                    // exactly-once invariant reads completions ==
+                    // consumed + wasted.
+                    for (i, s) in self.graph.stages().iter().enumerate() {
+                        self.stage_completions[i] += 1;
+                        self.stage_csd_busy[i] += s.csd_s;
+                    }
+                    self.split_hist[self.graph.len()] += 1;
+                    self.trace
+                        .record(Device::Csd, Phase::StageStart, Some(gid), ready, ready);
+                }
                 if rerouted {
                     self.rerouted += 1;
                     // Zero-length marker on the absorbing device's
@@ -1164,6 +1339,7 @@ impl<'a> Engine<'a> {
             energy,
             fault: self.fault_stats(),
             remote: self.remote_stats(),
+            stages: self.stage_report(),
         }
     }
 }
@@ -1253,6 +1429,14 @@ pub(crate) fn drive_epoch(
         *iters += 1;
         if *iters > budget {
             bail!("{}: event loop did not converge", policy.name());
+        }
+        // Stage placement seam: under a multi-stage workload the policy
+        // picks where this claim's batch cuts its DAG before the claim
+        // chain runs. Gated on `multi_stage` so the single-stage image
+        // default never calls it — dormant like the fault probes above.
+        if eng.multi_stage() {
+            let k = policy.place_stage(eng, a);
+            eng.set_next_split(k);
         }
         policy.claim_next(eng, a)?;
         if !eng.events.is_empty() {

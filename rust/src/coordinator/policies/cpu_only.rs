@@ -31,4 +31,10 @@ impl SchedPolicy for CpuOnlyPolicy {
         eng.consume(a, r.batch, BatchSource::Cpu, r.ready);
         Ok(())
     }
+
+    /// The classical path has no CSD prong: every stage of a
+    /// multi-stage workload runs on the host, whatever the hint says.
+    fn place_stage(&mut self, _eng: &Engine<'_>, _a: usize) -> u8 {
+        0
+    }
 }

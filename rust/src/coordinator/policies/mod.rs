@@ -86,6 +86,19 @@ pub trait SchedPolicy {
     /// transition actually fires, so the default no-op preserves
     /// bit-parity for every healthy, non-stealing mode.
     fn on_workload_changed(&mut self, _eng: &Engine<'_>) {}
+
+    /// Stage placement seam (DESIGN.md §Stages): where accelerator
+    /// `a`'s next CPU-prong batch cuts its stage DAG — the first `k`
+    /// stages run near storage on the CSD, the rest on the CPU prong.
+    /// Called once per claim, and only under a multi-stage workload
+    /// (`workload = image-staged | tabular`), so the single-stage image
+    /// default never reaches it — bit-parity by construction. The
+    /// default defers to [`Engine::placement_hint`]: the config-forced
+    /// `stage_split`, else the cost-model argmin for the fleet.
+    /// Policies with no CSD prong must override to 0.
+    fn place_stage(&mut self, eng: &Engine<'_>, _a: usize) -> u8 {
+        eng.placement_hint()
+    }
 }
 
 /// Build the policy for `cfg.strategy`. The box is `Send` because the

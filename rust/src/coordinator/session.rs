@@ -424,7 +424,13 @@ fn remote_model_for(
     if topology.storage() != StorageKind::Remote {
         return None;
     }
-    let bytes = spec.raw_batch_bytes();
+    // Tabular objects are row groups, not image archives: the payload
+    // the store serves is the raw tabular batch.
+    let bytes = if cfg.workload == crate::stage::WorkloadKind::Tabular {
+        cfg.tabular.raw_batch_bytes()
+    } else {
+        spec.raw_batch_bytes()
+    };
     let ssd = SsdModel::from_profile(&cfg.profile);
     let degraded = if topology.n_csd() > 0 {
         ssd.transfer_time(Channel::CsdInternal, bytes)

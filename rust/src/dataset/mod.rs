@@ -44,6 +44,61 @@ impl DatasetSpec {
     }
 }
 
+/// Geometry of one *tabular* batch (the second workload family,
+/// `workload = tabular`; DESIGN.md §Stages). Zhu et al.'s pipelines
+/// read wide raw text/JSON rows, parse+filter them down to a
+/// `selectivity` fraction, then run the expensive encode/normalize/join
+/// stages on the survivors — so the byte stream *shrinks sharply* at
+/// the first stage boundary, the opposite of the image family's
+/// decode-side inflation. The per-stage costs derived from this spec
+/// live in [`crate::stage::StageGraph::tabular`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TabularSpec {
+    /// Raw rows per batch.
+    pub rows: u32,
+    /// Fields per row.
+    pub cols: u32,
+    /// Fraction of rows surviving the parse-time filter (0, 1].
+    pub selectivity: f64,
+}
+
+/// Stored bytes of one raw field (text/JSON encoding — key, quoting,
+/// separators) before parsing compacts it to a 4-byte value.
+pub const TABULAR_RAW_BYTES_PER_FIELD: f64 = 64.0;
+
+/// Bytes of one parsed (encoded) value.
+pub const TABULAR_VALUE_BYTES: f64 = 4.0;
+
+impl Default for TabularSpec {
+    /// A Criteo-scale slice: 256 Ki raw rows/batch × 64 fields at ~64
+    /// raw bytes each ≈ 1 GiB of raw text per batch, filtered to 25 %.
+    fn default() -> Self {
+        TabularSpec {
+            rows: 1 << 18,
+            cols: 64,
+            selectivity: 0.25,
+        }
+    }
+}
+
+impl TabularSpec {
+    /// Stored bytes of one raw batch (unparsed rows).
+    pub fn raw_batch_bytes(&self) -> f64 {
+        self.rows as f64 * self.cols as f64 * TABULAR_RAW_BYTES_PER_FIELD
+    }
+
+    /// Rows surviving the parse-time filter.
+    pub fn surviving_rows(&self) -> f64 {
+        self.rows as f64 * self.selectivity
+    }
+
+    /// Encoded values surviving the parse stage (rows × cols after
+    /// filtering).
+    pub fn surviving_values(&self) -> f64 {
+        self.surviving_rows() * self.cols as f64
+    }
+}
+
 /// Head/tail consumption cursor over one epoch: the CPU walks batches
 /// from the head (`0, 1, 2, …`), the CSD from the tail
 /// (`n-1, n-2, …`) — the "moving towards each other" geometry shared

@@ -190,6 +190,37 @@
 //!     result.fleet.fairness,
 //! );
 //! ```
+//!
+//! Batches need not be opaque: `workload = tabular` (or `image-staged`)
+//! opens the per-batch [`stage`] DAG — parse → encode → normalize → join
+//! for the tabular family — and the engine splits each batch at the
+//! cost-model argmin, running early stages on the CSD and late stages on
+//! the CPU prong with per-stage attribution in `RunReport.stages` (see
+//! `examples/stage_split.rs`):
+//!
+//! ```no_run
+//! use ddlp::config::ExperimentConfig;
+//! use ddlp::coordinator::{Session, Strategy};
+//! use ddlp::dataset::TabularSpec;
+//! use ddlp::stage::WorkloadKind;
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .model("wrn")
+//!     .strategy(Strategy::Wrr)
+//!     .workload(WorkloadKind::Tabular)
+//!     .tabular(TabularSpec { rows: 1 << 18, cols: 64, selectivity: 0.25 })
+//!     // .stage_split(Some(1)) forces the cut; None = per-topology argmin
+//!     .build()
+//!     .unwrap();
+//! let result = Session::from_config(&cfg).unwrap().run().unwrap();
+//! for s in &result.report.stages.per_stage {
+//!     println!(
+//!         "{:>9}: {} done, host {:.1}s / csd {:.1}s busy",
+//!         s.name, s.completions, s.host_busy_s, s.csd_busy_s
+//!     );
+//! }
+//! println!("split histogram: {:?}", result.report.stages.split_hist);
+//! ```
 
 pub mod accel;
 pub mod bench;
@@ -205,6 +236,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
 pub mod sim;
+pub mod stage;
 pub mod storage;
 pub mod tenant;
 pub mod topology;

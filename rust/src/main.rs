@@ -86,7 +86,9 @@ fn real_main() -> Result<()> {
                  remote_rtt_s, remote_timeout_s, remote_retry_max, remote_hedge_after_s, \
                  remote_breaker_threshold, \
                  jobs (e.g. big:@0 accel=4 csd=2 prio=hi;tiny:@12 accel=2), \
-                 sched (fifo|fair|priority), n_batches, epochs, \
+                 sched (fifo|fair|priority), \
+                 workload (image|image-staged|tabular), tabular_rows, tabular_cols, \
+                 tabular_selectivity, stage_split (auto|k), n_batches, epochs, \
                  loader, seed, csd_slowdown, adaptive_cv_threshold, adaptive_min_samples, ...\n\
                  benches: cargo bench --bench table6|table7|table8|table9|fig1|fig8|fig6_toy",
                 ddlp::version()
@@ -178,6 +180,26 @@ fn cmd_run(args: &[String]) -> Result<()> {
             fmt_s(r.remote.breaker_open_s),
             r.remote.degraded_reads
         );
+    }
+    // Stage attribution, printed only for multi-stage workloads — a
+    // `workload = image` run's stdout stays byte-identical to before
+    // the stage subsystem existed (CI diffs it across thread counts).
+    if !r.stages.is_empty() {
+        println!(
+            "stages: workload={} split_hist={:?} cut bytes {:?}",
+            cfg.workload,
+            r.stages.split_hist,
+            r.stages.cut_bytes.iter().map(|b| fmt_s(*b)).collect::<Vec<_>>()
+        );
+        for s in &r.stages.per_stage {
+            println!(
+                "stage {:>9}: completed {}  host busy {}s  csd busy {}s",
+                s.name,
+                s.completions,
+                fmt_s(s.host_busy_s),
+                fmt_s(s.csd_busy_s)
+            );
+        }
     }
     if result.csd_devices.len() > 1 {
         for (i, d) in result.csd_devices.iter().enumerate() {

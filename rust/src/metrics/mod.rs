@@ -35,6 +35,79 @@ impl FaultStats {
     }
 }
 
+/// Per-stage attribution for one stage kind of a multi-stage run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageStat {
+    /// Stage name (`"parse"`, `"decode"`, … — [`crate::stage::StageKind::name`]).
+    pub name: &'static str,
+    /// (batch, stage) completions counted at claim/production time, so
+    /// wasted productions (CSD overshoot, queue leftovers) are included.
+    pub completions: u64,
+    /// Busy seconds this stage spent on the CPU prong.
+    pub host_busy_s: Secs,
+    /// Busy seconds this stage spent on the CSD prong.
+    pub csd_busy_s: Secs,
+}
+
+/// Split-point attribution for a multi-stage run (DESIGN.md §Stages).
+/// Empty (the `Default`) for the single-stage `workload = image` path,
+/// so its presence in [`RunReport`] cannot perturb bit-exact golden
+/// comparisons of legacy runs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StageReport {
+    /// One entry per stage of the workload's DAG, in DAG order.
+    pub per_stage: Vec<StageStat>,
+    /// Bytes that crossed each inter-stage cut on a device handoff
+    /// (length `n_stages - 1`; cut `i` sits after stage `i`). Only the
+    /// cut at the chosen split point moves bytes between devices.
+    pub cut_bytes: Vec<f64>,
+    /// Histogram of the chosen split point per batch (length
+    /// `n_stages + 1`; index `k` = batches whose first `k` stages ran
+    /// CSD-side, with `k = n` counting whole-batch CSD productions).
+    pub split_hist: Vec<u64>,
+}
+
+impl StageReport {
+    /// True for runs that never opened the stage DAG.
+    pub fn is_empty(&self) -> bool {
+        self.per_stage.is_empty()
+    }
+
+    /// Accumulate another run's stage attribution into this one.
+    /// Element-wise; an empty side adopts the other's shape.
+    pub fn absorb(&mut self, other: &StageReport) {
+        if other.is_empty() {
+            return;
+        }
+        if self.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(
+            self.per_stage.len(),
+            other.per_stage.len(),
+            "absorbing stage reports of different workloads"
+        );
+        for (s, o) in self.per_stage.iter_mut().zip(&other.per_stage) {
+            debug_assert_eq!(s.name, o.name);
+            s.completions += o.completions;
+            s.host_busy_s += o.host_busy_s;
+            s.csd_busy_s += o.csd_busy_s;
+        }
+        for (c, o) in self.cut_bytes.iter_mut().zip(&other.cut_bytes) {
+            *c += o;
+        }
+        for (h, o) in self.split_hist.iter_mut().zip(&other.split_hist) {
+            *h += o;
+        }
+    }
+
+    /// Total (batch, stage) completions across all stages.
+    pub fn total_completions(&self) -> u64 {
+        self.per_stage.iter().map(|s| s.completions).sum()
+    }
+}
+
 /// §VII-C decomposition of one run plus the per-batch aggregates the
 /// tables report.
 ///
@@ -80,6 +153,9 @@ pub struct RunReport {
     /// timeouts, hedge wins/waste, breaker trips and open time
     /// (all-zero unless the run used `storage = remote`).
     pub remote: RemoteStats,
+    /// Per-stage/split-point attribution (empty unless the run opened a
+    /// multi-stage workload — `workload = image-staged | tabular`).
+    pub stages: StageReport,
 }
 
 impl RunReport {
@@ -221,6 +297,32 @@ mod tests {
         assert_eq!(fmt_s(0.03307), "0.03307");
         assert_eq!(fmt_s(155.1), "155.1");
         assert_eq!(fmt_s(0.0), "0");
+    }
+
+    #[test]
+    fn stage_report_absorb() {
+        let a = StageReport {
+            per_stage: vec![
+                StageStat { name: "parse", completions: 3, host_busy_s: 1.0, csd_busy_s: 0.5 },
+                StageStat { name: "join", completions: 3, host_busy_s: 2.0, csd_busy_s: 0.0 },
+            ],
+            cut_bytes: vec![64.0],
+            split_hist: vec![1, 2, 0],
+        };
+        // empty.absorb(a) adopts a's shape wholesale…
+        let mut acc = StageReport::default();
+        acc.absorb(&a);
+        assert_eq!(acc, a);
+        // …a.absorb(empty) is a no-op…
+        acc.absorb(&StageReport::default());
+        assert_eq!(acc, a);
+        // …and non-empty absorb sums element-wise.
+        acc.absorb(&a);
+        assert_eq!(acc.per_stage[0].completions, 6);
+        assert_eq!(acc.per_stage[1].host_busy_s, 4.0);
+        assert_eq!(acc.cut_bytes, vec![128.0]);
+        assert_eq!(acc.split_hist, vec![2, 4, 0]);
+        assert_eq!(acc.total_completions(), 12);
     }
 
     #[test]

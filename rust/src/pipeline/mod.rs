@@ -300,4 +300,55 @@ mod tests {
         assert_eq!(p.out_bytes_per_image(), 224.0 * 224.0 * 3.0 * 4.0);
         assert!(p.src_bytes_per_image() > PipelineKind::CifarGpu.src_bytes_per_image());
     }
+
+    #[test]
+    fn per_op_cost_monotone_in_image_size() {
+        let c = OpCosts::default();
+        // Input-sized billing: the same op set over a larger source must
+        // cost more. CifarDsa runs a subset of ImageNet1's ops (RRC,
+        // ToTensor, Normalize — no HFlip) over a ~180× smaller source.
+        assert!(
+            PipelineKind::ImageNet1.cpu_seconds_per_image(&c)
+                > PipelineKind::CifarDsa.cpu_seconds_per_image(&c),
+            "bigger source must cost more for a superset op sequence"
+        );
+        // Output-sized billing: Resize bills its target area — the only
+        // difference between imagenet2 (256) and imagenet3 (232).
+        assert!(
+            PipelineKind::ImageNet2.cpu_seconds_per_image(&c)
+                > PipelineKind::ImageNet3.cpu_seconds_per_image(&c),
+            "larger resize target must cost more"
+        );
+        // Per-op monotonicity in the rate itself: raising one op's
+        // per-megapixel rate raises exactly the pipelines that run it.
+        let base = PipelineKind::ImageNet1.cpu_seconds_per_image(&c);
+        let mut bumped = OpCosts::default();
+        bumped.random_resized_crop *= 2.0;
+        assert!(PipelineKind::ImageNet1.cpu_seconds_per_image(&bumped) > base);
+        assert_eq!(
+            PipelineKind::ImageNet2.cpu_seconds_per_image(&bumped),
+            PipelineKind::ImageNet2.cpu_seconds_per_image(&c),
+            "imagenet2 runs no RRC; its cost must not move"
+        );
+    }
+
+    #[test]
+    fn composition_totals_match_design_calibration() {
+        // DESIGN.md §Calibration pins the default-rate compositions:
+        // ImageNet₁ = 1.5 overhead + 6.3526 decode + 3.2671 RRC
+        //           + 0.1505 hflip + 0.4014 to_tensor + 0.4014 normalize
+        //           ≈ 12.073 ms/image;
+        // Cifar-10 (cifar_gpu) ≈ 1.5614 ms/image (overhead-dominated).
+        let c = OpCosts::default();
+        let im1_ms = PipelineKind::ImageNet1.cpu_seconds_per_image(&c) * 1e3;
+        assert!(
+            (im1_ms - 12.073).abs() < 0.01,
+            "imagenet1 composition drifted: {im1_ms:.4} ms vs 12.073 ms"
+        );
+        let cifar_ms = PipelineKind::CifarGpu.cpu_seconds_per_image(&c) * 1e3;
+        assert!(
+            (cifar_ms - 1.5614).abs() < 0.01,
+            "cifar_gpu composition drifted: {cifar_ms:.4} ms vs 1.5614 ms"
+        );
+    }
 }

@@ -1,0 +1,483 @@
+//! Stage-level preprocessing DAGs (DESIGN.md §Stages).
+//!
+//! The engine historically scheduled whole batches as opaque units, so
+//! the CPU/CSD split could only happen at batch granularity. This
+//! module generalizes the work unit to a small per-batch stage chain —
+//! decode → augment → collate for the image family, parse → encode →
+//! normalize → join for the tabular family (Gong et al. quantify the
+//! stage-level offloading trade-off; Zhu et al. give the tabular cost
+//! shape) — each stage carrying a CPU cost, a CSD cost (`csd_slowdown`
+//! applied) and the bytes it emits, so a *split point* can be priced:
+//! stages `0..k` run near storage on the CSD, the intermediate crosses
+//! the topology's storage channels once (flash write-back + host PCIe
+//! read), and stages `k..n` finish on the CPU prong.
+//!
+//! A single-stage graph (`workload = image`, the default) keeps every
+//! legacy code path bit-identical — the engine's stage machinery is
+//! dormant exactly like an empty fault plan or `storage = local`.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::cost::{CsdBatchCost, HostBatchCost};
+use crate::dataset::{TabularSpec, TABULAR_VALUE_BYTES};
+use crate::pipeline::Op;
+use crate::storage::{Channel, SsdModel};
+use std::fmt;
+
+/// Which workload family a run preprocesses (`workload =` config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// The paper's image pipelines as one opaque batch unit — the
+    /// default, bit-identical to the pre-stage engine.
+    Image,
+    /// The same image pipelines opened into a decode → augment →
+    /// collate chain (batch costs identical in the aggregate; the
+    /// engine may now split them).
+    ImageStaged,
+    /// The tabular family: parse → encode → normalize → join over a
+    /// [`TabularSpec`].
+    Tabular,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 3] = [
+        WorkloadKind::Image,
+        WorkloadKind::ImageStaged,
+        WorkloadKind::Tabular,
+    ];
+
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        Some(match s {
+            "image" => WorkloadKind::Image,
+            "image-staged" => WorkloadKind::ImageStaged,
+            "tabular" => WorkloadKind::Tabular,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Image => "image",
+            WorkloadKind::ImageStaged => "image-staged",
+            WorkloadKind::Tabular => "tabular",
+        }
+    }
+
+    /// Stages in this family's graph (known without building it — the
+    /// config builder validates `stage_split` against this).
+    pub fn n_stages(self) -> u8 {
+        match self {
+            WorkloadKind::Image => 1,
+            WorkloadKind::ImageStaged => 3,
+            WorkloadKind::Tabular => 4,
+        }
+    }
+}
+
+impl fmt::Display for WorkloadKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed preprocessing stages across both families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// The whole pipeline as one unit (single-stage image graph).
+    Whole,
+    // image family
+    Decode,
+    Augment,
+    Collate,
+    // tabular family
+    Parse,
+    Encode,
+    Normalize,
+    Join,
+}
+
+impl StageKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::Whole => "pipeline",
+            StageKind::Decode => "decode",
+            StageKind::Augment => "augment",
+            StageKind::Collate => "collate",
+            StageKind::Parse => "parse",
+            StageKind::Encode => "encode",
+            StageKind::Normalize => "normalize",
+            StageKind::Join => "join",
+        }
+    }
+}
+
+/// One stage of the per-batch chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stage {
+    pub kind: StageKind,
+    /// Single-worker CPU seconds per batch.
+    pub cpu_s: f64,
+    /// CSD seconds per batch (`cpu_s × csd_slowdown`).
+    pub csd_s: f64,
+    /// Bytes leaving this stage per batch (the handoff payload if the
+    /// split point sits right after it).
+    pub bytes_out: f64,
+}
+
+/// Tabular per-value compute costs (seconds per field value), following
+/// Zhu et al.'s shape: parse is a cheap vectorized scan over every raw
+/// value; encode (dictionary/one-hot) and join dominate and run only on
+/// the rows surviving the parse-time filter. Pinned constants so the
+/// stage tests and DESIGN.md §Calibration agree.
+pub const TABULAR_PARSE_S_PER_VALUE: f64 = 1e-9;
+pub const TABULAR_ENCODE_S_PER_VALUE: f64 = 6e-9;
+pub const TABULAR_NORMALIZE_S_PER_VALUE: f64 = 1e-9;
+pub const TABULAR_JOIN_S_PER_VALUE: f64 = 10e-9;
+
+/// A linear per-batch stage chain plus the channel model that prices
+/// its handoffs. "DAG" in the degenerate-but-honest sense: every
+/// pipeline in both papers is a chain, and a chain keeps the split
+/// point a single integer the scheduler can search exhaustively.
+#[derive(Debug, Clone)]
+pub struct StageGraph {
+    stages: Vec<Stage>,
+    /// Stored bytes entering stage 0.
+    raw_bytes: f64,
+    ssd: SsdModel,
+}
+
+impl StageGraph {
+    /// Build the graph the config's `workload` key selects.
+    pub fn for_config(cfg: &ExperimentConfig) -> anyhow::Result<StageGraph> {
+        let ssd = SsdModel::from_profile(&cfg.profile);
+        let bs = cfg.model_profile()?.batch_size as f64;
+        Ok(match cfg.workload {
+            WorkloadKind::Image => StageGraph::single(cfg, bs, ssd),
+            WorkloadKind::ImageStaged => StageGraph::image_staged(cfg, bs, ssd),
+            WorkloadKind::Tabular => {
+                StageGraph::tabular(&cfg.tabular, cfg.profile.csd_slowdown, ssd)
+            }
+        })
+    }
+
+    /// Single-stage graph: the whole image pipeline as one unit. The
+    /// engine treats a 1-stage graph as "not staged" and takes the
+    /// legacy batch-granular paths bit-exactly.
+    fn single(cfg: &ExperimentConfig, bs: f64, ssd: SsdModel) -> StageGraph {
+        let p = &cfg.profile;
+        let cpu_s = cfg.pipeline.cpu_seconds_per_image(&p.op_costs) * bs;
+        StageGraph {
+            stages: vec![Stage {
+                kind: StageKind::Whole,
+                cpu_s,
+                csd_s: cpu_s * p.csd_slowdown,
+                bytes_out: cfg.pipeline.out_bytes_per_image() * bs,
+            }],
+            raw_bytes: cfg.pipeline.src_bytes_per_image() * bs,
+            ssd,
+        }
+    }
+
+    /// The image pipeline opened into decode → augment → collate. The
+    /// per-op costs are partitioned from the same model
+    /// [`crate::pipeline::PipelineKind::cpu_seconds_per_image`] sums,
+    /// so the three stages' CPU seconds add up to the opaque batch cost
+    /// exactly. Byte shape: decode *inflates* the stored JPEG to raw
+    /// u8 pixels, augment crops to the model geometry, collate emits
+    /// f32 tensors — which is why image splits rarely pay (the early
+    /// cut moves more bytes than the raw read saved).
+    fn image_staged(cfg: &ExperimentConfig, bs: f64, ssd: SsdModel) -> StageGraph {
+        let p = &cfg.profile;
+        let costs = &p.op_costs;
+        let pipe = cfg.pipeline;
+        let src = pipe.avg_src_mpix();
+        let out = {
+            let s = pipe.out_hw() as f64;
+            s * s / 1e6
+        };
+        let decode_ms = costs.per_image_overhead_ms + costs.decode * src;
+        let mut augment_ms = 0.0;
+        let mut collate_ms = 0.0;
+        for op in pipe.ops() {
+            match op {
+                Op::RandomResizedCrop { .. } => augment_ms += costs.random_resized_crop * src,
+                Op::Resize { to } => {
+                    augment_ms += costs.resize * (src + (to as f64 * to as f64) / 1e6)
+                }
+                Op::CentralCrop { .. } => augment_ms += costs.central_crop * out,
+                Op::RandomCrop { .. } => augment_ms += costs.random_crop * src,
+                Op::HFlip => augment_ms += costs.hflip * out,
+                Op::ToTensor => collate_ms += costs.to_tensor * out,
+                Op::Normalize => collate_ms += costs.normalize * out,
+                Op::Cutout { .. } => collate_ms += costs.cutout * out,
+            }
+        }
+        let stage = |kind, ms: f64, bytes_per_image: f64| Stage {
+            kind,
+            cpu_s: ms / 1e3 * bs,
+            csd_s: ms / 1e3 * bs * p.csd_slowdown,
+            bytes_out: bytes_per_image * bs,
+        };
+        StageGraph {
+            stages: vec![
+                // decoded u8 HWC pixels at source resolution
+                stage(StageKind::Decode, decode_ms, src * 1e6 * 3.0),
+                // cropped u8 pixels at model geometry
+                stage(StageKind::Augment, augment_ms, out * 1e6 * 3.0),
+                // f32 CHW tensor
+                stage(StageKind::Collate, collate_ms, pipe.out_bytes_per_image()),
+            ],
+            raw_bytes: pipe.src_bytes_per_image() * bs,
+            ssd,
+        }
+    }
+
+    /// The tabular family: parse → encode → normalize → join. Parse
+    /// scans every raw value and filters rows down to the spec's
+    /// selectivity (the byte stream collapses at the first boundary);
+    /// the expensive stages run on survivors only, and join doubles the
+    /// output width (feature concatenation with the joined table).
+    pub fn tabular(spec: &TabularSpec, csd_slowdown: f64, ssd: SsdModel) -> StageGraph {
+        let all_values = spec.rows as f64 * spec.cols as f64;
+        let sv = spec.surviving_values();
+        let parsed_bytes = sv * TABULAR_VALUE_BYTES;
+        let stage = |kind, cpu_s: f64, bytes_out: f64| Stage {
+            kind,
+            cpu_s,
+            csd_s: cpu_s * csd_slowdown,
+            bytes_out,
+        };
+        StageGraph {
+            stages: vec![
+                stage(StageKind::Parse, all_values * TABULAR_PARSE_S_PER_VALUE, parsed_bytes),
+                stage(StageKind::Encode, sv * TABULAR_ENCODE_S_PER_VALUE, parsed_bytes),
+                stage(
+                    StageKind::Normalize,
+                    sv * TABULAR_NORMALIZE_S_PER_VALUE,
+                    parsed_bytes,
+                ),
+                stage(StageKind::Join, sv * TABULAR_JOIN_S_PER_VALUE, parsed_bytes * 2.0),
+            ],
+            raw_bytes: spec.raw_batch_bytes(),
+            ssd,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// More than one stage — the engine's stage machinery arms only
+    /// then; a single-stage graph is the dormant legacy shape.
+    pub fn is_multi_stage(&self) -> bool {
+        self.stages.len() > 1
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// Stored bytes entering stage 0.
+    pub fn raw_bytes(&self) -> f64 {
+        self.raw_bytes
+    }
+
+    /// Bytes leaving the last stage (what H2D / GDS move).
+    pub fn final_bytes(&self) -> f64 {
+        self.stages.last().expect("graphs are non-empty").bytes_out
+    }
+
+    /// Bytes crossing the cut when stages `0..k` run on the CSD
+    /// (`k ≥ 1`): the intermediate stage `k-1` emits.
+    pub fn cut_bytes(&self, k: usize) -> f64 {
+        debug_assert!(k >= 1 && k <= self.stages.len());
+        self.stages[k - 1].bytes_out
+    }
+
+    /// CPU-prong batch cost when the leading `k` stages run on the CSD.
+    ///
+    /// `k = 0` is the classical host path: raw read over host PCIe,
+    /// every stage on the CPU. `k ≥ 1` prices the near-storage prefix
+    /// on the batch's critical path — CSD-internal raw read, the early
+    /// stages at CSD speed, then the handoff (flash write-back + host
+    /// PCIe read of the intermediate) — folded into `read_s`, with the
+    /// remaining stages as `pp_s`. Like the remote tier's degraded
+    /// path, the early-stage CSD compute is priced on the requesting
+    /// batch, not enqueued on the CSD engine lane (the tail prong keeps
+    /// its whole-batch throughput) — a deliberate modelling
+    /// simplification documented in DESIGN.md §Stages.
+    pub fn host_cost_at_split(&self, k: usize) -> HostBatchCost {
+        debug_assert!(k <= self.stages.len());
+        let read_s = if k == 0 {
+            self.ssd.transfer_time(Channel::HostPcie, self.raw_bytes)
+        } else {
+            let cut = self.cut_bytes(k);
+            self.ssd.transfer_time(Channel::CsdInternal, self.raw_bytes)
+                + self.stages[..k].iter().map(|s| s.csd_s).sum::<f64>()
+                + self.ssd.transfer_time(Channel::CsdWriteBack, cut)
+                + self.ssd.transfer_time(Channel::HostPcie, cut)
+        };
+        HostBatchCost {
+            read_s,
+            pp_s: self.stages[k..].iter().map(|s| s.cpu_s).sum::<f64>(),
+            xfer_s: self.ssd.transfer_time(Channel::H2d, self.final_bytes()),
+            accel_pp_s: 0.0,
+        }
+    }
+
+    /// All `n + 1` split costs, indexed by `k` = stages on the CSD.
+    pub fn split_table(&self) -> Vec<HostBatchCost> {
+        (0..=self.stages.len())
+            .map(|k| self.host_cost_at_split(k))
+            .collect()
+    }
+
+    /// The split minimizing the serial per-batch CPU-prong cost
+    /// (read + pp + xfer). Ties break toward the smaller split — fewer
+    /// stages offloaded, less machinery armed.
+    pub fn best_split(&self) -> u8 {
+        let mut best = 0usize;
+        let mut best_total = f64::INFINITY;
+        for (k, c) in self.split_table().iter().enumerate() {
+            let total = c.read_s + c.pp_s + c.xfer_s;
+            if total < best_total {
+                best_total = total;
+                best = k;
+            }
+        }
+        best as u8
+    }
+
+    /// Tail-prong cost of running the *whole* graph on the CSD:
+    /// internal raw read, every stage at CSD speed, final write-back.
+    pub fn csd_cost(&self) -> CsdBatchCost {
+        CsdBatchCost {
+            read_s: self.ssd.transfer_time(Channel::CsdInternal, self.raw_bytes),
+            pp_s: self.stages.iter().map(|s| s.csd_s).sum(),
+            write_s: self
+                .ssd
+                .transfer_time(Channel::CsdWriteBack, self.final_bytes()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceProfile, ExperimentConfig};
+
+    fn cfg(workload: WorkloadKind) -> ExperimentConfig {
+        ExperimentConfig::builder()
+            .model("wrn")
+            .workload(workload)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn image_graph_is_single_stage_and_dormant() {
+        let g = StageGraph::for_config(&cfg(WorkloadKind::Image)).unwrap();
+        assert_eq!(g.len(), 1);
+        assert!(!g.is_multi_stage());
+        assert_eq!(g.stages()[0].kind, StageKind::Whole);
+    }
+
+    #[test]
+    fn image_staged_costs_sum_to_opaque_batch_cost() {
+        let c = cfg(WorkloadKind::ImageStaged);
+        let g = StageGraph::for_config(&c).unwrap();
+        assert_eq!(g.len(), 3);
+        let staged: f64 = g.stages().iter().map(|s| s.cpu_s).sum();
+        let bs = c.model_profile().unwrap().batch_size as f64;
+        let opaque = c.pipeline.cpu_seconds_per_image(&c.profile.op_costs) * bs;
+        assert!(
+            (staged - opaque).abs() < 1e-12,
+            "staged {staged} != opaque {opaque}"
+        );
+    }
+
+    #[test]
+    fn image_decode_inflates_bytes_so_split_zero_wins() {
+        // The stored JPEG is far smaller than decoded pixels: cutting
+        // after decode moves more bytes than the raw read saved, and
+        // decode itself is the most expensive stage at CSD speed — the
+        // honest result is that image pipelines don't split.
+        let g = StageGraph::for_config(&cfg(WorkloadKind::ImageStaged)).unwrap();
+        assert!(g.stages()[0].bytes_out > g.raw_bytes());
+        assert_eq!(g.best_split(), 0);
+    }
+
+    #[test]
+    fn tabular_bytes_collapse_at_parse_and_split_one_wins() {
+        let g = StageGraph::for_config(&cfg(WorkloadKind::Tabular)).unwrap();
+        assert_eq!(g.len(), 4);
+        // Parse+filter collapses the stream; join doubles it again.
+        assert!(g.stages()[0].bytes_out < g.raw_bytes() / 10.0);
+        assert_eq!(g.final_bytes(), g.stages()[0].bytes_out * 2.0);
+        // Zhu et al.'s shape: the cheap read-dominated parse pays for
+        // itself near storage, the expensive encode/join do not at
+        // csd_slowdown = 3.5.
+        assert_eq!(g.best_split(), 1);
+        let t = g.split_table();
+        let total = |k: usize| t[k].read_s + t[k].pp_s + t[k].xfer_s;
+        assert!(total(1) < total(0), "split 1 must beat the host path");
+        for k in 2..=4 {
+            assert!(total(k) > total(1), "split {k} must lose to split 1");
+        }
+    }
+
+    #[test]
+    fn split_table_k0_matches_classical_host_shape() {
+        // Split 0 of the single-stage image graph is exactly the
+        // analytic host cost shape: PCIe raw read, full pipeline pp,
+        // H2D of the preprocessed batch.
+        let c = cfg(WorkloadKind::Image);
+        let g = StageGraph::for_config(&c).unwrap();
+        let k0 = g.host_cost_at_split(0);
+        let ssd = SsdModel::from_profile(&c.profile);
+        let bs = c.model_profile().unwrap().batch_size as f64;
+        assert_eq!(
+            k0.read_s,
+            ssd.transfer_time(Channel::HostPcie, c.pipeline.src_bytes_per_image() * bs)
+        );
+        assert_eq!(
+            k0.xfer_s,
+            ssd.transfer_time(Channel::H2d, c.pipeline.out_bytes_per_image() * bs)
+        );
+        assert_eq!(k0.accel_pp_s, 0.0);
+    }
+
+    #[test]
+    fn csd_slowdown_scales_every_stage() {
+        let spec = TabularSpec::default();
+        let ssd = SsdModel::from_profile(&DeviceProfile::default());
+        let g2 = StageGraph::tabular(&spec, 2.0, ssd.clone());
+        let g4 = StageGraph::tabular(&spec, 4.0, ssd);
+        for (a, b) in g2.stages().iter().zip(g4.stages()) {
+            assert_eq!(a.cpu_s, b.cpu_s);
+            assert!((b.csd_s - 2.0 * a.csd_s).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn selectivity_shrinks_survivor_stages_only() {
+        let ssd = SsdModel::from_profile(&DeviceProfile::default());
+        let mut hi = TabularSpec::default();
+        hi.selectivity = 1.0;
+        let mut lo = TabularSpec::default();
+        lo.selectivity = 0.1;
+        let gh = StageGraph::tabular(&hi, 3.5, ssd.clone());
+        let gl = StageGraph::tabular(&lo, 3.5, ssd);
+        // parse scans everything either way
+        assert_eq!(gh.stages()[0].cpu_s, gl.stages()[0].cpu_s);
+        // survivors-only stages scale with selectivity
+        for i in 1..4 {
+            assert!(gl.stages()[i].cpu_s < gh.stages()[i].cpu_s * 0.2);
+        }
+        assert_eq!(gh.raw_bytes(), gl.raw_bytes());
+        assert!(gl.final_bytes() < gh.final_bytes());
+    }
+}

@@ -114,10 +114,17 @@ pub enum Phase {
     /// Zero-length marker: a tenancy job finished and released its
     /// slice back to the free pool (`batch` carries the job index).
     JobFinish,
+    /// Zero-length marker: a multi-stage batch began its stage DAG
+    /// (recorded on the device running stage 0; DESIGN.md §Stages).
+    StageStart,
+    /// Zero-length marker: a multi-stage batch crossed its split point —
+    /// the CSD-side stages handed off to the CPU prong (recorded on the
+    /// receiving host device; only emitted for split k > 0).
+    StageHandoff,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 19] = [
+    pub const ALL: [Phase; 21] = [
         Phase::SsdRead,
         Phase::CpuPreprocess,
         Phase::H2d,
@@ -137,6 +144,8 @@ impl Phase {
         Phase::JobAdmit,
         Phase::JobStart,
         Phase::JobFinish,
+        Phase::StageStart,
+        Phase::StageHandoff,
     ];
     pub const COUNT: usize = Phase::ALL.len();
 

@@ -818,3 +818,60 @@ fn live_steal_conserves_batches_under_concurrent_donors() {
     let host_sum: u64 = a.host_reports.iter().map(|h| h.batches()).sum();
     assert_eq!(host_sum, N as u64, "host batch counts don't sum");
 }
+
+#[test]
+fn stage_coverage_survives_stealing_and_brownout() {
+    // Stage-DAG acceptance leg: staged workloads run end-to-end through
+    // the cluster driver under every steal mode (and a CSD brownout on
+    // host 0's device), the per-host stage reports aggregate into the
+    // cluster report, and every (batch, stage) completes exactly once.
+    use ddlp::stage::WorkloadKind;
+    const N: u32 = 160;
+    const EPOCHS: u32 = 2;
+    for steal in [StealMode::Off, StealMode::Epoch, StealMode::Live] {
+        for workload in [WorkloadKind::ImageStaged, WorkloadKind::Tabular] {
+            let label = format!("steal={steal:?} workload={workload}");
+            let mut c = cfg_cluster(
+                Strategy::Wrr,
+                N,
+                2,
+                2,
+                2,
+                CsdAssign::Block,
+                steal,
+                EPOCHS,
+            );
+            c.workload = workload;
+            c.fault_plan = FaultPlan::new().csd_brownout(0, 1.0, 8.0).unwrap();
+            let r = Cluster::from_config(&c)
+                .unwrap()
+                .with_cost_factory(|h| skewed_costs(h, 3.0))
+                .run()
+                .unwrap();
+            assert_eq!(r.report.n_batches, N * EPOCHS, "{label}");
+            assert_exact_coverage(&r.trace, N, EPOCHS, &label);
+            // Aggregated stage attribution conserves (batch, stage)
+            // completions and equals the sum of the host reports.
+            let st = &r.report.stages;
+            let n_stages = workload.n_stages() as usize;
+            assert_eq!(st.per_stage.len(), n_stages, "{label}");
+            let want = r.report.n_batches as u64 + r.report.wasted_batches;
+            for s in &st.per_stage {
+                assert_eq!(
+                    s.completions, want,
+                    "{label}: stage {} completed {}×, want {want}",
+                    s.name, s.completions
+                );
+            }
+            assert_eq!(st.split_hist.iter().sum::<u64>(), want, "{label}");
+            for (i, s) in st.per_stage.iter().enumerate() {
+                let host_sum: u64 = r
+                    .host_reports
+                    .iter()
+                    .map(|h| h.report.stages.per_stage[i].completions)
+                    .sum();
+                assert_eq!(host_sum, s.completions, "{label}: stage {} rollup", s.name);
+            }
+        }
+    }
+}

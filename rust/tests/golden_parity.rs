@@ -480,11 +480,13 @@ mod legacy {
                 batches_from_csd: self.total_from_csd as u32,
                 wasted_batches: self.wasted,
                 energy,
-                // The legacy monolith predates fault plans and the
-                // remote tier; a healthy local-storage run's stats are
-                // all zero on the new engine too.
+                // The legacy monolith predates fault plans, the remote
+                // tier and stage DAGs; a healthy local-storage
+                // single-stage run's stats are all zero/empty on the
+                // new engine too.
                 fault: Default::default(),
                 remote: Default::default(),
+                stages: Default::default(),
             }
         }
     }

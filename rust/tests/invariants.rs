@@ -11,6 +11,7 @@ use ddlp::dataset::DatasetSpec;
 use ddlp::fault::FaultPlan;
 use ddlp::metrics::RunReport;
 use ddlp::pipeline::PipelineKind;
+use ddlp::stage::WorkloadKind;
 use ddlp::storage::remote::StorageKind;
 use ddlp::topology::{CsdAssign, Topology};
 use ddlp::trace::{Device, Phase, Trace};
@@ -780,6 +781,125 @@ fn remote_same_seed_is_deterministic() {
         "store outage left no remote attribution: {:?}",
         a.report.remote
     );
+}
+
+// ---------------------------------------------------------------------
+// Stage-level DAGs (crate::stage; DESIGN.md §Stages)
+// ---------------------------------------------------------------------
+
+/// Every (batch, stage) completed exactly once: all per-stage counters
+/// equal trained + wasted batches, and the split histogram accounts for
+/// every completion.
+fn assert_stage_coverage(report: &RunReport, workload: WorkloadKind, label: &str) {
+    let st = &report.stages;
+    let n_stages = workload.n_stages() as usize;
+    assert_eq!(st.per_stage.len(), n_stages, "{label}: stage count");
+    assert_eq!(st.split_hist.len(), n_stages + 1, "{label}: hist shape");
+    assert_eq!(st.cut_bytes.len(), n_stages - 1, "{label}: cut shape");
+    let want = report.n_batches as u64 + report.wasted_batches;
+    for s in &st.per_stage {
+        assert_eq!(
+            s.completions, want,
+            "{label}: stage {} completed {}×, want {want}",
+            s.name, s.completions
+        );
+    }
+    assert_eq!(
+        st.split_hist.iter().sum::<u64>(),
+        want,
+        "{label}: split histogram does not account for every batch"
+    );
+    assert_eq!(st.total_completions(), want * n_stages as u64, "{label}");
+}
+
+#[test]
+fn prop_stage_exactly_once_across_strategies_and_workloads() {
+    // Staged workloads: whatever the strategy, fleet shape, epoch count
+    // or scripted CSD brownout, every (batch, stage) completes exactly
+    // once — counted at claim/production time so CSD overshoot waste is
+    // conserved too — and batch-level coverage still holds.
+    run_prop("stage coverage: every (batch, stage) exactly once", 30, |g| {
+        let n = g.size(40, 200) as u32;
+        let workload = *g.choose(&[WorkloadKind::ImageStaged, WorkloadKind::Tabular]);
+        let strategy = *g.choose(&Strategy::ALL);
+        let n_csd = *g.choose(&[1u32, 2]);
+        let assign = *g.choose(&[CsdAssign::Block, CsdAssign::Stripe]);
+        let epochs = *g.choose(&[1u32, 2]);
+        let mut c = cfg_fleet(strategy, n, 2, n_csd, assign);
+        c.workload = workload;
+        c.epochs = epochs;
+        let browned = matches!(strategy, Strategy::Mte | Strategy::Wrr) && g.bool();
+        if browned {
+            let at = g.float(0.0, n as f64 * 0.2);
+            c.fault_plan = FaultPlan::new()
+                .csd_brownout(0, at, at + g.float(0.5, 5.0))
+                .unwrap();
+        }
+        let label = format!("{strategy} workload={workload} brownout={browned}");
+        let mut costs = rand_costs(g);
+        let r = Session::with_costs(&c, Topology::from_config(&c).unwrap(), &spec(n), &mut costs)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.report.n_batches, n * epochs, "{label}");
+        assert_exact_coverage(&r.trace, n, epochs);
+        assert_stage_coverage(&r.report, workload, &label);
+        // The markers agree with the histogram: one StageStart per
+        // completion-unit (claim or production), zero-length.
+        let starts = r
+            .trace
+            .spans
+            .iter()
+            .filter(|s| s.phase == Phase::StageStart)
+            .inspect(|s| assert_eq!(s.start, s.end, "{label}: StageStart has width"))
+            .count() as u64;
+        assert_eq!(
+            starts,
+            r.report.stages.split_hist.iter().sum::<u64>(),
+            "{label}: StageStart markers"
+        );
+    });
+}
+
+#[test]
+fn stage_knobs_inert_for_image_workload() {
+    // `workload = image` must take the legacy batch-granular paths
+    // bit-exactly even with every stage knob set to non-defaults that
+    // remain valid for a single-stage DAG (split 0, custom tabular
+    // spec): report, trace and the (empty) stage attribution all match
+    // a config that never heard of stages.
+    const N: u32 = 150;
+    let base = cfg_fleet(Strategy::Wrr, N, 2, 2, CsdAssign::Block);
+    let mut costs_a = FixedCosts::toy_fig6();
+    let clean = Session::with_costs(
+        &base,
+        Topology::from_config(&base).unwrap(),
+        &spec(N),
+        &mut costs_a,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let mut c = base.clone();
+    c.stage_split = Some(0);
+    c.tabular = ddlp::dataset::TabularSpec {
+        rows: 7,
+        cols: 3,
+        selectivity: 0.5,
+    };
+    let mut costs_b = FixedCosts::toy_fig6();
+    let r = Session::with_costs(&c, Topology::from_config(&c).unwrap(), &spec(N), &mut costs_b)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(clean.report, r.report);
+    assert_eq!(clean.trace.spans, r.trace.spans);
+    assert!(r.report.stages.is_empty());
+    assert!(!r
+        .trace
+        .spans
+        .iter()
+        .any(|s| matches!(s.phase, Phase::StageStart | Phase::StageHandoff)));
 }
 
 #[test]

@@ -12,7 +12,8 @@ use ddlp::cluster::Cluster;
 use ddlp::config::ExperimentConfig;
 use ddlp::coordinator::cost::{CostProvider, FixedCosts};
 use ddlp::coordinator::Strategy;
-use ddlp::tenant::{self, JobPlan, Prio, Sched, Tenancy, TenancyResult};
+use ddlp::stage::WorkloadKind;
+use ddlp::tenant::{self, JobPlan, JobSpec, Prio, Sched, Tenancy, TenancyResult};
 use ddlp::trace::Phase;
 use ddlp::util::prop::run_prop;
 
@@ -361,6 +362,84 @@ fn priority_admits_hi_first_and_backfills_around_blocked_head() {
         r.tenants[2].start,
         r.tenants[1].start
     );
+}
+
+#[test]
+fn prop_job_plan_display_parse_round_trip() {
+    // The jobs DSL round-trips value → Display → parse → value and the
+    // printed form is a fixed point (mirrors the fault-DSL round-trip
+    // property): defaulted keys are omitted, arrivals print the
+    // shortest f64 text that re-parses to the same bits.
+    run_prop("job plan display/parse round-trip", 40, |g| {
+        let n_jobs = g.size(1, 6);
+        let mut jobs = Vec::new();
+        for j in 0..n_jobs {
+            jobs.push(JobSpec {
+                name: format!("j{j}"),
+                arrival: g.float(0.0, 50.0),
+                n_accel: g.int(1, 8) as u32,
+                n_csd: g.int(0, 4) as u32,
+                n_hosts: g.int(1, 3) as u32,
+                prio: *g.choose(&[Prio::Lo, Prio::Normal, Prio::Hi]),
+                n_batches: if g.bool() { Some(g.int(1, 400) as u32) } else { None },
+                epochs: if g.bool() { Some(g.int(1, 4) as u32) } else { None },
+            });
+        }
+        let plan = JobPlan { jobs };
+        let text = plan.to_string();
+        let reparsed: JobPlan = text
+            .parse()
+            .unwrap_or_else(|e| panic!("printed plan failed to parse: {text:?}: {e}"));
+        assert_eq!(reparsed, plan, "round-trip diverged through {text:?}");
+        assert_eq!(reparsed.to_string(), text, "display not a fixed point");
+    });
+}
+
+#[test]
+fn tabular_jobs_carry_stage_attribution_through_tenancy() {
+    // Stage-DAG acceptance leg: `workload = tabular` runs end-to-end
+    // through Tenancy on the analytic cost path, and every tenant's
+    // RunReport carries per-stage attribution with (batch, stage)
+    // completions conserved (trained + wasted, identical per stage).
+    let cfg = ExperimentConfig::builder()
+        .model("wrn")
+        .strategy(Strategy::Wrr)
+        .n_accel(4)
+        .n_csd(2)
+        .n_batches(60)
+        .workload(WorkloadKind::Tabular)
+        .jobs(
+            "left:@0 accel=2 csd=1 batches=40; right:@1 accel=2 csd=1 batches=30"
+                .parse::<JobPlan>()
+                .unwrap(),
+        )
+        .build()
+        .unwrap();
+    let r = tenant::run(&cfg).unwrap();
+    assert_eq!(r.tenants.len(), 2);
+    for t in &r.tenants {
+        let report = &t.result.report;
+        let st = &report.stages;
+        assert!(!st.is_empty(), "{}: no stage attribution", t.name);
+        let names: Vec<_> = st.per_stage.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["parse", "encode", "normalize", "join"], "{}", t.name);
+        let want = report.n_batches as u64 + report.wasted_batches;
+        for s in &st.per_stage {
+            assert_eq!(
+                s.completions, want,
+                "{}: stage {} completed {}×, want {want}",
+                t.name, s.name, s.completions
+            );
+        }
+        assert_eq!(st.split_hist.iter().sum::<u64>(), want, "{}", t.name);
+        assert!(
+            st.per_stage
+                .iter()
+                .all(|s| s.host_busy_s + s.csd_busy_s > 0.0),
+            "{}: a stage ran for free",
+            t.name
+        );
+    }
 }
 
 #[test]
